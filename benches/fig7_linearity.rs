@@ -1,0 +1,104 @@
+//! Bench: Fig 7 regeneration (experiments E6/E7) — the linearity sweep
+//! and the droop comparison, plus a robustness sweep of R² against analog
+//! non-idealities (comparator offset, mirror gain error, MTJ variation).
+
+use spikemram::benchlib::Harness;
+use spikemram::config::{MacroConfig, NonIdeality};
+use spikemram::macro_model::CimMacro;
+use spikemram::repro::fig7;
+use spikemram::util::rng::Rng;
+use spikemram::util::stats::line_fit;
+
+fn linearity_r2(cfg: &MacroConfig, seed: u64, points: usize) -> f64 {
+    let mut m = if cfg.nonideal.sigma_r_d2d > 0.0
+        || cfg.nonideal.comparator_offset_v > 0.0
+        || cfg.nonideal.mirror_gain_sigma > 0.0
+    {
+        CimMacro::with_nonidealities(cfg.clone(), seed)
+    } else {
+        CimMacro::new(cfg.clone())
+    };
+    let mut rng = Rng::new(seed ^ 0x77);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    while xs.len() < points {
+        let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+            .map(|_| rng.below(4) as u8)
+            .collect();
+        m.program(&codes);
+        let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+        let r = m.mvm(&x);
+        let ideal = m.ideal_mvm(&x);
+        for c in 0..cfg.cols {
+            if xs.len() >= points {
+                break;
+            }
+            xs.push(ideal[c] * cfg.t_bit_ns);
+            ys.push(r.t_out_ns[c]);
+        }
+    }
+    line_fit(&xs, &ys).r2
+}
+
+fn main() {
+    let mut h = Harness::new("fig7_linearity");
+    let cfg = MacroConfig::default();
+
+    h.bench_function("fig7a_sweep_512_points", |b| {
+        b.iter(|| fig7::run_fig7a(&cfg, 512, 71))
+    });
+    h.bench_function("fig7b_droop_waveforms", |b| {
+        b.iter(|| fig7::run_fig7b(&cfg, fig7::FIG7B_ACTIVE_ROWS))
+    });
+
+    println!();
+    println!("{}", fig7::render_fig7a(&fig7::run_fig7a(&cfg, 4096, 71)));
+    println!(
+        "{}",
+        fig7::render_fig7b(&fig7::run_fig7b(&cfg, fig7::FIG7B_ACTIVE_ROWS))
+    );
+
+    // Robustness: R² vs non-ideality magnitude (not in the paper, but the
+    // natural question Fig 7a raises — how much analog error before the
+    // "excellent linearity" claim degrades?).
+    println!("linearity R² vs analog non-idealities (2048 points each):");
+    println!("{:>34} {:>14}", "configuration", "R²");
+    let configs: Vec<(&str, NonIdeality)> = vec![
+        ("ideal", NonIdeality::ideal()),
+        (
+            "comparator offset 2 mV",
+            NonIdeality {
+                comparator_offset_v: 0.002,
+                ..NonIdeality::ideal()
+            },
+        ),
+        (
+            "mirror gain σ 2 %",
+            NonIdeality {
+                mirror_gain_sigma: 0.02,
+                ..NonIdeality::ideal()
+            },
+        ),
+        (
+            "MTJ d2d σ 5 %",
+            NonIdeality {
+                sigma_r_d2d: 0.05,
+                ..NonIdeality::ideal()
+            },
+        ),
+        ("realistic (all)", NonIdeality::realistic()),
+    ];
+    for (name, ni) in configs {
+        let c = MacroConfig {
+            nonideal: ni,
+            ..cfg.clone()
+        };
+        println!("{:>34} {:>14.9}", name, linearity_r2(&c, 5, 2048));
+    }
+
+    // End-to-end MAC error when the mirror is removed (Fig 7b, functional).
+    println!(
+        "\nmean relative MAC error in droop mode: {:.1} %",
+        fig7::droop_mac_error(&cfg, 72) * 100.0
+    );
+}

@@ -1,0 +1,108 @@
+//! Bench: L3 hot paths (DESIGN.md §9) — the structures the perf pass
+//! optimizes: event queue throughput, flag tree, single macro MVM at
+//! several sparsities, scheduler dispatch, and the serving loop.
+//! §Perf in EXPERIMENTS.md records before/after from this bench.
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::MacroConfig;
+use spikemram::coordinator::{Policy, Scheduler, TileOp, TiledMatrix};
+use spikemram::event::{EventKind, EventQueue, FlagTree};
+use spikemram::macro_model::CimMacro;
+use spikemram::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("hotpath");
+    let cfg = MacroConfig::default();
+
+    // --- event queue -----------------------------------------------------
+    h.bench_function("event_queue_push_pop_256", |b| {
+        let mut q = EventQueue::with_capacity(256);
+        let times: Vec<f64> = {
+            let mut rng = Rng::new(1);
+            (0..128).map(|_| rng.uniform(0.0, 51.0)).collect()
+        };
+        b.iter(|| {
+            q.reset();
+            for (i, &t) in times.iter().enumerate() {
+                q.push(0.0, EventKind::RowRise { row: i as u32 });
+                q.push(t, EventKind::RowFall { row: i as u32 });
+            }
+            let mut last = 0.0;
+            while let Some(ev) = q.pop() {
+                last = ev.t_ns;
+            }
+            last
+        })
+    });
+
+    h.bench_function("flag_tree_full_cycle_128", |b| {
+        let mut f = FlagTree::new(128);
+        b.iter(|| {
+            f.reset();
+            for i in 0..128 {
+                f.assert_row(i, i as f64 * 0.01);
+            }
+            for i in 0..128 {
+                f.deassert_row(i, 10.0 + i as f64 * 0.01);
+            }
+            f.intervals().len()
+        })
+    });
+
+    // --- macro MVM at varying sparsity ------------------------------------
+    let mut rng = Rng::new(2);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let mut m = CimMacro::new(cfg.clone());
+    m.program(&codes);
+    for (name, density) in
+        [("dense", 1.0), ("half", 0.5), ("sparse_1_16", 1.0 / 16.0)]
+    {
+        let x: Vec<u32> = (0..cfg.rows)
+            .map(|_| {
+                if rng.f64() < density {
+                    1 + rng.below(255) as u32
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let mut last = None;
+        h.bench_function(&format!("macro_mvm_{name}"), |b| {
+            b.iter(|| {
+                let r = m.mvm(black_box(&x));
+                let out = (r.latency_ns, r.events);
+                last = Some(r);
+                out
+            })
+        });
+        if let Some(r) = last {
+            h.note(&format!(
+                "simulated: {} events, latency {:.1} ns, {:.1} pJ",
+                r.events,
+                r.latency_ns,
+                r.energy.total_pj()
+            ));
+        }
+    }
+
+    // --- scheduler dispatch ----------------------------------------------
+    let big_codes: Vec<u8> = (0..256 * 128).map(|i| (i % 4) as u8).collect();
+    let tm = TiledMatrix::new(&big_codes, 256, 128, 128);
+    let ops: Vec<TileOp> = (0..16)
+        .map(|i| TileOp {
+            tile_idx: i % tm.num_tiles(),
+            x: (0..128).map(|j| ((i * 37 + j) % 256) as u32).collect(),
+            arrival_ns: 0.0,
+        })
+        .collect();
+    for policy in [Policy::RoundRobin, Policy::TileAffinity] {
+        h.bench_function(&format!("scheduler_16ops_{policy:?}"), |b| {
+            b.iter(|| {
+                let mut s = Scheduler::new(&cfg, 4, policy);
+                s.run(black_box(&tm), black_box(&ops)).makespan_ns
+            })
+        });
+    }
+}

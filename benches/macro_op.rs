@@ -1,0 +1,113 @@
+//! Bench: end-to-end macro operation across backends — the behavioral
+//! simulator vs the PJRT-executed AOT artifact (when `artifacts/` exists)
+//! — plus the SNN inference pipeline and the serving loop. This is the
+//! bench behind the §Perf L3 numbers in EXPERIMENTS.md.
+
+use std::time::Duration;
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::{LevelMap, MacroConfig};
+use spikemram::coordinator::{BackendKind, MacroServer, ServerConfig};
+use spikemram::macro_model::CimMacro;
+use spikemram::runtime::{Runtime, Value};
+use spikemram::snn;
+use spikemram::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("macro_op");
+    let cfg = MacroConfig::default();
+    let mut rng = Rng::new(3);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+
+    // --- behavioral sim ---------------------------------------------------
+    let mut m = CimMacro::new(cfg.clone());
+    m.program(&codes);
+    let r = h.bench_function("sim_mvm_single", |b| {
+        b.iter(|| m.mvm(black_box(&x)).t_out_ns[0])
+    });
+    let per_op_ns = r.median_ns();
+    h.note(&format!(
+        "{:.1} MMAC/s simulated MAC throughput",
+        (cfg.rows * cfg.cols) as f64 / per_op_ns * 1e3
+    ));
+
+    // --- PJRT artifact (batch 8) -------------------------------------------
+    let artifacts = std::env::var("SPIKEMRAM_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        let mut rt = Runtime::new(&artifacts).expect("pjrt");
+        let exe = rt.load("spiking_mvm_b8_128x128").expect("artifact");
+        let t_in: Vec<f32> = (0..8 * cfg.rows)
+            .map(|i| x[i % cfg.rows] as f32 * cfg.t_bit_ns as f32)
+            .collect();
+        let codes_i32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+        let r = h.bench_function("pjrt_mvm_batch8", |b| {
+            b.iter(|| {
+                exe.run_f32(&[
+                    Value::f32(t_in.clone(), &[8, cfg.rows]),
+                    Value::i32(codes_i32.clone(), &[cfg.rows, cfg.cols]),
+                ])
+                .unwrap()[0][0]
+            })
+        });
+        h.note(&format!(
+            "{:.1} MMAC/s through the AOT artifact (batch 8)",
+            8.0 * (cfg.rows * cfg.cols) as f64 / r.median_ns() * 1e3
+        ));
+
+        let exe32 = rt.load("spiking_mvm_b32_128x128").expect("artifact");
+        let t_in32: Vec<f32> = (0..32 * cfg.rows)
+            .map(|i| x[i % cfg.rows] as f32 * cfg.t_bit_ns as f32)
+            .collect();
+        let r = h.bench_function("pjrt_mvm_batch32", |b| {
+            b.iter(|| {
+                exe32
+                    .run_f32(&[
+                        Value::f32(t_in32.clone(), &[32, cfg.rows]),
+                        Value::i32(codes_i32.clone(), &[cfg.rows, cfg.cols]),
+                    ])
+                    .unwrap()[0][0]
+            })
+        });
+        h.note(&format!(
+            "{:.1} MMAC/s through the AOT artifact (batch 32)",
+            32.0 * (cfg.rows * cfg.cols) as f64 / r.median_ns() * 1e3
+        ));
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+
+    // --- serving loop -------------------------------------------------------
+    let server = MacroServer::start(
+        cfg.clone(),
+        codes.clone(),
+        ServerConfig {
+            workers: 4,
+            max_batch: 8,
+            batch_timeout: Duration::from_micros(100),
+            backend: BackendKind::Sim,
+        },
+    )
+    .expect("server");
+    h.bench_function("server_roundtrip_16_concurrent", |b| {
+        b.iter(|| {
+            let rxs: Vec<_> =
+                (0..16).map(|_| server.submit(x.clone())).collect();
+            rxs.into_iter().map(|rx| rx.recv().unwrap()[0]).sum::<f64>()
+        })
+    });
+    server.shutdown();
+
+    // --- SNN inference -------------------------------------------------------
+    let data = snn::Dataset::generate(64, 5);
+    let (model, _) = snn::train(&data, 3, 5);
+    let mut mm =
+        snn::MacroMlp::from_float(&model, &data, &cfg, LevelMap::DeviceTrue);
+    let px = data.features_u8(0);
+    h.bench_function("snn_single_inference_sim", |b| {
+        b.iter(|| mm.predict(black_box(&px)).0)
+    });
+}

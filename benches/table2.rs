@@ -1,0 +1,61 @@
+//! Bench: Table II regeneration (experiment E8) — measures the wall cost
+//! of the Monte-Carlo efficiency estimate and prints the final table,
+//! then benchmarks the headline MVM at several input precisions to show
+//! how the measured TOPS/W moves (the event-driven scaling story).
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::MacroConfig;
+use spikemram::energy::tops_per_watt;
+use spikemram::macro_model::CimMacro;
+use spikemram::repro::table2;
+use spikemram::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("table2");
+    let cfg = MacroConfig::default();
+
+    h.bench_function("table2_monte_carlo_50_mvms", |b| {
+        b.iter(|| table2::run(&cfg, 50, 42))
+    });
+
+    // Efficiency vs input precision (measured through the simulator).
+    for bits in [4u32, 6, 8] {
+        let cfg_b = MacroConfig {
+            input_bits: bits,
+            ..cfg.clone()
+        };
+        let mut m = CimMacro::new(cfg_b.clone());
+        let mut rng = Rng::new(7 + bits as u64);
+        let codes: Vec<u8> = (0..cfg_b.rows * cfg_b.cols)
+            .map(|_| rng.below(4) as u8)
+            .collect();
+        m.program(&codes);
+        let max = (1u64 << bits) as u64;
+        let xs: Vec<Vec<u32>> = (0..8)
+            .map(|_| {
+                (0..cfg_b.rows).map(|_| rng.below(max) as u32).collect()
+            })
+            .collect();
+        let mut energy = 0.0;
+        let mut ops = 0u64;
+        h.bench_function(&format!("mvm_sim_{bits}bit_input"), |b| {
+            let mut i = 0usize;
+            b.iter(|| {
+                let r = m.mvm(black_box(&xs[i % xs.len()]));
+                i += 1;
+                energy += r.energy.total_fj();
+                ops += cfg_b.ops_per_mvm();
+                r.latency_ns
+            })
+        });
+        if ops > 0 {
+            h.note(&format!(
+                "simulated efficiency at {bits}-bit inputs: {:.1} TOPS/W",
+                tops_per_watt(ops, energy)
+            ));
+        }
+    }
+
+    // Print the regenerated table itself.
+    println!("\n{}", table2::render(&table2::run(&cfg, 50, 42)));
+}

@@ -1,0 +1,89 @@
+//! Serving driver: the event-driven batching server under a Poisson-ish
+//! open load, on either backend:
+//!
+//! ```bash
+//! cargo run --release --example macro_server -- --backend sim  --requests 2000
+//! cargo run --release --example macro_server -- --backend pjrt --requests 2000
+//! ```
+//!
+//! Reports latency percentiles and throughput; with `--backend pjrt` the
+//! compute path is the AOT-compiled JAX/Pallas artifact executed via the
+//! PJRT CPU client (python never runs here).
+
+use std::time::{Duration, Instant};
+
+use spikemram::config::MacroConfig;
+use spikemram::coordinator::{BackendKind, MacroServer, ServerConfig};
+use spikemram::util::cli::Args;
+use spikemram::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_usize("requests", 2000);
+    let workers = args.get_usize("workers", 4);
+    let batch = args.get_usize("batch", 8);
+    let rate_rps = args.get_f64("rate", 0.0); // 0 = closed loop, max rate
+    let backend_name = args.get_str("backend", "sim");
+    let backend = match backend_name.as_str() {
+        "sim" => BackendKind::Sim,
+        "pjrt" => BackendKind::Pjrt {
+            artifacts_dir: args.get_str("artifacts", "artifacts"),
+        },
+        other => {
+            eprintln!("unknown backend {other:?} (sim|pjrt)");
+            std::process::exit(1);
+        }
+    };
+
+    let cfg = MacroConfig::default();
+    let mut rng = Rng::new(args.get_u64("seed", 99));
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+
+    println!(
+        "starting server: backend={backend_name}, {workers} workers, \
+         max batch {batch}"
+    );
+    let server = MacroServer::start(
+        cfg.clone(),
+        codes,
+        ServerConfig {
+            workers,
+            max_batch: batch,
+            batch_timeout: Duration::from_micros(
+                args.get_u64("timeout-us", 200),
+            ),
+            backend,
+        },
+    )
+    .expect("server start");
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        if rate_rps > 0.0 {
+            // Open-loop arrivals at the requested rate.
+            let due = t0 + Duration::from_secs_f64(i as f64 / rate_rps);
+            if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+        }
+        let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+        pending.push(server.submit(x));
+    }
+    for rx in pending {
+        rx.recv().expect("reply");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "\n{n} requests in {:.2} s → {:.0} req/s \
+         ({:.2e} MAC/s through the macro)",
+        wall,
+        n as f64 / wall,
+        n as f64 * (cfg.rows * cfg.cols) as f64 / wall
+    );
+    println!("{}", server.metrics.summary());
+    server.shutdown();
+}

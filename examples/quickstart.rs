@@ -1,0 +1,89 @@
+//! Quickstart: one spiking MVM on the macro, end to end.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API in the order a new user meets it: configure the
+//! macro (Table I defaults) → program 2-bit weights → feed an 8-bit input
+//! vector → read the dual-spike outputs back as digital MACs → inspect
+//! latency, energy, and the Eq. 2 check against the exact oracle.
+
+use spikemram::config::MacroConfig;
+use spikemram::energy::tops_per_watt;
+use spikemram::macro_model::CimMacro;
+use spikemram::util::rng::Rng;
+
+fn main() {
+    // 1. Table I configuration: 128×128 3T-2MTJ, 1.1 V, R_LRS = 1 MΩ,
+    //    TMR 100 %, T_bit = 0.2 ns, C_rt = C_com = 200 fF.
+    let cfg = MacroConfig::default();
+    println!(
+        "macro: {}×{} cells, V_read {:.0} mV, α = {:.3} ns/(µS·ns)",
+        cfg.rows,
+        cfg.cols,
+        cfg.v_read() * 1e3,
+        cfg.alpha()
+    );
+
+    // 2. Program weights: 2-bit codes (0..=3) map to the series-stack
+    //    conductances {1/6, 1/5, 1/4, 1/3} µS.
+    let mut rng = Rng::new(7);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let mut macro_ = CimMacro::new(cfg.clone());
+    macro_.program(&codes);
+
+    // 3. An 8-bit input vector → dual-spike pairs → event-driven MVM.
+    let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+    let result = macro_.mvm(&x);
+
+    // 4. Outputs: inter-spike intervals (ns) and decoded MACs.
+    println!("\nfirst four columns:");
+    println!("  col | T_out (ns) | MAC (decoded) | MAC (oracle)");
+    let oracle = macro_.ideal_mvm(&x);
+    for c in 0..4 {
+        println!(
+            "  {c:>3} | {:>10.4} | {:>13.3} | {:>12.3}",
+            result.t_out_ns[c], result.y_mac[c], oracle[c]
+        );
+    }
+    let max_err = result
+        .y_mac
+        .iter()
+        .zip(&oracle)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    println!("max |decode error| across 128 columns: {max_err:.2e}");
+
+    // 5. The event-driven economics.
+    println!(
+        "\nlatency {:.1} ns  ({} spike events processed)",
+        result.latency_ns, result.events
+    );
+    println!(
+        "energy  {:.1} pJ  → {:.1} TOPS/W  (paper headline: 243.6)",
+        result.energy.total_pj(),
+        tops_per_watt(cfg.ops_per_mvm(), result.energy.total_fj())
+    );
+    let shares = result.energy.shares();
+    println!(
+        "breakdown: array {:.1} %, SMU {:.1} %, OSG {:.1} %, control {:.1} %",
+        shares[0] * 100.0,
+        shares[1] * 100.0,
+        shares[2] * 100.0,
+        shares[3] * 100.0
+    );
+
+    // 6. Sparsity is free: zero inputs emit no spikes, burn no array power.
+    let sparse: Vec<u32> =
+        x.iter().enumerate().map(|(i, &v)| if i % 8 == 0 { v } else { 0 }).collect();
+    let r2 = macro_.mvm(&sparse);
+    println!(
+        "\n1/8-density input: energy {:.1} pJ ({:.0} % of dense), {} events",
+        r2.energy.total_pj(),
+        100.0 * r2.energy.total_fj() / result.energy.total_fj(),
+        r2.events
+    );
+}

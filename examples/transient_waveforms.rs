@@ -1,0 +1,28 @@
+//! Regenerates the paper's transient plots (Figs 3c, 5, 7b) as CSVs in
+//! `results/`, plus a textual summary of each.
+//!
+//! ```bash
+//! cargo run --release --example transient_waveforms
+//! ```
+
+use spikemram::config::MacroConfig;
+use spikemram::repro::{fig3, fig5, fig7};
+
+fn main() {
+    let cfg = MacroConfig::default();
+
+    // Fig 3(c): SMU — input spike pair, Event_flag_i, clamped V_in.
+    let f3 = fig3::run(&cfg, 16); // value 16 → Δ = 3.2 ns
+    print!("{}", fig3::render(&f3));
+
+    // Fig 5: one column's full conversion (charge + compare phases).
+    let f5 = fig5::run(&cfg);
+    print!("\n{}", fig5::render(&f5));
+
+    // Fig 7(b): V_charge droop with vs without the clamp+current mirror.
+    let f7b = fig7::run_fig7b(&cfg, fig7::FIG7B_ACTIVE_ROWS);
+    print!("\n{}", fig7::render_fig7b(&f7b));
+
+    println!("\nall waveform CSVs written under results/ — columns are");
+    println!("(t_ns, signal...) and plot directly with any CSV tool.");
+}

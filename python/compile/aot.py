@@ -1,0 +1,135 @@
+"""AOT lowering: jax (L2+L1) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text, NOT ``lowered.compile()``/``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once by ``make artifacts``; Python never executes at request time.
+Every entry is lowered with return_tuple=True so the Rust side unwraps
+with ``to_tuple1()`` / ``to_tuple()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.spiking_mvm import spiking_mvm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _mvm_entry(t_in, codes):
+    return (spiking_mvm(t_in, codes, alpha=model.ALPHA),)
+
+
+def _macro_entry(x, codes):
+    return model.macro_forward(x, codes)
+
+
+def _mlp_entry(x, c1, c2, c3, scales, steps):
+    return (model.mlp_forward(x, c1, c2, c3, scales, steps),)
+
+
+def _mlp_ideal_entry(x, c1, c2, c3, scales, steps):
+    return (model.mlp_forward_ideal(x, c1, c2, c3, scales, steps),)
+
+
+def _fig7b_entry(t_in, g):
+    return model.fig7b_transient(t_in, g, dt=0.01, n_steps=1000)
+
+
+#: name -> (fn, example args). Shapes are the contract with rust/src/runtime.
+ENTRIES = {
+    "spiking_mvm_b8_128x128": (_mvm_entry, (_f32(8, 128), _i32(128, 128))),
+    "spiking_mvm_b32_128x128": (_mvm_entry, (_f32(32, 128), _i32(128, 128))),
+    "macro_fwd_b8": (_macro_entry, (_i32(8, 128), _i32(128, 128))),
+    "mlp_fwd_b16": (
+        _mlp_entry,
+        (
+            _i32(16, 256),
+            _i32(256, 128),
+            _i32(128, 128),
+            _i32(128, 16),
+            _f32(3),
+            _f32(2),
+        ),
+    ),
+    "mlp_fwd_ideal_b16": (
+        _mlp_ideal_entry,
+        (
+            _i32(16, 256),
+            _i32(256, 128),
+            _i32(128, 128),
+            _i32(128, 16),
+            _f32(3),
+            _f32(2),
+        ),
+    ),
+    "fig7b_transient": (_fig7b_entry, (_f32(128), _f32(128))),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts/model.hlo.txt",
+        help="path of the primary artifact (its dir receives all entries)",
+    )
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, example) in ENTRIES.items():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in example
+            ],
+            "alpha": model.ALPHA,
+            "t_bit_ns": 0.2,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Primary artifact: the single-macro MVM (the Makefile's sentinel file).
+    primary = os.path.join(out_dir, "spiking_mvm_b8_128x128.hlo.txt")
+    with open(primary) as f, open(args.out, "w") as g:
+        g.write(f.read())
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out} + manifest.json ({len(ENTRIES)} entries)")
+
+
+if __name__ == "__main__":
+    main()

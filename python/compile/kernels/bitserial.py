@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: bit-serial temporal MVM (§IV-B extension).
+
+Digital twin of `rust/src/coding/bitserial.rs` + `CimMacro::mvm_bitserial`:
+the 8-bit input is split into `passes` chunks of `bits_per_pass`, each
+chunk runs through the same temporal-MAC kernel with its (short) window,
+and the per-pass results recombine with digital shift-add:
+
+    mac(x) = sum_p 2^(p·bits_per_pass) · mac(chunk_p)
+
+Exact under ideal circuits (linearity of Eq. 2); the rust ablation layer
+quantifies the error amplification under comparator offsets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .spiking_mvm import LEVELS_DEVICE_TRUE, spiking_mvm
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "total_bits",
+        "bits_per_pass",
+        "levels",
+        "alpha",
+        "t_bit",
+        "interpret",
+    ),
+)
+def bitserial_mvm(
+    x: jax.Array,
+    codes: jax.Array,
+    *,
+    total_bits: int = 8,
+    bits_per_pass: int = 4,
+    levels: tuple[float, ...] = LEVELS_DEVICE_TRUE,
+    alpha: float = 1.0,
+    t_bit: float = 0.2,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bit-serial MAC: int[B, K] digital inputs -> f32[B, N] MACs (µS·LSB).
+
+    Returns the *recombined digital MAC* (already decoded), so callers
+    compare directly against ``spiking_mvm`` decoded output.
+    """
+    assert 1 <= bits_per_pass <= total_bits
+    passes = -(-total_bits // bits_per_pass)  # ceil div
+    mask = (1 << bits_per_pass) - 1
+    xi = x.astype(jnp.int32)
+    out = None
+    for p in range(passes):
+        chunk = (xi >> (p * bits_per_pass)) & mask
+        t_in = chunk.astype(jnp.float32) * jnp.float32(t_bit)
+        t_out = spiking_mvm(
+            t_in, codes, levels=levels, alpha=alpha, interpret=interpret
+        )
+        mac = t_out / jnp.float32(alpha * t_bit)
+        w = jnp.float32(1 << (p * bits_per_pass))
+        out = mac * w if out is None else out + mac * w
+    return out

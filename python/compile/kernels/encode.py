@@ -1,0 +1,77 @@
+"""L1 Pallas kernels: dual-spike (en/de)coding (SMU / OSG digital twins).
+
+Encoding (SMU, paper §III-B): an 8-bit digital value x becomes a spike pair
+whose inter-spike interval is T_in = x * T_bit (T_bit = 0.2 ns, Table I).
+
+Decoding (OSG output, §III-C): the output interval T_out maps back to the
+digital MAC value  y = T_out / (alpha * T_bit)  in conductance units (µS).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_BIT_NS = 0.2  # Table I: one LSB of input = 0.2 ns of spike interval.
+
+
+def _encode_kernel(x_ref, o_ref, *, t_bit):
+    o_ref[...] = x_ref[...].astype(jnp.float32) * jnp.float32(t_bit)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t_bit", "block", "interpret")
+)
+def dualspike_encode(
+    x: jax.Array,
+    *,
+    t_bit: float = T_BIT_NS,
+    block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """uint8/int32[B, K] digital inputs -> f32[B, K] spike intervals (ns)."""
+    b, k = x.shape
+    block = min(block, k)
+    assert k % block == 0, (k, block)
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, t_bit=t_bit),
+        grid=(b, k // block),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.int32))
+
+
+def _decode_kernel(t_ref, o_ref, *, scale):
+    o_ref[...] = t_ref[...] * jnp.float32(scale)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "t_bit", "block", "interpret"),
+)
+def dualspike_decode(
+    t_out: jax.Array,
+    *,
+    alpha: float = 1.0,
+    t_bit: float = T_BIT_NS,
+    block: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """f32[B, N] output intervals (ns) -> f32[B, N] MAC values (µS units)."""
+    b, n = t_out.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    scale = 1.0 / (alpha * t_bit)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(b, n // block),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(t_out.astype(jnp.float32))

@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for every L1 kernel (no Pallas).
+
+pytest compares each kernel against these under hypothesis-driven
+shape/dtype/value sweeps — the CORE build-time correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .spiking_mvm import LEVELS_DEVICE_TRUE
+
+
+def codes_to_conductance(codes, levels=LEVELS_DEVICE_TRUE):
+    """int[?, ?] 2-bit codes -> f32 conductances (µS) via the level LUT."""
+    lut = jnp.asarray(levels, jnp.float32)
+    return lut[codes.astype(jnp.int32)]
+
+
+def spiking_mvm_ref(t_in, codes, *, levels=LEVELS_DEVICE_TRUE, alpha=1.0):
+    """Eq. 2: T_out = alpha * T_in @ G(codes)."""
+    g = codes_to_conductance(codes, levels)
+    return jnp.float32(alpha) * (t_in.astype(jnp.float32) @ g)
+
+
+def dualspike_encode_ref(x, *, t_bit=0.2):
+    return x.astype(jnp.float32) * jnp.float32(t_bit)
+
+
+def dualspike_decode_ref(t_out, *, alpha=1.0, t_bit=0.2):
+    return t_out.astype(jnp.float32) / jnp.float32(alpha * t_bit)
+
+
+def charge_transient_ref(
+    t_in,
+    g,
+    *,
+    dt=0.01,
+    n_steps=1024,
+    v_read=0.1,
+    c_ff=200.0,
+    k_mirror=1.0,
+    mirror=True,
+):
+    """Euler V_charge trace; identical discretization to the kernel."""
+    t_in = t_in.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    v = jnp.float32(0.0)
+    out = []
+    for s in range(n_steps):
+        t = s * dt
+        g_on = jnp.sum((t < t_in).astype(jnp.float32) * g)
+        if mirror:
+            dv = k_mirror * v_read * g_on * dt / c_ff
+        else:
+            dv = g_on * (v_read - v) * dt / c_ff
+        v = v + dv
+        out.append(v)
+    return jnp.stack(out)

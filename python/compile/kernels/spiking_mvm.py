@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: the dual-spike temporal MAC (digital twin of the macro).
+
+The paper's crossbar computes, per column j,
+
+    T_out[j] = alpha * sum_i T_in[i] * G_mem[i, j]          (Eq. 2)
+
+where T_in are input inter-spike intervals and G_mem the 2-bit programmed
+cell conductances. Here that is realized as a tiled matmul whose weight
+operand is *expanded on the fly* from packed 2-bit codes to conductance
+levels — the digital analogue of "weights live in the array, inputs stream
+past" (DESIGN.md §8). One (bk, bn) = (128, 128) weight block mirrors one
+physical crossbar macro and stays VMEM-resident for the whole k-step.
+
+Units are normalized for f32 hygiene: time in ns, conductance in µS
+(products are O(1..10) instead of O(1e-14)).
+
+All kernels run with interpret=True (CPU PJRT); see DESIGN.md
+§Hardware-Adaptation for the real-TPU mapping.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4 conductance levels of the 3T-2MTJ cell (µS), ascending by code.
+# Series stack J1+J2 with R_LRS=1 MΩ, TMR=100 %, R(J2)=2·R(J1):
+#   R ∈ {6, 5, 4, 3} MΩ  →  G ∈ {1/6, 1/5, 1/4, 1/3} µS  (device-true).
+LEVELS_DEVICE_TRUE = (1.0 / 6.0, 1.0 / 5.0, 1.0 / 4.0, 1.0 / 3.0)
+# Idealized equally-spaced levels spanning the same range (ablation).
+LEVELS_IDEAL_LINEAR = (
+    1.0 / 6.0,
+    1.0 / 6.0 + (1.0 / 3.0 - 1.0 / 6.0) / 3.0,
+    1.0 / 6.0 + 2.0 * (1.0 / 3.0 - 1.0 / 6.0) / 3.0,
+    1.0 / 3.0,
+)
+
+
+def _mvm_kernel(t_ref, codes_ref, o_ref, *, levels, nk):
+    """One (bm, bn) output tile; grid axis 2 iterates k-blocks."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = codes_ref[...]  # (bk, bn) int32, values 0..3
+    # One-hot expansion instead of gather: 4 compares + FMAs, which maps to
+    # plain VPU ops on TPU (no dynamic-gather custom call).
+    g = jnp.zeros(codes.shape, jnp.float32)
+    for s, lv in enumerate(levels):
+        g = g + jnp.float32(lv) * (codes == s).astype(jnp.float32)
+    o_ref[...] += jnp.dot(
+        t_ref[...], g, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("levels", "alpha", "bm", "bk", "bn", "interpret"),
+)
+def spiking_mvm(
+    t_in: jax.Array,
+    codes: jax.Array,
+    *,
+    levels: tuple[float, ...] = LEVELS_DEVICE_TRUE,
+    alpha: float = 1.0,
+    bm: int = 8,
+    bk: int = 128,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Temporal MAC: ``alpha * t_in @ levels[codes]``.
+
+    Args:
+      t_in:  f32[B, K] input inter-spike intervals (ns), >= 0.
+      codes: int32[K, N] 2-bit weight codes in {0, 1, 2, 3}.
+      levels: static 4-tuple, code -> conductance (µS).
+      alpha: OSG sensing gain (ns per µS·ns), Eq. 2.
+
+    Returns: f32[B, N] output inter-spike intervals (ns).
+    """
+    b, k = t_in.shape
+    k2, n = codes.shape
+    assert k == k2, (t_in.shape, codes.shape)
+    bm = min(bm, b)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert b % bm == 0 and k % bk == 0 and n % bn == 0, (b, k, n, bm, bk, bn)
+    nk = k // bk
+    out = pl.pallas_call(
+        functools.partial(_mvm_kernel, levels=levels, nk=nk),
+        grid=(b // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(t_in.astype(jnp.float32), codes.astype(jnp.int32))
+    return jnp.float32(alpha) * out

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: capacitor-charging transient (OSG digital twin).
+
+Cross-check oracle for the Rust behavioral circuit engine (Fig 7b).
+Simulates V_charge(t) on the result capacitor C_rt for one column while the
+input spike windows are active:
+
+  with clamp+current-mirror (paper's design):
+      dV/dt = k * V_read * sum_i 1[t < T_in,i] * G_i / C_rt
+  without (baseline, Fig 7b droop):
+      dV/dt = sum_i 1[t < T_in,i] * G_i * (V_read - V) / C_rt
+
+Units: t in ns, G in µS, C in fF, V in volts (µS·ns/fF = 1, so the Euler
+update needs no unit factors).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transient_kernel(
+    t_in_ref, g_ref, o_ref, *, dt, n_steps, v_read, c_ff, k_mirror, mirror
+):
+    t_in = t_in_ref[...]  # (K,)
+    g = g_ref[...]  # (K,)
+
+    def body(s, v):
+        t = s * dt
+        active = (t < t_in).astype(jnp.float32)
+        g_on = jnp.sum(active * g)
+        if mirror:
+            dv = k_mirror * v_read * g_on * dt / c_ff
+        else:
+            dv = g_on * (v_read - v) * dt / c_ff
+        v = v + dv
+        o_ref[s] = v
+        return v
+
+    jax.lax.fori_loop(0, n_steps, body, jnp.float32(0.0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dt",
+        "n_steps",
+        "v_read",
+        "c_ff",
+        "k_mirror",
+        "mirror",
+        "interpret",
+    ),
+)
+def charge_transient(
+    t_in: jax.Array,
+    g: jax.Array,
+    *,
+    dt: float = 0.01,
+    n_steps: int = 1024,
+    v_read: float = 0.1,
+    c_ff: float = 200.0,
+    k_mirror: float = 1.0,
+    mirror: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Euler transient of V_charge. Returns f32[n_steps] voltage trace."""
+    (k,) = t_in.shape
+    assert g.shape == (k,)
+    return pl.pallas_call(
+        functools.partial(
+            _transient_kernel,
+            dt=dt,
+            n_steps=n_steps,
+            v_read=v_read,
+            c_ff=c_ff,
+            k_mirror=k_mirror,
+            mirror=mirror,
+        ),
+        in_specs=[
+            pl.BlockSpec(t_in.shape, lambda: (0,)),
+            pl.BlockSpec(g.shape, lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_steps,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_steps,), jnp.float32),
+        interpret=interpret,
+    )(t_in.astype(jnp.float32), g.astype(jnp.float32))

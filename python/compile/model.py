@@ -1,0 +1,115 @@
+"""L2: JAX behavioral model of the spiking CIM macro (build-time only).
+
+Composes the L1 Pallas kernels into the forward paths that `aot.py` lowers
+to HLO text for the Rust runtime:
+
+* ``macro_forward``   — one 128x128 macro op: dual-spike encode -> temporal
+                        MVM (Eq. 2) -> decode back to digital MAC values.
+* ``mlp_forward``     — the end-to-end DNN workload: a 256-128-128-16 MLP
+                        whose every matmul runs through macro semantics
+                        (2-bit weight codes on device-true conductance
+                        levels, 8-bit dual-spike activations).
+* ``fig7b_transient`` — V_charge traces with/without the clamp+current-
+                        mirror, the L2 oracle for the Rust circuit engine.
+
+Signed weights use the conductance-offset scheme (DESIGN.md §7): the
+effective weight of code c is  G(c) - G_mid  with  G_mid = mean(levels),
+realized digitally by subtracting  G_mid * sum_i(x_i)  from each MAC —
+the same trick a physical macro would implement with a reference column.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.encode import T_BIT_NS, dualspike_encode, dualspike_decode
+from .kernels.spiking_mvm import (
+    LEVELS_DEVICE_TRUE,
+    LEVELS_IDEAL_LINEAR,
+    spiking_mvm,
+)
+from .kernels.transient import charge_transient
+
+# ---- Circuit constants (Table I + DESIGN.md §6 sizing) -------------------
+V_READ = 0.1  # V  (V_clamp 400 mV - V_in,clamp 300 mV)
+C_RT_FF = 200.0  # fF
+C_COM_FF = 200.0  # fF
+I_COM_UA = 2.0  # µA  (sized so max V_charge ~= 1.09 V < VDD 1.1 V)
+K_MIRROR = 1.0  # current-mirror gain
+
+#: OSG sensing gain alpha = k * V_read * C_com / (C_rt * I_com)  [ns/(µS·ns)]
+ALPHA = K_MIRROR * V_READ * C_COM_FF / (C_RT_FF * I_COM_UA)
+
+G_MID = sum(LEVELS_DEVICE_TRUE) / 4.0  # conductance offset for signed weights
+
+
+def alpha_from_params(
+    k_mirror: float = K_MIRROR,
+    v_read: float = V_READ,
+    c_rt_ff: float = C_RT_FF,
+    c_com_ff: float = C_COM_FF,
+    i_com_ua: float = I_COM_UA,
+) -> float:
+    """Eq. 2's alpha from circuit parameters (physical form, DESIGN.md §1)."""
+    return k_mirror * v_read * c_com_ff / (c_rt_ff * i_com_ua)
+
+
+def macro_forward(x, codes, *, levels=LEVELS_DEVICE_TRUE, alpha=ALPHA):
+    """One macro op. x: int[B,K] in [0,255]; codes: int[K,N] in [0,3].
+
+    Returns (t_out[B,N] ns, y[B,N] digital MAC = sum_i x_i * G(code_ij) µS).
+    """
+    t_in = dualspike_encode(x)
+    t_out = spiking_mvm(t_in, codes, levels=levels, alpha=alpha)
+    y = dualspike_decode(t_out, alpha=alpha)
+    return t_out, y
+
+
+def _macro_layer(x, codes, scale, levels):
+    """Signed macro layer: scale * (MAC - G_mid * sum(x)). x int[B,K]."""
+    _, mac = macro_forward(x, codes, levels=levels)
+    offset = jnp.float32(G_MID) * jnp.sum(
+        x.astype(jnp.float32), axis=1, keepdims=True
+    )
+    return scale * (mac - offset)
+
+
+def _requant(z, step):
+    """ReLU + uint8 requantization of activations (dual-spike range)."""
+    q = jnp.round(jnp.maximum(z, 0.0) / step)
+    return jnp.clip(q, 0.0, 255.0).astype(jnp.int32)
+
+
+def mlp_forward(
+    x, c1, c2, c3, scales, steps, *, levels=LEVELS_DEVICE_TRUE
+):
+    """End-to-end MLP on macro semantics.
+
+    x: int[B,256] 8-bit pixels; c1 int[256,128], c2 int[128,128],
+    c3 int[128,16] 2-bit weight codes; scales f32[3] per-layer weight
+    scales; steps f32[2] activation quant steps. Returns f32[B,16] logits.
+    """
+    h = _requant(_macro_layer(x, c1, scales[0], levels), steps[0])
+    h = _requant(_macro_layer(h, c2, scales[1], levels), steps[1])
+    return _macro_layer(h, c3, scales[2], levels)
+
+
+def mlp_forward_ideal(x, c1, c2, c3, scales, steps):
+    """Ablation: same MLP on idealized equally-spaced conductance levels."""
+    return mlp_forward(
+        x, c1, c2, c3, scales, steps, levels=LEVELS_IDEAL_LINEAR
+    )
+
+
+def fig7b_transient(t_in, g, *, dt=0.01, n_steps=1000):
+    """(V_mirror[n], V_droop[n]) charge traces for Fig 7(b)."""
+    vm = charge_transient(
+        t_in, g, dt=dt, n_steps=n_steps, v_read=V_READ, c_ff=C_RT_FF,
+        k_mirror=K_MIRROR, mirror=True,
+    )
+    vd = charge_transient(
+        t_in, g, dt=dt, n_steps=n_steps, v_read=V_READ, c_ff=C_RT_FF,
+        k_mirror=K_MIRROR, mirror=False,
+    )
+    return vm, vd

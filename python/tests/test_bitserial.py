@@ -1,0 +1,58 @@
+"""Bit-serial kernel vs the full-precision kernel and the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bitserial import bitserial_mvm
+from compile.kernels.spiking_mvm import LEVELS_DEVICE_TRUE, LEVELS_IDEAL_LINEAR
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bits_per_pass=st.sampled_from([1, 2, 3, 4, 8]),
+    b=st.sampled_from([1, 4]),
+    levels=st.sampled_from([LEVELS_DEVICE_TRUE, LEVELS_IDEAL_LINEAR]),
+)
+def test_bitserial_equals_full_precision(seed, bits_per_pass, b, levels):
+    rng = _rng(seed)
+    x = rng.integers(0, 256, (b, 128)).astype(np.int32)
+    codes = rng.integers(0, 4, (128, 128)).astype(np.int32)
+    got = bitserial_mvm(
+        jnp.asarray(x),
+        jnp.asarray(codes),
+        total_bits=8,
+        bits_per_pass=bits_per_pass,
+        levels=levels,
+        alpha=0.05,
+    )
+    want = ref.spiking_mvm_ref(
+        jnp.asarray(x, jnp.float32), jnp.asarray(codes), levels=levels
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=0.05)
+
+
+def test_single_pass_is_identity_decomposition():
+    rng = _rng(0)
+    x = rng.integers(0, 256, (2, 128)).astype(np.int32)
+    codes = rng.integers(0, 4, (128, 128)).astype(np.int32)
+    full = bitserial_mvm(
+        jnp.asarray(x), jnp.asarray(codes), bits_per_pass=8, alpha=0.05
+    )
+    split = bitserial_mvm(
+        jnp.asarray(x), jnp.asarray(codes), bits_per_pass=2, alpha=0.05
+    )
+    np.testing.assert_allclose(full, split, rtol=1e-4, atol=0.1)
+
+
+def test_zero_input_all_passes_zero():
+    x = jnp.zeros((2, 128), jnp.int32)
+    codes = jnp.ones((128, 128), jnp.int32)
+    y = bitserial_mvm(x, codes, bits_per_pass=4)
+    assert np.all(np.asarray(y) == 0.0)

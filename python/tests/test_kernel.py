@@ -1,0 +1,171 @@
+"""pytest: every L1 Pallas kernel vs its pure-jnp oracle (allclose).
+
+hypothesis sweeps shapes/dtypes/values — the CORE correctness signal
+gating `make artifacts`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.encode import dualspike_decode, dualspike_encode
+from compile.kernels.spiking_mvm import (
+    LEVELS_DEVICE_TRUE,
+    LEVELS_IDEAL_LINEAR,
+    spiking_mvm,
+)
+from compile.kernels.transient import charge_transient
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- MVM ----
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    k=st.sampled_from([16, 64, 128, 256]),
+    n=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    levels=st.sampled_from([LEVELS_DEVICE_TRUE, LEVELS_IDEAL_LINEAR]),
+)
+def test_mvm_matches_ref_shapes(b, k, n, seed, levels):
+    rng = _rng(seed)
+    t_in = rng.integers(0, 256, (b, k)).astype(np.float32) * 0.2
+    codes = rng.integers(0, 4, (k, n)).astype(np.int32)
+    got = spiking_mvm(jnp.asarray(t_in), jnp.asarray(codes), levels=levels)
+    want = ref.spiking_mvm_ref(
+        jnp.asarray(t_in), jnp.asarray(codes), levels=levels
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.floats(1e-3, 10.0),
+    bm=st.sampled_from([1, 4, 8]),
+    bk=st.sampled_from([32, 64, 128]),
+)
+def test_mvm_alpha_and_blocks(seed, alpha, bm, bk):
+    rng = _rng(seed)
+    t_in = rng.uniform(0, 51.0, (8, 128)).astype(np.float32)
+    codes = rng.integers(0, 4, (128, 128)).astype(np.int32)
+    got = spiking_mvm(
+        jnp.asarray(t_in), jnp.asarray(codes), alpha=alpha, bm=bm, bk=bk
+    )
+    want = ref.spiking_mvm_ref(jnp.asarray(t_in), jnp.asarray(codes), alpha=alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_mvm_input_dtypes():
+    rng = _rng(0)
+    t_in = rng.uniform(0, 51.0, (4, 128))
+    codes = rng.integers(0, 4, (128, 128))
+    want = ref.spiking_mvm_ref(jnp.asarray(t_in, jnp.float32), jnp.asarray(codes))
+    for tdt in (np.float32, np.float64):
+        for cdt in (np.int8, np.int32, np.uint8):
+            got = spiking_mvm(
+                jnp.asarray(t_in.astype(tdt)), jnp.asarray(codes.astype(cdt))
+            )
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_mvm_zero_input_is_zero():
+    z = spiking_mvm(jnp.zeros((2, 128)), jnp.ones((128, 128), jnp.int32))
+    assert np.all(np.asarray(z) == 0.0)
+
+
+def test_mvm_linearity_in_t_in():
+    """Eq. 2 is linear: doubling all T_in doubles T_out exactly."""
+    rng = _rng(7)
+    t_in = rng.uniform(0, 25.0, (4, 128)).astype(np.float32)
+    codes = rng.integers(0, 4, (128, 128)).astype(np.int32)
+    one = np.asarray(spiking_mvm(jnp.asarray(t_in), jnp.asarray(codes)))
+    two = np.asarray(spiking_mvm(jnp.asarray(2 * t_in), jnp.asarray(codes)))
+    np.testing.assert_allclose(two, 2 * one, rtol=1e-5)
+
+
+# ------------------------------------------------------------- encode ----
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    k=st.sampled_from([32, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    t_bit=st.floats(0.05, 1.0),
+)
+def test_encode_matches_ref(b, k, seed, t_bit):
+    x = _rng(seed).integers(0, 256, (b, k)).astype(np.int32)
+    got = dualspike_encode(jnp.asarray(x), t_bit=t_bit)
+    want = ref.dualspike_encode_ref(jnp.asarray(x), t_bit=t_bit)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.01, 2.0))
+def test_decode_inverts_encode_scale(seed, alpha):
+    rng = _rng(seed)
+    t = rng.uniform(0, 120.0, (4, 128)).astype(np.float32)
+    got = dualspike_decode(jnp.asarray(t), alpha=alpha)
+    want = ref.dualspike_decode_ref(jnp.asarray(t), alpha=alpha)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_encode_decode_roundtrip_exact_macs():
+    """8-bit x, 2-bit codes: decode(mvm(encode(x))) == x @ G bit-true."""
+    rng = _rng(3)
+    x = rng.integers(0, 256, (4, 128)).astype(np.int32)
+    codes = rng.integers(0, 4, (128, 128)).astype(np.int32)
+    t_in = dualspike_encode(jnp.asarray(x))
+    t_out = spiking_mvm(t_in, jnp.asarray(codes), alpha=0.05)
+    y = dualspike_decode(t_out, alpha=0.05)
+    want = ref.spiking_mvm_ref(
+        jnp.asarray(x, jnp.float32), jnp.asarray(codes)
+    )
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-2)
+
+
+# ----------------------------------------------------------- transient ----
+@settings(max_examples=8, deadline=None)
+@given(
+    k=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    mirror=st.booleans(),
+)
+def test_transient_matches_ref(k, seed, mirror):
+    rng = _rng(seed)
+    t_in = rng.uniform(0, 8.0, (k,)).astype(np.float32)
+    g = rng.choice([1 / 6, 1 / 5, 1 / 4, 1 / 3], (k,)).astype(np.float32)
+    got = charge_transient(
+        jnp.asarray(t_in), jnp.asarray(g), dt=0.05, n_steps=256, mirror=mirror
+    )
+    want = ref.charge_transient_ref(
+        jnp.asarray(t_in), jnp.asarray(g), dt=0.05, n_steps=256, mirror=mirror
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_transient_droop_below_mirror():
+    """Fig 7b: without the mirror, V_charge is strictly lower at the end."""
+    t_in = jnp.full((128,), 10.0)
+    g = jnp.full((128,), 1 / 3)
+    vm = charge_transient(t_in, g, dt=0.01, n_steps=1000, mirror=True)
+    vd = charge_transient(t_in, g, dt=0.01, n_steps=1000, mirror=False)
+    assert float(vd[-1]) < float(vm[-1])
+    droop = 1.0 - float(vd[-1]) / float(vm[-1])
+    assert 0.05 < droop < 0.8  # paper: 39.6 % at 10 ns, same order
+
+
+def test_transient_mirror_is_linear_ramp():
+    """With all rows active, mirrored charging is an exact linear ramp."""
+    t_in = jnp.full((16,), 100.0)  # never de-asserts within window
+    g = jnp.full((16,), 0.25)
+    v = np.asarray(charge_transient(t_in, g, dt=0.01, n_steps=500))
+    dv = np.diff(v)
+    np.testing.assert_allclose(dv, dv[0], rtol=1e-4)

@@ -1,0 +1,167 @@
+//! Leaky-integrate-and-fire readout baseline (TCAS-I'22 [24] / Tempo-CIM
+//! [22] style): the column current charges a leaky membrane; output spikes
+//! fire whenever the membrane crosses threshold. Rate-decoded.
+//!
+//! Exists to demonstrate the §II-B accuracy critique quantitatively: the
+//! leak makes the spike count *nonlinear* in the input current — measured
+//! by `nonlinearity()` and shown in the ablation bench.
+
+use super::Readout;
+
+#[derive(Debug, Clone, Copy)]
+pub struct LifNeuron {
+    /// Membrane capacitance (fF).
+    pub c_mem_ff: f64,
+    /// Leak conductance (µS).
+    pub g_leak_us: f64,
+    /// Firing threshold (V).
+    pub v_th: f64,
+    /// Refractory period after each spike (ns).
+    pub t_refrac_ns: f64,
+    /// Energy per fired spike (reset + pulse, fJ).
+    pub e_spike_fj: f64,
+    /// Static bias power of the neuron (µW).
+    pub p_bias_uw: f64,
+}
+
+impl Default for LifNeuron {
+    fn default() -> Self {
+        LifNeuron {
+            c_mem_ff: 50.0,
+            g_leak_us: 0.5,
+            v_th: 0.3,
+            t_refrac_ns: 1.0,
+            e_spike_fj: 40.0,
+            p_bias_uw: 4.0,
+        }
+    }
+}
+
+impl LifNeuron {
+    /// Simulate a constant input current `i_ua` for `t_ns`; returns the
+    /// number of output spikes. Exact per-interval solution (no stepping):
+    /// between spikes the membrane is an RC charge toward i/g_leak.
+    pub fn spikes_for(&self, i_ua: f64, t_ns: f64) -> u32 {
+        if i_ua <= 0.0 || t_ns <= 0.0 {
+            return 0;
+        }
+        let v_inf = i_ua / self.g_leak_us;
+        if v_inf <= self.v_th {
+            return 0; // never reaches threshold (sub-threshold leak)
+        }
+        let tau = self.c_mem_ff / self.g_leak_us;
+        // Time to cross threshold from reset: t = τ·ln(v∞/(v∞−v_th)).
+        let t_cross = tau * (v_inf / (v_inf - self.v_th)).ln();
+        let period = t_cross + self.t_refrac_ns;
+        (t_ns / period).floor() as u32
+    }
+
+    /// Energy of one conversion window (fJ).
+    pub fn conversion_energy_fj(&self, i_ua: f64, t_ns: f64) -> f64 {
+        self.p_bias_uw * t_ns
+            + self.e_spike_fj * self.spikes_for(i_ua, t_ns) as f64
+    }
+
+    /// Max deviation from the best-fit line of spike-count vs current,
+    /// as a fraction of full scale — the §II-B nonlinearity.
+    pub fn nonlinearity(&self, i_max_ua: f64, t_ns: f64, points: usize) -> f64 {
+        let xs: Vec<f64> = (1..=points)
+            .map(|k| i_max_ua * k as f64 / points as f64)
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&i| self.spikes_for(i, t_ns) as f64)
+            .collect();
+        let fit = crate::util::stats::line_fit(&xs, &ys);
+        let full = ys.iter().cloned().fold(0.0, f64::max).max(1.0);
+        fit.max_abs_err / full
+    }
+}
+
+/// Readout-trait wrapper: energy for a full-precision conversion window
+/// (2^bits spike slots at the nominal rate).
+#[derive(Debug, Clone, Copy)]
+pub struct LifReadout {
+    pub neuron: LifNeuron,
+    /// Nominal input current at full scale (µA).
+    pub i_full_ua: f64,
+}
+
+impl LifReadout {
+    pub fn new(neuron: LifNeuron, i_full_ua: f64) -> Self {
+        LifReadout { neuron, i_full_ua }
+    }
+
+    /// Window long enough to count 2^bits spikes at full-scale input.
+    pub fn window_ns(&self, bits: u32) -> f64 {
+        let v_inf = self.i_full_ua / self.neuron.g_leak_us;
+        let tau = self.neuron.c_mem_ff / self.neuron.g_leak_us;
+        let t_cross = if v_inf > self.neuron.v_th {
+            tau * (v_inf / (v_inf - self.neuron.v_th)).ln()
+        } else {
+            return f64::INFINITY;
+        };
+        (t_cross + self.neuron.t_refrac_ns) * (1u64 << bits) as f64
+    }
+}
+
+impl Readout for LifReadout {
+    fn name(&self) -> &'static str {
+        "LIF (rate)"
+    }
+
+    fn energy_per_conversion_fj(&self, bits: u32) -> f64 {
+        let t = self.window_ns(bits);
+        self.neuron.conversion_energy_fj(self.i_full_ua, t)
+    }
+
+    fn latency_ns(&self, bits: u32) -> f64 {
+        self.window_ns(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subthreshold_never_fires() {
+        let n = LifNeuron::default();
+        // v∞ = i/g = 0.1/0.5 = 0.2 V < 0.3 V threshold.
+        assert_eq!(n.spikes_for(0.1, 1e6), 0);
+    }
+
+    #[test]
+    fn rate_increases_with_current() {
+        let n = LifNeuron::default();
+        let lo = n.spikes_for(0.2, 1000.0);
+        let hi = n.spikes_for(2.0, 1000.0);
+        assert!(hi > lo, "{hi} vs {lo}");
+    }
+
+    #[test]
+    fn leak_makes_rate_nonlinear() {
+        // The §II-B critique: LIF rate vs current deviates from a line
+        // by several percent of full scale; the OSG's max deviation is
+        // ~1e-9 (see repro::fig7). Threshold chosen ≫ noise.
+        let n = LifNeuron::default();
+        let nl = n.nonlinearity(2.0, 2000.0, 64);
+        assert!(nl > 0.01, "nonlinearity {nl}");
+    }
+
+    #[test]
+    fn conversion_energy_includes_bias_and_spikes() {
+        let n = LifNeuron::default();
+        let e_idle = n.conversion_energy_fj(0.0, 100.0);
+        let e_busy = n.conversion_energy_fj(2.0, 100.0);
+        assert!((e_idle - 400.0).abs() < 1e-9); // bias only
+        assert!(e_busy > e_idle);
+    }
+
+    #[test]
+    fn window_scales_exponentially_with_bits() {
+        let r = LifReadout::new(LifNeuron::default(), 2.0);
+        assert!(r.window_ns(8) / r.window_ns(4) > 15.0);
+        assert!(r.energy_per_conversion_fj(8) > r.energy_per_conversion_fj(4));
+    }
+}

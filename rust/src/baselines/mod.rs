@@ -1,0 +1,92 @@
+//! Baseline readout schemes (DESIGN.md S10) — every comparison point of
+//! Table II and Fig 6(b), behind one interface:
+//!
+//! | scheme | paper | role |
+//! |---|---|---|
+//! | [`SarAdc`] | DAC'24 [16], ESSCIRC'21 [13] | analog-CIM ADC readout |
+//! | [`Tdc`] | Nature'22 [15] | time-to-digital readout |
+//! | [`CogReadout`] | DAC'20 [14] | clocked single-spike readout |
+//! | [`LifReadout`] | TCAS-I'22 [24] | leaky integrate-fire (rate out) |
+//! | [`RateIfc`] | VLSI'19 [18] | rate-coded CA+IFC |
+//! | [`OsgReadout`] | this work | event-driven dual-spike OSG |
+//!
+//! Each baseline has exactly one free parameter calibrated to its
+//! published Fig 6(b) anchor; all trends (precision, latency, array-size
+//! scaling) are produced by the models.
+
+pub mod adc;
+pub mod cog;
+pub mod lif;
+pub mod osg_readout;
+pub mod rate_ifc;
+pub mod tdc;
+
+pub use adc::SarAdc;
+pub use cog::CogReadout;
+pub use lif::{LifNeuron, LifReadout};
+pub use osg_readout::OsgReadout;
+pub use rate_ifc::RateIfc;
+pub use tdc::Tdc;
+
+/// Common interface over all readout/sensing schemes.
+pub trait Readout {
+    fn name(&self) -> &'static str;
+    /// Energy for one column conversion at `bits` input precision (fJ).
+    fn energy_per_conversion_fj(&self, bits: u32) -> f64;
+    /// Conversion latency (ns).
+    fn latency_ns(&self, bits: u32) -> f64;
+}
+
+/// The Fig 6(b) anchor set (fJ per 8-bit conversion), derived from the
+/// paper's stated reductions against our ≈763 fJ OSG conversion:
+/// 96.6 % vs ADC [16], 92.8 % vs spike [14], 71.2 % vs TDC [15].
+pub mod anchors {
+    /// Our OSG conversion energy at 8 bits (DESIGN.md §6).
+    pub const OURS_FJ: f64 = 763.0;
+    pub const ADC_DAC24_FJ: f64 = OURS_FJ / (1.0 - 0.966);
+    pub const SPIKE_DAC20_FJ: f64 = OURS_FJ / (1.0 - 0.928);
+    pub const TDC_NATURE22_FJ: f64 = OURS_FJ / (1.0 - 0.712);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_schemes() -> Vec<Box<dyn Readout>> {
+        vec![
+            Box::new(SarAdc::calibrated(8, anchors::ADC_DAC24_FJ)),
+            Box::new(Tdc::calibrated(8, anchors::TDC_NATURE22_FJ)),
+            Box::new(CogReadout::calibrated(8, anchors::SPIKE_DAC20_FJ)),
+            Box::new(OsgReadout::new(crate::config::MacroConfig::default())),
+        ]
+    }
+
+    #[test]
+    fn ours_is_cheapest_at_8bit() {
+        let schemes = all_schemes();
+        let ours = schemes.last().unwrap().energy_per_conversion_fj(8);
+        for s in &schemes[..schemes.len() - 1] {
+            assert!(
+                ours < s.energy_per_conversion_fj(8),
+                "{} should cost more",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fig6b_reductions_match_paper() {
+        let ours = OsgReadout::new(crate::config::MacroConfig::default())
+            .energy_per_conversion_fj(8);
+        let adc = SarAdc::calibrated(8, anchors::ADC_DAC24_FJ)
+            .energy_per_conversion_fj(8);
+        let cog = CogReadout::calibrated(8, anchors::SPIKE_DAC20_FJ)
+            .energy_per_conversion_fj(8);
+        let tdc = Tdc::calibrated(8, anchors::TDC_NATURE22_FJ)
+            .energy_per_conversion_fj(8);
+        let red = |base: f64| 1.0 - ours / base;
+        assert!((red(adc) - 0.966).abs() < 0.01, "{}", red(adc));
+        assert!((red(cog) - 0.928).abs() < 0.01, "{}", red(cog));
+        assert!((red(tdc) - 0.712).abs() < 0.02, "{}", red(tdc));
+    }
+}

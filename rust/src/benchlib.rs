@@ -1,0 +1,215 @@
+//! Criterion-style benchmark harness (substrate — the `criterion` crate
+//! is unavailable offline; see Cargo.toml note).
+//!
+//! Provides warmup, timed sampling, and robust summary statistics
+//! (median / mean / p95, MAD-based spread) with the familiar
+//! `bench_function(name, |b| b.iter(...))` shape, plus a results table
+//! printer used by every `benches/*.rs` target (`harness = false`).
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// One benchmark's collected samples and derived stats.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ns)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples_ns, 95.0)
+    }
+
+    /// Median absolute deviation (robust spread), ns.
+    pub fn mad_ns(&self) -> f64 {
+        let med = self.median_ns();
+        let devs: Vec<f64> =
+            self.samples_ns.iter().map(|&x| (x - med).abs()).collect();
+        crate::util::stats::percentile(&devs, 50.0)
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>8}",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p95_ns()),
+            format!("±{:.1}%", 100.0 * self.mad_ns() / self.median_ns().max(1e-12)),
+        )
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Per-iteration timer handle passed to the closure.
+pub struct Bencher {
+    target_sample: Duration,
+    result_ns: Vec<f64>,
+    iters_per_sample: u64,
+    samples: usize,
+}
+
+impl Bencher {
+    /// Time `f`, auto-scaling iterations so each sample lasts about
+    /// `target_sample`.
+    pub fn iter<T, F: FnMut() -> T>(&mut self, mut f: F) {
+        // Calibrate: how many iters fit the target sample time?
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= self.target_sample / 4 || iters >= 1 << 24 {
+                let scale = (self.target_sample.as_secs_f64()
+                    / dt.as_secs_f64().max(1e-9))
+                .clamp(0.25, 1024.0);
+                iters = ((iters as f64 * scale) as u64).max(1);
+                break;
+            }
+            iters *= 4;
+        }
+        // Warmup once at full count, then sample.
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            bb(f());
+        }
+        bb(t0.elapsed());
+        self.result_ns.clear();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            self.result_ns
+                .push(t0.elapsed().as_secs_f64() * 1e9 / iters as f64);
+        }
+        self.iters_per_sample = iters;
+    }
+}
+
+/// A named group of benchmarks printing a results table.
+pub struct Harness {
+    pub group: String,
+    results: Vec<BenchResult>,
+    samples: usize,
+    target_sample: Duration,
+}
+
+impl Harness {
+    pub fn new(group: &str) -> Harness {
+        // Honor a quick mode for CI: SPIKEMRAM_BENCH_FAST=1.
+        let fast = std::env::var("SPIKEMRAM_BENCH_FAST").is_ok();
+        println!("\n=== bench group: {group} ===");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>8}",
+            "benchmark", "median", "mean", "p95", "spread"
+        );
+        Harness {
+            group: group.to_string(),
+            results: Vec::new(),
+            samples: if fast { 5 } else { 15 },
+            target_sample: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(80)
+            },
+        }
+    }
+
+    /// Run one benchmark and print its row. Returns a copy of the result
+    /// so callers can keep using the harness (`note`, more benches).
+    pub fn bench_function<F: FnMut(&mut Bencher)>(
+        &mut self,
+        name: &str,
+        mut f: F,
+    ) -> BenchResult {
+        let mut b = Bencher {
+            target_sample: self.target_sample,
+            result_ns: Vec::new(),
+            iters_per_sample: 0,
+            samples: self.samples,
+        };
+        f(&mut b);
+        let r = BenchResult {
+            name: name.to_string(),
+            samples_ns: b.result_ns,
+            iters_per_sample: b.iters_per_sample,
+        };
+        println!("{}", r.summary_line());
+        self.results.push(r.clone());
+        r
+    }
+
+    /// Print a throughput line derived from the last result.
+    pub fn note(&self, text: &str) {
+        println!("    ↳ {text}");
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+        let mut h = Harness::new("selftest");
+        let r = h.bench_function("sum_1k", |b| {
+            b.iter(|| (0..1000u64).sum::<u64>())
+        });
+        assert!(r.median_ns() > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        assert_eq!(r.samples_ns.len(), 5);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5.0e3).ends_with("µs"));
+        assert!(fmt_ns(5.0e6).ends_with("ms"));
+        assert!(fmt_ns(5.0e9).ends_with("s"));
+    }
+
+    #[test]
+    fn slower_code_measures_slower() {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+        let mut h = Harness::new("selftest2");
+        let fast = h
+            .bench_function("fast", |b| b.iter(|| (0..100u64).sum::<u64>()))
+            .median_ns();
+        let slow = h
+            .bench_function("slow", |b| b.iter(|| (0..100_000u64).sum::<u64>()))
+            .median_ns();
+        assert!(slow > 10.0 * fast, "slow {slow} vs fast {fast}");
+    }
+}

@@ -1,0 +1,261 @@
+//! Behavioral analog components (DESIGN.md S4). Each models the
+//! *observable* first-order behaviour of the corresponding 28 nm block in
+//! Fig 3/4 of the paper, with the non-ideality knobs the evaluation needs.
+//!
+//! Units: ns / V / µA / µS / fF / MΩ / fJ (see `crate::config`).
+
+/// An ideal capacitor integrating current into voltage.
+#[derive(Debug, Clone, Copy)]
+pub struct Capacitor {
+    pub c_ff: f64,
+    pub v: f64,
+}
+
+impl Capacitor {
+    pub fn new(c_ff: f64) -> Self {
+        assert!(c_ff > 0.0);
+        Capacitor { c_ff, v: 0.0 }
+    }
+
+    /// Integrate a constant current `i_ua` for `dt_ns`.
+    pub fn charge(&mut self, i_ua: f64, dt_ns: f64) {
+        self.v += i_ua * dt_ns / self.c_ff;
+    }
+
+    /// Exponential charge toward `v_inf` through conductance `g_us` for
+    /// `dt_ns` (exact RC segment solution, used by the event-driven path).
+    pub fn charge_rc(&mut self, v_inf: f64, g_us: f64, dt_ns: f64) {
+        if g_us <= 0.0 || dt_ns <= 0.0 {
+            return;
+        }
+        let tau = self.c_ff / g_us; // fF/µS = ns
+        self.v = v_inf + (self.v - v_inf) * (-dt_ns / tau).exp();
+    }
+
+    pub fn reset(&mut self) {
+        self.v = 0.0;
+    }
+
+    /// Energy to charge this cap to its present voltage from the supply
+    /// (CV·Vdd, the standard switched-capacitor cost), in fJ.
+    pub fn charge_energy_fj(&self, vdd: f64) -> f64 {
+        self.c_ff * self.v.abs() * vdd
+    }
+}
+
+/// Clamping + current-mirror block (Fig 4a).
+///
+/// Holds the bit line at `v_clamp` (so cell current is V_read-determined,
+/// not V_charge-dependent) and mirrors the column current into the result
+/// capacitor with gain `k` (± a per-column gain error). The finite output
+/// resistance `r_out_mohm` models residual droop at high V_charge.
+#[derive(Debug, Clone, Copy)]
+pub struct CurrentMirror {
+    /// Nominal gain k.
+    pub k: f64,
+    /// Multiplicative gain error (1.0 = ideal), frozen per column.
+    pub gain_err: f64,
+    /// Output resistance (MΩ); f64::INFINITY = ideal.
+    pub r_out_mohm: f64,
+}
+
+impl CurrentMirror {
+    pub fn ideal(k: f64) -> Self {
+        CurrentMirror {
+            k,
+            gain_err: 1.0,
+            r_out_mohm: f64::INFINITY,
+        }
+    }
+
+    /// Mirrored output current (µA) for input `i_in_ua` when the output
+    /// node sits at `v_out`: k·err·I_in − V_out/R_out.
+    pub fn output_current(&self, i_in_ua: f64, v_out: f64) -> f64 {
+        let ideal = self.k * self.gain_err * i_in_ua;
+        if self.r_out_mohm.is_finite() {
+            ideal - v_out / self.r_out_mohm
+        } else {
+            ideal
+        }
+    }
+}
+
+/// Continuous-time comparator (Fig 4b): output toggles when V+ crosses
+/// V− + offset; the toggle propagates after `delay_ns`.
+#[derive(Debug, Clone, Copy)]
+pub struct Comparator {
+    pub offset_v: f64,
+    pub delay_ns: f64,
+}
+
+impl Comparator {
+    pub fn ideal() -> Self {
+        Comparator {
+            offset_v: 0.0,
+            delay_ns: 0.0,
+        }
+    }
+
+    /// Given a ramp V+(t) = slope·t (V/ns) and a threshold `v_thresh`,
+    /// the time the comparator *output* fires. None if slope ≤ 0 or the
+    /// effective threshold is negative (fires immediately → t = delay).
+    pub fn fire_time(&self, slope_v_per_ns: f64, v_thresh: f64) -> Option<f64> {
+        if slope_v_per_ns <= 0.0 {
+            return None;
+        }
+        let eff = v_thresh + self.offset_v;
+        if eff <= 0.0 {
+            return Some(self.delay_ns);
+        }
+        Some(eff / slope_v_per_ns + self.delay_ns)
+    }
+
+    /// Did V+ cross (V− + offset) between two sampled instants?
+    pub fn crossed(&self, v_plus: f64, v_minus: f64) -> bool {
+        v_plus >= v_minus + self.offset_v
+    }
+}
+
+/// Input clamping circuit (Fig 3a): drives the crossbar input line to
+/// `v_in_clamp` while the row's Event_flag is high, to `v_clamp` otherwise,
+/// with a first-order settling time constant `tau_ns`.
+#[derive(Debug, Clone, Copy)]
+pub struct Clamp {
+    pub v_clamp: f64,
+    pub v_in_clamp: f64,
+    /// Settling time constant of the clamp loop (ns).
+    pub tau_ns: f64,
+}
+
+impl Clamp {
+    /// Target voltage for a given flag state.
+    pub fn target(&self, flag_high: bool) -> f64 {
+        if flag_high {
+            self.v_in_clamp
+        } else {
+            self.v_clamp
+        }
+    }
+
+    /// Settle `v` toward the target for `dt_ns` (exact 1st-order step).
+    pub fn settle(&self, v: f64, flag_high: bool, dt_ns: f64) -> f64 {
+        let tgt = self.target(flag_high);
+        if self.tau_ns <= 0.0 {
+            return tgt;
+        }
+        tgt + (v - tgt) * (-dt_ns / self.tau_ns).exp()
+    }
+
+    /// Read voltage across the cell when fully settled & flag high.
+    pub fn v_read(&self) -> f64 {
+        self.v_clamp - self.v_in_clamp
+    }
+}
+
+/// Edge-triggered spike generator (Fig 4c): emits a fixed-width pulse on
+/// each rising input edge.
+#[derive(Debug, Clone, Copy)]
+pub struct SpikeGenerator {
+    pub pulse_width_ns: f64,
+    /// Energy per emitted spike (fJ) — CV² of the pulse driver.
+    pub energy_fj: f64,
+}
+
+impl SpikeGenerator {
+    /// Spike (start, end) for a rising edge at `t_ns`.
+    pub fn fire(&self, t_ns: f64) -> (f64, f64) {
+        (t_ns, t_ns + self.pulse_width_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacitor_linear_charge() {
+        let mut c = Capacitor::new(200.0);
+        c.charge(2.0, 100.0); // 2 µA for 100 ns into 200 fF = 1 V
+        assert!((c.v - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacitor_rc_charge_approaches_v_inf() {
+        let mut c = Capacitor::new(200.0);
+        c.charge_rc(0.1, 10.0, 1e6); // many time constants
+        assert!((c.v - 0.1).abs() < 1e-9);
+        // one tau: 1 − e^−1 of the way
+        let mut c2 = Capacitor::new(200.0);
+        c2.charge_rc(1.0, 10.0, 20.0); // tau = 20 ns
+        assert!((c2.v - (1.0 - (-1.0f64).exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mirror_ideal_gain() {
+        let m = CurrentMirror::ideal(1.0);
+        assert_eq!(m.output_current(3.0, 0.9), 3.0);
+    }
+
+    #[test]
+    fn mirror_finite_rout_droops_with_v() {
+        let m = CurrentMirror {
+            k: 1.0,
+            gain_err: 1.0,
+            r_out_mohm: 10.0,
+        };
+        let hi = m.output_current(3.0, 0.0);
+        let lo = m.output_current(3.0, 1.0);
+        assert!(lo < hi);
+        assert!((hi - lo - 0.1).abs() < 1e-12); // 1 V / 10 MΩ = 0.1 µA
+    }
+
+    #[test]
+    fn comparator_fire_time_linear_ramp() {
+        let c = Comparator::ideal();
+        // ramp 0.01 V/ns, threshold 0.5 V → 50 ns
+        assert!((c.fire_time(0.01, 0.5).unwrap() - 50.0).abs() < 1e-12);
+        assert!(c.fire_time(0.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn comparator_offset_and_delay_shift_fire_time() {
+        let c = Comparator {
+            offset_v: 0.01,
+            delay_ns: 2.0,
+        };
+        let t = c.fire_time(0.01, 0.5).unwrap();
+        assert!((t - (0.51 / 0.01 + 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamp_settles_to_targets() {
+        let cl = Clamp {
+            v_clamp: 0.4,
+            v_in_clamp: 0.3,
+            tau_ns: 0.1,
+        };
+        assert!((cl.v_read() - 0.1).abs() < 1e-12);
+        let v = cl.settle(0.4, true, 10.0); // 100 taus
+        assert!((v - 0.3).abs() < 1e-9);
+        assert_eq!(cl.settle(0.25, false, 0.0), 0.25); // dt=0 keeps state
+    }
+
+    #[test]
+    fn clamp_instant_when_tau_zero() {
+        let cl = Clamp {
+            v_clamp: 0.4,
+            v_in_clamp: 0.3,
+            tau_ns: 0.0,
+        };
+        assert_eq!(cl.settle(0.0, true, 0.0), 0.3);
+    }
+
+    #[test]
+    fn spike_generator_pulse() {
+        let sg = SpikeGenerator {
+            pulse_width_ns: 0.1,
+            energy_fj: 1.0,
+        };
+        assert_eq!(sg.fire(5.0), (5.0, 5.1));
+    }
+}

@@ -1,0 +1,23 @@
+//! Behavioral analog circuit engine (DESIGN.md S4–S6).
+//!
+//! Two resolutions of the same physics:
+//! * **event-analytic** — closed-form segment solutions between spike
+//!   events (the simulator's hot path; `osg::charge_phase`);
+//! * **dense transient** — RK4/Euler waveform rendering for the paper's
+//!   scope plots (`transient::integrate`, `smu::waveforms`,
+//!   `osg::waveforms`).
+//!
+//! They are cross-checked against each other in tests, and against the
+//! Pallas `transient.py` kernel in `rust/tests/`.
+
+pub mod components;
+pub mod montecarlo;
+pub mod osg;
+pub mod smu;
+pub mod transient;
+pub mod waveform;
+
+pub use components::{Capacitor, Clamp, Comparator, CurrentMirror, SpikeGenerator};
+pub use osg::{ColumnResult, OsgParams};
+pub use smu::{FlagWindow, SmuParams, SmuRow};
+pub use waveform::{Trace, Waveforms};

@@ -1,0 +1,178 @@
+//! Spike Modulation Unit (paper §III-B, Fig 3).
+//!
+//! Per row: a DFF turns the input spike pair into `Event_flag_i` (high
+//! between the two spikes), and the input clamping circuit regulates the
+//! crossbar input line to `V_in,clamp` while the flag is high (N1 path)
+//! and to `V_clamp` otherwise (N2 path), so a fixed
+//! V_read = V_clamp − V_in,clamp appears across the cells exactly during
+//! the event window.
+
+use crate::coding::SpikePair;
+
+use super::components::Clamp;
+use super::waveform::Waveforms;
+
+/// SMU behavioral parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SmuParams {
+    pub clamp: Clamp,
+    /// DFF clk→Q delay (ns) applied to both flag edges.
+    pub dff_delay_ns: f64,
+    /// Energy per DFF toggle (fJ).
+    pub e_dff_toggle_fj: f64,
+    /// Clamp bias power while the row is active (µW = fJ/ns).
+    pub p_clamp_active_uw: f64,
+}
+
+impl SmuParams {
+    /// Defaults per DESIGN.md §6 (28 nm standard-cell-class numbers).
+    pub fn default_28nm(v_clamp: f64, v_in_clamp: f64) -> Self {
+        SmuParams {
+            clamp: Clamp {
+                v_clamp,
+                v_in_clamp,
+                tau_ns: 0.05,
+            },
+            dff_delay_ns: 0.03,
+            e_dff_toggle_fj: 1.2,
+            p_clamp_active_uw: 2.0,
+        }
+    }
+}
+
+/// The Event_flag_i window produced by a spike pair (DFF output).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlagWindow {
+    pub rise_ns: f64,
+    pub fall_ns: f64,
+}
+
+impl FlagWindow {
+    pub fn duration_ns(&self) -> f64 {
+        self.fall_ns - self.rise_ns
+    }
+}
+
+/// One SMU row.
+#[derive(Debug, Clone, Copy)]
+pub struct SmuRow {
+    pub params: SmuParams,
+}
+
+impl SmuRow {
+    pub fn new(params: SmuParams) -> Self {
+        SmuRow { params }
+    }
+
+    /// DFF: spike pair → flag window (both edges shifted by clk→Q delay).
+    /// A zero-interval pair (value 0) produces no window.
+    pub fn flag_window(&self, pair: &SpikePair) -> Option<FlagWindow> {
+        if pair.dt_ns <= 0.0 {
+            return None;
+        }
+        let d = self.params.dff_delay_ns;
+        Some(FlagWindow {
+            rise_ns: pair.t0_ns + d,
+            fall_ns: pair.t1_ns() + d,
+        })
+    }
+
+    /// Energy consumed by this row for one spike pair (fJ):
+    /// two DFF toggles + clamp bias over the active window.
+    pub fn event_energy_fj(&self, pair: &SpikePair) -> f64 {
+        match self.flag_window(pair) {
+            None => 0.0,
+            Some(w) => {
+                2.0 * self.params.e_dff_toggle_fj
+                    + self.params.p_clamp_active_uw * w.duration_ns()
+            }
+        }
+    }
+
+    /// Dense waveforms for Fig 3(c): input spikes, Event_flag_i, V_in.
+    /// V_in follows the clamp's first-order settling between targets.
+    pub fn waveforms(&self, pair: &SpikePair, t_end_ns: f64, dt_ns: f64) -> Waveforms {
+        let mut wf = Waveforms::new();
+        let window = self.flag_window(pair);
+        let spike_w = 0.1; // drawn spike width (ns)
+        let mut v_in = self.params.clamp.v_clamp; // idle level
+        let steps = (t_end_ns / dt_ns).ceil() as usize;
+        for s in 0..=steps {
+            let t = s as f64 * dt_ns;
+            // input spike train (two narrow pulses)
+            let in_spike = ((t - pair.t0_ns) >= 0.0 && (t - pair.t0_ns) < spike_w)
+                || ((t - pair.t1_ns()) >= 0.0 && (t - pair.t1_ns()) < spike_w);
+            let flag = window
+                .map(|w| t >= w.rise_ns && t < w.fall_ns)
+                .unwrap_or(false);
+            v_in = self.params.clamp.settle(v_in, flag, dt_ns);
+            wf.push("spike_in", t, if in_spike { 1.0 } else { 0.0 });
+            wf.push("event_flag_i", t, if flag { 1.0 } else { 0.0 });
+            wf.push("v_in", t, v_in);
+        }
+        wf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> SmuRow {
+        SmuRow::new(SmuParams::default_28nm(0.4, 0.3))
+    }
+
+    fn pair(t0: f64, dt: f64) -> SpikePair {
+        SpikePair { t0_ns: t0, dt_ns: dt }
+    }
+
+    #[test]
+    fn flag_window_matches_interspike_interval() {
+        let r = row();
+        let w = r.flag_window(&pair(1.0, 3.2)).unwrap();
+        assert!((w.duration_ns() - 3.2).abs() < 1e-12);
+        assert!((w.rise_ns - 1.03).abs() < 1e-12); // + dff delay
+    }
+
+    #[test]
+    fn zero_value_produces_no_window_or_energy() {
+        let r = row();
+        assert!(r.flag_window(&pair(0.0, 0.0)).is_none());
+        assert_eq!(r.event_energy_fj(&pair(0.0, 0.0)), 0.0);
+    }
+
+    #[test]
+    fn event_energy_scales_with_window() {
+        let r = row();
+        let e_small = r.event_energy_fj(&pair(0.0, 1.0));
+        let e_large = r.event_energy_fj(&pair(0.0, 10.0));
+        assert!(e_large > e_small);
+        // Both include the fixed 2-toggle DFF cost.
+        let fixed = 2.0 * r.params.e_dff_toggle_fj;
+        assert!((e_small - fixed - 2.0).abs() < 1e-12); // 2 µW × 1 ns
+    }
+
+    #[test]
+    fn vin_settles_to_clamp_targets_fig3c() {
+        // Fig 3(c): V_in pulled to V_in,clamp during the event window,
+        // back to V_clamp after.
+        let r = row();
+        let p = pair(1.0, 5.0);
+        let wf = r.waveforms(&p, 10.0, 0.005);
+        let v_in = wf.get("v_in").unwrap();
+        // mid-window: settled to 0.3 V
+        assert!((v_in.at(4.0) - 0.3).abs() < 1e-3);
+        // well after: back to 0.4 V
+        assert!((v_in.at(9.5) - 0.4).abs() < 1e-3);
+        // flag matches window
+        let flag = wf.get("event_flag_i").unwrap();
+        assert_eq!(flag.at(3.0), 1.0);
+        assert_eq!(flag.at(8.0), 0.0);
+    }
+
+    #[test]
+    fn read_voltage_is_100mv() {
+        let r = row();
+        assert!((r.params.clamp.v_read() - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,183 @@
+//! Fixed-step transient integrator — the waveform-fidelity path of the
+//! behavioral circuit engine (used for Figs 3c / 5 / 7b).
+//!
+//! The *hot* path of the simulator never uses this: macro ops are solved
+//! event-analytically (piecewise closed forms between spike events, see
+//! `circuit::osg`). This integrator exists to (a) render dense waveforms
+//! like the paper's Cadence plots and (b) cross-check the analytic path
+//! (they must agree to discretization error — tested below and in
+//! `python/compile/kernels/transient.py`).
+
+use super::waveform::Waveforms;
+
+/// A system integrated as dv/dt = f(t, v) per named state.
+pub trait TransientSystem {
+    /// Number of state variables.
+    fn dim(&self) -> usize;
+    /// Derivatives dv/dt (units V/ns) at time `t_ns` for states `v`.
+    fn deriv(&self, t_ns: f64, v: &[f64], dv: &mut [f64]);
+    /// Names for waveform capture (len == dim()).
+    fn names(&self) -> Vec<String>;
+}
+
+/// Integration configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TransientConfig {
+    pub dt_ns: f64,
+    pub t_end_ns: f64,
+    /// Record every `stride`-th step into the waveform set (1 = all).
+    pub record_stride: usize,
+}
+
+impl Default for TransientConfig {
+    fn default() -> Self {
+        TransientConfig {
+            dt_ns: 0.01,
+            t_end_ns: 100.0,
+            record_stride: 1,
+        }
+    }
+}
+
+/// RK4 fixed-step integration with waveform capture.
+///
+/// Returns (final state, waveforms). RK4 rather than Euler so the
+/// cross-check against the analytic event path converges fast enough to
+/// assert tight tolerances.
+pub fn integrate<S: TransientSystem>(
+    sys: &S,
+    v0: &[f64],
+    cfg: &TransientConfig,
+) -> (Vec<f64>, Waveforms) {
+    assert_eq!(v0.len(), sys.dim());
+    assert!(cfg.dt_ns > 0.0 && cfg.t_end_ns >= 0.0);
+    let names = sys.names();
+    let n = sys.dim();
+    let mut v = v0.to_vec();
+    let mut wf = Waveforms::new();
+    let steps = (cfg.t_end_ns / cfg.dt_ns).round() as usize;
+
+    let mut k1 = vec![0.0; n];
+    let mut k2 = vec![0.0; n];
+    let mut k3 = vec![0.0; n];
+    let mut k4 = vec![0.0; n];
+    let mut tmp = vec![0.0; n];
+
+    let record = |wf: &mut Waveforms, t: f64, v: &[f64]| {
+        for (name, &val) in names.iter().zip(v) {
+            wf.push(name, t, val);
+        }
+    };
+    record(&mut wf, 0.0, &v);
+
+    for s in 0..steps {
+        let t = s as f64 * cfg.dt_ns;
+        let h = cfg.dt_ns;
+        sys.deriv(t, &v, &mut k1);
+        for i in 0..n {
+            tmp[i] = v[i] + 0.5 * h * k1[i];
+        }
+        sys.deriv(t + 0.5 * h, &tmp, &mut k2);
+        for i in 0..n {
+            tmp[i] = v[i] + 0.5 * h * k2[i];
+        }
+        sys.deriv(t + 0.5 * h, &tmp, &mut k3);
+        for i in 0..n {
+            tmp[i] = v[i] + h * k3[i];
+        }
+        sys.deriv(t + h, &tmp, &mut k4);
+        for i in 0..n {
+            v[i] += h / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+        }
+        if (s + 1) % cfg.record_stride == 0 || s + 1 == steps {
+            record(&mut wf, t + h, &v);
+        }
+    }
+    (v, wf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// dv/dt = −v (exact: e^−t).
+    struct Decay;
+    impl TransientSystem for Decay {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn deriv(&self, _t: f64, v: &[f64], dv: &mut [f64]) {
+            dv[0] = -v[0];
+        }
+        fn names(&self) -> Vec<String> {
+            vec!["v".into()]
+        }
+    }
+
+    #[test]
+    fn rk4_matches_exponential_decay() {
+        let cfg = TransientConfig {
+            dt_ns: 0.05,
+            t_end_ns: 2.0,
+            record_stride: 1,
+        };
+        let (v, _) = integrate(&Decay, &[1.0], &cfg);
+        assert!((v[0] - (-2.0f64).exp()).abs() < 1e-7);
+    }
+
+    /// Constant-current capacitor: dv/dt = 0.01 (linear ramp).
+    struct Ramp;
+    impl TransientSystem for Ramp {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn deriv(&self, _t: f64, _v: &[f64], dv: &mut [f64]) {
+            dv[0] = 0.01;
+        }
+        fn names(&self) -> Vec<String> {
+            vec!["vc".into()]
+        }
+    }
+
+    #[test]
+    fn ramp_is_exact_and_recorded() {
+        let cfg = TransientConfig {
+            dt_ns: 0.1,
+            t_end_ns: 10.0,
+            record_stride: 10,
+        };
+        let (v, wf) = integrate(&Ramp, &[0.0], &cfg);
+        assert!((v[0] - 0.1).abs() < 1e-12);
+        let tr = wf.get("vc").unwrap();
+        assert!((tr.at(5.0) - 0.05).abs() < 1e-9);
+        // stride 10 over 100 steps → 11 recorded points incl. t=0
+        assert_eq!(tr.points.len(), 11);
+    }
+
+    /// Two coupled states: dv0 = 1, dv1 = v0 (v1 = t²/2).
+    struct Coupled;
+    impl TransientSystem for Coupled {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn deriv(&self, _t: f64, v: &[f64], dv: &mut [f64]) {
+            dv[0] = 1.0;
+            dv[1] = v[0];
+        }
+        fn names(&self) -> Vec<String> {
+            vec!["a".into(), "b".into()]
+        }
+    }
+
+    #[test]
+    fn coupled_states_integrate_together() {
+        let cfg = TransientConfig {
+            dt_ns: 0.01,
+            t_end_ns: 3.0,
+            record_stride: 100,
+        };
+        let (v, _) = integrate(&Coupled, &[0.0, 0.0], &cfg);
+        assert!((v[0] - 3.0).abs() < 1e-9);
+        assert!((v[1] - 4.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,170 @@
+//! Waveform capture: named (t, value) traces recorded by the transient
+//! engine, exportable as CSV — the repo's equivalent of the paper's
+//! Cadence transient plots (Figs 3c, 5, 7b).
+
+use std::fmt::Write as _;
+
+/// One named signal trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>) -> Self {
+        Trace {
+            name: name.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, t_ns: f64, v: f64) {
+        debug_assert!(
+            self.points.last().map(|&(t, _)| t_ns >= t).unwrap_or(true),
+            "trace time must be non-decreasing"
+        );
+        self.points.push((t_ns, v));
+    }
+
+    /// Value at time `t_ns` by linear interpolation (clamped at the ends).
+    pub fn at(&self, t_ns: f64) -> f64 {
+        assert!(!self.points.is_empty());
+        let pts = &self.points;
+        if t_ns <= pts[0].0 {
+            return pts[0].1;
+        }
+        if t_ns >= pts[pts.len() - 1].0 {
+            return pts[pts.len() - 1].1;
+        }
+        // Binary search for the bracketing segment.
+        let mut lo = 0;
+        let mut hi = pts.len() - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if pts[mid].0 <= t_ns {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let (t0, v0) = pts[lo];
+        let (t1, v1) = pts[hi];
+        if t1 == t0 {
+            v1
+        } else {
+            v0 + (v1 - v0) * (t_ns - t0) / (t1 - t0)
+        }
+    }
+
+    pub fn last_value(&self) -> f64 {
+        self.points.last().map(|&(_, v)| v).unwrap_or(0.0)
+    }
+
+    pub fn max_value(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// A set of traces sharing a time axis (one simulation run).
+#[derive(Debug, Clone, Default)]
+pub struct Waveforms {
+    pub traces: Vec<Trace>,
+}
+
+impl Waveforms {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a trace by name; returns its index.
+    pub fn trace_idx(&mut self, name: &str) -> usize {
+        if let Some(i) = self.traces.iter().position(|t| t.name == name) {
+            return i;
+        }
+        self.traces.push(Trace::new(name));
+        self.traces.len() - 1
+    }
+
+    pub fn push(&mut self, name: &str, t_ns: f64, v: f64) {
+        let i = self.trace_idx(name);
+        self.traces[i].push(t_ns, v);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Trace> {
+        self.traces.iter().find(|t| t.name == name)
+    }
+
+    /// CSV with a shared, merged time axis; traces are interpolated.
+    pub fn to_csv(&self) -> String {
+        let mut times: Vec<f64> = self
+            .traces
+            .iter()
+            .flat_map(|t| t.points.iter().map(|&(t, _)| t))
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.dedup();
+        let mut out = String::from("t_ns");
+        for t in &self.traces {
+            let _ = write!(out, ",{}", t.name);
+        }
+        out.push('\n');
+        for &t in &times {
+            let _ = write!(out, "{t:.6}");
+            for tr in &self.traces {
+                let _ = write!(out, ",{:.9}", tr.at(t));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolation_between_points() {
+        let mut t = Trace::new("v");
+        t.push(0.0, 0.0);
+        t.push(2.0, 1.0);
+        assert!((t.at(1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(t.at(-1.0), 0.0); // clamp left
+        assert_eq!(t.at(5.0), 1.0); // clamp right
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut w = Waveforms::new();
+        w.push("a", 0.0, 1.0);
+        w.push("a", 1.0, 2.0);
+        w.push("b", 0.5, 3.0);
+        let csv = w.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("t_ns,a,b"));
+        assert_eq!(csv.lines().count(), 4); // header + 3 distinct times
+    }
+
+    #[test]
+    fn max_and_last() {
+        let mut t = Trace::new("x");
+        t.push(0.0, 1.0);
+        t.push(1.0, 5.0);
+        t.push(2.0, 3.0);
+        assert_eq!(t.max_value(), 5.0);
+        assert_eq!(t.last_value(), 3.0);
+    }
+
+    #[test]
+    fn trace_idx_is_stable() {
+        let mut w = Waveforms::new();
+        let a = w.trace_idx("a");
+        let b = w.trace_idx("b");
+        assert_eq!(w.trace_idx("a"), a);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,146 @@
+//! Bit-serial input decomposition (§IV-B extension).
+//!
+//! The paper notes that "high bit data precision ... requires longer
+//! charging periods" — an 8-bit dual-spike window is up to 51 ns and the
+//! charge on C_rt approaches VDD. The standard alternative is to split
+//! the input into `chunks` lower-precision passes and recombine digitally
+//! with shift-add:
+//!
+//!   x = Σ_p chunk_p · 2^(p·bits_per_pass)
+//!   MAC(x) = Σ_p 2^(p·bits_per_pass) · MAC(chunk_p)
+//!
+//! Each pass has a ≤(2^bits_per_pass−1)·T_bit window — shorter charging,
+//! lower V_charge ceiling (more headroom for bigger arrays), at the cost
+//! of `chunks`× more conversions. The trade-off is quantified in
+//! `benches/fig6_energy.rs` and the ablation runner.
+
+/// A bit-serial decomposition plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitSerialPlan {
+    /// Total input precision (e.g. 8).
+    pub total_bits: u32,
+    /// Bits handled per analog pass (e.g. 4 → two passes).
+    pub bits_per_pass: u32,
+}
+
+impl BitSerialPlan {
+    pub fn new(total_bits: u32, bits_per_pass: u32) -> Self {
+        assert!(total_bits >= 1 && bits_per_pass >= 1);
+        assert!(
+            bits_per_pass <= total_bits,
+            "pass width exceeds total precision"
+        );
+        BitSerialPlan {
+            total_bits,
+            bits_per_pass,
+        }
+    }
+
+    /// Number of analog passes.
+    pub fn passes(&self) -> u32 {
+        self.total_bits.div_ceil(self.bits_per_pass)
+    }
+
+    /// Mask selecting one pass's chunk.
+    fn mask(&self) -> u32 {
+        (1u32 << self.bits_per_pass) - 1
+    }
+
+    /// Split a value into per-pass chunks, LSB chunk first.
+    pub fn split(&self, x: u32) -> Vec<u32> {
+        assert!(x < (1u64 << self.total_bits) as u32 + 1);
+        (0..self.passes())
+            .map(|p| (x >> (p * self.bits_per_pass)) & self.mask())
+            .collect()
+    }
+
+    /// Split a whole input vector: `out[p][i]` = pass-p chunk of x[i].
+    pub fn split_vector(&self, xs: &[u32]) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::with_capacity(xs.len()); self.passes() as usize];
+        for &x in xs {
+            for (p, chunk) in self.split(x).into_iter().enumerate() {
+                out[p].push(chunk);
+            }
+        }
+        out
+    }
+
+    /// Recombine per-pass MAC results with shift-add.
+    pub fn combine(&self, pass_macs: &[Vec<f64>]) -> Vec<f64> {
+        assert_eq!(pass_macs.len(), self.passes() as usize);
+        let n = pass_macs[0].len();
+        let mut out = vec![0.0f64; n];
+        for (p, macs) in pass_macs.iter().enumerate() {
+            assert_eq!(macs.len(), n);
+            let w = (1u64 << (p as u32 * self.bits_per_pass)) as f64;
+            for (o, &m) in out.iter_mut().zip(macs) {
+                *o += w * m;
+            }
+        }
+        out
+    }
+
+    /// Worst-case charge-phase window per pass, in T_bit units.
+    pub fn window_lsbs(&self) -> u32 {
+        self.mask()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_combine_roundtrip_scalar() {
+        let plan = BitSerialPlan::new(8, 4);
+        assert_eq!(plan.passes(), 2);
+        for x in [0u32, 1, 15, 16, 200, 255] {
+            let chunks = plan.split(x);
+            let back: u32 = chunks
+                .iter()
+                .enumerate()
+                .map(|(p, &c)| c << (p as u32 * 4))
+                .sum();
+            assert_eq!(back, x);
+        }
+    }
+
+    #[test]
+    fn ragged_split_covers_all_bits() {
+        let plan = BitSerialPlan::new(8, 3); // 3+3+2 bits
+        assert_eq!(plan.passes(), 3);
+        let chunks = plan.split(0b1011_0110);
+        assert_eq!(chunks, vec![0b110, 0b110, 0b10]);
+    }
+
+    #[test]
+    fn combine_is_linear_shift_add() {
+        let plan = BitSerialPlan::new(8, 4);
+        // MAC is linear, so combining per-chunk MACs of a known G gives
+        // the full-precision MAC exactly.
+        let g = [0.25f64, 1.0 / 3.0];
+        let xs = [200u32, 45];
+        let split = plan.split_vector(&xs);
+        let mac_of = |chunk: &[u32]| -> Vec<f64> {
+            vec![chunk.iter().zip(&g).map(|(&c, gg)| c as f64 * gg).sum()]
+        };
+        let pass_macs: Vec<Vec<f64>> =
+            split.iter().map(|c| mac_of(c)).collect();
+        let combined = plan.combine(&pass_macs);
+        let want: f64 = xs.iter().zip(&g).map(|(&x, gg)| x as f64 * gg).sum();
+        assert!((combined[0] - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_shrinks_with_pass_width() {
+        assert_eq!(BitSerialPlan::new(8, 8).window_lsbs(), 255);
+        assert_eq!(BitSerialPlan::new(8, 4).window_lsbs(), 15);
+        assert_eq!(BitSerialPlan::new(8, 2).window_lsbs(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "pass width")]
+    fn rejects_pass_wider_than_total() {
+        BitSerialPlan::new(4, 8);
+    }
+}

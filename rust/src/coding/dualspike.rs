@@ -1,0 +1,128 @@
+//! Dual-spike temporal coding (the paper's input/output representation).
+//!
+//! A digital value x is carried by a *pair* of spikes whose inter-spike
+//! interval is T = x · T_bit (§III-B; Table I: T_bit = 0.2 ns). The first
+//! spike opens the row's Event_flag window, the second closes it. On the
+//! output side the OSG emits a pair whose interval encodes the MAC result
+//! (Eq. 2); decoding divides by α·T_bit.
+
+/// A dual-spike pair on one line: rise at `t0_ns`, fall at `t0_ns + dt_ns`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpikePair {
+    /// Time of the first spike (ns).
+    pub t0_ns: f64,
+    /// Inter-spike interval (ns); carries the value.
+    pub dt_ns: f64,
+}
+
+impl SpikePair {
+    /// Time of the second spike.
+    pub fn t1_ns(&self) -> f64 {
+        self.t0_ns + self.dt_ns
+    }
+}
+
+/// Encoder/decoder for dual-spike values.
+#[derive(Debug, Clone, Copy)]
+pub struct DualSpikeCodec {
+    /// Interval LSB (ns).
+    pub t_bit_ns: f64,
+    /// Input precision in bits (saturation bound for encode).
+    pub bits: u32,
+}
+
+impl DualSpikeCodec {
+    pub fn new(t_bit_ns: f64, bits: u32) -> Self {
+        assert!(t_bit_ns > 0.0 && bits >= 1 && bits <= 16);
+        DualSpikeCodec { t_bit_ns, bits }
+    }
+
+    /// Max encodable digital value.
+    pub fn max_value(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Encode a digital value into a spike pair starting at `t0_ns`.
+    /// Values saturate at `max_value()` (the SMU has a finite window).
+    pub fn encode(&self, x: u32, t0_ns: f64) -> SpikePair {
+        let v = x.min(self.max_value());
+        SpikePair {
+            t0_ns,
+            dt_ns: v as f64 * self.t_bit_ns,
+        }
+    }
+
+    /// Encode a whole input vector with aligned first spikes at t = 0
+    /// (§III-A: inputs applied "across all 128 rows simultaneously").
+    pub fn encode_vector(&self, xs: &[u32]) -> Vec<SpikePair> {
+        xs.iter().map(|&x| self.encode(x, 0.0)).collect()
+    }
+
+    /// Exact interval → digital value (round to nearest LSB).
+    pub fn decode(&self, dt_ns: f64) -> u32 {
+        ((dt_ns / self.t_bit_ns).round().max(0.0)) as u32
+    }
+
+    /// Decode an OSG output interval into the *analog MAC value* in
+    /// conductance units: Σ x_i·G_i = T_out / (α · T_bit)  (Eq. 2).
+    pub fn decode_mac(&self, t_out_ns: f64, alpha: f64) -> f64 {
+        t_out_ns / (alpha * self.t_bit_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codec() -> DualSpikeCodec {
+        DualSpikeCodec::new(0.2, 8)
+    }
+
+    #[test]
+    fn encode_is_linear_in_value() {
+        let c = codec();
+        assert_eq!(c.encode(0, 0.0).dt_ns, 0.0);
+        assert!((c.encode(1, 0.0).dt_ns - 0.2).abs() < 1e-12);
+        assert!((c.encode(255, 0.0).dt_ns - 51.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn encode_saturates_at_max() {
+        let c = codec();
+        assert_eq!(c.encode(300, 0.0).dt_ns, c.encode(255, 0.0).dt_ns);
+    }
+
+    #[test]
+    fn decode_inverts_encode_exactly() {
+        let c = codec();
+        for x in 0..=255u32 {
+            let p = c.encode(x, 0.0);
+            assert_eq!(c.decode(p.dt_ns), x);
+        }
+    }
+
+    #[test]
+    fn decode_rounds_to_nearest_lsb() {
+        let c = codec();
+        assert_eq!(c.decode(0.29), 1); // 0.29/0.2 = 1.45 → 1
+        assert_eq!(c.decode(0.31), 2); // 1.55 → 2
+        assert_eq!(c.decode(-0.5), 0); // clamped
+    }
+
+    #[test]
+    fn decode_mac_applies_alpha() {
+        let c = codec();
+        // T_out = α·Σ(T_in·G) ⇒ MAC = Σ(x·G) = T_out/(α·T_bit).
+        let mac = 1234.5; // x·µS units
+        let t_out = 0.05 * mac * 0.2;
+        assert!((c.decode_mac(t_out, 0.05) - mac).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vector_encode_aligns_first_spikes() {
+        let c = codec();
+        let ps = c.encode_vector(&[1, 2, 3]);
+        assert!(ps.iter().all(|p| p.t0_ns == 0.0));
+        assert!((ps[2].t1_ns() - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Spike coding schemes (DESIGN.md S2): the paper's dual-spike temporal
+//! code plus the rate and TTFS baselines it is compared against in §II-B.
+
+pub mod bitserial;
+pub mod dualspike;
+pub mod rate;
+pub mod ttfs;
+
+pub use bitserial::BitSerialPlan;
+pub use dualspike::{DualSpikeCodec, SpikePair};
+pub use rate::RateCodec;
+pub use ttfs::TtfsCodec;

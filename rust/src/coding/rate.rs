@@ -1,0 +1,87 @@
+//! Rate coding baseline (§II-B; VLSI'19 [18] style).
+//!
+//! Information is the *number* of spikes in a fixed window. Simple, but
+//! needs many spikes per value (energy ∝ value) and quantizes coarsely —
+//! this module exists so the comparison benches can demonstrate exactly
+//! that trade-off against dual-spike coding.
+
+/// Rate encoder over a fixed observation window.
+#[derive(Debug, Clone, Copy)]
+pub struct RateCodec {
+    /// Observation window (ns).
+    pub window_ns: f64,
+    /// Max spikes in a window (= max representable value).
+    pub max_spikes: u32,
+}
+
+impl RateCodec {
+    pub fn new(window_ns: f64, max_spikes: u32) -> Self {
+        assert!(window_ns > 0.0 && max_spikes >= 1);
+        RateCodec { window_ns, max_spikes }
+    }
+
+    /// Encode `x` (saturating) as evenly spaced spike times in the window.
+    pub fn encode(&self, x: u32) -> Vec<f64> {
+        let n = x.min(self.max_spikes);
+        let period = self.window_ns / self.max_spikes as f64;
+        (0..n).map(|i| i as f64 * period).collect()
+    }
+
+    /// Decode = count spikes.
+    pub fn decode(&self, spikes: &[f64]) -> u32 {
+        spikes.len() as u32
+    }
+
+    /// Number of spike events needed to carry `x` (energy proxy).
+    pub fn events_for(&self, x: u32) -> u32 {
+        x.min(self.max_spikes)
+    }
+
+    /// Quantization step when representing `bits`-bit data in this window:
+    /// values above `max_spikes` alias (precision loss of rate coding).
+    pub fn effective_bits(&self) -> u32 {
+        32 - self.max_spikes.leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_capacity() {
+        let c = RateCodec::new(100.0, 64);
+        for x in [0u32, 1, 17, 64] {
+            assert_eq!(c.decode(&c.encode(x)), x);
+        }
+    }
+
+    #[test]
+    fn saturates_above_capacity() {
+        let c = RateCodec::new(100.0, 64);
+        assert_eq!(c.decode(&c.encode(200)), 64);
+    }
+
+    #[test]
+    fn spikes_fit_in_window() {
+        let c = RateCodec::new(100.0, 64);
+        let s = c.encode(64);
+        assert!(s.iter().all(|&t| t >= 0.0 && t < 100.0));
+        assert_eq!(s.len(), 64);
+    }
+
+    #[test]
+    fn event_count_linear_in_value_unlike_dualspike() {
+        // The energy story of §II-B: rate coding needs x events, dual-spike
+        // always needs 2.
+        let c = RateCodec::new(100.0, 255);
+        assert_eq!(c.events_for(200), 200);
+        assert_eq!(c.events_for(3), 3);
+    }
+
+    #[test]
+    fn effective_bits() {
+        assert_eq!(RateCodec::new(10.0, 255).effective_bits(), 8);
+        assert_eq!(RateCodec::new(10.0, 15).effective_bits(), 4);
+    }
+}

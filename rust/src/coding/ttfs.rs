@@ -1,0 +1,78 @@
+//! Time-to-first-spike (TTFS) coding baseline (§II-B).
+//!
+//! A value is the *latency* of a single spike relative to a global
+//! reference edge: larger value → earlier spike. One spike per value
+//! (good energy), but it needs a synchronized global clock to define
+//! t = 0 — exactly the dependency the paper's dual-spike scheme removes,
+//! since a pair is self-referential.
+
+/// TTFS codec: x ∈ [0, 2^bits) ↦ spike at t = (max − x)·t_bit.
+#[derive(Debug, Clone, Copy)]
+pub struct TtfsCodec {
+    pub t_bit_ns: f64,
+    pub bits: u32,
+}
+
+impl TtfsCodec {
+    pub fn new(t_bit_ns: f64, bits: u32) -> Self {
+        assert!(t_bit_ns > 0.0 && (1..=16).contains(&bits));
+        TtfsCodec { t_bit_ns, bits }
+    }
+
+    pub fn max_value(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Spike time for value `x` (earlier = larger).
+    pub fn encode(&self, x: u32) -> f64 {
+        (self.max_value() - x.min(self.max_value())) as f64 * self.t_bit_ns
+    }
+
+    /// Value from spike time (requires the shared global reference!).
+    pub fn decode(&self, t_ns: f64) -> u32 {
+        let q = (t_ns / self.t_bit_ns).round().max(0.0) as u32;
+        self.max_value() - q.min(self.max_value())
+    }
+
+    /// Decoding error caused by a clock-skew of `skew_ns` between encoder
+    /// and decoder — the synchronization sensitivity dual-spike avoids.
+    pub fn skew_error(&self, x: u32, skew_ns: f64) -> i64 {
+        let t = self.encode(x) + skew_ns;
+        self.decode(t) as i64 - x as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_values() {
+        let c = TtfsCodec::new(0.2, 8);
+        for x in 0..=255u32 {
+            assert_eq!(c.decode(c.encode(x)), x);
+        }
+    }
+
+    #[test]
+    fn larger_values_spike_earlier() {
+        let c = TtfsCodec::new(0.2, 8);
+        assert!(c.encode(255) < c.encode(1));
+        assert_eq!(c.encode(255), 0.0);
+    }
+
+    #[test]
+    fn clock_skew_corrupts_value() {
+        let c = TtfsCodec::new(0.2, 8);
+        // 1 ns of skew = 5 LSB of error — the §II-B failure mode.
+        assert_eq!(c.skew_error(100, 1.0), -5);
+        assert_eq!(c.skew_error(100, 0.0), 0);
+    }
+
+    #[test]
+    fn skew_error_saturates_at_zero_value() {
+        let c = TtfsCodec::new(0.2, 8);
+        let e = c.skew_error(0, 10.0);
+        assert_eq!(e, 0); // already latest possible spike
+    }
+}

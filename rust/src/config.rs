@@ -1,0 +1,259 @@
+//! Macro configuration: Table I parameters plus the circuit sizing derived
+//! in DESIGN.md §6. One `MacroConfig` value fully determines the behavioral
+//! simulation (geometry, voltages, capacitors, coding, non-idealities).
+//!
+//! Unit conventions used across the whole crate (chosen so the Euler/event
+//! updates need no conversion factors):
+//!   time ns · voltage V · current µA · conductance µS · capacitance fF ·
+//!   resistance MΩ · energy fJ  (µA·ns = fC, fC·V = fJ, µS·V = µA,
+//!   µA·ns/fF = V).
+
+/// Mapping from 2-bit weight codes to cell conductance levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LevelMap {
+    /// Levels that the series 3T-2MTJ stack physically provides:
+    /// R ∈ {6,5,4,3} MΩ → G ∈ {1/6, 1/5, 1/4, 1/3} µS (code-ascending).
+    DeviceTrue,
+    /// Idealized equally-spaced levels over the same span (ablation).
+    IdealLinear,
+}
+
+impl LevelMap {
+    /// The four conductance levels in µS, indexed by code 0..=3.
+    pub fn levels(self) -> [f64; 4] {
+        match self {
+            LevelMap::DeviceTrue => {
+                [1.0 / 6.0, 1.0 / 5.0, 1.0 / 4.0, 1.0 / 3.0]
+            }
+            LevelMap::IdealLinear => {
+                let lo = 1.0 / 6.0;
+                let hi = 1.0 / 3.0;
+                let step = (hi - lo) / 3.0;
+                [lo, lo + step, lo + 2.0 * step, hi]
+            }
+        }
+    }
+
+    /// Mid-point conductance used as the signed-weight offset (DESIGN §7).
+    pub fn g_mid(self) -> f64 {
+        let l = self.levels();
+        (l[0] + l[1] + l[2] + l[3]) / 4.0
+    }
+}
+
+/// Analog non-idealities applied by the behavioral circuit engine.
+#[derive(Debug, Clone, Copy)]
+pub struct NonIdeality {
+    /// Device-to-device MTJ resistance sigma (fraction of nominal R).
+    pub sigma_r_d2d: f64,
+    /// Cycle-to-cycle read-conductance sigma (fraction).
+    pub sigma_r_c2c: f64,
+    /// Comparator input-referred offset (V, 1-sigma).
+    pub comparator_offset_v: f64,
+    /// Comparator propagation delay (ns).
+    pub comparator_delay_ns: f64,
+    /// Current-mirror gain error (fraction, 1-sigma per column).
+    pub mirror_gain_sigma: f64,
+    /// If false, model the Fig 7b baseline: C_rt charged directly from the
+    /// bit line (RC droop) instead of through the clamp+current mirror.
+    pub clamp_current_mirror: bool,
+}
+
+impl NonIdeality {
+    /// Ideal circuits (bit-true temporal MAC) — the default for tests.
+    pub fn ideal() -> Self {
+        NonIdeality {
+            sigma_r_d2d: 0.0,
+            sigma_r_c2c: 0.0,
+            comparator_offset_v: 0.0,
+            comparator_delay_ns: 0.0,
+            mirror_gain_sigma: 0.0,
+            clamp_current_mirror: true,
+        }
+    }
+
+    /// Realistic 28 nm-ish defaults used for robustness experiments.
+    pub fn realistic() -> Self {
+        NonIdeality {
+            sigma_r_d2d: 0.02,
+            sigma_r_c2c: 0.005,
+            comparator_offset_v: 0.002,
+            comparator_delay_ns: 0.05,
+            mirror_gain_sigma: 0.005,
+            clamp_current_mirror: true,
+        }
+    }
+}
+
+/// Full macro configuration (Table I + DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct MacroConfig {
+    /// Array rows (wordlines), paper: 128.
+    pub rows: usize,
+    /// Array columns (bitlines), paper: 128.
+    pub cols: usize,
+    /// Supply voltage (V), Table I: 1.1 V.
+    pub vdd: f64,
+    /// Bit-line clamp voltage (V), §IV: 400 mV.
+    pub v_clamp: f64,
+    /// Input clamp voltage (V), §IV: 300 mV.
+    pub v_in_clamp: f64,
+    /// Spike-interval LSB (ns), §IV: 0.2 ns per input bit.
+    pub t_bit_ns: f64,
+    /// Result capacitor (fF), §IV: 200 fF.
+    pub c_rt_ff: f64,
+    /// Comparison capacitor (fF), §IV: 200 fF.
+    pub c_com_ff: f64,
+    /// Reference charging current (µA); sized so max V_charge < VDD.
+    pub i_com_ua: f64,
+    /// Current-mirror gain k.
+    pub k_mirror: f64,
+    /// MTJ low-resistance state (MΩ), Table I: 1 MΩ.
+    pub r_lrs_mohm: f64,
+    /// Tunnel magnetoresistance ratio, Table I: 100 % → 1.0.
+    pub tmr: f64,
+    /// Input precision (bits), evaluation: 8.
+    pub input_bits: u32,
+    /// Weight precision (bits per cell), 3T-2MTJ: 2.
+    pub weight_bits: u32,
+    /// Code → conductance mapping.
+    pub level_map: LevelMap,
+    /// Analog non-idealities.
+    pub nonideal: NonIdeality,
+}
+
+impl Default for MacroConfig {
+    fn default() -> Self {
+        MacroConfig {
+            rows: 128,
+            cols: 128,
+            vdd: 1.1,
+            v_clamp: 0.400,
+            v_in_clamp: 0.300,
+            t_bit_ns: 0.2,
+            c_rt_ff: 200.0,
+            c_com_ff: 200.0,
+            i_com_ua: 2.0,
+            k_mirror: 1.0,
+            r_lrs_mohm: 1.0,
+            tmr: 1.0,
+            input_bits: 8,
+            weight_bits: 2,
+            level_map: LevelMap::DeviceTrue,
+            nonideal: NonIdeality::ideal(),
+        }
+    }
+}
+
+impl MacroConfig {
+    /// Effective read voltage V_read = V_clamp − V_in,clamp (§III-B).
+    pub fn v_read(&self) -> f64 {
+        self.v_clamp - self.v_in_clamp
+    }
+
+    /// OSG sensing gain α = k·V_read·C_com / (C_rt·I_com)  [ns per µS·ns]
+    /// — Eq. (2) in its dimensionally consistent form (DESIGN.md §1).
+    pub fn alpha(&self) -> f64 {
+        self.k_mirror * self.v_read() * self.c_com_ff
+            / (self.c_rt_ff * self.i_com_ua)
+    }
+
+    /// Max input spike interval (ns): (2^bits − 1)·T_bit. 8-bit → 51 ns.
+    pub fn t_in_max_ns(&self) -> f64 {
+        ((1u64 << self.input_bits) - 1) as f64 * self.t_bit_ns
+    }
+
+    /// Worst-case V_charge (V): all rows at max interval & max conductance.
+    /// Must stay below VDD for the OSG to be linear — checked in tests.
+    pub fn v_charge_max(&self) -> f64 {
+        let g_max = self.level_map.levels()[3];
+        self.k_mirror * self.v_read() * g_max * self.t_in_max_ns()
+            * self.rows as f64
+            / self.c_rt_ff
+    }
+
+    /// Worst-case output spike interval (ns): T_out at V_charge_max.
+    pub fn t_out_max_ns(&self) -> f64 {
+        self.v_charge_max() * self.c_com_ff / self.i_com_ua
+    }
+
+    /// Ops per full-array MVM (1 MAC = 2 OPs, the convention of Table II).
+    pub fn ops_per_mvm(&self) -> u64 {
+        2 * self.rows as u64 * self.cols as u64
+    }
+
+    /// Number of distinct conductance states per cell.
+    pub fn states_per_cell(&self) -> usize {
+        1 << self.weight_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let c = MacroConfig::default();
+        assert_eq!(c.rows, 128);
+        assert_eq!(c.cols, 128);
+        assert!((c.vdd - 1.1).abs() < 1e-12);
+        assert!((c.r_lrs_mohm - 1.0).abs() < 1e-12);
+        assert!((c.tmr - 1.0).abs() < 1e-12);
+        assert!((c.v_read() - 0.1).abs() < 1e-12);
+        assert!((c.t_bit_ns - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_matches_python_model() {
+        // python/compile/model.py: ALPHA = 1*0.1*200/(200*2) = 0.05
+        let c = MacroConfig::default();
+        assert!((c.alpha() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_true_levels_from_series_stack() {
+        let l = LevelMap::DeviceTrue.levels();
+        // R = {3,4,5,6} MΩ descending code order → G ascending.
+        assert!((l[0] - 1.0 / 6.0).abs() < 1e-12);
+        assert!((l[3] - 1.0 / 3.0).abs() < 1e-12);
+        assert!(l.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn ideal_levels_equally_spaced() {
+        let l = LevelMap::IdealLinear.levels();
+        let d1 = l[1] - l[0];
+        let d2 = l[2] - l[1];
+        let d3 = l[3] - l[2];
+        assert!((d1 - d2).abs() < 1e-12 && (d2 - d3).abs() < 1e-12);
+        assert!((l[0] - 1.0 / 6.0).abs() < 1e-12);
+        assert!((l[3] - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_case_v_charge_below_vdd() {
+        let c = MacroConfig::default();
+        // DESIGN §6 sizing: ~1.088 V < 1.1 V supply.
+        assert!(c.v_charge_max() < c.vdd, "{}", c.v_charge_max());
+        assert!(c.v_charge_max() > 0.9 * c.vdd); // tight sizing, not lazy
+    }
+
+    #[test]
+    fn t_in_max_is_51ns_at_8bit() {
+        let c = MacroConfig::default();
+        assert!((c.t_in_max_ns() - 51.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ops_per_mvm_is_32768() {
+        assert_eq!(MacroConfig::default().ops_per_mvm(), 32768);
+    }
+
+    #[test]
+    fn g_mid_is_level_mean() {
+        let lm = LevelMap::DeviceTrue;
+        let l = lm.levels();
+        assert!((lm.g_mid() - l.iter().sum::<f64>() / 4.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,159 @@
+//! Request batcher (DESIGN.md S11): collects single-vector MVM requests
+//! into batches for the PJRT backend (whose artifacts have fixed batch
+//! shapes) — close a batch when full or when the oldest request exceeds
+//! the timeout. The serving loop in `server.rs` drives it; it also runs
+//! standalone in virtual time for the scheduler benches.
+
+/// One queued request.
+#[derive(Debug, Clone)]
+pub struct Request<T> {
+    pub id: u64,
+    pub payload: T,
+    pub arrived_ns: f64,
+}
+
+/// A closed batch.
+#[derive(Debug, Clone)]
+pub struct Batch<T> {
+    pub requests: Vec<Request<T>>,
+    pub closed_at_ns: f64,
+    /// Why the batch closed.
+    pub reason: CloseReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    Full,
+    Timeout,
+    Flush,
+}
+
+/// Size-or-timeout batcher.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    pub max_batch: usize,
+    pub timeout_ns: f64,
+    pending: Vec<Request<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, timeout_ns: f64) -> Self {
+        assert!(max_batch > 0);
+        Batcher {
+            max_batch,
+            timeout_ns,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns a batch if this filled it.
+    pub fn push(&mut self, req: Request<T>, now_ns: f64) -> Option<Batch<T>> {
+        self.pending.push(req);
+        if self.pending.len() >= self.max_batch {
+            Some(self.close(now_ns, CloseReason::Full))
+        } else {
+            None
+        }
+    }
+
+    /// Check the timeout; returns a batch if the oldest request expired.
+    pub fn poll(&mut self, now_ns: f64) -> Option<Batch<T>> {
+        let oldest = self.pending.first()?.arrived_ns;
+        if now_ns - oldest >= self.timeout_ns {
+            Some(self.close(now_ns, CloseReason::Timeout))
+        } else {
+            None
+        }
+    }
+
+    /// Time at which the current batch will expire (for sleep scheduling).
+    pub fn deadline_ns(&self) -> Option<f64> {
+        self.pending.first().map(|r| r.arrived_ns + self.timeout_ns)
+    }
+
+    /// Force-close whatever is pending.
+    pub fn flush(&mut self, now_ns: f64) -> Option<Batch<T>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.close(now_ns, CloseReason::Flush))
+        }
+    }
+
+    fn close(&mut self, now_ns: f64, reason: CloseReason) -> Batch<T> {
+        Batch {
+            requests: std::mem::take(&mut self.pending),
+            closed_at_ns: now_ns,
+            reason,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: f64) -> Request<u32> {
+        Request {
+            id,
+            payload: id as u32,
+            arrived_ns: t,
+        }
+    }
+
+    #[test]
+    fn closes_when_full() {
+        let mut b = Batcher::new(3, 1000.0);
+        assert!(b.push(req(0, 0.0), 0.0).is_none());
+        assert!(b.push(req(1, 1.0), 1.0).is_none());
+        let batch = b.push(req(2, 2.0), 2.0).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.reason, CloseReason::Full);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn closes_on_timeout() {
+        let mut b = Batcher::new(8, 100.0);
+        b.push(req(0, 0.0), 0.0);
+        b.push(req(1, 50.0), 50.0);
+        assert!(b.poll(99.0).is_none());
+        let batch = b.poll(100.0).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.reason, CloseReason::Timeout);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b = Batcher::new(8, 100.0);
+        assert!(b.deadline_ns().is_none());
+        b.push(req(0, 10.0), 10.0);
+        b.push(req(1, 90.0), 90.0);
+        assert_eq!(b.deadline_ns(), Some(110.0));
+    }
+
+    #[test]
+    fn flush_returns_partial_batch() {
+        let mut b = Batcher::new(8, 100.0);
+        b.push(req(0, 0.0), 0.0);
+        let batch = b.flush(5.0).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.reason, CloseReason::Flush);
+        assert!(b.flush(6.0).is_none());
+    }
+
+    #[test]
+    fn order_preserved_within_batch() {
+        let mut b = Batcher::new(4, 100.0);
+        for i in 0..3 {
+            b.push(req(i, i as f64), i as f64);
+        }
+        let batch = b.push(req(3, 3.0), 3.0).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Serving metrics: throughput counters + latency histogram, shared by the
+//! server threads behind a mutex (coarse-grained is fine — the hot path is
+//! the macro computation, not metric updates).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Histogram;
+
+/// Aggregated serving metrics.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+struct Inner {
+    requests: u64,
+    batches: u64,
+    macs: u64,
+    latency_us: Histogram,
+    batch_sizes: Histogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                batches: 0,
+                macs: 0,
+                latency_us: Histogram::new(vec![
+                    10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1_000.0, 2_000.0,
+                    5_000.0, 10_000.0, 50_000.0, 200_000.0,
+                ]),
+                batch_sizes: Histogram::new(vec![
+                    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
+                ]),
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_request(&self, latency_us: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.latency_us.record(latency_us);
+    }
+
+    pub fn record_batch(&self, size: usize, macs: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.macs += macs;
+        g.batch_sizes.record(size as f64);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Requests per second since startup.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.requests() as f64 / secs
+    }
+
+    pub fn summary(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        format!(
+            "requests={} batches={} macs={} rps={:.1} mac/s={:.3e}\n\
+             latency_us: {}\n\
+             batch_size: {}",
+            g.requests,
+            g.batches,
+            g.macs,
+            g.requests as f64 / secs,
+            g.macs as f64 / secs,
+            g.latency_us.summary(),
+            g.batch_sizes.summary()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(100.0);
+        m.record_request(200.0);
+        m.record_batch(2, 32768);
+        assert_eq!(m.requests(), 2);
+        let s = m.summary();
+        assert!(s.contains("requests=2"));
+        assert!(s.contains("macs=32768"));
+    }
+
+    #[test]
+    fn throughput_positive_after_requests() {
+        let m = Metrics::new();
+        m.record_request(1.0);
+        assert!(m.throughput_rps() > 0.0);
+    }
+}

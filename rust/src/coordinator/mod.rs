@@ -1,0 +1,19 @@
+//! L3 coordinator (DESIGN.md S11): weight tiling, the event-driven tile
+//! scheduler with weight-stationary affinity, request batching, the
+//! serving loop, and metrics. This is the layer a downstream user calls;
+//! everything below it (macro, circuits, devices) is substrate.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod scheduler;
+pub mod scrub;
+pub mod server;
+pub mod tiler;
+
+pub use batcher::{Batch, Batcher, CloseReason, Request};
+pub use metrics::Metrics;
+pub use pipeline::{pipeline_makespan_ns, serial_makespan_ns, ThreadedPipeline};
+pub use scheduler::{Policy, ScheduleReport, Scheduler, TileOp};
+pub use server::{BackendKind, MacroServer, Router, ServerConfig};
+pub use tiler::TiledMatrix;

@@ -1,0 +1,196 @@
+//! Layer pipelining (DESIGN.md S11 extension): run a multi-layer model as
+//! a pipeline of stages, each owning its macros, connected by channels —
+//! batch i+1's layer-1 work overlaps batch i's layer-2 work, exactly how
+//! a multi-macro chip would stream inferences.
+//!
+//! Two views:
+//! * [`pipeline_makespan_ns`] — the analytic virtual-time model
+//!   (makespan = Σlat + (n−1)·max lat) used by tests and the scheduler;
+//! * [`ThreadedPipeline`] — a real thread-per-stage implementation whose
+//!   results must match the serial execution bit-for-bit.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Analytic pipeline makespan for `n` items over stages with the given
+/// per-item latencies (ns): fill + drain around the bottleneck stage.
+pub fn pipeline_makespan_ns(stage_lat_ns: &[f64], n: usize) -> f64 {
+    if n == 0 || stage_lat_ns.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = stage_lat_ns.iter().sum();
+    let max = stage_lat_ns.iter().cloned().fold(0.0, f64::max);
+    sum + (n as f64 - 1.0) * max
+}
+
+/// Serial makespan for comparison.
+pub fn serial_makespan_ns(stage_lat_ns: &[f64], n: usize) -> f64 {
+    stage_lat_ns.iter().sum::<f64>() * n as f64
+}
+
+/// A pipeline stage: transforms an item (owned, Send).
+pub type StageFn<T> = Box<dyn FnMut(T) -> T + Send>;
+
+/// Thread-per-stage pipeline over items of type `T`.
+pub struct ThreadedPipeline<T: Send + 'static> {
+    input: Option<mpsc::Sender<(usize, T)>>,
+    output: mpsc::Receiver<(usize, T)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> ThreadedPipeline<T> {
+    pub fn new(stages: Vec<StageFn<T>>) -> Self {
+        assert!(!stages.is_empty());
+        let (first_tx, mut prev_rx) = mpsc::channel::<(usize, T)>();
+        let mut handles = Vec::new();
+        let n = stages.len();
+        let mut out_rx_final = None;
+        for (i, mut stage) in stages.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<(usize, T)>();
+            let rx_in = prev_rx;
+            handles.push(std::thread::spawn(move || {
+                while let Ok((id, item)) = rx_in.recv() {
+                    let _ = tx.send((id, stage(item)));
+                }
+            }));
+            if i + 1 == n {
+                out_rx_final = Some(rx);
+                // prev_rx moved; create a dummy to satisfy the loop var.
+                let (_t, dummy) = mpsc::channel();
+                prev_rx = dummy;
+            } else {
+                prev_rx = rx;
+            }
+        }
+        ThreadedPipeline {
+            input: Some(first_tx),
+            output: out_rx_final.unwrap(),
+            handles,
+        }
+    }
+
+    /// Stream `items` through; returns outputs in input order.
+    pub fn run(mut self, items: Vec<T>) -> Vec<T> {
+        let n = items.len();
+        let tx = self.input.take().unwrap();
+        let feeder = std::thread::spawn(move || {
+            for (i, item) in items.into_iter().enumerate() {
+                if tx.send((i, item)).is_err() {
+                    return;
+                }
+            }
+            // Drop tx: signals end-of-stream down the pipeline.
+        });
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (id, item) = self.output.recv().expect("pipeline output");
+            out[id] = Some(item);
+        }
+        feeder.join().unwrap();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_pipeline_beats_serial() {
+        let lats = [100.0, 250.0, 80.0];
+        let n = 64;
+        let pipe = pipeline_makespan_ns(&lats, n);
+        let serial = serial_makespan_ns(&lats, n);
+        assert!(pipe < serial);
+        // Asymptotic rate = bottleneck stage.
+        let rate = n as f64 / pipe;
+        assert!((rate - 1.0 / 250.0).abs() / (1.0 / 250.0) < 0.05);
+    }
+
+    #[test]
+    fn analytic_single_item_equals_serial() {
+        let lats = [10.0, 20.0];
+        assert_eq!(
+            pipeline_makespan_ns(&lats, 1),
+            serial_makespan_ns(&lats, 1)
+        );
+        assert_eq!(pipeline_makespan_ns(&lats, 0), 0.0);
+    }
+
+    #[test]
+    fn threaded_pipeline_preserves_order_and_values() {
+        let stages: Vec<StageFn<u64>> = vec![
+            Box::new(|x| x + 1),
+            Box::new(|x| x * 3),
+            Box::new(|x| x - 2),
+        ];
+        let p = ThreadedPipeline::new(stages);
+        let out = p.run((0..100).collect());
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, (i as u64 + 1) * 3 - 2);
+        }
+    }
+
+    #[test]
+    fn threaded_pipeline_on_macro_layers_matches_serial() {
+        // Three real macro stages (one 128×128 MVM each, thresholded back
+        // to 8-bit) — the pipeline must be bit-identical to serial.
+        use crate::config::MacroConfig;
+        use crate::macro_model::CimMacro;
+        use crate::util::rng::Rng;
+
+        let cfg = MacroConfig::default();
+        let mut rng = Rng::new(808);
+        let mk_codes = |rng: &mut Rng| -> Vec<u8> {
+            (0..cfg.rows * cfg.cols).map(|_| rng.below(4) as u8).collect()
+        };
+        let codes: Vec<Vec<u8>> =
+            (0..3).map(|_| mk_codes(&mut rng)).collect();
+
+        let requant = |y: Vec<f64>| -> Vec<u32> {
+            y.into_iter()
+                .map(|v| ((v / 40.0).round().max(0.0) as u32).min(255))
+                .collect()
+        };
+
+        // Serial reference.
+        let mut serial_macros: Vec<CimMacro> = codes
+            .iter()
+            .map(|c| {
+                let mut m = CimMacro::new(cfg.clone());
+                m.program(c);
+                m
+            })
+            .collect();
+        let inputs: Vec<Vec<u32>> = (0..12)
+            .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+            .collect();
+        let serial_out: Vec<Vec<u32>> = inputs
+            .iter()
+            .map(|x| {
+                let mut v = x.clone();
+                for m in serial_macros.iter_mut() {
+                    v = requant(m.mvm(&v).y_mac);
+                }
+                v
+            })
+            .collect();
+
+        // Pipelined.
+        let stages: Vec<StageFn<Vec<u32>>> = codes
+            .iter()
+            .map(|c| {
+                let mut m = CimMacro::new(cfg.clone());
+                m.program(c);
+                let f: StageFn<Vec<u32>> =
+                    Box::new(move |x: Vec<u32>| requant(m.mvm(&x).y_mac));
+                f
+            })
+            .collect();
+        let pipe_out = ThreadedPipeline::new(stages).run(inputs);
+        assert_eq!(pipe_out, serial_out);
+    }
+}

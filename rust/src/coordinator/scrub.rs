@@ -1,0 +1,112 @@
+//! Retention scrub scheduler (DESIGN.md S11 × retention extension): for
+//! weight-stationary deployments the coordinator must periodically
+//! re-verify/refresh the programmed codes before Néel relaxation corrupts
+//! them. This module computes the scrub schedule from the device's
+//! retention parameters and accounts the resulting energy/availability
+//! tax against the macro's budget.
+
+use crate::device::retention::RetentionParams;
+
+/// Scrub policy for one macro.
+#[derive(Debug, Clone, Copy)]
+pub struct ScrubPolicy {
+    /// Target per-junction flip probability between scrubs.
+    pub p_target: f64,
+    /// Time to scrub one full tile (read-verify-rewrite, ns).
+    pub scrub_duration_ns: f64,
+    /// Energy per full-tile scrub (fJ).
+    pub scrub_energy_fj: f64,
+}
+
+impl ScrubPolicy {
+    /// Defaults: verify+selective-rewrite of a 128×128 tile. Reads are
+    /// nearly free; energy is dominated by the expected rewrites.
+    pub fn standard() -> Self {
+        ScrubPolicy {
+            p_target: 1e-9,
+            scrub_duration_ns: 100_000.0, // 0.1 ms per tile
+            scrub_energy_fj: 2.0e6,       // ~2 µJ: sparse rewrites
+        }
+    }
+
+    /// Scrub interval for the given device corner (ns).
+    pub fn interval_ns(&self, ret: &RetentionParams) -> f64 {
+        ret.scrub_interval_ns(self.p_target)
+    }
+
+    /// Fraction of wall time spent scrubbing (availability tax).
+    pub fn duty_cycle(&self, ret: &RetentionParams) -> f64 {
+        self.scrub_duration_ns
+            / (self.scrub_duration_ns + self.interval_ns(ret))
+    }
+
+    /// Average scrub power (µW = fJ/ns) amortized over the interval.
+    pub fn average_power_uw(&self, ret: &RetentionParams) -> f64 {
+        self.scrub_energy_fj / self.interval_ns(ret)
+    }
+
+    /// Relative efficiency loss when the macro runs `mvm_rate_per_s`
+    /// MVMs/s at `e_mvm_fj` each: scrub energy / compute energy.
+    pub fn efficiency_tax(
+        &self,
+        ret: &RetentionParams,
+        mvm_rate_per_s: f64,
+        e_mvm_fj: f64,
+    ) -> f64 {
+        let compute_uw = e_mvm_fj * mvm_rate_per_s * 1e-9; // fJ/s → µW
+        if compute_uw <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.average_power_uw(ret) / compute_uw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_devices_scrub_is_free() {
+        // Δ=60: scrub interval is astronomically long → zero tax.
+        let pol = ScrubPolicy::standard();
+        let ret = RetentionParams::standard();
+        assert!(pol.duty_cycle(&ret) < 1e-12);
+        assert!(pol.average_power_uw(&ret) < 1e-9);
+    }
+
+    #[test]
+    fn weak_devices_pay_a_measurable_but_small_tax() {
+        let pol = ScrubPolicy::standard();
+        let ret = RetentionParams::weak(); // Δ=35, τ≈18 days
+        let interval = pol.interval_ns(&ret);
+        // p_target 1e-9 → interval ≈ τ·1e-9 ≈ 1.6e6 ns ≈ 1.6 ms.
+        assert!(interval > 1e5 && interval < 1e8, "{interval}");
+        let duty = pol.duty_cycle(&ret);
+        assert!(duty > 0.0 && duty < 0.1, "duty {duty}");
+        // Busy macro (50 % utilization at ~90 ns/MVM, 134 pJ each):
+        let tax = pol.efficiency_tax(&ret, 5.0e6, 134_500.0);
+        assert!(tax < 0.05, "tax {tax}"); // < 5 % energy overhead
+    }
+
+    #[test]
+    fn tighter_targets_scrub_more_often() {
+        let ret = RetentionParams::weak();
+        let loose = ScrubPolicy {
+            p_target: 1e-6,
+            ..ScrubPolicy::standard()
+        };
+        let tight = ScrubPolicy {
+            p_target: 1e-12,
+            ..ScrubPolicy::standard()
+        };
+        assert!(tight.interval_ns(&ret) < loose.interval_ns(&ret));
+        assert!(tight.duty_cycle(&ret) > loose.duty_cycle(&ret));
+    }
+
+    #[test]
+    fn idle_macro_tax_is_infinite() {
+        let pol = ScrubPolicy::standard();
+        let ret = RetentionParams::weak();
+        assert!(pol.efficiency_tax(&ret, 0.0, 134_500.0).is_infinite());
+    }
+}

@@ -1,0 +1,389 @@
+//! Event-driven serving loop (DESIGN.md S11).
+//!
+//! Thread + channel architecture (tokio is unavailable offline; the
+//! blocking-worker design matches the macro's event-driven nature — a
+//! worker sleeps until a request *event* arrives, exactly like the array
+//! idles until a spike):
+//!
+//! ```text
+//!   submit() ──mpsc──▶ shared queue ──▶ N worker threads
+//!                                        ├─ batcher (size/timeout)
+//!                                        ├─ backend: Sim (CimMacro)
+//!                                        │        or Pjrt (HLO artifact)
+//!                                        └─ per-request oneshot reply
+//! ```
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::MacroConfig;
+use crate::macro_model::CimMacro;
+use crate::runtime::{Runtime, Value};
+
+use super::metrics::Metrics;
+
+/// Which compute backend workers use.
+#[derive(Debug, Clone)]
+pub enum BackendKind {
+    /// Full behavioral macro simulation (bit-true, energy-accounted).
+    Sim,
+    /// AOT HLO artifact via PJRT (functional fast path).
+    Pjrt { artifacts_dir: String },
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub backend: BackendKind,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout: Duration::from_micros(200),
+            backend: BackendKind::Sim,
+        }
+    }
+}
+
+struct Job {
+    x: Vec<u32>,
+    submitted: Instant,
+    reply: mpsc::Sender<Vec<f64>>,
+}
+
+/// A running macro service for one programmed weight tile.
+pub struct MacroServer {
+    tx: Option<mpsc::Sender<Job>>,
+    pub metrics: Arc<Metrics>,
+    handles: Vec<JoinHandle<()>>,
+    rows: usize,
+}
+
+impl MacroServer {
+    /// Start worker threads for a 128×128 weight tile given as codes.
+    pub fn start(
+        cfg: MacroConfig,
+        codes: Vec<u8>,
+        server_cfg: ServerConfig,
+    ) -> Result<MacroServer> {
+        assert_eq!(codes.len(), cfg.rows * cfg.cols);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        let rows = cfg.rows;
+        for wid in 0..server_cfg.workers {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            let codes = codes.clone();
+            let scfg = server_cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(wid, cfg, codes, scfg, rx, metrics);
+            }));
+        }
+        Ok(MacroServer {
+            tx: Some(tx),
+            metrics,
+            handles,
+            rows,
+        })
+    }
+
+    /// Submit one input vector; returns a receiver for the MAC result.
+    pub fn submit(&self, x: Vec<u32>) -> mpsc::Receiver<Vec<f64>> {
+        assert_eq!(x.len(), self.rows, "input length");
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Job {
+                x,
+                submitted: Instant::now(),
+                reply: reply_tx,
+            })
+            .expect("workers alive");
+        reply_rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, x: Vec<u32>) -> Vec<f64> {
+        self.submit(x).recv().expect("reply")
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take()); // closes the channel; workers drain & exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+enum WorkerBackend {
+    Sim(Box<CimMacro>),
+    Pjrt {
+        exe: std::sync::Arc<crate::runtime::Executable>,
+        codes_i32: Vec<i32>,
+        batch: usize,
+        rows: usize,
+        cols: usize,
+        alpha: f64,
+        t_bit: f64,
+        // keep the runtime alive for the executable's lifetime
+        _rt: Runtime,
+    },
+}
+
+impl WorkerBackend {
+    fn create(cfg: &MacroConfig, codes: &[u8], kind: &BackendKind) -> WorkerBackend {
+        match kind {
+            BackendKind::Sim => {
+                let mut m = CimMacro::new(cfg.clone());
+                m.program(codes);
+                WorkerBackend::Sim(Box::new(m))
+            }
+            BackendKind::Pjrt { artifacts_dir } => {
+                let mut rt = Runtime::new(artifacts_dir).expect("pjrt client");
+                let exe = rt
+                    .load("spiking_mvm_b8_128x128")
+                    .expect("artifact spiking_mvm_b8_128x128");
+                WorkerBackend::Pjrt {
+                    exe,
+                    codes_i32: codes.iter().map(|&c| c as i32).collect(),
+                    batch: 8,
+                    rows: cfg.rows,
+                    cols: cfg.cols,
+                    alpha: cfg.alpha(),
+                    t_bit: cfg.t_bit_ns,
+                    _rt: rt,
+                }
+            }
+        }
+    }
+
+    /// Compute MACs for a batch of inputs.
+    fn mvm_batch(&mut self, xs: &[Vec<u32>]) -> Vec<Vec<f64>> {
+        match self {
+            WorkerBackend::Sim(m) => xs.iter().map(|x| m.mvm(x).y_mac).collect(),
+            WorkerBackend::Pjrt {
+                exe,
+                codes_i32,
+                batch,
+                rows,
+                cols,
+                alpha,
+                t_bit,
+                ..
+            } => {
+                let mut out = Vec::with_capacity(xs.len());
+                for chunk in xs.chunks(*batch) {
+                    // Encode + pad the chunk to the artifact's batch shape.
+                    let mut t_in = vec![0.0f32; *batch * *rows];
+                    for (b, x) in chunk.iter().enumerate() {
+                        for (r, &v) in x.iter().enumerate() {
+                            t_in[b * *rows + r] = v as f32 * *t_bit as f32;
+                        }
+                    }
+                    let args = [
+                        Value::f32(t_in, &[*batch, *rows]),
+                        Value::i32(codes_i32.clone(), &[*rows, *cols]),
+                    ];
+                    let outputs = exe.run_f32(&args).expect("pjrt execute");
+                    let t_out = &outputs[0];
+                    let scale = 1.0 / (*alpha * *t_bit);
+                    for b in 0..chunk.len() {
+                        out.push(
+                            t_out[b * *cols..(b + 1) * *cols]
+                                .iter()
+                                .map(|&t| t as f64 * scale)
+                                .collect(),
+                        );
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    _wid: usize,
+    cfg: MacroConfig,
+    codes: Vec<u8>,
+    scfg: ServerConfig,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    metrics: Arc<Metrics>,
+) {
+    let mut backend = WorkerBackend::create(&cfg, &codes, &scfg.backend);
+    let macs_per_op = (cfg.rows * cfg.cols) as u64;
+    loop {
+        // Collect a batch: block for the first job, then fill until the
+        // batch is full or the timeout elapses.
+        let mut jobs: Vec<Job> = Vec::with_capacity(scfg.max_batch);
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => jobs.push(j),
+                Err(_) => return, // channel closed: shut down
+            }
+            let deadline = Instant::now() + scfg.batch_timeout;
+            while jobs.len() < scfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match guard.recv_timeout(deadline - now) {
+                    Ok(j) => jobs.push(j),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        } // release the lock before computing
+
+        let xs: Vec<Vec<u32>> = jobs.iter().map(|j| j.x.clone()).collect();
+        let results = backend.mvm_batch(&xs);
+        metrics.record_batch(jobs.len(), macs_per_op * jobs.len() as u64);
+        for (job, y) in jobs.into_iter().zip(results) {
+            let lat_us = job.submitted.elapsed().as_secs_f64() * 1e6;
+            metrics.record_request(lat_us);
+            let _ = job.reply.send(y); // receiver may have gone away
+        }
+    }
+}
+
+/// Multi-model router: name → running server (DESIGN.md S11 "router").
+pub struct Router {
+    services: std::collections::BTreeMap<String, MacroServer>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router {
+            services: Default::default(),
+        }
+    }
+
+    pub fn register(&mut self, name: impl Into<String>, server: MacroServer) {
+        self.services.insert(name.into(), server);
+    }
+
+    pub fn call(&self, name: &str, x: Vec<u32>) -> Option<Vec<f64>> {
+        self.services.get(name).map(|s| s.call(x))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.services.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn shutdown(self) {
+        for (_, s) in self.services {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn codes(seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..128 * 128).map(|_| rng.below(4) as u8).collect()
+    }
+
+    #[test]
+    fn sim_server_matches_oracle() {
+        let cfg = MacroConfig::default();
+        let cs = codes(31);
+        let mut oracle = CimMacro::new(cfg.clone());
+        oracle.program(&cs);
+
+        let server =
+            MacroServer::start(cfg, cs, ServerConfig::default()).unwrap();
+        let mut rng = Rng::new(32);
+        for _ in 0..5 {
+            let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+            let got = server.call(x.clone());
+            let want = oracle.ideal_mvm(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-6);
+            }
+        }
+        assert_eq!(server.metrics.requests(), 5);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let cfg = MacroConfig::default();
+        let server = MacroServer::start(
+            cfg,
+            codes(33),
+            ServerConfig {
+                workers: 4,
+                max_batch: 4,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        let mut rng = Rng::new(34);
+        for _ in 0..32 {
+            let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+            rxs.push(server.submit(x));
+        }
+        for rx in rxs {
+            let y = rx.recv().unwrap();
+            assert_eq!(y.len(), 128);
+        }
+        assert_eq!(server.metrics.requests(), 32);
+        server.shutdown();
+    }
+
+    #[test]
+    fn router_dispatches_by_name() {
+        let cfg = MacroConfig::default();
+        let mut router = Router::new();
+        router.register(
+            "layer0",
+            MacroServer::start(cfg.clone(), codes(35), ServerConfig::default())
+                .unwrap(),
+        );
+        router.register(
+            "layer1",
+            MacroServer::start(cfg, codes(36), ServerConfig::default()).unwrap(),
+        );
+        assert_eq!(router.names(), vec!["layer0", "layer1"]);
+        let y = router.call("layer0", vec![1; 128]).unwrap();
+        assert_eq!(y.len(), 128);
+        assert!(router.call("nope", vec![1; 128]).is_none());
+        router.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let cfg = MacroConfig::default();
+        let server =
+            MacroServer::start(cfg, codes(37), ServerConfig::default()).unwrap();
+        server.call(vec![0; 128]);
+        server.shutdown(); // must not hang
+    }
+}

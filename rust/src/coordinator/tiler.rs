@@ -1,0 +1,206 @@
+//! Weight-matrix tiling: maps an arbitrary (K×N) 2-bit code matrix onto
+//! 128×128 macro tiles (DESIGN.md S11). Rows beyond K / cols beyond N are
+//! padded with code 0 — *not* zero conductance (the device has no zero
+//! state), so consumers must mask padded columns and subtract the offset
+//! row term for padded rows, which the signed-weight offset scheme in
+//! `snn::quant` does anyway.
+
+/// A (K×N) matrix of 2-bit codes split into row-major macro tiles.
+#[derive(Debug, Clone)]
+pub struct TiledMatrix {
+    pub k: usize,
+    pub n: usize,
+    pub tile: usize,
+    pub row_tiles: usize,
+    pub col_tiles: usize,
+    /// Tile (i, j) at `tiles[i * col_tiles + j]`, row-major tile×tile codes.
+    tiles: Vec<Vec<u8>>,
+}
+
+impl TiledMatrix {
+    /// Split `codes` (row-major K×N) into `tile`×`tile` blocks.
+    pub fn new(codes: &[u8], k: usize, n: usize, tile: usize) -> Self {
+        assert_eq!(codes.len(), k * n, "code matrix shape");
+        assert!(tile > 0);
+        let row_tiles = k.div_ceil(tile);
+        let col_tiles = n.div_ceil(tile);
+        let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
+        for ti in 0..row_tiles {
+            for tj in 0..col_tiles {
+                let mut block = vec![0u8; tile * tile];
+                for r in 0..tile {
+                    let src_r = ti * tile + r;
+                    if src_r >= k {
+                        break;
+                    }
+                    for c in 0..tile {
+                        let src_c = tj * tile + c;
+                        if src_c >= n {
+                            break;
+                        }
+                        block[r * tile + c] = codes[src_r * n + src_c];
+                    }
+                }
+                tiles.push(block);
+            }
+        }
+        TiledMatrix {
+            k,
+            n,
+            tile,
+            row_tiles,
+            col_tiles,
+            tiles,
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn tile_codes(&self, ti: usize, tj: usize) -> &[u8] {
+        &self.tiles[ti * self.col_tiles + tj]
+    }
+
+    pub fn tile_codes_flat(&self, idx: usize) -> &[u8] {
+        &self.tiles[idx]
+    }
+
+    /// Split an input vector (len K) into per-row-tile padded slices.
+    pub fn split_input(&self, x: &[u32]) -> Vec<Vec<u32>> {
+        assert_eq!(x.len(), self.k, "input length");
+        (0..self.row_tiles)
+            .map(|ti| {
+                let mut part = vec![0u32; self.tile];
+                let lo = ti * self.tile;
+                let hi = ((ti + 1) * self.tile).min(self.k);
+                part[..hi - lo].copy_from_slice(&x[lo..hi]);
+                part
+            })
+            .collect()
+    }
+
+    /// Accumulate per-tile MAC outputs back into a length-N result:
+    /// `partials[ti][tj]` is the tile's `tile`-wide column output.
+    pub fn accumulate(&self, partials: &[Vec<Vec<f64>>]) -> Vec<f64> {
+        assert_eq!(partials.len(), self.row_tiles);
+        let mut y = vec![0.0f64; self.n];
+        for row in partials {
+            assert_eq!(row.len(), self.col_tiles);
+            for (tj, part) in row.iter().enumerate() {
+                assert_eq!(part.len(), self.tile);
+                let lo = tj * self.tile;
+                let hi = ((tj + 1) * self.tile).min(self.n);
+                for (c, &v) in part[..hi - lo].iter().enumerate() {
+                    y[lo + c] += v;
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiple_tiling() {
+        let codes: Vec<u8> = (0..256 * 128).map(|i| (i % 4) as u8).collect();
+        let tm = TiledMatrix::new(&codes, 256, 128, 128);
+        assert_eq!(tm.row_tiles, 2);
+        assert_eq!(tm.col_tiles, 1);
+        assert_eq!(tm.num_tiles(), 2);
+        // spot check: tile (1,0) row 0 == source row 128
+        let t = tm.tile_codes(1, 0);
+        for c in 0..128 {
+            assert_eq!(t[c], codes[128 * 128 + c]);
+        }
+    }
+
+    #[test]
+    fn ragged_tiling_pads_with_zero_code() {
+        let k = 130;
+        let n = 10;
+        let codes = vec![3u8; k * n];
+        let tm = TiledMatrix::new(&codes, k, n, 128);
+        assert_eq!(tm.row_tiles, 2);
+        assert_eq!(tm.col_tiles, 1);
+        let t = tm.tile_codes(1, 0);
+        assert_eq!(t[0], 3); // real row 128
+        assert_eq!(t[1 * 128 + 0], 3); // real row 129
+        assert_eq!(t[2 * 128 + 0], 0); // padding
+        assert_eq!(t[0 * 128 + 10], 0); // padded column
+    }
+
+    #[test]
+    fn split_input_pads() {
+        let codes = vec![0u8; 130 * 10];
+        let tm = TiledMatrix::new(&codes, 130, 10, 128);
+        let x: Vec<u32> = (0..130).collect();
+        let parts = tm.split_input(&x);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0][127], 127);
+        assert_eq!(parts[1][0], 128);
+        assert_eq!(parts[1][2], 0); // padding
+    }
+
+    #[test]
+    fn accumulate_sums_row_tiles_and_trims_cols() {
+        let codes = vec![0u8; 256 * 100];
+        let tm = TiledMatrix::new(&codes, 256, 100, 128);
+        let part = vec![1.0f64; 128];
+        let partials = vec![vec![part.clone()], vec![part.clone()]];
+        let y = tm.accumulate(&partials);
+        assert_eq!(y.len(), 100);
+        assert!(y.iter().all(|&v| (v - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn tiled_mvm_equals_dense_mvm() {
+        // End-to-end: tile a 300×200 matrix, run ideal per-tile MACs,
+        // accumulate, compare against the dense oracle.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let (k, n, tile) = (300, 200, 128);
+        let codes: Vec<u8> = (0..k * n).map(|_| rng.below(4) as u8).collect();
+        let x: Vec<u32> = (0..k).map(|_| rng.below(256) as u32).collect();
+        let levels = crate::config::LevelMap::DeviceTrue.levels();
+
+        // dense oracle
+        let mut want = vec![0.0f64; n];
+        for r in 0..k {
+            for c in 0..n {
+                want[c] += x[r] as f64 * levels[codes[r * n + c] as usize];
+            }
+        }
+
+        let tm = TiledMatrix::new(&codes, k, n, tile);
+        let xparts = tm.split_input(&x);
+        let mut partials = Vec::new();
+        for ti in 0..tm.row_tiles {
+            let mut row = Vec::new();
+            for tj in 0..tm.col_tiles {
+                let tc = tm.tile_codes(ti, tj);
+                let mut part = vec![0.0f64; tile];
+                for r in 0..tile {
+                    let xv = xparts[ti][r] as f64;
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    for c in 0..tile {
+                        part[c] += xv * levels[tc[r * tile + c] as usize];
+                    }
+                }
+                row.push(part);
+            }
+            partials.push(row);
+        }
+        let got = tm.accumulate(&partials);
+        // Padded rows contribute x=0; padded cols trimmed. But padded
+        // rows' code-0 cells have *nonzero G* — x=0 keeps them silent.
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+}

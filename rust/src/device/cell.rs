@@ -1,0 +1,153 @@
+//! 3T-2MTJ memory cell (paper §III-A, Fig 1b).
+//!
+//! Two SOT-MRAM devices in series per cell; J2 is sized with twice the
+//! resistance of J1, so the four (J1, J2) state combinations give four
+//! distinct series resistances encoding a 2-bit weight:
+//!
+//!   code 0 : J1=AP, J2=AP → R = 2·R + 4·R = 6·R_LRS   (G min)
+//!   code 1 : J1=P , J2=AP → R = 1·R + 4·R = 5·R_LRS
+//!   code 2 : J1=AP, J2=P  → R = 2·R + 2·R = 4·R_LRS
+//!   code 3 : J1=P , J2=P  → R = 1·R + 2·R = 3·R_LRS   (G max)
+//!
+//! During reads all three transistors are off and the cell is purely the
+//! series MTJ stack between RBL[0] (input) and RBL[1] (readout clamp).
+
+use super::mtj::{Mtj, MtjState};
+
+/// One 3T-2MTJ cell.
+#[derive(Debug, Clone)]
+pub struct Cell3T2J {
+    /// J1: nominal R_P = R_LRS.
+    pub j1: Mtj,
+    /// J2: nominal R_P = 2·R_LRS.
+    pub j2: Mtj,
+}
+
+impl Cell3T2J {
+    /// Nominal cell: both junctions parallel (code 3, G max).
+    pub fn new(r_lrs_mohm: f64, tmr: f64) -> Self {
+        Cell3T2J {
+            j1: Mtj::new(r_lrs_mohm, tmr),
+            j2: Mtj::new(2.0 * r_lrs_mohm, tmr),
+        }
+    }
+
+    /// Cell with frozen device-to-device variation factors per junction.
+    pub fn with_variation(
+        r_lrs_mohm: f64,
+        tmr: f64,
+        d2d_j1: f64,
+        d2d_j2: f64,
+    ) -> Self {
+        Cell3T2J {
+            j1: Mtj::with_variation(r_lrs_mohm, tmr, d2d_j1),
+            j2: Mtj::with_variation(2.0 * r_lrs_mohm, tmr, d2d_j2),
+        }
+    }
+
+    /// Program a 2-bit code (write both junctions; §III-A write op).
+    ///
+    /// Code bit 0 ↔ J1 state, bit 1 ↔ J2 state, chosen so conductance is
+    /// strictly increasing in code (see module docs).
+    pub fn program(&mut self, code: u8) {
+        assert!(code < 4, "2-bit code, got {code}");
+        self.j1.set_state(MtjState::from_bit(code & 1 == 0));
+        self.j2.set_state(MtjState::from_bit(code & 2 == 0));
+    }
+
+    /// Read back the stored 2-bit code from the junction states.
+    pub fn code(&self) -> u8 {
+        let b0 = !self.j1.state.to_bit() as u8;
+        let b1 = !self.j2.state.to_bit() as u8;
+        b0 | (b1 << 1)
+    }
+
+    /// Series resistance of the stack (MΩ).
+    pub fn resistance_mohm(&self) -> f64 {
+        self.j1.resistance_mohm() + self.j2.resistance_mohm()
+    }
+
+    /// Series conductance (µS).
+    pub fn conductance_us(&self) -> f64 {
+        1.0 / self.resistance_mohm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_distinct_states_match_design_table() {
+        let mut c = Cell3T2J::new(1.0, 1.0);
+        let want_r = [6.0, 5.0, 4.0, 3.0];
+        for code in 0..4u8 {
+            c.program(code);
+            assert_eq!(c.code(), code);
+            assert!(
+                (c.resistance_mohm() - want_r[code as usize]).abs() < 1e-12,
+                "code {code}: R = {}",
+                c.resistance_mohm()
+            );
+        }
+    }
+
+    #[test]
+    fn conductance_strictly_increasing_in_code() {
+        let mut c = Cell3T2J::new(1.0, 1.0);
+        let mut prev = 0.0;
+        for code in 0..4u8 {
+            c.program(code);
+            let g = c.conductance_us();
+            assert!(g > prev);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn levels_match_config_level_map() {
+        use crate::config::LevelMap;
+        let levels = LevelMap::DeviceTrue.levels();
+        let mut c = Cell3T2J::new(1.0, 1.0);
+        for code in 0..4u8 {
+            c.program(code);
+            assert!(
+                (c.conductance_us() - levels[code as usize]).abs() < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn j2_is_twice_j1() {
+        let c = Cell3T2J::new(1.0, 1.0);
+        assert!(
+            (c.j2.r_p_mohm - 2.0 * c.j1.r_p_mohm).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn reprogram_updates_write_counters() {
+        let mut c = Cell3T2J::new(1.0, 1.0);
+        c.program(0);
+        c.program(3);
+        assert_eq!(c.j1.writes, 2);
+        assert_eq!(c.j2.writes, 2);
+    }
+
+    #[test]
+    fn variation_shifts_levels_but_keeps_order() {
+        let mut c = Cell3T2J::with_variation(1.0, 1.0, 1.08, 0.94);
+        let mut prev = 0.0;
+        for code in 0..4u8 {
+            c.program(code);
+            assert!(c.conductance_us() > prev);
+            prev = c.conductance_us();
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn program_rejects_out_of_range_code() {
+        Cell3T2J::new(1.0, 1.0).program(4);
+    }
+}

@@ -1,0 +1,12 @@
+//! SOT-MRAM device substrate (DESIGN.md S1): MTJ resistance model, the
+//! paper's 3T-2MTJ series cell, and SOT write-switching dynamics.
+
+pub mod cell;
+pub mod mtj;
+pub mod retention;
+pub mod write;
+
+pub use cell::Cell3T2J;
+pub use mtj::{Mtj, MtjState};
+pub use retention::{EnduranceParams, RetentionParams};
+pub use write::{SotWriteParams, WritePulse};

@@ -1,0 +1,132 @@
+//! SOT-MRAM magnetic tunnel junction (MTJ) device model.
+//!
+//! The macro only reads MTJs through their resistance, so the model is
+//! resistive: a free-layer state (P/AP), a nominal parallel resistance,
+//! and a TMR ratio giving R_AP = R_P · (1 + TMR). Device-to-device
+//! variation is frozen at fabrication time; cycle-to-cycle read noise is
+//! sampled per read by the array layer.
+//!
+//! Writes go through the heavy-metal layer (SOT): the thermally-activated
+//! switching model in [`crate::device::write`] decides whether a given
+//! current pulse flips the free layer.
+
+/// Magnetization state of the free layer relative to the pinned layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MtjState {
+    /// Parallel — low resistance (R_P = R_LRS).
+    Parallel,
+    /// Anti-parallel — high resistance (R_AP = R_P·(1+TMR)).
+    AntiParallel,
+}
+
+impl MtjState {
+    /// The state encoding one bit: 0 → P, 1 → AP.
+    pub fn from_bit(bit: bool) -> Self {
+        if bit {
+            MtjState::AntiParallel
+        } else {
+            MtjState::Parallel
+        }
+    }
+
+    pub fn to_bit(self) -> bool {
+        self == MtjState::AntiParallel
+    }
+}
+
+/// One magnetic tunnel junction.
+#[derive(Debug, Clone)]
+pub struct Mtj {
+    /// Nominal parallel-state resistance (MΩ) *including* the frozen
+    /// device-to-device variation factor.
+    pub r_p_mohm: f64,
+    /// Tunnel magnetoresistance ratio (1.0 = 100 %).
+    pub tmr: f64,
+    /// Current free-layer state.
+    pub state: MtjState,
+    /// Lifetime write count (endurance accounting).
+    pub writes: u64,
+}
+
+impl Mtj {
+    /// A nominal device: parallel state, no variation applied.
+    pub fn new(r_p_mohm: f64, tmr: f64) -> Self {
+        assert!(r_p_mohm > 0.0 && tmr >= 0.0);
+        Mtj {
+            r_p_mohm,
+            tmr,
+            state: MtjState::Parallel,
+            writes: 0,
+        }
+    }
+
+    /// Same, with a multiplicative device-to-device factor (e.g. 1.02).
+    pub fn with_variation(r_p_mohm: f64, tmr: f64, d2d_factor: f64) -> Self {
+        assert!(d2d_factor > 0.0);
+        Mtj::new(r_p_mohm * d2d_factor, tmr)
+    }
+
+    /// Present resistance (MΩ).
+    pub fn resistance_mohm(&self) -> f64 {
+        match self.state {
+            MtjState::Parallel => self.r_p_mohm,
+            MtjState::AntiParallel => self.r_p_mohm * (1.0 + self.tmr),
+        }
+    }
+
+    /// Present conductance (µS).
+    pub fn conductance_us(&self) -> f64 {
+        1.0 / self.resistance_mohm()
+    }
+
+    /// Force the free layer to `state`, counting the write.
+    pub fn set_state(&mut self, state: MtjState) {
+        if self.state != state {
+            self.state = state;
+        }
+        self.writes += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tmr_doubles_resistance_at_100pct() {
+        let mut m = Mtj::new(1.0, 1.0); // Table I: R_LRS = 1 MΩ, TMR 100 %
+        assert!((m.resistance_mohm() - 1.0).abs() < 1e-12);
+        m.set_state(MtjState::AntiParallel);
+        assert!((m.resistance_mohm() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conductance_is_reciprocal() {
+        let m = Mtj::new(2.0, 1.0);
+        assert!((m.conductance_us() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variation_scales_both_states() {
+        let mut m = Mtj::with_variation(1.0, 1.0, 1.05);
+        let rp = m.resistance_mohm();
+        m.set_state(MtjState::AntiParallel);
+        let rap = m.resistance_mohm();
+        assert!((rp - 1.05).abs() < 1e-12);
+        assert!((rap / rp - 2.0).abs() < 1e-12); // TMR ratio preserved
+    }
+
+    #[test]
+    fn write_counter_increments() {
+        let mut m = Mtj::new(1.0, 1.0);
+        m.set_state(MtjState::AntiParallel);
+        m.set_state(MtjState::AntiParallel); // redundant write still counted
+        assert_eq!(m.writes, 2);
+    }
+
+    #[test]
+    fn bit_roundtrip() {
+        assert_eq!(MtjState::from_bit(true).to_bit(), true);
+        assert_eq!(MtjState::from_bit(false).to_bit(), false);
+    }
+}

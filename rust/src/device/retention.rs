@@ -1,0 +1,178 @@
+//! Retention & endurance model (DESIGN.md §7 extension).
+//!
+//! MTJ free layers are thermally stable but not immortal: the retention
+//! time follows the Néel–Arrhenius law  τ_ret = τ0 · e^Δ, and a stored
+//! bit flips within time t with probability 1 − exp(−t/τ_ret). For a
+//! weight-stationary CIM macro this sets the *scrub interval* — how often
+//! the coordinator must re-verify/refresh the programmed codes — and the
+//! resulting energy tax, which the ablation runner quantifies against the
+//! paper's energy budget.
+
+use crate::util::rng::Rng;
+
+/// Retention parameters for one MTJ technology corner.
+#[derive(Debug, Clone, Copy)]
+pub struct RetentionParams {
+    /// Thermal stability factor Δ = E_b/kT at operating temperature.
+    pub delta: f64,
+    /// Attempt time τ0 (ns); physical value ≈ 1 ns.
+    pub tau0_ns: f64,
+}
+
+impl RetentionParams {
+    /// Typical embedded-MRAM target: Δ ≈ 60 at 85 °C (10-year retention).
+    pub fn standard() -> Self {
+        RetentionParams {
+            delta: 60.0,
+            tau0_ns: 1.0,
+        }
+    }
+
+    /// Scaled-down device / high temperature: Δ ≈ 35 (τ ≈ 18 days —
+    /// the regime where the coordinator's scrub policy matters).
+    pub fn weak() -> Self {
+        RetentionParams {
+            delta: 35.0,
+            tau0_ns: 1.0,
+        }
+    }
+
+    /// Mean retention time (ns).
+    pub fn tau_ret_ns(&self) -> f64 {
+        self.tau0_ns * self.delta.exp()
+    }
+
+    /// Probability a stored bit flips within `t_ns`.
+    pub fn flip_probability(&self, t_ns: f64) -> f64 {
+        if t_ns <= 0.0 {
+            return 0.0;
+        }
+        1.0 - (-t_ns / self.tau_ret_ns()).exp()
+    }
+
+    /// Longest scrub interval (ns) keeping per-bit flip probability
+    /// below `p_target`.
+    pub fn scrub_interval_ns(&self, p_target: f64) -> f64 {
+        assert!((0.0..1.0).contains(&p_target) && p_target > 0.0);
+        -self.tau_ret_ns() * (1.0 - p_target).ln()
+    }
+}
+
+/// Endurance model: SOT writes are effectively unlimited (>1e12 in
+/// literature), but we still track wear to expose the write-budget the
+/// scheduler's reprogramming policy consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct EnduranceParams {
+    /// Rated write cycles per junction.
+    pub rated_cycles: u64,
+}
+
+impl Default for EnduranceParams {
+    fn default() -> Self {
+        EnduranceParams {
+            rated_cycles: 1_000_000_000_000, // 1e12, typical SOT rating
+        }
+    }
+}
+
+impl EnduranceParams {
+    /// Fraction of rated life consumed by `writes` cycles.
+    pub fn wear(&self, writes: u64) -> f64 {
+        writes as f64 / self.rated_cycles as f64
+    }
+}
+
+/// Simulate retention-induced code corruption over an idle period:
+/// each junction flips independently with the Arrhenius probability.
+/// Returns the number of *cells* whose stored code changed.
+pub fn corrupt_codes(
+    codes: &mut [u8],
+    idle_ns: f64,
+    params: &RetentionParams,
+    rng: &mut Rng,
+) -> usize {
+    let p = params.flip_probability(idle_ns);
+    if p <= 0.0 {
+        return 0;
+    }
+    let mut corrupted = 0;
+    for code in codes.iter_mut() {
+        let mut c = *code;
+        // Two junctions per cell: bit0 ↔ J1, bit1 ↔ J2 (cell.rs layout).
+        if rng.f64() < p {
+            c ^= 1;
+        }
+        if rng.f64() < p {
+            c ^= 2;
+        }
+        if c != *code {
+            *code = c;
+            corrupted += 1;
+        }
+    }
+    corrupted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_retention_is_years() {
+        let p = RetentionParams::standard();
+        let year_ns = 3.15e16;
+        // Δ=60 → τ ≈ e^60 ns ≈ 1.1e26 ns ≫ 10 years.
+        assert!(p.tau_ret_ns() > 1000.0 * year_ns);
+        assert!(p.flip_probability(year_ns) < 1e-8);
+    }
+
+    #[test]
+    fn weak_devices_need_scrubbing() {
+        let p = RetentionParams::weak();
+        // Δ=35 → τ ≈ 1.6e15 ns ≈ 18 days: monthly idle loses data.
+        let day_ns = 8.64e13;
+        assert!(p.flip_probability(30.0 * day_ns) > 0.1);
+        let scrub = p.scrub_interval_ns(1e-6);
+        assert!(scrub > 0.0 && scrub < day_ns);
+    }
+
+    #[test]
+    fn scrub_interval_bounds_flip_probability() {
+        let p = RetentionParams::weak();
+        for target in [1e-9, 1e-6, 1e-3] {
+            let t = p.scrub_interval_ns(target);
+            let got = p.flip_probability(t);
+            assert!((got - target).abs() / target < 1e-6, "{got} vs {target}");
+        }
+    }
+
+    #[test]
+    fn corruption_rate_matches_probability() {
+        let p = RetentionParams { delta: 10.0, tau0_ns: 1.0 }; // fast decay
+        let t = p.tau_ret_ns(); // P(flip) = 1 − e^−1 ≈ 0.632 per junction
+        let mut rng = Rng::new(404);
+        let mut codes = vec![0u8; 20_000];
+        let corrupted = corrupt_codes(&mut codes, t, &p, &mut rng);
+        // P(cell changed) = 1 − (1−p)² ≈ 0.865.
+        let frac = corrupted as f64 / codes.len() as f64;
+        assert!((frac - 0.865).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn no_time_no_corruption() {
+        let mut rng = Rng::new(1);
+        let mut codes = vec![3u8; 100];
+        assert_eq!(
+            corrupt_codes(&mut codes, 0.0, &RetentionParams::standard(), &mut rng),
+            0
+        );
+        assert!(codes.iter().all(|&c| c == 3));
+    }
+
+    #[test]
+    fn endurance_wear_fraction() {
+        let e = EnduranceParams::default();
+        assert!(e.wear(1_000_000) < 1e-5);
+        assert!((e.wear(e.rated_cycles) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,106 @@
+//! Per-operation energy ledger (DESIGN.md S9).
+//!
+//! Every macro op returns an `EnergyBreakdown`; the coordinator sums them
+//! across tiles/batches. Categories follow the paper's Fig 6(a) power
+//! breakdown: array read, SMU, OSG, and control.
+
+/// Energy per component for one (or many accumulated) macro ops, in fJ.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub array_fj: f64,
+    pub smu_fj: f64,
+    pub osg_fj: f64,
+    pub control_fj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_fj(&self) -> f64 {
+        self.array_fj + self.smu_fj + self.osg_fj + self.control_fj
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.total_fj() / 1000.0
+    }
+
+    /// Component shares (array, smu, osg, control), summing to 1.
+    pub fn shares(&self) -> [f64; 4] {
+        let t = self.total_fj();
+        if t == 0.0 {
+            return [0.0; 4];
+        }
+        [
+            self.array_fj / t,
+            self.smu_fj / t,
+            self.osg_fj / t,
+            self.control_fj / t,
+        ]
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.array_fj += other.array_fj;
+        self.smu_fj += other.smu_fj;
+        self.osg_fj += other.osg_fj;
+        self.control_fj += other.control_fj;
+    }
+
+    pub fn scaled(&self, f: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            array_fj: self.array_fj * f,
+            smu_fj: self.smu_fj * f,
+            osg_fj: self.osg_fj * f,
+            control_fj: self.control_fj * f,
+        }
+    }
+}
+
+/// TOPS/W for `ops` operations costing `energy_fj` femtojoules.
+///
+/// ops/fJ = ops/(1e-15 J) ⇒ TOPS/W = ops/J / 1e12 = ops / (fJ · 1e-3).
+pub fn tops_per_watt(ops: u64, energy_fj: f64) -> f64 {
+    assert!(energy_fj > 0.0);
+    ops as f64 / energy_fj * 1000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let e = EnergyBreakdown {
+            array_fj: 1.0,
+            smu_fj: 2.0,
+            osg_fj: 5.0,
+            control_fj: 2.0,
+        };
+        let s = e.shares();
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((s[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = EnergyBreakdown {
+            array_fj: 1.0,
+            smu_fj: 1.0,
+            osg_fj: 1.0,
+            control_fj: 1.0,
+        };
+        a.add(&a.clone());
+        assert_eq!(a.total_fj(), 8.0);
+        assert_eq!(a.scaled(0.5).total_fj(), 4.0);
+    }
+
+    #[test]
+    fn tops_per_watt_reference_point() {
+        // 32768 OPs at 134.5 pJ ≈ 243.6 TOPS/W (the paper's headline).
+        let t = tops_per_watt(32768, 134_500.0);
+        assert!((t - 243.6).abs() < 1.0, "{t}");
+    }
+
+    #[test]
+    fn tops_per_watt_unit_sanity() {
+        // 1 OP per fJ = 1000 TOPS/W.
+        assert!((tops_per_watt(1, 1.0) - 1000.0).abs() < 1e-9);
+    }
+}

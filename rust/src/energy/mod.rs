@@ -1,0 +1,8 @@
+//! Energy/power accounting (DESIGN.md S9): the calibrated component model
+//! and the TOPS/W arithmetic behind Table II and Fig 6.
+
+pub mod accounting;
+pub mod model;
+
+pub use accounting::{tops_per_watt, EnergyBreakdown};
+pub use model::{mvm_energy, nominal_activity, EnergyParams, MvmActivity};

@@ -1,0 +1,234 @@
+//! Component energy model, calibrated to the paper's published aggregates
+//! (DESIGN.md §6):
+//!
+//! * 243.6 TOPS/W peak at 8-bit inputs on the uniform-random workload,
+//! * OSG = 72.6 % of total power (Fig 6a),
+//! * sensing-energy reductions vs ADC/spike/TDC baselines (Fig 6b).
+//!
+//! Only the *aggregates* are anchored; the model itself is compositional —
+//! array energy is pure physics (V²·G·t), SMU/OSG/control scale with the
+//! actual event windows of the workload — so precision/size/sparsity
+//! sweeps produce genuine trends rather than hard-coded numbers.
+
+use crate::config::MacroConfig;
+
+use super::accounting::EnergyBreakdown;
+
+/// Calibrated per-component energy parameters (28 nm class).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyParams {
+    // --- SMU (per row) ---
+    /// Energy per DFF toggle (fJ); two toggles per spike pair.
+    pub e_dff_toggle_fj: f64,
+    /// Clamp bias power while a row window is open (µW).
+    pub p_clamp_uw: f64,
+    // --- OSG (per column) ---
+    /// Mirror + bit-line clamp bias power during the charge phase (µW).
+    pub p_mirror_uw: f64,
+    /// Comparator bias power during the compare phase (µW).
+    pub p_comp_uw: f64,
+    /// Energy per emitted output spike (fJ); two per conversion.
+    pub e_spike_fj: f64,
+    // --- control ---
+    /// Event-driven control logic energy per processed event (fJ).
+    pub e_ctrl_event_fj: f64,
+    /// Fixed per-op control energy (decoders, flag OR-tree, handshake; fJ).
+    pub e_op_fixed_fj: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        // Calibration derivation in DESIGN.md §6; verified by the
+        // `calibration_*` tests below.
+        EnergyParams {
+            e_dff_toggle_fj: 1.2,
+            p_clamp_uw: 6.0,
+            p_mirror_uw: 6.0,
+            p_comp_uw: 6.0,
+            e_spike_fj: 27.0,
+            e_ctrl_event_fj: 27.0,
+            e_op_fixed_fj: 5500.0,
+        }
+    }
+}
+
+/// Workload description of one full-array MVM, produced by the macro sim.
+#[derive(Debug, Clone)]
+pub struct MvmActivity {
+    /// Per-row input window durations T_in,i (ns); 0 = row inactive.
+    pub row_windows_ns: Vec<f64>,
+    /// Per-column charge-phase cell-current integrals Σ_i T_i·G_ij (ns·µS).
+    pub col_charge_nsus: Vec<f64>,
+    /// Per-column V_charge at flag drop (V).
+    pub v_charge: Vec<f64>,
+    /// Per-column output intervals T_out (ns).
+    pub t_out_ns: Vec<f64>,
+    /// Global flag high duration (charge phase length, ns).
+    pub t_charge_ns: f64,
+    /// Events processed (row rises + falls + compare fires).
+    pub events: u64,
+}
+
+/// Compute the energy breakdown of one macro MVM.
+pub fn mvm_energy(
+    cfg: &MacroConfig,
+    p: &EnergyParams,
+    act: &MvmActivity,
+) -> EnergyBreakdown {
+    let v_read = cfg.v_read();
+
+    // Array: E = Σ_cells V_read²·G·T = V_read² · Σ_cols (Σ_i T_i·G_ij)...
+    // col_charge already integrates T·G per column.
+    let array_fj: f64 =
+        act.col_charge_nsus.iter().map(|&q| v_read * v_read * q).sum();
+
+    // SMU: two DFF toggles + clamp bias per *active* row.
+    let smu_fj: f64 = act
+        .row_windows_ns
+        .iter()
+        .filter(|&&w| w > 0.0)
+        .map(|&w| 2.0 * p.e_dff_toggle_fj + p.p_clamp_uw * w)
+        .sum();
+
+    // OSG per column: mirror bias over the (shared) charge window,
+    // comparator over its own compare window, two output spikes, and the
+    // switched-capacitor cost of C_rt and C_com (CV·Vdd each).
+    let osg_fj: f64 = act
+        .v_charge
+        .iter()
+        .zip(&act.t_out_ns)
+        .map(|(&v, &t_out)| {
+            p.p_mirror_uw * act.t_charge_ns
+                + p.p_comp_uw * t_out
+                + 2.0 * p.e_spike_fj
+                + (cfg.c_rt_ff + cfg.c_com_ff) * v * cfg.vdd
+        })
+        .sum();
+
+    let control_fj = p.e_op_fixed_fj + p.e_ctrl_event_fj * act.events as f64;
+
+    EnergyBreakdown {
+        array_fj,
+        smu_fj,
+        osg_fj,
+        control_fj,
+    }
+}
+
+/// The nominal workload used for the headline number: every row active
+/// with the *average* 8-bit value, every column at the average code.
+/// (The uniform-random Monte-Carlo version lives in the repro harness;
+/// this closed form keeps the calibration tests fast and exact.)
+pub fn nominal_activity(cfg: &MacroConfig) -> MvmActivity {
+    let rows = cfg.rows;
+    let cols = cfg.cols;
+    let t_avg = (cfg.t_in_max_ns()) / 2.0; // E[x]·t_bit for uniform x
+    let levels = cfg.level_map.levels();
+    let g_avg = levels.iter().sum::<f64>() / 4.0;
+    let q_col = rows as f64 * t_avg * g_avg; // Σ T·G per column
+    let v_charge =
+        cfg.k_mirror * cfg.v_read() * q_col / cfg.c_rt_ff;
+    let t_out = v_charge * cfg.c_com_ff / cfg.i_com_ua;
+    MvmActivity {
+        row_windows_ns: vec![t_avg; rows],
+        col_charge_nsus: vec![q_col; cols],
+        v_charge: vec![v_charge; cols],
+        t_out_ns: vec![t_out; cols],
+        t_charge_ns: cfg.t_in_max_ns(), // global window ≈ max input
+        events: (2 * rows + cols) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::accounting::tops_per_watt;
+
+    #[test]
+    fn calibration_hits_papers_peak_efficiency() {
+        // The headline: 243.6 TOPS/W at 8-bit inputs (±2 %).
+        let cfg = MacroConfig::default();
+        let e = mvm_energy(&cfg, &EnergyParams::default(), &nominal_activity(&cfg));
+        let tops = tops_per_watt(cfg.ops_per_mvm(), e.total_fj());
+        assert!(
+            (tops - 243.6).abs() / 243.6 < 0.02,
+            "got {tops} TOPS/W, energy {} pJ",
+            e.total_pj()
+        );
+    }
+
+    #[test]
+    fn calibration_osg_dominates_at_paper_share() {
+        // Fig 6(a): OSG = 72.6 % of the total (±2 points).
+        let cfg = MacroConfig::default();
+        let e = mvm_energy(&cfg, &EnergyParams::default(), &nominal_activity(&cfg));
+        let osg_share = e.shares()[2];
+        assert!(
+            (osg_share - 0.726).abs() < 0.02,
+            "OSG share {osg_share}"
+        );
+    }
+
+    #[test]
+    fn array_energy_is_small_due_to_mohm_cells() {
+        // §IV-A: "MRAM devices with high resistance values (MΩ level)
+        // ... naturally contribute to improving the overall energy
+        // efficiency" — array read must be a ~1 % term.
+        let cfg = MacroConfig::default();
+        let e = mvm_energy(&cfg, &EnergyParams::default(), &nominal_activity(&cfg));
+        assert!(e.shares()[0] < 0.02, "array share {}", e.shares()[0]);
+    }
+
+    #[test]
+    fn energy_scales_down_with_input_precision() {
+        // Event-driven scaling: smaller inputs → shorter windows → less E.
+        let cfg = MacroConfig::default();
+        let p = EnergyParams::default();
+        let mut act4 = nominal_activity(&cfg);
+        // 4-bit inputs: windows and charges shrink 16×.
+        let s = 15.0 / 255.0;
+        for w in &mut act4.row_windows_ns {
+            *w *= s;
+        }
+        for q in &mut act4.col_charge_nsus {
+            *q *= s;
+        }
+        for v in &mut act4.v_charge {
+            *v *= s;
+        }
+        for t in &mut act4.t_out_ns {
+            *t *= s;
+        }
+        act4.t_charge_ns *= s;
+        let e8 = mvm_energy(&cfg, &p, &nominal_activity(&cfg)).total_fj();
+        let e4 = mvm_energy(&cfg, &p, &act4).total_fj();
+        assert!(e4 < 0.5 * e8, "e4 {e4} vs e8 {e8}");
+    }
+
+    #[test]
+    fn sparse_input_skips_row_energy() {
+        // Rows with value 0 must contribute zero SMU energy (event-driven).
+        let cfg = MacroConfig::default();
+        let p = EnergyParams::default();
+        let mut act = nominal_activity(&cfg);
+        let full = mvm_energy(&cfg, &p, &act).smu_fj;
+        for w in act.row_windows_ns.iter_mut().take(64) {
+            *w = 0.0;
+        }
+        let half = mvm_energy(&cfg, &p, &act).smu_fj;
+        assert!((half - full / 2.0).abs() / full < 1e-9);
+    }
+
+    #[test]
+    fn per_conversion_osg_energy_anchor() {
+        // Fig 6(b) anchor: our sensing (OSG) energy per 8-bit conversion
+        // ≈ 763 fJ (derivation in DESIGN.md §6).
+        let cfg = MacroConfig::default();
+        let e = mvm_energy(&cfg, &EnergyParams::default(), &nominal_activity(&cfg));
+        let per_conv = e.osg_fj / cfg.cols as f64;
+        assert!(
+            (per_conv - 763.0).abs() < 40.0,
+            "per-conversion OSG {per_conv} fJ"
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Event_flag aggregation (paper §III-B, Fig 3b).
+//!
+//! Every row's SMU raises `Event_flag_i` while its spike pair is open; the
+//! global `Event_flag` is their OR and gates the OSG charging window. In
+//! hardware this is a wired-OR / OR-tree; behaviorally it is a counter of
+//! active rows whose 1→0 transition is *the* event that starts the output
+//! comparison phase (fully asynchronous, no clock).
+
+/// OR-aggregator over `n` row flags with transition timestamps.
+#[derive(Debug, Clone)]
+pub struct FlagTree {
+    active: Vec<bool>,
+    count: usize,
+    /// Time the global flag last rose (ns), if currently high.
+    rose_at: Option<f64>,
+    /// Completed high intervals (rise, fall) — the Fig 3b waveform.
+    intervals: Vec<(f64, f64)>,
+}
+
+impl FlagTree {
+    pub fn new(n: usize) -> Self {
+        FlagTree {
+            active: vec![false; n],
+            count: 0,
+            rose_at: None,
+            intervals: Vec::new(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Row `i` flag asserts at time `t_ns`. Returns true if this raised
+    /// the *global* flag (0 → 1 active rows).
+    pub fn assert_row(&mut self, i: usize, t_ns: f64) -> bool {
+        assert!(!self.active[i], "row {i} already asserted");
+        self.active[i] = true;
+        self.count += 1;
+        if self.count == 1 {
+            self.rose_at = Some(t_ns);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Row `i` flag de-asserts at `t_ns`. Returns true if this dropped the
+    /// global flag (last active row) — the OSG trigger.
+    pub fn deassert_row(&mut self, i: usize, t_ns: f64) -> bool {
+        assert!(self.active[i], "row {i} not asserted");
+        self.active[i] = false;
+        self.count -= 1;
+        if self.count == 0 {
+            let rose = self.rose_at.take().expect("rise recorded");
+            self.intervals.push((rose, t_ns));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is the global flag currently high?
+    pub fn global(&self) -> bool {
+        self.count > 0
+    }
+
+    pub fn active_rows(&self) -> usize {
+        self.count
+    }
+
+    /// Completed (rise, fall) intervals of the global flag.
+    pub fn intervals(&self) -> &[(f64, f64)] {
+        &self.intervals
+    }
+
+    /// Reset all rows (reuse across ops; keeps interval history cleared).
+    pub fn reset(&mut self) {
+        self.active.iter_mut().for_each(|a| *a = false);
+        self.count = 0;
+        self.rose_at = None;
+        self.intervals.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_is_or_of_rows() {
+        let mut f = FlagTree::new(4);
+        assert!(!f.global());
+        assert!(f.assert_row(1, 0.0)); // 0→1 raises global
+        assert!(!f.assert_row(2, 0.1)); // already high
+        assert!(!f.deassert_row(1, 0.5)); // row 2 still active
+        assert!(f.global());
+        assert!(f.deassert_row(2, 0.9)); // last one drops global
+        assert!(!f.global());
+    }
+
+    #[test]
+    fn interval_records_envelope_of_all_rows() {
+        let mut f = FlagTree::new(3);
+        f.assert_row(0, 0.0);
+        f.assert_row(1, 0.2);
+        f.assert_row(2, 0.3);
+        f.deassert_row(0, 1.0);
+        f.deassert_row(2, 2.0);
+        f.deassert_row(1, 5.0);
+        assert_eq!(f.intervals(), &[(0.0, 5.0)]);
+    }
+
+    #[test]
+    fn multiple_disjoint_windows() {
+        let mut f = FlagTree::new(1);
+        f.assert_row(0, 0.0);
+        f.deassert_row(0, 1.0);
+        f.assert_row(0, 3.0);
+        f.deassert_row(0, 4.5);
+        assert_eq!(f.intervals(), &[(0.0, 1.0), (3.0, 4.5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already asserted")]
+    fn double_assert_panics() {
+        let mut f = FlagTree::new(2);
+        f.assert_row(0, 0.0);
+        f.assert_row(0, 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not asserted")]
+    fn deassert_without_assert_panics() {
+        let mut f = FlagTree::new(2);
+        f.deassert_row(1, 0.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut f = FlagTree::new(2);
+        f.assert_row(0, 0.0);
+        f.reset();
+        assert!(!f.global());
+        assert!(f.intervals().is_empty());
+        assert!(f.assert_row(0, 0.0));
+    }
+}

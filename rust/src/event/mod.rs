@@ -1,0 +1,11 @@
+//! Event-driven simulation kernel (DESIGN.md S3): timestamped spike
+//! events, a deterministic time-ordered queue, and the Event_flag
+//! OR-aggregation that gives the macro its asynchronous control.
+
+pub mod flag;
+pub mod queue;
+pub mod types;
+
+pub use flag::FlagTree;
+pub use queue::EventQueue;
+pub use types::{Event, EventKind};

@@ -1,0 +1,175 @@
+//! Time-ordered event queue — the hot-path data structure of the
+//! event-driven simulator (DESIGN.md S3).
+//!
+//! A thin wrapper over `BinaryHeap<Reverse<Event>>` that stamps a
+//! monotone sequence number on push, so same-time events pop in
+//! deterministic insertion order and the heap's order is total even
+//! though times are floats.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::types::{Event, EventKind};
+
+/// Min-heap of events by (time, sequence).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    next_seq: u64,
+    now_ns: f64,
+    popped: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now_ns: 0.0,
+            popped: 0,
+        }
+    }
+
+    /// With pre-allocated capacity (hot path: one macro op = 2·rows+cols+2
+    /// events; pre-sizing avoids growth in the loop).
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            next_seq: 0,
+            now_ns: 0.0,
+            popped: 0,
+        }
+    }
+
+    /// Schedule `kind` at absolute time `t_ns`.
+    ///
+    /// Panics if `t_ns` is NaN or in the past (event-driven causality).
+    pub fn push(&mut self, t_ns: f64, kind: EventKind) {
+        assert!(t_ns.is_finite(), "event time must be finite");
+        assert!(
+            t_ns >= self.now_ns,
+            "causality violation: t={} < now={}",
+            t_ns,
+            self.now_ns
+        );
+        let ev = Event {
+            t_ns,
+            seq: self.next_seq,
+            kind,
+        };
+        self.next_seq += 1;
+        self.heap.push(Reverse(ev));
+    }
+
+    /// Pop the earliest event, advancing simulated time.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop().map(|r| r.0)?;
+        debug_assert!(ev.t_ns >= self.now_ns);
+        self.now_ns = ev.t_ns;
+        self.popped += 1;
+        Some(ev)
+    }
+
+    /// Earliest pending event time without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|r| r.0.t_ns)
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now_ns(&self) -> f64 {
+        self.now_ns
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events processed (metrics).
+    pub fn processed(&self) -> u64 {
+        self.popped
+    }
+
+    /// Reset for reuse across macro ops without freeing the allocation.
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.next_seq = 0;
+        self.now_ns = 0.0;
+        self.popped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::OpDone);
+        q.push(1.0, EventKind::RowRise { row: 0 });
+        q.push(2.0, EventKind::RowFall { row: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.t_ns))
+            .collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut q = EventQueue::new();
+        for row in 0..10u32 {
+            q.push(5.0, EventKind::RowRise { row });
+        }
+        for row in 0..10u32 {
+            match q.pop().unwrap().kind {
+                EventKind::RowRise { row: r } => assert_eq!(r, row),
+                k => panic!("unexpected {k:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn now_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::OpDone);
+        q.push(4.0, EventKind::OpDone);
+        assert_eq!(q.now_ns(), 0.0);
+        q.pop();
+        assert_eq!(q.now_ns(), 1.0);
+        q.pop();
+        assert_eq!(q.now_ns(), 4.0);
+        assert_eq!(q.processed(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "causality")]
+    fn rejects_events_in_the_past() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::OpDone);
+        q.pop();
+        q.push(1.0, EventKind::OpDone);
+    }
+
+    #[test]
+    fn reset_reuses_allocation() {
+        let mut q = EventQueue::with_capacity(64);
+        q.push(1.0, EventKind::OpDone);
+        q.pop();
+        q.reset();
+        assert!(q.is_empty());
+        assert_eq!(q.now_ns(), 0.0);
+        q.push(0.5, EventKind::OpDone); // allowed again after reset
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn peek_does_not_advance_time() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::OpDone);
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.now_ns(), 0.0);
+    }
+}

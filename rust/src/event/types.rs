@@ -1,0 +1,79 @@
+//! Event types for the event-driven macro simulation.
+//!
+//! The paper's operating principle (§III-B/C): computation is *triggered*
+//! by spike events, not clocked. The simulator mirrors that — every state
+//! change in a macro op is a timestamped event processed in time order.
+
+/// What happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// First spike of an input pair — row's Event_flag_i asserts.
+    RowRise { row: u32 },
+    /// Second spike — row's Event_flag_i de-asserts.
+    RowFall { row: u32 },
+    /// Global Event_flag de-asserted (all input events complete);
+    /// the OSG comparison phase starts (§III-C).
+    GlobalFlagDrop,
+    /// A column's comparator toggled: second output spike emitted.
+    CompareFire { col: u32 },
+    /// End-of-operation marker (all output spikes emitted).
+    OpDone,
+}
+
+/// A timestamped event. Ordering: by time, then by sequence number so
+/// simultaneous events process in deterministic insertion order.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub t_ns: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_ns == other.t_ns && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // NaN-free by construction (asserted at push); total order.
+        self.t_ns
+            .partial_cmp(&other.t_ns)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_seq() {
+        let a = Event { t_ns: 1.0, seq: 5, kind: EventKind::OpDone };
+        let b = Event { t_ns: 2.0, seq: 1, kind: EventKind::OpDone };
+        let c = Event { t_ns: 1.0, seq: 6, kind: EventKind::OpDone };
+        assert!(a < b);
+        assert!(a < c);
+        assert!(c < b);
+    }
+
+    #[test]
+    fn equal_iff_time_and_seq_match() {
+        let a = Event { t_ns: 1.0, seq: 1, kind: EventKind::OpDone };
+        let b = Event {
+            t_ns: 1.0,
+            seq: 1,
+            kind: EventKind::RowRise { row: 3 },
+        };
+        assert_eq!(a, b); // kind not part of identity (queue ordering only)
+    }
+}

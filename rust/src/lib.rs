@@ -1,0 +1,31 @@
+//! # spikemram — event-driven spiking CIM macro on SOT-MRAM
+//!
+//! Full-stack reproduction of *"An Event-Driven Spiking Compute-In-Memory
+//! Macro based on SOT-MRAM"* (Yu et al., 2025): a behavioral 28 nm macro
+//! simulator (devices → circuits → macro), an event-driven coordinator
+//! that tiles DNN workloads onto macros, an energy model calibrated to the
+//! paper's aggregates, baseline readout schemes for the comparison tables,
+//! and a PJRT runtime executing the AOT-compiled JAX/Pallas functional
+//! model (HLO text artifacts, python never on the request path).
+//!
+//! Layer map (DESIGN.md §3):
+//! * L3 (this crate): [`coordinator`], [`macro_model`], substrates.
+//! * L2/L1 (build time): `python/compile/{model.py,kernels/}` → `artifacts/`.
+//! * Bridge: [`runtime`] loads the HLO artifacts via the `xla` crate.
+
+pub mod baselines;
+pub mod benchlib;
+pub mod circuit;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod energy;
+pub mod event;
+pub mod macro_model;
+pub mod repro;
+pub mod runtime;
+pub mod snn;
+pub mod testkit;
+pub mod util;
+pub mod xbar;

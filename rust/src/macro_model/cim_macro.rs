@@ -1,0 +1,584 @@
+//! The full CIM macro (DESIGN.md S8): 128×128 crossbar + per-row SMUs +
+//! per-column OSGs, operated event-driven exactly as §III describes:
+//!
+//! 1. dual-spike inputs open per-row Event_flag windows (SMU),
+//! 2. the global Event_flag (OR tree) gates the charge phase,
+//! 3. its falling edge triggers every column's OSG comparison phase,
+//! 4. output spike pairs encode the MACs (Eq. 2).
+//!
+//! The simulation processes the spike events through the real
+//! `EventQueue`/`FlagTree` machinery and solves the analog physics
+//! piecewise-analytically between events — no time-stepping on the hot
+//! path. Energy is accounted from the same event windows.
+
+use crate::circuit::components::{Comparator, CurrentMirror};
+use crate::circuit::osg::{self, OsgParams};
+use crate::coding::DualSpikeCodec;
+use crate::config::MacroConfig;
+use crate::energy::{mvm_energy, EnergyBreakdown, EnergyParams, MvmActivity};
+use crate::event::{EventKind, EventQueue, FlagTree};
+use crate::util::rng::Rng;
+use crate::xbar::Crossbar;
+
+/// Result of one macro MVM.
+#[derive(Debug, Clone)]
+pub struct MacroResult {
+    /// Output inter-spike intervals per column (ns).
+    pub t_out_ns: Vec<f64>,
+    /// Decoded MAC values per column: Σ x_i·G_ij (LSB·µS), from T_out.
+    pub y_mac: Vec<f64>,
+    /// V_charge per column at flag drop (V).
+    pub v_charge: Vec<f64>,
+    /// End-to-end latency: charge phase + slowest column conversion (ns).
+    pub latency_ns: f64,
+    /// Energy breakdown of this op.
+    pub energy: EnergyBreakdown,
+    /// Spike events processed.
+    pub events: u64,
+}
+
+/// One spiking CIM macro instance.
+pub struct CimMacro {
+    pub cfg: MacroConfig,
+    pub xbar: Crossbar,
+    pub codec: DualSpikeCodec,
+    pub energy_params: EnergyParams,
+    osg_params: Vec<OsgParams>,
+    /// All mirror gains are exactly 1.0·k (enables the linear fast path).
+    uniform_gain: bool,
+    /// RNG for cycle-to-cycle noise (None = noiseless reads).
+    rng: Option<Rng>,
+    // --- reusable buffers (hot path, no per-op allocation) ---
+    g_on: Vec<f64>,
+    charge: Vec<f64>,
+    queue: EventQueue,
+}
+
+impl CimMacro {
+    /// Ideal macro (no variation, ideal circuits).
+    pub fn new(cfg: MacroConfig) -> Self {
+        let xbar = Crossbar::new(&cfg);
+        Self::from_parts(cfg, xbar, None)
+    }
+
+    /// Macro with frozen device variation and per-column circuit
+    /// non-idealities sampled from `cfg.nonideal` using `seed`.
+    pub fn with_nonidealities(cfg: MacroConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let xbar = Crossbar::with_variation(&cfg, &mut rng);
+        Self::from_parts(cfg, xbar, Some(rng))
+    }
+
+    fn from_parts(cfg: MacroConfig, xbar: Crossbar, mut rng: Option<Rng>) -> Self {
+        let ni = cfg.nonideal;
+        let osg_params: Vec<OsgParams> = (0..cfg.cols)
+            .map(|_| {
+                let (gain_err, offset) = match rng.as_mut() {
+                    Some(r) if ni.mirror_gain_sigma > 0.0
+                        || ni.comparator_offset_v > 0.0 =>
+                    {
+                        (
+                            1.0 + r.normal_ms(0.0, ni.mirror_gain_sigma),
+                            r.normal_ms(0.0, ni.comparator_offset_v),
+                        )
+                    }
+                    _ => (1.0, 0.0),
+                };
+                OsgParams {
+                    mirror: CurrentMirror {
+                        k: cfg.k_mirror,
+                        gain_err,
+                        r_out_mohm: f64::INFINITY,
+                    },
+                    comparator: Comparator {
+                        offset_v: offset,
+                        delay_ns: ni.comparator_delay_ns,
+                    },
+                    c_rt_ff: cfg.c_rt_ff,
+                    c_com_ff: cfg.c_com_ff,
+                    i_com_ua: cfg.i_com_ua,
+                    v_read: cfg.v_read(),
+                    clamp_cm_enabled: ni.clamp_current_mirror,
+                }
+            })
+            .collect();
+        let codec = DualSpikeCodec::new(cfg.t_bit_ns, cfg.input_bits);
+        let cols = cfg.cols;
+        let rows = cfg.rows;
+        let uniform_gain =
+            osg_params.iter().all(|p| p.mirror.gain_err == 1.0);
+        CimMacro {
+            cfg,
+            xbar,
+            codec,
+            energy_params: EnergyParams::default(),
+            osg_params,
+            uniform_gain,
+            rng,
+            g_on: vec![0.0; cols],
+            charge: vec![0.0; cols],
+            queue: EventQueue::with_capacity(2 * rows + 2),
+        }
+    }
+
+    /// Program weights (row-major 2-bit codes).
+    pub fn program(&mut self, codes: &[u8]) {
+        self.xbar.program_codes(codes);
+    }
+
+    /// Sensing gain α of this macro's OSGs (Eq. 2).
+    pub fn alpha(&self) -> f64 {
+        self.cfg.alpha()
+    }
+
+    /// Event-driven MVM: `x` is one digital input per row (8-bit).
+    ///
+    /// Drives the spike events through the queue + flag tree, integrates
+    /// the charge per column piecewise-analytically, runs every OSG's
+    /// compare phase at the global flag drop, and accounts energy.
+    pub fn mvm(&mut self, x: &[u32]) -> MacroResult {
+        let rows = self.cfg.rows;
+        let cols = self.cfg.cols;
+        assert_eq!(x.len(), rows, "input length");
+        let droop_mode = !self.cfg.nonideal.clamp_current_mirror;
+        let v_read = self.cfg.v_read();
+
+        // --- encode inputs into event windows ---
+        let mut windows_ns = vec![0.0f64; rows];
+        let mut active_rows = 0usize;
+        for (r, &xv) in x.iter().enumerate() {
+            let pair = self.codec.encode(xv, 0.0);
+            if pair.dt_ns > 0.0 {
+                windows_ns[r] = pair.dt_ns;
+                active_rows += 1;
+            }
+        }
+
+        // Per-row conductance rows are cached in the crossbar. Cycle-to-
+        // cycle read noise is sampled once per row *read* (correlated
+        // across the row, as a read-pulse amplitude error) and the same
+        // factor is removed at the row's fall event so charge integration
+        // stays consistent.
+        let sigma_c2c = self.cfg.nonideal.sigma_r_c2c;
+
+        self.g_on.iter_mut().for_each(|g| *g = 0.0);
+        self.charge.iter_mut().for_each(|c| *c = 0.0);
+        let mut col_charge_nsus = vec![0.0f64; cols];
+
+        let mut t_prev = 0.0f64;
+        let mut t_drop = 0.0f64;
+        let mut events: u64 = 0;
+
+        // Fast path (§Perf, EXPERIMENTS.md): with the clamp+current-mirror
+        // and no per-read noise / gain mismatch, the charge integral is a
+        // plain weighted row sum — identical math, evaluated row-major
+        // (cache-friendly, auto-vectorized) instead of event-by-event.
+        // Every non-ideality falls back to the general event loop below.
+        let fast =
+            !droop_mode && sigma_c2c == 0.0 && self.uniform_gain;
+
+        if active_rows == 0 {
+            // All-zero input: no events, no charge (fully event-driven —
+            // the array never turns on).
+        } else if fast {
+            for (r, &w) in windows_ns.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                t_drop = t_drop.max(w);
+                let grow = r * cols;
+                let gs = &self.xbar.conductances()[grow..grow + cols];
+                for (q, &g) in col_charge_nsus.iter_mut().zip(gs) {
+                    *q += w * g;
+                }
+            }
+            let scale = self.cfg.k_mirror * v_read / self.cfg.c_rt_ff;
+            for (c, &q) in self.charge.iter_mut().zip(&col_charge_nsus) {
+                *c = scale * q;
+            }
+            events = 2 * active_rows as u64;
+        } else {
+            // --- general event-driven loop (any non-ideality) ---
+            self.queue.reset();
+            let mut flags = FlagTree::new(rows);
+            let mut row_factor = vec![1.0f64; rows];
+            for (r, &w) in windows_ns.iter().enumerate() {
+                if w > 0.0 {
+                    self.queue
+                        .push(0.0, EventKind::RowRise { row: r as u32 });
+                    self.queue
+                        .push(w, EventKind::RowFall { row: r as u32 });
+                }
+            }
+            while let Some(ev) = self.queue.pop() {
+                events += 1;
+                let dt = ev.t_ns - t_prev;
+                if dt > 0.0 {
+                    // advance analog state over [t_prev, ev.t]
+                    if droop_mode {
+                        for c in 0..cols {
+                            let g = self.g_on[c];
+                            if g > 0.0 {
+                                let tau = self.cfg.c_rt_ff / g;
+                                self.charge[c] = v_read
+                                    + (self.charge[c] - v_read)
+                                        * (-dt / tau).exp();
+                                col_charge_nsus[c] += g * dt;
+                            }
+                        }
+                    } else {
+                        let k = self.cfg.k_mirror;
+                        for c in 0..cols {
+                            let g = self.g_on[c];
+                            if g > 0.0 {
+                                let gain = self.osg_params[c].mirror.gain_err;
+                                self.charge[c] += k * gain * v_read * g * dt
+                                    / self.cfg.c_rt_ff;
+                                col_charge_nsus[c] += g * dt;
+                            }
+                        }
+                    }
+                    t_prev = ev.t_ns;
+                }
+                match ev.kind {
+                    EventKind::RowRise { row } => {
+                        let r = row as usize;
+                        flags.assert_row(r, ev.t_ns);
+                        if sigma_c2c > 0.0 {
+                            let rng = self.rng.get_or_insert_with(|| Rng::new(0));
+                            row_factor[r] = 1.0
+                                / (1.0 + rng.normal_ms(0.0, sigma_c2c)).max(0.5);
+                        }
+                        let f = row_factor[r];
+                        let grow = r * cols;
+                        let gs = &self.xbar.conductances()[grow..grow + cols];
+                        for (c, &g) in gs.iter().enumerate() {
+                            self.g_on[c] += g * f;
+                        }
+                    }
+                    EventKind::RowFall { row } => {
+                        let r = row as usize;
+                        let global_dropped = flags.deassert_row(r, ev.t_ns);
+                        let f = row_factor[r];
+                        let grow = r * cols;
+                        let gs = &self.xbar.conductances()[grow..grow + cols];
+                        for (c, &g) in gs.iter().enumerate() {
+                            self.g_on[c] -= g * f;
+                        }
+                        if global_dropped {
+                            t_drop = ev.t_ns;
+                        }
+                    }
+                    _ => unreachable!("only row events scheduled"),
+                }
+            }
+            // Numerical hygiene: g_on returns to ~0 after all falls.
+            debug_assert!(self.g_on.iter().all(|g| g.abs() < 1e-9));
+        }
+
+        // --- OSG compare phase (triggered by the global flag drop) ---
+        let mut t_out_ns = Vec::with_capacity(cols);
+        let mut v_charge = Vec::with_capacity(cols);
+        let mut y_mac = Vec::with_capacity(cols);
+        let alpha = self.cfg.alpha();
+        let mut max_t_out = 0.0f64;
+        for c in 0..cols {
+            let v = self.charge[c];
+            let t = osg::compare_phase(&self.osg_params[c], v);
+            max_t_out = max_t_out.max(t);
+            t_out_ns.push(t);
+            v_charge.push(v);
+            y_mac.push(self.codec.decode_mac(t, alpha));
+        }
+        events += cols as u64; // compare-fire events
+
+        let activity = MvmActivity {
+            row_windows_ns: windows_ns,
+            col_charge_nsus,
+            v_charge: v_charge.clone(),
+            t_out_ns: t_out_ns.clone(),
+            t_charge_ns: t_drop,
+            events,
+        };
+        let energy = mvm_energy(&self.cfg, &self.energy_params, &activity);
+
+        MacroResult {
+            t_out_ns,
+            y_mac,
+            v_charge,
+            latency_ns: t_drop + max_t_out,
+            energy,
+            events,
+        }
+    }
+
+    /// The exact digital oracle for this macro's programmed weights.
+    pub fn ideal_mvm(&self, x: &[u32]) -> Vec<f64> {
+        self.xbar.ideal_mvm(x)
+    }
+
+    /// Bit-serial MVM (§IV-B extension, `coding::bitserial`): run one
+    /// analog pass per input chunk and recombine digitally. Shorter
+    /// charge windows per pass (lower V_charge ceiling) for `passes`×
+    /// more conversions. Returns (combined MACs, summed result).
+    pub fn mvm_bitserial(
+        &mut self,
+        x: &[u32],
+        plan: crate::coding::BitSerialPlan,
+    ) -> (Vec<f64>, MacroResult) {
+        assert_eq!(plan.total_bits, self.cfg.input_bits);
+        let chunks = plan.split_vector(x);
+        let mut pass_macs = Vec::with_capacity(chunks.len());
+        let mut agg: Option<MacroResult> = None;
+        for chunk in &chunks {
+            let r = self.mvm(chunk);
+            pass_macs.push(r.y_mac.clone());
+            agg = Some(match agg {
+                None => r,
+                Some(mut a) => {
+                    a.energy.add(&r.energy);
+                    a.latency_ns += r.latency_ns; // passes are sequential
+                    a.events += r.events;
+                    for (va, vb) in a.v_charge.iter_mut().zip(&r.v_charge) {
+                        *va = va.max(*vb); // report worst-case headroom
+                    }
+                    a
+                }
+            });
+        }
+        let combined = plan.combine(&pass_macs);
+        let mut result = agg.expect("at least one pass");
+        result.y_mac = combined.clone();
+        (combined, result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NonIdeality;
+
+    fn macro_with_codes(seed: u64) -> (CimMacro, Vec<u8>) {
+        let cfg = MacroConfig::default();
+        let mut m = CimMacro::new(cfg);
+        let mut rng = Rng::new(seed);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        m.program(&codes);
+        (m, codes)
+    }
+
+    #[test]
+    fn ideal_macro_is_bit_true_vs_oracle() {
+        let (mut m, _) = macro_with_codes(1);
+        let mut rng = Rng::new(2);
+        let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let got = m.mvm(&x);
+        let want = m.ideal_mvm(&x);
+        for (g, w) in got.y_mac.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn t_out_satisfies_eq2() {
+        let (mut m, _) = macro_with_codes(3);
+        let mut rng = Rng::new(4);
+        let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let r = m.mvm(&x);
+        let alpha = m.alpha();
+        let want = m.ideal_mvm(&x);
+        for (c, &t) in r.t_out_ns.iter().enumerate() {
+            let mac_nsus = want[c] * m.cfg.t_bit_ns; // Σ T_in·G
+            assert!((t - alpha * mac_nsus).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_input_consumes_no_array_energy() {
+        let (mut m, _) = macro_with_codes(5);
+        let r = m.mvm(&vec![0u32; 128]);
+        assert_eq!(r.energy.array_fj, 0.0);
+        assert_eq!(r.energy.smu_fj, 0.0);
+        assert!(r.y_mac.iter().all(|&y| y == 0.0));
+        assert_eq!(r.latency_ns, 0.0);
+    }
+
+    #[test]
+    fn latency_is_window_plus_compare() {
+        let (mut m, _) = macro_with_codes(7);
+        let mut x = vec![0u32; 128];
+        x[5] = 255; // single active row, window = 51 ns
+        let r = m.mvm(&x);
+        assert!(r.latency_ns > 51.0);
+        let max_t_out = r.t_out_ns.iter().cloned().fold(0.0, f64::max);
+        assert!((r.latency_ns - (51.0 + max_t_out)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn event_count_matches_activity() {
+        let (mut m, _) = macro_with_codes(9);
+        let mut x = vec![0u32; 128];
+        for i in 0..10 {
+            x[i] = 100 + i as u32;
+        }
+        let r = m.mvm(&x);
+        // 10 rises + 10 falls + 128 compare fires.
+        assert_eq!(r.events, 10 + 10 + 128);
+    }
+
+    #[test]
+    fn energy_close_to_nominal_model_on_uniform_input() {
+        let (mut m, _) = macro_with_codes(11);
+        let mut rng = Rng::new(12);
+        let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let r = m.mvm(&x);
+        // Monte-Carlo op ≈ closed-form nominal activity within 10 %.
+        let nominal = crate::energy::mvm_energy(
+            &m.cfg,
+            &m.energy_params,
+            &crate::energy::nominal_activity(&m.cfg),
+        );
+        let ratio = r.energy.total_fj() / nominal.total_fj();
+        assert!((0.9..1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn droop_mode_underestimates_macs() {
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                clamp_current_mirror: false,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut m = CimMacro::new(cfg);
+        let mut rng = Rng::new(13);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        m.program(&codes);
+        let x: Vec<u32> = vec![200; 128];
+        let r = m.mvm(&x);
+        let want = m.ideal_mvm(&x);
+        for (g, w) in r.y_mac.iter().zip(&want) {
+            assert!(*g < *w * 0.95, "droop should lose charge: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn nonidealities_perturb_but_dont_break() {
+        let cfg = MacroConfig {
+            nonideal: NonIdeality::realistic(),
+            ..MacroConfig::default()
+        };
+        let mut m = CimMacro::with_nonidealities(cfg, 99);
+        let mut rng = Rng::new(14);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        m.program(&codes);
+        let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let r = m.mvm(&x);
+        let want = m.ideal_mvm(&x);
+        for (g, w) in r.y_mac.iter().zip(&want) {
+            let rel = (g - w).abs() / w.max(1.0);
+            assert!(rel < 0.10, "rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn bitserial_matches_full_precision_exactly() {
+        let (mut m, _) = macro_with_codes(17);
+        let mut rng = Rng::new(18);
+        let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let full = m.mvm(&x).y_mac;
+        for bits_per_pass in [2u32, 4, 8] {
+            let plan = crate::coding::BitSerialPlan::new(8, bits_per_pass);
+            let (combined, _) = m.mvm_bitserial(&x, plan);
+            for (a, b) in combined.iter().zip(&full) {
+                assert!((a - b).abs() < 1e-6, "{bits_per_pass}b: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitserial_lowers_v_charge_ceiling() {
+        // The point of bit-serial: each pass's V_charge stays far below
+        // the full-window worst case → headroom for larger arrays.
+        let (mut m, _) = macro_with_codes(19);
+        let x: Vec<u32> = vec![255; 128]; // worst case
+        let full = m.mvm(&x);
+        let v_full = full.v_charge.iter().cloned().fold(0.0, f64::max);
+        let plan = crate::coding::BitSerialPlan::new(8, 4);
+        let (_, serial) = m.mvm_bitserial(&x, plan);
+        let v_serial = serial.v_charge.iter().cloned().fold(0.0, f64::max);
+        assert!(v_serial < v_full / 10.0, "{v_serial} vs {v_full}");
+    }
+
+    #[test]
+    fn bitserial_energy_structure() {
+        let (mut m, _) = macro_with_codes(20);
+        let mut rng = Rng::new(21);
+        let x: Vec<u32> = (0..128).map(|_| 16 + rng.below(240) as u32).collect();
+        let full = m.mvm(&x);
+        let plan = crate::coding::BitSerialPlan::new(8, 4);
+        let (_, serial) = m.mvm_bitserial(&x, plan);
+        // 2× the conversions → 2× the events and control energy…
+        assert!(serial.events > full.events);
+        assert!(serial.energy.control_fj > 1.8 * full.energy.control_fj);
+        // …while the analog charge *drops*: the MSB pass applies a
+        // 2^4-shorter window and the scale-up happens digitally, so the
+        // array integrates chunk sums, not the full value.
+        assert!(serial.energy.array_fj < full.energy.array_fj);
+        // Window-proportional biases (mirror/comparator/clamp) shrink with
+        // the shorter per-pass windows — the model finding documented in
+        // DESIGN.md §7: bit-serial trades control energy + error
+        // amplification (next test) for bias energy.
+        assert!(serial.energy.osg_fj < full.energy.osg_fj);
+    }
+
+    #[test]
+    fn bitserial_amplifies_absolute_analog_errors() {
+        // Under realistic comparator offset, the MSB pass's absolute
+        // error is scaled by 2^bits_per_pass at recombination — the
+        // physical reason the paper uses one full-precision window.
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                comparator_offset_v: 0.002,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut m = CimMacro::with_nonidealities(cfg, 31);
+        let mut rng = Rng::new(32);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        m.program(&codes);
+        let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let want = m.ideal_mvm(&x);
+        let err = |y: &[f64]| -> f64 {
+            y.iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f64>()
+                / y.len() as f64
+        };
+        let full_err = err(&m.mvm(&x).y_mac);
+        let (serial_y, _) =
+            m.mvm_bitserial(&x, crate::coding::BitSerialPlan::new(8, 4));
+        let serial_err = err(&serial_y);
+        assert!(
+            serial_err > 5.0 * full_err,
+            "serial {serial_err} vs full {full_err}"
+        );
+    }
+
+    #[test]
+    fn repeated_ops_reuse_buffers_deterministically() {
+        let (mut m, _) = macro_with_codes(15);
+        let x: Vec<u32> = (0..128).map(|i| (i * 2) as u32).collect();
+        let a = m.mvm(&x);
+        let b = m.mvm(&x);
+        assert_eq!(a.y_mac, b.y_mac);
+        assert_eq!(a.events, b.events);
+    }
+}

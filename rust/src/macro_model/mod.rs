@@ -1,0 +1,5 @@
+//! The complete spiking CIM macro (DESIGN.md S8).
+
+pub mod cim_macro;
+
+pub use cim_macro::{CimMacro, MacroResult};

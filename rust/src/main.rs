@@ -1,0 +1,300 @@
+//! `spikemram` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands map 1:1 onto the paper's evaluation artifacts plus a few
+//! operational modes:
+//!
+//! ```text
+//! spikemram table1|table2|fig3c|fig5|fig6a|fig6b|fig7a|fig7b|all
+//! spikemram mvm   [--seed N] [--backend sim|pjrt] [--artifacts DIR]
+//! spikemram snn   [--train N] [--test N] [--epochs N] [--levels device|ideal]
+//! spikemram serve [--requests N] [--workers N] [--batch N] [--backend ...]
+//! spikemram selfcheck [--artifacts DIR]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use spikemram::config::{LevelMap, MacroConfig};
+use spikemram::coordinator::{BackendKind, MacroServer, ServerConfig};
+use spikemram::macro_model::CimMacro;
+use spikemram::repro;
+use spikemram::runtime::{Manifest, Runtime, Value};
+use spikemram::snn;
+use spikemram::util::cli::Args;
+use spikemram::util::rng::Rng;
+
+const USAGE: &str = "\
+spikemram — event-driven spiking CIM macro on SOT-MRAM (paper reproduction)
+
+USAGE: spikemram <subcommand> [options]
+
+experiments (paper artifacts → results/):
+  table1            Table I   key simulation parameters
+  table2            Table II  comparison with other CIM designs
+  fig3c             Fig 3(c)  SMU transient waveforms
+  fig5              Fig 5     column conversion transient
+  fig6a             Fig 6(a)  power breakdown
+  fig6b             Fig 6(b)  sensing energy comparison
+  fig7a             Fig 7(a)  computing linearity
+  fig7b             Fig 7(b)  V_charge droop without clamp+CM
+  all               run everything above
+  ablations         design-knob + Monte-Carlo corner sweep [--mvms N]
+  scaling           EX1 array-size scaling study (parasitics + headroom)
+
+operations:
+  mvm        run one 128×128 macro MVM   [--seed N] [--backend sim|pjrt]
+  snn        train + quantize + run the digits MLP on macros
+             [--train N] [--test N] [--epochs N] [--levels device|ideal]
+  serve      spin up the batching server  [--requests N] [--workers N]
+             [--batch N] [--backend sim|pjrt] [--artifacts DIR]
+  selfcheck  verify PJRT artifacts match the behavioral simulator
+
+common options: --seed N   --artifacts DIR (default: artifacts)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 42);
+    let cfg = MacroConfig::default();
+    let sub = match args.subcommand.as_deref() {
+        Some(s) => s.to_string(),
+        None => {
+            print!("{USAGE}");
+            return Ok(());
+        }
+    };
+    match sub.as_str() {
+        "table1" => println!("{}", repro::table1::table1(&cfg)),
+        "table2" => println!(
+            "{}",
+            repro::table2::render(&repro::table2::run(&cfg, 50, seed))
+        ),
+        "fig3c" => println!("{}", repro::fig3::render(&repro::fig3::run(&cfg, 16))),
+        "fig5" => println!("{}", repro::fig5::render(&repro::fig5::run(&cfg))),
+        "fig6a" => println!(
+            "{}",
+            repro::fig6::render_fig6a(&repro::fig6::run_fig6a(&cfg, 50, seed))
+        ),
+        "fig6b" => println!(
+            "{}",
+            repro::fig6::render_fig6b(&repro::fig6::run_fig6b(&cfg))
+        ),
+        "fig7a" => {
+            let points = args.get_usize("points", 4096);
+            println!(
+                "{}",
+                repro::fig7::render_fig7a(&repro::fig7::run_fig7a(
+                    &cfg, points, seed
+                ))
+            );
+        }
+        "fig7b" => println!(
+            "{}",
+            repro::fig7::render_fig7b(&repro::fig7::run_fig7b(
+                &cfg,
+                repro::fig7::FIG7B_ACTIVE_ROWS
+            ))
+        ),
+        "all" => {
+            let report = repro::run_all(&cfg, seed);
+            let path = repro::report::save("full_report.md", &report);
+            println!("{report}\nsaved to {}", path.display());
+        }
+        "ablations" => {
+            let mvms = args.get_usize("mvms", 4);
+            println!("{}", repro::ablations::run_and_save(seed, mvms));
+        }
+        "scaling" => {
+            println!("{}", repro::scaling::render(&repro::scaling::run(&cfg)));
+        }
+        "mvm" => cmd_mvm(&args, &cfg, seed)?,
+        "snn" => cmd_snn(&args, &cfg, seed)?,
+        "serve" => cmd_serve(&args, &cfg, seed)?,
+        "selfcheck" => cmd_selfcheck(&args, &cfg, seed)?,
+        other => {
+            eprint!("unknown subcommand {other:?}\n\n{USAGE}");
+            bail!("unknown subcommand");
+        }
+    }
+    Ok(())
+}
+
+fn random_codes(cfg: &MacroConfig, rng: &mut Rng) -> Vec<u8> {
+    (0..cfg.rows * cfg.cols).map(|_| rng.below(4) as u8).collect()
+}
+
+fn cmd_mvm(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let codes = random_codes(cfg, &mut rng);
+    let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+    let backend = args.get_str("backend", "sim");
+    match backend.as_str() {
+        "sim" => {
+            let mut m = CimMacro::new(cfg.clone());
+            m.program(&codes);
+            let r = m.mvm(&x);
+            let ideal = m.ideal_mvm(&x);
+            let max_err = r
+                .y_mac
+                .iter()
+                .zip(&ideal)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            println!(
+                "sim MVM: latency {:.1} ns, energy {:.1} pJ, {} events",
+                r.latency_ns,
+                r.energy.total_pj(),
+                r.events
+            );
+            println!(
+                "first 8 MACs: {:?}",
+                &r.y_mac[..8.min(r.y_mac.len())]
+                    .iter()
+                    .map(|v| (v * 10.0).round() / 10.0)
+                    .collect::<Vec<_>>()
+            );
+            println!("max |err| vs digital oracle: {max_err:.2e}");
+            println!(
+                "efficiency: {:.1} TOPS/W",
+                spikemram::energy::tops_per_watt(
+                    cfg.ops_per_mvm(),
+                    r.energy.total_fj()
+                )
+            );
+        }
+        "pjrt" => {
+            let dir = args.get_str("artifacts", "artifacts");
+            let mut rt = Runtime::new(&dir)?;
+            println!("PJRT platform: {}", rt.platform());
+            let exe = rt.load("spiking_mvm_b8_128x128")?;
+            let t_in: Vec<f32> = (0..8 * cfg.rows)
+                .map(|i| x[i % cfg.rows] as f32 * cfg.t_bit_ns as f32)
+                .collect();
+            let codes_i32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+            let out = exe.run_f32(&[
+                Value::f32(t_in, &[8, cfg.rows]),
+                Value::i32(codes_i32, &[cfg.rows, cfg.cols]),
+            ])?;
+            println!("pjrt MVM ok: t_out[0][..8] = {:?}", &out[0][..8]);
+        }
+        other => bail!("unknown backend {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_snn(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
+    let n_train = args.get_usize("train", 400);
+    let n_test = args.get_usize("test", 200);
+    let epochs = args.get_usize("epochs", 6);
+    let levels = match args.get_str("levels", "device").as_str() {
+        "device" => LevelMap::DeviceTrue,
+        "ideal" => LevelMap::IdealLinear,
+        other => bail!("--levels device|ideal, got {other:?}"),
+    };
+    let train_data = snn::Dataset::generate(n_train, seed);
+    let test_data = snn::Dataset::generate(n_test, seed ^ 0xabcd);
+    println!("training float MLP on {n_train} synthetic digits…");
+    let (model, train_acc) = snn::train(&train_data, epochs, seed);
+    let float_acc = snn::accuracy(&model, &test_data);
+    println!("float: train acc {train_acc:.3}, test acc {float_acc:.3}");
+
+    let mut mm = snn::MacroMlp::from_float(&model, &train_data, cfg, levels);
+    let (acc, stats) = mm.evaluate(&test_data);
+    let per_inf = stats.energy.total_pj() / n_test as f64;
+    println!(
+        "macro ({levels:?} levels): test acc {acc:.3}  \
+         energy {per_inf:.1} pJ/inference  latency {:.1} ns/inference  \
+         {:.1} TOPS/W on MACs",
+        stats.latency_ns / n_test as f64,
+        spikemram::energy::tops_per_watt(stats.macs * 2, stats.energy.total_fj())
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
+    let n = args.get_usize("requests", 256);
+    let backend = match args.get_str("backend", "sim").as_str() {
+        "sim" => BackendKind::Sim,
+        "pjrt" => BackendKind::Pjrt {
+            artifacts_dir: args.get_str("artifacts", "artifacts"),
+        },
+        other => bail!("unknown backend {other:?}"),
+    };
+    let scfg = ServerConfig {
+        workers: args.get_usize("workers", 2),
+        max_batch: args.get_usize("batch", 8),
+        backend,
+        ..ServerConfig::default()
+    };
+    let mut rng = Rng::new(seed);
+    let codes = random_codes(cfg, &mut rng);
+    let server = MacroServer::start(cfg.clone(), codes, scfg)?;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let x: Vec<u32> =
+                (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+            server.submit(x)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().context("reply")?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n} requests in {:.1} ms → {:.0} req/s",
+        dt.as_secs_f64() * 1e3,
+        n as f64 / dt.as_secs_f64()
+    );
+    println!("{}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)
+        .context("manifest.json missing — run `make artifacts` first")?;
+    println!("manifest: {} entries", manifest.entries.len());
+    manifest.check_args(
+        "spiking_mvm_b8_128x128",
+        &[vec![8, cfg.rows], vec![cfg.rows, cfg.cols]],
+    )?;
+
+    let mut rt = Runtime::new(&dir)?;
+    let exe = rt.load("spiking_mvm_b8_128x128")?;
+    let mut rng = Rng::new(seed);
+    let codes = random_codes(cfg, &mut rng);
+    let mut m = CimMacro::new(cfg.clone());
+    m.program(&codes);
+
+    let xs: Vec<Vec<u32>> = (0..8)
+        .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+        .collect();
+    let mut t_in = vec![0.0f32; 8 * cfg.rows];
+    for (b, x) in xs.iter().enumerate() {
+        for (r, &v) in x.iter().enumerate() {
+            t_in[b * cfg.rows + r] = v as f32 * cfg.t_bit_ns as f32;
+        }
+    }
+    let codes_i32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+    let out = exe.run_f32(&[
+        Value::f32(t_in, &[8, cfg.rows]),
+        Value::i32(codes_i32, &[cfg.rows, cfg.cols]),
+    ])?;
+    let mut max_rel = 0.0f64;
+    for (b, x) in xs.iter().enumerate() {
+        let r = m.mvm(x);
+        for c in 0..cfg.cols {
+            let pjrt = out[0][b * cfg.cols + c] as f64;
+            let sim = r.t_out_ns[c];
+            let rel = (pjrt - sim).abs() / sim.abs().max(1e-6);
+            max_rel = max_rel.max(rel);
+        }
+    }
+    println!("sim vs pjrt max rel err over 8×128 outputs: {max_rel:.3e}");
+    if max_rel > 1e-4 {
+        bail!("selfcheck FAILED: backends disagree");
+    }
+    println!("selfcheck OK — behavioral sim and AOT artifact agree");
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! Experiments E4/E5 — Fig 6(a) power breakdown and Fig 6(b) sensing
+//! energy comparison.
+//!
+//! 6(a): Monte-Carlo over uniform-random 8-bit inputs on the full macro
+//! simulator, averaging the per-component energy ledger — the paper
+//! states OSG = 72.6 % of total.
+//!
+//! 6(b): every readout scheme's per-conversion energy at 8 bits plus a
+//! precision sweep (4..10 bits) showing the scaling trends the models
+//! generate beyond the calibrated anchor point.
+
+use crate::baselines::{
+    anchors, CogReadout, OsgReadout, Readout, SarAdc, Tdc,
+};
+use crate::config::MacroConfig;
+use crate::energy::EnergyBreakdown;
+use crate::macro_model::CimMacro;
+use crate::util::rng::Rng;
+
+use super::report::{self, Table};
+
+/// Fig 6(a) result.
+#[derive(Debug, Clone)]
+pub struct Fig6a {
+    pub mean_energy: EnergyBreakdown,
+    /// shares: [array, smu, osg, control]
+    pub shares: [f64; 4],
+    pub tops_per_watt: f64,
+    pub mvms: usize,
+}
+
+pub fn run_fig6a(cfg: &MacroConfig, mvms: usize, seed: u64) -> Fig6a {
+    let mut m = CimMacro::new(cfg.clone());
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    m.program(&codes);
+    let mut total = EnergyBreakdown::default();
+    for _ in 0..mvms {
+        let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+        total.add(&m.mvm(&x).energy);
+    }
+    let mean = total.scaled(1.0 / mvms as f64);
+    let tops = crate::energy::tops_per_watt(cfg.ops_per_mvm(), mean.total_fj());
+    Fig6a {
+        shares: mean.shares(),
+        mean_energy: mean,
+        tops_per_watt: tops,
+        mvms,
+    }
+}
+
+pub fn render_fig6a(f: &Fig6a) -> String {
+    let mut t = Table::new(
+        "Fig 6(a) — power breakdown (Monte-Carlo, uniform 8-bit inputs)",
+        &["Component", "Energy / MVM", "Share", "Paper"],
+    );
+    let names = ["Array read", "SMU", "OSG", "Control"];
+    let paper = ["(small)", "—", "72.6 %", "—"];
+    let vals = [
+        f.mean_energy.array_fj,
+        f.mean_energy.smu_fj,
+        f.mean_energy.osg_fj,
+        f.mean_energy.control_fj,
+    ];
+    for i in 0..4 {
+        t.row(&[
+            names[i].into(),
+            format!("{:.1} pJ", vals[i] / 1000.0),
+            format!("{:.1} %", f.shares[i] * 100.0),
+            paper[i].into(),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "\ntotal {:.1} pJ/MVM → {:.1} TOPS/W (paper: 243.6) over {} MVMs\n",
+        f.mean_energy.total_pj(),
+        f.tops_per_watt,
+        f.mvms
+    ));
+    s
+}
+
+/// Fig 6(b) result: per-scheme conversion energy + reductions.
+#[derive(Debug, Clone)]
+pub struct Fig6b {
+    /// (name, energy fJ at 8 b, our reduction vs it, paper's reduction)
+    pub rows: Vec<(String, f64, f64, Option<f64>)>,
+    pub sweep_csv: String,
+}
+
+pub fn run_fig6b(cfg: &MacroConfig) -> Fig6b {
+    let ours = OsgReadout::new(cfg.clone());
+    let adc = SarAdc::calibrated(8, anchors::ADC_DAC24_FJ);
+    let cog = CogReadout::calibrated(8, anchors::SPIKE_DAC20_FJ);
+    let tdc = Tdc::calibrated(8, anchors::TDC_NATURE22_FJ);
+
+    let e_ours = ours.energy_per_conversion_fj(8);
+    let schemes: Vec<(&dyn Readout, Option<f64>)> = vec![
+        (&adc, Some(0.966)),
+        (&cog, Some(0.928)),
+        (&tdc, Some(0.712)),
+        (&ours, None),
+    ];
+    let rows = schemes
+        .iter()
+        .map(|(s, paper)| {
+            let e = s.energy_per_conversion_fj(8);
+            (s.name().to_string(), e, 1.0 - e_ours / e, *paper)
+        })
+        .collect();
+
+    // Precision sweep 4..=10 bits (model-generated trends).
+    let bits: Vec<f64> = (4..=10).map(|b| b as f64).collect();
+    let col = |s: &dyn Readout| -> Vec<f64> {
+        (4..=10u32)
+            .map(|b| s.energy_per_conversion_fj(b))
+            .collect()
+    };
+    let csv = report::xy_csv(&[
+        ("bits", &bits),
+        ("osg_fj", &col(&ours)),
+        ("adc_fj", &col(&adc)),
+        ("cog_fj", &col(&cog)),
+        ("tdc_fj", &col(&tdc)),
+    ]);
+    let path = report::save("fig6b_sensing_energy_sweep.csv", &csv);
+    Fig6b {
+        rows,
+        sweep_csv: path.display().to_string(),
+    }
+}
+
+pub fn render_fig6b(f: &Fig6b) -> String {
+    let mut t = Table::new(
+        "Fig 6(b) — sensing/readout energy per 8-bit conversion",
+        &["Scheme", "Energy", "Our reduction", "Paper"],
+    );
+    for (name, e, red, paper) in &f.rows {
+        t.row(&[
+            name.clone(),
+            format!("{:.2} pJ", e / 1000.0),
+            if *red > 0.0 {
+                format!("{:.1} %", red * 100.0)
+            } else {
+                "—".into()
+            },
+            paper
+                .map(|p| format!("{:.1} %", p * 100.0))
+                .unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!("\nprecision sweep: {}\n", f.sweep_csv));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_reproduces_osg_share_and_peak_efficiency() {
+        let f = run_fig6a(&MacroConfig::default(), 20, 61);
+        assert!(
+            (f.shares[2] - 0.726).abs() < 0.03,
+            "OSG share {}",
+            f.shares[2]
+        );
+        assert!(
+            (f.tops_per_watt - 243.6).abs() / 243.6 < 0.05,
+            "{} TOPS/W",
+            f.tops_per_watt
+        );
+    }
+
+    #[test]
+    fn fig6b_reproduces_reductions() {
+        std::env::set_var("SPIKEMRAM_RESULTS", "/tmp/spikemram_test_results");
+        let f = run_fig6b(&MacroConfig::default());
+        let by_name = |n: &str| {
+            f.rows
+                .iter()
+                .find(|(name, ..)| name.contains(n))
+                .unwrap()
+                .2
+        };
+        assert!((by_name("ADC") - 0.966).abs() < 0.01);
+        assert!((by_name("COG") - 0.928).abs() < 0.01);
+        assert!((by_name("TDC") - 0.712).abs() < 0.02);
+    }
+
+    #[test]
+    fn render_includes_paper_column() {
+        std::env::set_var("SPIKEMRAM_RESULTS", "/tmp/spikemram_test_results");
+        let s = render_fig6b(&run_fig6b(&MacroConfig::default()));
+        assert!(s.contains("96.6 %"));
+        assert!(s.contains("OSG (this work)"));
+    }
+}

@@ -1,0 +1,207 @@
+//! Experiments E6/E7 — Fig 7(a) computing linearity and Fig 7(b) V_charge
+//! droop without the clamp + current mirror.
+//!
+//! 7(a): uniform random (8-bit input × 2-bit weight) stimulus over many
+//! columns; plot T_out against Σ T_in·G and fit a line — the paper shows
+//! "excellent linearity"; we report R² and max deviation.
+//!
+//! 7(b): charge one column with and without the Clamping&CM circuit and
+//! measure the droop at 5 ns and 10 ns (paper: 19.3 % and 39.6 %).
+
+use crate::circuit::osg::{self, OsgParams};
+use crate::config::{MacroConfig, NonIdeality};
+use crate::macro_model::CimMacro;
+use crate::util::rng::Rng;
+use crate::util::stats::{line_fit, LineFit};
+
+use super::report;
+
+/// Fig 7(a) result.
+#[derive(Debug, Clone)]
+pub struct Fig7a {
+    pub points: usize,
+    pub fit: LineFit,
+    /// Expected slope = α (Eq. 2).
+    pub alpha: f64,
+    pub csv_path: String,
+}
+
+pub fn run_fig7a(cfg: &MacroConfig, n_points: usize, seed: u64) -> Fig7a {
+    let mut m = CimMacro::new(cfg.clone());
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::with_capacity(n_points);
+    let mut ys = Vec::with_capacity(n_points);
+    while xs.len() < n_points {
+        // Fresh random weights periodically to cover the weight space.
+        let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+            .map(|_| rng.below(4) as u8)
+            .collect();
+        m.program(&codes);
+        let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+        let r = m.mvm(&x);
+        let ideal = m.ideal_mvm(&x);
+        for c in 0..cfg.cols {
+            if xs.len() >= n_points {
+                break;
+            }
+            xs.push(ideal[c] * cfg.t_bit_ns); // Σ T_in·G  (ns·µS)
+            ys.push(r.t_out_ns[c]);
+        }
+    }
+    let fit = line_fit(&xs, &ys);
+    let csv = report::xy_csv(&[("sum_tin_g_nsus", &xs), ("t_out_ns", &ys)]);
+    let path = report::save("fig7a_linearity.csv", &csv);
+    Fig7a {
+        points: n_points,
+        fit,
+        alpha: cfg.alpha(),
+        csv_path: path.display().to_string(),
+    }
+}
+
+pub fn render_fig7a(f: &Fig7a) -> String {
+    format!(
+        "Fig 7(a) — T_out vs Σ T_in·G ({} points)\n\
+         slope: {:.6} ns/(µS·ns)  (α = {:.6})\n\
+         intercept: {:.3e} ns\n\
+         R² = {:.9}   rmse = {:.3e} ns   max|err| = {:.3e} ns\n\
+         points: {}\n",
+        f.points, f.fit.b, f.alpha, f.fit.a, f.fit.r2, f.fit.rmse,
+        f.fit.max_abs_err, f.csv_path
+    )
+}
+
+/// Fig 7(b) result.
+#[derive(Debug, Clone)]
+pub struct Fig7b {
+    pub active_rows: usize,
+    pub droop_5ns: f64,
+    pub droop_10ns: f64,
+    pub csv_path: String,
+}
+
+/// Stress column: `active_rows` rows at max conductance held open ≥10 ns.
+pub fn run_fig7b(cfg: &MacroConfig, active_rows: usize) -> Fig7b {
+    let g_max = cfg.level_map.levels()[3];
+    let windows: Vec<(f64, f64)> =
+        (0..active_rows).map(|_| (12.0, g_max)).collect();
+    let ideal = OsgParams::ideal(
+        cfg.v_read(),
+        cfg.c_rt_ff,
+        cfg.c_com_ff,
+        cfg.i_com_ua,
+    );
+    let mut droop = ideal;
+    droop.clamp_cm_enabled = false;
+
+    let dt = 0.002;
+    let wf_i = osg::waveforms(&ideal, &windows, 12.0, dt);
+    let wf_d = osg::waveforms(&droop, &windows, 12.0, dt);
+    let vi = wf_i.get("v_charge").unwrap();
+    let vd = wf_d.get("v_charge").unwrap();
+    let droop_at = |t: f64| 1.0 - vd.at(t) / vi.at(t);
+
+    // Merge both runs into one CSV (t, with mirror, without).
+    let ts: Vec<f64> = (0..=(12.0 / 0.05) as usize)
+        .map(|i| i as f64 * 0.05)
+        .collect();
+    let with: Vec<f64> = ts.iter().map(|&t| vi.at(t)).collect();
+    let without: Vec<f64> = ts.iter().map(|&t| vd.at(t)).collect();
+    let csv = report::xy_csv(&[
+        ("t_ns", &ts),
+        ("v_charge_with_cm", &with),
+        ("v_charge_without_cm", &without),
+    ]);
+    let path = report::save("fig7b_vcharge_droop.csv", &csv);
+
+    Fig7b {
+        active_rows,
+        droop_5ns: droop_at(5.0),
+        droop_10ns: droop_at(10.0),
+        csv_path: path.display().to_string(),
+    }
+}
+
+/// Paper-matched stress level (DESIGN.md §5 E7): the droop magnitude
+/// depends on the column load G_tot·t/C_rt; 60 max-G rows lands in the
+/// paper's regime (≈20 %@5 ns, ≈37 %@10 ns vs paper's 19.3 %/39.6 %).
+pub const FIG7B_ACTIVE_ROWS: usize = 60;
+
+pub fn render_fig7b(f: &Fig7b) -> String {
+    format!(
+        "Fig 7(b) — V_charge droop without Clamping&CM ({} rows @ G_max)\n\
+         droop @ 5 ns:  {:.1} %   (paper: 19.3 %)\n\
+         droop @ 10 ns: {:.1} %   (paper: 39.6 %)\n\
+         curves: {}\n",
+        f.active_rows,
+        f.droop_5ns * 100.0,
+        f.droop_10ns * 100.0,
+        f.csv_path
+    )
+}
+
+/// Ablation: end-to-end MAC error caused by running the macro in droop
+/// mode (quantifies why the mirror matters for accuracy, §IV-B).
+pub fn droop_mac_error(cfg: &MacroConfig, seed: u64) -> f64 {
+    let droop_cfg = MacroConfig {
+        nonideal: NonIdeality {
+            clamp_current_mirror: false,
+            ..NonIdeality::ideal()
+        },
+        ..cfg.clone()
+    };
+    let mut m = CimMacro::new(droop_cfg);
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    m.program(&codes);
+    let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+    let r = m.mvm(&x);
+    let ideal = m.ideal_mvm(&x);
+    let mut rel = 0.0f64;
+    for (g, w) in r.y_mac.iter().zip(&ideal) {
+        rel += (g - w).abs() / w.max(1.0);
+    }
+    rel / cfg.cols as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7a_linearity_is_excellent() {
+        std::env::set_var("SPIKEMRAM_RESULTS", "/tmp/spikemram_test_results");
+        let cfg = MacroConfig::default();
+        let f = run_fig7a(&cfg, 512, 71);
+        assert!(f.fit.r2 > 0.999999, "R² {}", f.fit.r2);
+        assert!((f.fit.b - f.alpha).abs() / f.alpha < 1e-6);
+        assert!(f.fit.a.abs() < 1e-6);
+    }
+
+    #[test]
+    fn fig7b_droop_matches_paper_regime() {
+        std::env::set_var("SPIKEMRAM_RESULTS", "/tmp/spikemram_test_results");
+        let f = run_fig7b(&MacroConfig::default(), FIG7B_ACTIVE_ROWS);
+        // Paper: 19.3 % @5 ns, 39.6 % @10 ns. A single-RC behavioral model
+        // reproduces the shape (concave, roughly doubling): accept ±6 pts.
+        assert!(
+            (f.droop_5ns - 0.193).abs() < 0.06,
+            "droop@5ns {}",
+            f.droop_5ns
+        );
+        assert!(
+            (f.droop_10ns - 0.396).abs() < 0.06,
+            "droop@10ns {}",
+            f.droop_10ns
+        );
+        assert!(f.droop_10ns > f.droop_5ns);
+    }
+
+    #[test]
+    fn droop_mode_corrupts_macs_measurably() {
+        let err = droop_mac_error(&MacroConfig::default(), 72);
+        assert!(err > 0.05, "mean rel err {err}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Figure/table regeneration harness (DESIGN.md S14, §5): one module per
+//! experiment in the paper's evaluation, each producing a structured
+//! result, a rendered text block, and CSVs under `results/`.
+//!
+//! | experiment | module | paper artifact |
+//! |---|---|---|
+//! | E1 | [`table1`] | Table I |
+//! | E2 | [`fig3`] | Fig 3(c) SMU transient |
+//! | E3 | [`fig5`] | Fig 5 conversion transient |
+//! | E4 | [`fig6::run_fig6a`] | Fig 6(a) power breakdown |
+//! | E5 | [`fig6::run_fig6b`] | Fig 6(b) sensing energy |
+//! | E6 | [`fig7::run_fig7a`] | Fig 7(a) linearity |
+//! | E7 | [`fig7::run_fig7b`] | Fig 7(b) droop |
+//! | E8 | [`table2`] | Table II comparison |
+//!
+//! E9 (end-to-end SNN) lives in `examples/snn_inference.rs`.
+
+pub mod ablations;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod report;
+pub mod scaling;
+pub mod table1;
+pub mod table2;
+
+use crate::config::MacroConfig;
+
+/// Run every experiment and return the combined report text.
+pub fn run_all(cfg: &MacroConfig, seed: u64) -> String {
+    let mut out = String::new();
+    out.push_str(&table1::table1(cfg));
+    out.push('\n');
+    out.push_str(&fig3::render(&fig3::run(cfg, 16)));
+    out.push('\n');
+    out.push_str(&fig5::render(&fig5::run(cfg)));
+    out.push('\n');
+    out.push_str(&fig6::render_fig6a(&fig6::run_fig6a(cfg, 50, seed)));
+    out.push('\n');
+    out.push_str(&fig6::render_fig6b(&fig6::run_fig6b(cfg)));
+    out.push('\n');
+    out.push_str(&fig7::render_fig7a(&fig7::run_fig7a(cfg, 2048, seed)));
+    out.push('\n');
+    out.push_str(&fig7::render_fig7b(&fig7::run_fig7b(
+        cfg,
+        fig7::FIG7B_ACTIVE_ROWS,
+    )));
+    out.push('\n');
+    out.push_str(&table2::render(&table2::run(cfg, 50, seed)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_all_produces_every_section() {
+        std::env::set_var("SPIKEMRAM_RESULTS", "/tmp/spikemram_test_results");
+        let s = run_all(&MacroConfig::default(), 99);
+        for needle in [
+            "Table I", "Fig 3(c)", "Fig 5", "Fig 6(a)", "Fig 6(b)",
+            "Fig 7(a)", "Fig 7(b)", "Table II",
+        ] {
+            assert!(s.contains(needle), "missing {needle}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Output helpers for the repro harness: results directory management,
+//! CSV/markdown writers, and a tiny fixed-width table builder shared by
+//! all experiments.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Resolve the results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("SPIKEMRAM_RESULTS")
+        .unwrap_or_else(|_| "results".to_string());
+    let p = PathBuf::from(dir);
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Save text into `results/<name>` and return the full path.
+pub fn save(name: &str, contents: &str) -> PathBuf {
+    let path = results_dir().join(name);
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(&path, contents)
+        .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    path
+}
+
+/// Load a previously saved result (tests use this).
+pub fn load(name: &str) -> Option<String> {
+    std::fs::read_to_string(results_dir().join(name)).ok()
+}
+
+/// Does a result exist?
+pub fn exists(name: &str) -> bool {
+    results_dir().join(name).exists()
+}
+
+/// Fixed-width text table (markdown-flavored).
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                let _ = write!(line, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+}
+
+/// Render xy-series as CSV.
+pub fn xy_csv(cols: &[(&str, &[f64])]) -> String {
+    assert!(!cols.is_empty());
+    let n = cols[0].1.len();
+    assert!(cols.iter().all(|(_, v)| v.len() == n), "ragged columns");
+    let mut out = cols
+        .iter()
+        .map(|(name, _)| *name)
+        .collect::<Vec<_>>()
+        .join(",");
+    out.push('\n');
+    for i in 0..n {
+        let row = cols
+            .iter()
+            .map(|(_, v)| format!("{:.9}", v[i]))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push_str(&row);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| a | bb |"));
+        assert!(s.contains("| 1 | 2  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        Table::new("x", &["a"]).row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn xy_csv_shape() {
+        let csv = xy_csv(&[("t", &[0.0, 1.0]), ("v", &[2.0, 3.0])]);
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("t,v\n"));
+    }
+
+    #[test]
+    fn save_and_load_roundtrip() {
+        std::env::set_var("SPIKEMRAM_RESULTS", "/tmp/spikemram_test_results");
+        save("unit/roundtrip.txt", "hello");
+        assert_eq!(load("unit/roundtrip.txt").unwrap(), "hello");
+        assert!(exists("unit/roundtrip.txt"));
+    }
+}

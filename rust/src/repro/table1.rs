@@ -1,0 +1,95 @@
+//! Experiment E1 — Table I: key parameters of the simulation.
+
+use crate::config::MacroConfig;
+
+use super::report::Table;
+
+/// Render Table I from a config (checks nothing; the config tests pin the
+/// values — this is the human-readable artifact).
+pub fn table1(cfg: &MacroConfig) -> String {
+    let mut t = Table::new(
+        "Table I — Key parameters of simulation",
+        &["Parameter", "Value", "Source"],
+    );
+    t.row(&[
+        "Cell structure".into(),
+        format!("3T-2J ({} states/cell)", cfg.states_per_cell()),
+        "paper Table I".into(),
+    ]);
+    t.row(&[
+        "Supply voltage".into(),
+        format!("{:.1} V", cfg.vdd),
+        "paper Table I".into(),
+    ]);
+    t.row(&[
+        "R_LRS of MTJ".into(),
+        format!("{:.0} MΩ", cfg.r_lrs_mohm),
+        "paper Table I [25]".into(),
+    ]);
+    t.row(&[
+        "TMR".into(),
+        format!("{:.0} %", cfg.tmr * 100.0),
+        "paper Table I".into(),
+    ]);
+    t.row(&[
+        "Array size".into(),
+        format!("{}×{}", cfg.rows, cfg.cols),
+        "paper §IV".into(),
+    ]);
+    t.row(&[
+        "Interval per bit".into(),
+        format!("{:.1} ns", cfg.t_bit_ns),
+        "paper §IV".into(),
+    ]);
+    t.row(&[
+        "C_rt / C_com".into(),
+        format!("{:.0} fF / {:.0} fF", cfg.c_rt_ff, cfg.c_com_ff),
+        "paper §IV".into(),
+    ]);
+    t.row(&[
+        "V_in,clamp / V_clamp".into(),
+        format!(
+            "{:.0} mV / {:.0} mV",
+            cfg.v_in_clamp * 1000.0,
+            cfg.v_clamp * 1000.0
+        ),
+        "paper §IV".into(),
+    ]);
+    t.row(&[
+        "V_read".into(),
+        format!("{:.0} mV", cfg.v_read() * 1000.0),
+        "derived".into(),
+    ]);
+    t.row(&[
+        "I_com".into(),
+        format!("{:.1} µA", cfg.i_com_ua),
+        "sized (DESIGN §6)".into(),
+    ]);
+    t.row(&[
+        "α (Eq. 2)".into(),
+        format!("{:.4} ns/(µS·ns)", cfg.alpha()),
+        "derived".into(),
+    ]);
+    t.row(&[
+        "Input / weight precision".into(),
+        format!("{} b / {} b", cfg.input_bits, cfg.weight_bits),
+        "paper §IV".into(),
+    ]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_paper_values() {
+        let s = table1(&MacroConfig::default());
+        for needle in [
+            "3T-2J", "1.1 V", "1 MΩ", "100 %", "128×128", "0.2 ns",
+            "200 fF", "300 mV / 400 mV", "100 mV",
+        ] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
+    }
+}

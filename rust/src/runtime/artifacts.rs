@@ -1,0 +1,173 @@
+//! Artifact manifest: the shape/dtype contract between `aot.py` and the
+//! Rust runtime, parsed from `artifacts/manifest.json`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One lowered entry's argument spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-lowered entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub sha256: String,
+    pub args: Vec<ArgSpec>,
+    /// OSG sensing gain the artifact was lowered with.
+    pub alpha: f64,
+    pub t_bit_ns: f64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = artifacts_dir.as_ref().join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let root = json::parse(src).map_err(|e| anyhow::anyhow!(e))?;
+        let obj = match &root {
+            Json::Obj(o) => o,
+            _ => bail!("manifest root must be an object"),
+        };
+        let mut entries = Vec::new();
+        for (name, v) in obj {
+            let args = v
+                .get("args")
+                .and_then(Json::as_arr)
+                .context("entry.args")?
+                .iter()
+                .map(|a| {
+                    let shape = a
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("arg.shape")?
+                        .iter()
+                        .map(|d| d.as_f64().context("dim").map(|x| x as usize))
+                        .collect::<Result<Vec<_>>>()?;
+                    let dtype = a
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .context("arg.dtype")?
+                        .to_string();
+                    Ok(ArgSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ArtifactEntry {
+                name: name.clone(),
+                file: v
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .context("entry.file")?
+                    .to_string(),
+                sha256: v
+                    .get("sha256")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                args,
+                alpha: v.get("alpha").and_then(Json::as_f64).unwrap_or(0.0),
+                t_bit_ns: v
+                    .get("t_bit_ns")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.2),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Check an intended call's shapes against the manifest contract.
+    pub fn check_args(&self, name: &str, shapes: &[Vec<usize>]) -> Result<()> {
+        let e = self.get(name).with_context(|| format!("no entry {name}"))?;
+        if e.args.len() != shapes.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                e.args.len(),
+                shapes.len()
+            );
+        }
+        for (i, (spec, got)) in e.args.iter().zip(shapes).enumerate() {
+            if &spec.shape != got {
+                bail!(
+                    "{name} arg {i}: expected shape {:?}, got {:?}",
+                    spec.shape,
+                    got
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"{
+      "spiking_mvm_b8_128x128": {
+        "file": "spiking_mvm_b8_128x128.hlo.txt",
+        "sha256": "deadbeef",
+        "args": [
+          {"shape": [8, 128], "dtype": "float32"},
+          {"shape": [128, 128], "dtype": "int32"}
+        ],
+        "alpha": 0.05,
+        "t_bit_ns": 0.2
+      }
+    }"#;
+
+    #[test]
+    fn parses_entry() {
+        let m = Manifest::parse(SRC).unwrap();
+        let e = m.get("spiking_mvm_b8_128x128").unwrap();
+        assert_eq!(e.args.len(), 2);
+        assert_eq!(e.args[0].shape, vec![8, 128]);
+        assert_eq!(e.args[1].dtype, "int32");
+        assert!((e.alpha - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn check_args_accepts_matching_shapes() {
+        let m = Manifest::parse(SRC).unwrap();
+        m.check_args(
+            "spiking_mvm_b8_128x128",
+            &[vec![8, 128], vec![128, 128]],
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn check_args_rejects_wrong_shape_and_arity() {
+        let m = Manifest::parse(SRC).unwrap();
+        assert!(m
+            .check_args("spiking_mvm_b8_128x128", &[vec![8, 128]])
+            .is_err());
+        assert!(m
+            .check_args(
+                "spiking_mvm_b8_128x128",
+                &[vec![8, 127], vec![128, 128]]
+            )
+            .is_err());
+        assert!(m.check_args("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime bridge (DESIGN.md S12): `artifacts/*.hlo.txt` →
+//! compile-once → execute from the L3 hot path.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use pjrt::{Executable, Runtime, Value};

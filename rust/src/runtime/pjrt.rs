@@ -1,0 +1,159 @@
+//! PJRT runtime (DESIGN.md S12): load AOT-compiled HLO **text** artifacts
+//! (emitted once by `python/compile/aot.py`) and execute them on the CPU
+//! PJRT client via the `xla` crate. This is the fast functional backend of
+//! the coordinator; python never runs here.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO executable plus its argument contract.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Argument/output values exchanged with an executable.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::F32 {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::I32 {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Value::I32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Value::F32 { data, .. } => data,
+            _ => panic!("expected f32 value"),
+        }
+    }
+}
+
+impl Executable {
+    /// Execute with positional args; returns the flattened f32 outputs of
+    /// the result tuple (aot.py lowers every entry with return_tuple=True).
+    pub fn run_f32(&self, args: &[Value]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .with_context(|| format!("{}: non-f32 output", self.name))
+            })
+            .collect()
+    }
+}
+
+/// PJRT CPU runtime owning the client and a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, std::sync::Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf-8")?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = std::sync::Arc::new(Executable {
+            name: name.to_string(),
+            exe,
+        });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution tests live in rust/tests/pjrt_roundtrip.rs (they need the
+    // artifacts). Here only the Value plumbing, which is pure.
+
+    #[test]
+    fn value_shape_product_checked() {
+        let v = Value::f32(vec![0.0; 6], &[2, 3]);
+        assert_eq!(v.as_f32().len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn value_shape_mismatch_panics() {
+        let _ = Value::f32(vec![0.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected f32")]
+    fn as_f32_on_i32_panics() {
+        let v = Value::i32(vec![1, 2], &[2]);
+        let _ = v.as_f32();
+    }
+}

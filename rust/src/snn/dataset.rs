@@ -1,0 +1,202 @@
+//! Synthetic digits dataset (DESIGN.md S13): 16×16 grayscale renderings
+//! of the ten digits built from line-segment strokes, with random shift,
+//! per-pixel noise and contrast jitter. Stands in for the MNIST-class
+//! workload the paper's "neural network accelerator" framing implies
+//! (substitution table, DESIGN.md §2) while keeping the repo dependency-
+//! and download-free.
+
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 16;
+pub const PIXELS: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// Seven-segment-style strokes per digit on a 16×16 canvas.
+/// Segments: (x0, y0, x1, y1) in canvas coordinates 2..=13.
+fn strokes(digit: usize) -> &'static [(i32, i32, i32, i32)] {
+    const TOP: (i32, i32, i32, i32) = (4, 2, 11, 2);
+    const MID: (i32, i32, i32, i32) = (4, 7, 11, 7);
+    const BOT: (i32, i32, i32, i32) = (4, 13, 11, 13);
+    const TL: (i32, i32, i32, i32) = (4, 2, 4, 7);
+    const TR: (i32, i32, i32, i32) = (11, 2, 11, 7);
+    const BL: (i32, i32, i32, i32) = (4, 7, 4, 13);
+    const BR: (i32, i32, i32, i32) = (11, 7, 11, 13);
+    match digit {
+        0 => &[TOP, BOT, TL, TR, BL, BR],
+        1 => &[TR, BR],
+        2 => &[TOP, TR, MID, BL, BOT],
+        3 => &[TOP, TR, MID, BR, BOT],
+        4 => &[TL, TR, MID, BR],
+        5 => &[TOP, TL, MID, BR, BOT],
+        6 => &[TOP, TL, MID, BL, BR, BOT],
+        7 => &[TOP, TR, BR],
+        8 => &[TOP, MID, BOT, TL, TR, BL, BR],
+        9 => &[TOP, MID, BOT, TL, TR, BR],
+        _ => panic!("digit 0..=9"),
+    }
+}
+
+fn draw_segment(img: &mut [f32], seg: (i32, i32, i32, i32), dx: i32, dy: i32) {
+    let (x0, y0, x1, y1) = seg;
+    let steps = (x1 - x0).abs().max((y1 - y0).abs()).max(1);
+    for s in 0..=steps {
+        let x = x0 + (x1 - x0) * s / steps + dx;
+        let y = y0 + (y1 - y0) * s / steps + dy;
+        // 2-pixel-thick stroke
+        for (ox, oy) in [(0, 0), (1, 0), (0, 1)] {
+            let (px, py) = (x + ox, y + oy);
+            if (0..SIDE as i32).contains(&px) && (0..SIDE as i32).contains(&py) {
+                img[py as usize * SIDE + px as usize] = 1.0;
+            }
+        }
+    }
+}
+
+/// One rendered example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    /// 8-bit pixels, row-major 16×16.
+    pub pixels: Vec<u8>,
+    pub label: usize,
+}
+
+/// Render a digit with the given jitter controls.
+pub fn render(digit: usize, rng: &mut Rng) -> Example {
+    let mut img = vec![0.0f32; PIXELS];
+    let dx = rng.int_range(-2, 2) as i32;
+    let dy = rng.int_range(-1, 1) as i32;
+    for &seg in strokes(digit) {
+        draw_segment(&mut img, seg, dx, dy);
+    }
+    let contrast = rng.uniform(0.7, 1.0);
+    let noise_sd = 0.08;
+    let pixels = img
+        .iter()
+        .map(|&v| {
+            let x = v as f64 * contrast + rng.normal_ms(0.0, noise_sd);
+            (x.clamp(0.0, 1.0) * 255.0).round() as u8
+        })
+        .collect();
+    Example {
+        pixels,
+        label: digit,
+    }
+}
+
+/// A generated dataset split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub examples: Vec<Example>,
+}
+
+impl Dataset {
+    /// `n` examples with balanced classes, deterministic in `seed`.
+    pub fn generate(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut examples: Vec<Example> =
+            (0..n).map(|i| render(i % CLASSES, &mut rng)).collect();
+        rng.shuffle(&mut examples);
+        Dataset { examples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// Pixels as f32 in [0,1] (training input).
+    pub fn features_f32(&self, i: usize) -> Vec<f32> {
+        self.examples[i]
+            .pixels
+            .iter()
+            .map(|&p| p as f32 / 255.0)
+            .collect()
+    }
+
+    /// Pixels as 8-bit macro inputs.
+    pub fn features_u8(&self, i: usize) -> Vec<u32> {
+        self.examples[i].pixels.iter().map(|&p| p as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Dataset::generate(50, 7);
+        let b = Dataset::generate(50, 7);
+        for (x, y) in a.examples.iter().zip(&b.examples) {
+            assert_eq!(x.pixels, y.pixels);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let d = Dataset::generate(100, 1);
+        let mut counts = [0usize; CLASSES];
+        for e in &d.examples {
+            counts[e.label] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn digits_are_distinguishable_in_pixel_space() {
+        // Mean intra-class distance must be well below inter-class.
+        let mut rng = Rng::new(3);
+        let dist = |a: &Example, b: &Example| -> f64 {
+            a.pixels
+                .iter()
+                .zip(&b.pixels)
+                .map(|(&x, &y)| {
+                    let d = x as f64 - y as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut n_intra = 0;
+        let mut n_inter = 0;
+        let samples: Vec<Example> = (0..CLASSES)
+            .flat_map(|d| (0..4).map(|_| render(d, &mut rng)).collect::<Vec<_>>())
+            .collect();
+        for i in 0..samples.len() {
+            for j in (i + 1)..samples.len() {
+                if samples[i].label == samples[j].label {
+                    intra += dist(&samples[i], &samples[j]);
+                    n_intra += 1;
+                } else {
+                    inter += dist(&samples[i], &samples[j]);
+                    n_inter += 1;
+                }
+            }
+        }
+        let intra = intra / n_intra as f64;
+        let inter = inter / n_inter as f64;
+        assert!(
+            inter > 1.15 * intra,
+            "inter {inter} should exceed intra {intra}"
+        );
+    }
+
+    #[test]
+    fn pixels_use_dynamic_range() {
+        let d = Dataset::generate(20, 5);
+        let maxpix = d
+            .examples
+            .iter()
+            .flat_map(|e| e.pixels.iter())
+            .cloned()
+            .max()
+            .unwrap();
+        assert!(maxpix > 150);
+    }
+}

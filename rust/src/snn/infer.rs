@@ -1,0 +1,255 @@
+//! Quantized inference on the macro (DESIGN.md S13, experiment E9): runs
+//! every matmul of the MLP through simulated CIM macros — dual-spike
+//! encoded activations, 2-bit conductance weights, OSG readout — with the
+//! conductance-offset trick recovering signed weights, and full energy /
+//! latency accounting from the per-op ledgers.
+
+use crate::config::{LevelMap, MacroConfig};
+use crate::coordinator::TiledMatrix;
+use crate::energy::EnergyBreakdown;
+use crate::macro_model::CimMacro;
+use crate::snn::dataset::Dataset;
+use crate::snn::mlp::{argmax, Mlp};
+use crate::snn::quant::{quantize_layer, ActQuant, QuantLayer};
+
+/// One macro-mapped layer: quantized codes tiled onto macros.
+struct MacroLayer {
+    q: QuantLayer,
+    tiled: TiledMatrix,
+    /// One programmed macro per weight tile (weight-stationary).
+    macros: Vec<CimMacro>,
+}
+
+impl MacroLayer {
+    fn new(q: QuantLayer, cfg: &MacroConfig) -> MacroLayer {
+        let tile = cfg.rows;
+        let tiled = TiledMatrix::new(&q.codes, q.in_dim, q.out_dim, tile);
+        let macros = (0..tiled.num_tiles())
+            .map(|t| {
+                let mut m = CimMacro::new(cfg.clone());
+                m.program(tiled.tile_codes_flat(t));
+                m
+            })
+            .collect();
+        MacroLayer { q, tiled, macros }
+    }
+
+    /// MAC through the macros; returns (z floats, energy, latency ns).
+    fn forward(&mut self, x: &[u32]) -> (Vec<f32>, EnergyBreakdown, f64) {
+        let xparts = self.tiled.split_input(x);
+        let mut energy = EnergyBreakdown::default();
+        let mut latency: f64 = 0.0; // row tiles run in parallel macros
+        let mut partials: Vec<Vec<Vec<f64>>> = Vec::new();
+        for ti in 0..self.tiled.row_tiles {
+            let mut row = Vec::new();
+            for tj in 0..self.tiled.col_tiles {
+                let idx = ti * self.tiled.col_tiles + tj;
+                let r = self.macros[idx].mvm(&xparts[ti]);
+                energy.add(&r.energy);
+                latency = latency.max(r.latency_ns);
+                row.push(r.y_mac);
+            }
+            partials.push(row);
+        }
+        let mac = self.tiled.accumulate(&partials);
+        let sum_x: f64 = x.iter().map(|&v| v as f64).sum();
+        let z: Vec<f32> = mac
+            .iter()
+            .enumerate()
+            .map(|(o, &m)| {
+                (self.q.scale * (m - self.q.g_mid * sum_x)) as f32
+                    + self.q.bias.get(o).copied().unwrap_or(0.0)
+            })
+            .collect();
+        (z, energy, latency)
+    }
+}
+
+/// The full quantized MLP deployed on macros.
+pub struct MacroMlp {
+    layers: Vec<MacroLayer>,
+    /// Activation quantizers between layers (len = layers − 1).
+    pub act_quants: Vec<ActQuant>,
+    /// Input activation scale (pixels are already 8-bit; step in float
+    /// units so float-model parity holds: x_float = pixel/255).
+    pub input_step: f32,
+}
+
+/// Per-inference statistics.
+#[derive(Debug, Clone, Default)]
+pub struct InferStats {
+    pub energy: EnergyBreakdown,
+    pub latency_ns: f64,
+    /// MAC operations executed on macros (2 OPs each).
+    pub macs: u64,
+}
+
+impl MacroMlp {
+    /// Quantize a trained float model and calibrate activation steps on
+    /// `calib` examples.
+    pub fn from_float(
+        model: &Mlp,
+        calib: &Dataset,
+        cfg: &MacroConfig,
+        level_map: LevelMap,
+    ) -> MacroMlp {
+        let q1 = quantize_layer(
+            &model.l1.w,
+            &model.l1.b,
+            model.l1.in_dim,
+            model.l1.out_dim,
+            level_map,
+        );
+        let q2 = quantize_layer(
+            &model.l2.w,
+            &model.l2.b,
+            model.l2.in_dim,
+            model.l2.out_dim,
+            level_map,
+        );
+        let q3 = quantize_layer(
+            &model.l3.w,
+            &model.l3.b,
+            model.l3.in_dim,
+            model.l3.out_dim,
+            level_map,
+        );
+
+        // Calibrate activation ranges with float forward passes.
+        let mut h1_all = Vec::new();
+        let mut h2_all = Vec::new();
+        for i in 0..calib.len().min(64) {
+            let x = calib.features_f32(i);
+            let (h1, h2, _) = model.forward(&x);
+            h1_all.extend(h1);
+            h2_all.extend(h2);
+        }
+        let act_quants = vec![
+            ActQuant::calibrate(&h1_all, 99.5),
+            ActQuant::calibrate(&h2_all, 99.5),
+        ];
+
+        MacroMlp {
+            layers: vec![
+                MacroLayer::new(q1, cfg),
+                MacroLayer::new(q2, cfg),
+                MacroLayer::new(q3, cfg),
+            ],
+            act_quants,
+            input_step: 1.0 / 255.0,
+        }
+    }
+
+    /// Forward pass from 8-bit pixels; returns (logits, stats).
+    pub fn forward(&mut self, pixels: &[u32]) -> (Vec<f32>, InferStats) {
+        let mut stats = InferStats::default();
+        let mut x: Vec<u32> = pixels.to_vec();
+        let mut x_step = self.input_step;
+        let n_layers = self.layers.len();
+        let mut logits = Vec::new();
+        for li in 0..n_layers {
+            // MACs on macros are in (x LSB)·µS; the layer scale expects
+            // float activations, so fold the activation step in.
+            let (z_lsb, energy, lat) = self.layers[li].forward(&x);
+            stats.energy.add(&energy);
+            stats.latency_ns += lat;
+            stats.macs += (self.layers[li].q.in_dim
+                * self.layers[li].q.out_dim) as u64;
+            // z computed with x in LSB units: scale by x_step to float.
+            let z: Vec<f32> = z_lsb
+                .iter()
+                .enumerate()
+                .map(|(o, &v)| {
+                    let bias = self.layers[li].q.bias.get(o).copied().unwrap_or(0.0);
+                    // layer.forward already added bias once (unscaled);
+                    // remove and re-add correctly scaled.
+                    (v - bias) * x_step + bias
+                })
+                .collect();
+            if li + 1 == n_layers {
+                logits = z;
+            } else {
+                let aq = self.act_quants[li];
+                x = z.iter().map(|&v| aq.quantize(v)).collect();
+                x_step = aq.step;
+            }
+        }
+        (logits, stats)
+    }
+
+    pub fn predict(&mut self, pixels: &[u32]) -> (usize, InferStats) {
+        let (logits, stats) = self.forward(pixels);
+        (argmax(&logits[..10]), stats)
+    }
+
+    /// Evaluate on a dataset: (accuracy, aggregate stats).
+    pub fn evaluate(&mut self, data: &Dataset) -> (f64, InferStats) {
+        let mut agg = InferStats::default();
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            let (pred, stats) = self.predict(&data.features_u8(i));
+            if pred == data.examples[i].label {
+                correct += 1;
+            }
+            agg.energy.add(&stats.energy);
+            agg.latency_ns += stats.latency_ns;
+            agg.macs += stats.macs;
+        }
+        (correct as f64 / data.len() as f64, agg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::mlp::train;
+
+    fn trained() -> (Mlp, Dataset, Dataset) {
+        let train_data = Dataset::generate(300, 41);
+        let test_data = Dataset::generate(100, 42);
+        let (model, acc) = train(&train_data, 6, 7);
+        assert!(acc > 0.9);
+        (model, train_data, test_data)
+    }
+
+    #[test]
+    fn quantized_model_close_to_float_accuracy() {
+        let (model, train_data, test_data) = trained();
+        let float_acc = crate::snn::mlp::accuracy(&model, &test_data);
+        let cfg = MacroConfig::default();
+        let mut mm =
+            MacroMlp::from_float(&model, &train_data, &cfg, LevelMap::DeviceTrue);
+        let (acc, stats) = mm.evaluate(&test_data);
+        assert!(
+            acc > float_acc - 0.15,
+            "macro acc {acc} vs float {float_acc}"
+        );
+        assert!(stats.macs > 0);
+        assert!(stats.energy.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn stats_accumulate_per_inference() {
+        let (model, train_data, _) = trained();
+        let cfg = MacroConfig::default();
+        let mut mm =
+            MacroMlp::from_float(&model, &train_data, &cfg, LevelMap::DeviceTrue);
+        let x = train_data.features_u8(0);
+        let (_, s1) = mm.predict(&x);
+        // 3 layers: 256×128 + 128×128 + 128×16 MACs.
+        assert_eq!(s1.macs, (256 * 128 + 128 * 128 + 128 * 16) as u64);
+        assert!(s1.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn deterministic_predictions() {
+        let (model, train_data, test_data) = trained();
+        let cfg = MacroConfig::default();
+        let mut mm =
+            MacroMlp::from_float(&model, &train_data, &cfg, LevelMap::DeviceTrue);
+        let x = test_data.features_u8(3);
+        let (p1, _) = mm.predict(&x);
+        let (p2, _) = mm.predict(&x);
+        assert_eq!(p1, p2);
+    }
+}

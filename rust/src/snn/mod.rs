@@ -1,0 +1,14 @@
+//! Neural-network workload layer (DESIGN.md S13): synthetic-digits
+//! dataset, float MLP + trainer, 2-bit conductance quantization, and
+//! macro-mapped inference with energy accounting — the end-to-end
+//! validation pipeline (experiment E9).
+
+pub mod dataset;
+pub mod infer;
+pub mod mlp;
+pub mod quant;
+
+pub use dataset::{Dataset, Example};
+pub use infer::{InferStats, MacroMlp};
+pub use mlp::{accuracy, train, Mlp};
+pub use quant::{quantize_layer, ActQuant, QuantLayer};

@@ -1,0 +1,243 @@
+//! Quantization to macro codes (DESIGN.md S13, §7): float weights →
+//! 2-bit conductance codes + per-layer scale, float activations → 8-bit
+//! dual-spike inputs + per-layer step.
+//!
+//! Signed weights use the conductance-offset scheme: the effective weight
+//! of code c is  s·(G(c) − G_mid), so a layer's MAC is recovered as
+//! s·(Σ x·G(code) − G_mid·Σ x). The quantizer searches the scale s that
+//! minimizes MSE against the *actual* (possibly non-uniform) device
+//! levels — this is where the DeviceTrue vs IdealLinear ablation bites.
+
+use crate::config::LevelMap;
+
+/// A quantized dense layer, laid out for the macro: codes are (in × out)
+/// row-major (input rows = wordlines, output cols = bitlines).
+#[derive(Debug, Clone)]
+pub struct QuantLayer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// 2-bit codes, row-major in_dim × out_dim.
+    pub codes: Vec<u8>,
+    /// Weight scale s.
+    pub scale: f64,
+    /// Offset conductance G_mid.
+    pub g_mid: f64,
+    /// Folded bias (float, applied digitally after the MAC).
+    pub bias: Vec<f32>,
+}
+
+/// Quantize weights `w` (out × in row-major, as `mlp::Dense`) to codes.
+///
+/// The scale is chosen by golden-section-free grid search over candidate
+/// scales spanning the weight range, minimizing total squared error.
+pub fn quantize_layer(
+    w: &[f32],
+    bias: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    level_map: LevelMap,
+) -> QuantLayer {
+    assert_eq!(w.len(), in_dim * out_dim);
+    let levels = level_map.levels();
+    let g_mid = level_map.g_mid();
+    // Centered level values: e(c) = G(c) − G_mid.
+    let e: Vec<f64> = levels.iter().map(|&g| g - g_mid).collect();
+    let e_max = e[3];
+
+    let w_absmax = w
+        .iter()
+        .map(|&x| (x as f64).abs())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+
+    // Candidate scales: map w_absmax to between 0.5× and 1.5× of e_max.
+    let mut best_scale = w_absmax / e_max;
+    let mut best_err = f64::INFINITY;
+    for step in 0..60 {
+        let s = (0.5 + step as f64 / 40.0) * w_absmax / e_max;
+        let err: f64 = w
+            .iter()
+            .map(|&wi| {
+                let t = wi as f64 / s;
+                let c = nearest_level(&e, t);
+                let d = t - e[c];
+                d * d
+            })
+            .sum::<f64>()
+            * s
+            * s;
+        if err < best_err {
+            best_err = err;
+            best_scale = s;
+        }
+    }
+
+    // Emit codes TRANSPOSED into macro layout (in × out).
+    let mut codes = vec![0u8; in_dim * out_dim];
+    for o in 0..out_dim {
+        for i in 0..in_dim {
+            let wi = w[o * in_dim + i] as f64;
+            let c = nearest_level(&e, wi / best_scale);
+            codes[i * out_dim + o] = c as u8;
+        }
+    }
+    QuantLayer {
+        in_dim,
+        out_dim,
+        codes,
+        scale: best_scale,
+        g_mid,
+        bias: bias.to_vec(),
+    }
+}
+
+fn nearest_level(e: &[f64], t: f64) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (c, &ec) in e.iter().enumerate() {
+        let d = (t - ec).abs();
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Effective float weight represented by a code (for error analysis).
+pub fn dequantize(layer: &QuantLayer, level_map: LevelMap) -> Vec<f32> {
+    let levels = level_map.levels();
+    let mut w = vec![0.0f32; layer.in_dim * layer.out_dim];
+    for i in 0..layer.in_dim {
+        for o in 0..layer.out_dim {
+            let g = levels[layer.codes[i * layer.out_dim + o] as usize];
+            w[o * layer.in_dim + i] =
+                (layer.scale * (g - layer.g_mid)) as f32;
+        }
+    }
+    w // back in (out × in) layout
+}
+
+/// Mean-squared quantization error of a layer's weights.
+pub fn quant_mse(w: &[f32], layer: &QuantLayer, level_map: LevelMap) -> f64 {
+    let wq = dequantize(layer, level_map);
+    w.iter()
+        .zip(&wq)
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / w.len() as f64
+}
+
+/// Activation quantizer: symmetric [0, a_max] → [0, 255].
+#[derive(Debug, Clone, Copy)]
+pub struct ActQuant {
+    pub step: f32,
+}
+
+impl ActQuant {
+    /// Calibrate from observed activations (`pct` percentile as a_max).
+    pub fn calibrate(acts: &[f32], pct: f64) -> ActQuant {
+        let mut v: Vec<f64> = acts
+            .iter()
+            .filter(|&&a| a > 0.0)
+            .map(|&a| a as f64)
+            .collect();
+        if v.is_empty() {
+            return ActQuant { step: 1.0 / 255.0 };
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let a_max = crate::util::stats::percentile(&v, pct).max(1e-6);
+        ActQuant {
+            step: (a_max / 255.0) as f32,
+        }
+    }
+
+    pub fn quantize(&self, a: f32) -> u32 {
+        ((a.max(0.0) / self.step).round() as u32).min(255)
+    }
+
+    pub fn dequantize(&self, q: u32) -> f32 {
+        q as f32 * self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect()
+    }
+
+    #[test]
+    fn codes_in_range_and_layout_transposed() {
+        let w = random_weights(6, 1); // 2 out × 3 in
+        let q = quantize_layer(&w, &[0.0, 0.0], 3, 2, LevelMap::DeviceTrue);
+        assert_eq!(q.codes.len(), 6);
+        assert!(q.codes.iter().all(|&c| c < 4));
+        // spot-check transposition: w[o=1,i=2] lands at codes[i=2][o=1]
+        let e: Vec<f64> = LevelMap::DeviceTrue
+            .levels()
+            .iter()
+            .map(|&g| g - q.g_mid)
+            .collect();
+        let expect = super::nearest_level(&e, w[1 * 3 + 2] as f64 / q.scale);
+        assert_eq!(q.codes[2 * 2 + 1] as usize, expect);
+    }
+
+    #[test]
+    fn dequantized_weights_correlate_with_originals() {
+        let w = random_weights(128 * 64, 2);
+        let q = quantize_layer(&w, &vec![0.0; 64], 128, 64, LevelMap::DeviceTrue);
+        let wq = dequantize(&q, LevelMap::DeviceTrue);
+        // Pearson correlation > 0.85 for 2-bit quantization of gaussians.
+        let n = w.len() as f64;
+        let (mut sx, mut sy, mut sxx, mut syy, mut sxy) =
+            (0.0, 0.0, 0.0, 0.0, 0.0);
+        for (&a, &b) in w.iter().zip(&wq) {
+            let (a, b) = (a as f64, b as f64);
+            sx += a;
+            sy += b;
+            sxx += a * a;
+            syy += b * b;
+            sxy += a * b;
+        }
+        let corr = (n * sxy - sx * sy)
+            / ((n * sxx - sx * sx).sqrt() * (n * syy - sy * sy).sqrt());
+        assert!(corr > 0.85, "corr {corr}");
+    }
+
+    #[test]
+    fn ideal_levels_quantize_no_worse_than_device_true() {
+        // Equally-spaced levels should fit gaussian weights at least as
+        // well (ablation direction check).
+        let w = random_weights(4096, 3);
+        let qd = quantize_layer(&w, &[], 64, 64, LevelMap::DeviceTrue);
+        let qi = quantize_layer(&w, &[], 64, 64, LevelMap::IdealLinear);
+        let mse_d = quant_mse(&w, &qd, LevelMap::DeviceTrue);
+        let mse_i = quant_mse(&w, &qi, LevelMap::IdealLinear);
+        assert!(mse_i <= mse_d * 1.05, "ideal {mse_i} vs device {mse_d}");
+    }
+
+    #[test]
+    fn act_quant_roundtrip() {
+        let acts: Vec<f32> = (0..1000).map(|i| i as f32 / 100.0).collect();
+        let q = ActQuant::calibrate(&acts, 99.0);
+        let a = 5.0f32;
+        let code = q.quantize(a);
+        assert!((q.dequantize(code) - a).abs() < q.step);
+        assert_eq!(q.quantize(-1.0), 0);
+        assert_eq!(q.quantize(1e9), 255);
+    }
+
+    #[test]
+    fn act_quant_empty_is_safe() {
+        let q = ActQuant::calibrate(&[], 99.0);
+        assert!(q.step > 0.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Property-testing kit (substrate — `proptest` is unavailable offline).
+//!
+//! Deterministic random-case property runner with failure reporting and
+//! seed replay: each property runs N generated cases; on failure the
+//! offending case seed is printed so `replay(seed)` reproduces it.
+//! Used by `rust/tests/coordinator_props.rs` and friends.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 64,
+            seed: 0x5eed_cafe,
+        }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the case seed on
+/// the first failure. `gen` builds an input from a fresh Rng.
+pub fn check<T: std::fmt::Debug, G, P>(cfg: PropConfig, name: &str, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut meta = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay seed {case_seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vector of 8-bit digital inputs.
+    pub fn input_vec(rng: &mut Rng, len: usize) -> Vec<u32> {
+        (0..len).map(|_| rng.below(256) as u32).collect()
+    }
+
+    /// Sparse input vector with the given active fraction.
+    pub fn sparse_input(rng: &mut Rng, len: usize, density: f64) -> Vec<u32> {
+        (0..len)
+            .map(|_| {
+                if rng.f64() < density {
+                    1 + rng.below(255) as u32
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    /// Row-major 2-bit code matrix.
+    pub fn codes(rng: &mut Rng, k: usize, n: usize) -> Vec<u8> {
+        (0..k * n).map(|_| rng.below(4) as u8).collect()
+    }
+}
+
+/// Assert two floats are close (relative + absolute tolerance).
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let bound = atol + rtol * b.abs().max(a.abs());
+    if diff <= bound {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (diff {diff} > bound {bound})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            PropConfig { cases: 16, seed: 1 },
+            "sum_commutes",
+            |rng| (rng.below(100), rng.below(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check(
+            PropConfig { cases: 16, seed: 2 },
+            "always_fails",
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(1.0, 1.0 + 1e-9, 1e-6, 0.0).is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-6, 0.0).is_err());
+        assert!(assert_close(0.0, 1e-9, 0.0, 1e-6).is_ok());
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(3);
+        let x = gen::input_vec(&mut rng, 64);
+        assert!(x.iter().all(|&v| v < 256));
+        let s = gen::sparse_input(&mut rng, 1000, 0.1);
+        let active = s.iter().filter(|&&v| v > 0).count();
+        assert!(active > 40 && active < 250, "{active}");
+        let c = gen::codes(&mut rng, 8, 8);
+        assert!(c.iter().all(|&v| v < 4));
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny CLI argument parser (substrate — `clap` unavailable offline).
+//!
+//! Supports `prog <subcommand> [--flag] [--key value] [positional...]`,
+//! typed accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus flags/options/positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse("fig7a out.csv --points 500 --seed=9 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fig7a"));
+        assert_eq!(a.get_usize("points", 0), 500);
+        assert_eq!(a.get_u64("seed", 0), 9);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let a = parse("serve");
+        assert_eq!(a.get_f64("timeout-ms", 2.5), 2.5);
+        assert_eq!(a.get_str("backend", "sim"), "sim");
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn empty_args_ok() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--bias -3" : -3 doesn't start with --, so it's the value.
+        let a = parse("x --bias -3");
+        assert_eq!(a.get_f64("bias", 0.0), -3.0);
+    }
+}

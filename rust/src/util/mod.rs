@@ -1,0 +1,8 @@
+//! Offline-substrate utilities: PRNG (`rand` replacement), JSON
+//! (`serde_json` replacement), CLI parsing (`clap` replacement), and the
+//! statistics helpers shared by the repro harness and benches.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,228 @@
+//! Small statistics toolkit used by the repro harness and benches:
+//! summary stats, percentiles, least-squares line fit (Fig 7a linearity),
+//! and a latency histogram for the serving path.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Result of a least-squares straight-line fit y = a + b·x.
+#[derive(Debug, Clone, Copy)]
+pub struct LineFit {
+    /// Intercept.
+    pub a: f64,
+    /// Slope.
+    pub b: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+    /// Root-mean-square residual.
+    pub rmse: f64,
+    /// Max |residual|.
+    pub max_abs_err: f64,
+}
+
+/// Ordinary least squares fit; panics if fewer than 2 points.
+pub fn line_fit(x: &[f64], y: &[f64]) -> LineFit {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "need >= 2 points");
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let sxx: f64 = x.iter().map(|xi| (xi - mx) * (xi - mx)).sum();
+    let sxy: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(xi, yi)| (xi - mx) * (yi - my))
+        .sum();
+    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    let a = my - b * mx;
+    let ss_tot: f64 = y.iter().map(|yi| (yi - my) * (yi - my)).sum();
+    let mut ss_res = 0.0;
+    let mut max_abs = 0.0f64;
+    for (xi, yi) in x.iter().zip(y) {
+        let r = yi - (a + b * xi);
+        ss_res += r * r;
+        max_abs = max_abs.max(r.abs());
+    }
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    LineFit {
+        a,
+        b,
+        r2,
+        rmse: (ss_res / n).sqrt(),
+        max_abs_err: max_abs,
+    }
+}
+
+/// Fixed-bucket latency histogram (log-ish buckets supplied by caller).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// `bounds` are ascending upper edges; one overflow bucket is added.
+    pub fn new(bounds: Vec<f64>) -> Self {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        let n = bounds.len() + 1;
+        Histogram {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket counts (upper-edge convention).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3} min={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}",
+            self.total,
+            self.mean(),
+            self.min,
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_line_has_r2_one() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|xi| 3.0 + 2.0 * xi).collect();
+        let f = line_fit(&x, &y);
+        assert!((f.a - 3.0).abs() < 1e-9);
+        assert!((f.b - 2.0).abs() < 1e-9);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+        assert!(f.rmse < 1e-9);
+    }
+
+    #[test]
+    fn noisy_line_r2_below_one() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .enumerate()
+            .map(|(i, xi)| 2.0 * xi + if i % 2 == 0 { 5.0 } else { -5.0 })
+            .collect();
+        let f = line_fit(&x, &y);
+        assert!(f.r2 < 1.0);
+        assert!(f.r2 > 0.9); // still dominated by the trend
+        assert!(f.max_abs_err > 4.0);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0, 8.0]);
+        for x in [0.5, 0.9, 1.5, 3.0, 3.5, 7.0, 20.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.quantile(0.01), 1.0);
+        assert_eq!(h.quantile(0.99), 20.0);
+        assert!(h.mean() > 0.0);
+        assert!(h.summary().contains("n=7"));
+    }
+}

@@ -1,0 +1,287 @@
+//! 128×128 3T-2MTJ crossbar array (paper §III-A, DESIGN.md S7).
+//!
+//! Row-major grid of series cells. Weights are programmed as 2-bit codes
+//! through the SOT write path; reads expose per-cell conductance (with
+//! optional cycle-to-cycle noise) and per-column conductance views that
+//! the OSG consumes.
+
+use crate::config::MacroConfig;
+use crate::device::cell::Cell3T2J;
+use crate::util::rng::Rng;
+
+/// Programmed crossbar array.
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    pub rows: usize,
+    pub cols: usize,
+    cells: Vec<Cell3T2J>,
+    /// Cached conductance matrix (µS), row-major; rebuilt on programming.
+    g_cache: Vec<f64>,
+    /// Target conductance per code (µS) from `cfg.level_map`.
+    level_g: [f64; 4],
+    /// Nominal device conductance per code (µS) for the 3T-2MTJ stack —
+    /// used to carry per-cell variation over to hypothetical level maps
+    /// (DESIGN.md §7 ablation): g = level_g[code] · (g_cell/dev_g[code]).
+    dev_g: [f64; 4],
+    /// Cycle-to-cycle read sigma (fraction), applied by `read_noisy`.
+    sigma_c2c: f64,
+    /// Total write pulses issued (endurance metric).
+    pub write_pulses: u64,
+}
+
+impl Crossbar {
+    /// Build an array of nominal cells (no variation), all code 0.
+    pub fn new(cfg: &MacroConfig) -> Self {
+        let mut cells = Vec::with_capacity(cfg.rows * cfg.cols);
+        for _ in 0..cfg.rows * cfg.cols {
+            let mut c = Cell3T2J::new(cfg.r_lrs_mohm, cfg.tmr);
+            c.program(0);
+            cells.push(c);
+        }
+        let mut xb = Crossbar {
+            rows: cfg.rows,
+            cols: cfg.cols,
+            cells,
+            g_cache: vec![0.0; cfg.rows * cfg.cols],
+            level_g: Self::level_targets(cfg),
+            dev_g: Self::device_levels(cfg),
+            sigma_c2c: cfg.nonideal.sigma_r_c2c,
+            write_pulses: 0,
+        };
+        xb.rebuild_cache();
+        xb
+    }
+
+    /// Nominal series-stack conductances per code for this R_LRS.
+    fn device_levels(cfg: &MacroConfig) -> [f64; 4] {
+        let mut cell = Cell3T2J::new(cfg.r_lrs_mohm, cfg.tmr);
+        let mut out = [0.0; 4];
+        for code in 0..4u8 {
+            cell.program(code);
+            out[code as usize] = cell.conductance_us();
+        }
+        out
+    }
+
+    /// Target conductances per code from the configured level map,
+    /// rescaled from the map's reference R_LRS = 1 MΩ to this config's.
+    fn level_targets(cfg: &MacroConfig) -> [f64; 4] {
+        let base = cfg.level_map.levels();
+        let mut out = [0.0; 4];
+        for (i, b) in base.iter().enumerate() {
+            out[i] = b / cfg.r_lrs_mohm;
+        }
+        out
+    }
+
+    /// Build with frozen device-to-device variation (σ_R fraction).
+    pub fn with_variation(cfg: &MacroConfig, rng: &mut Rng) -> Self {
+        let sigma = cfg.nonideal.sigma_r_d2d;
+        let mut cells = Vec::with_capacity(cfg.rows * cfg.cols);
+        for _ in 0..cfg.rows * cfg.cols {
+            let f1 = (1.0 + rng.normal_ms(0.0, sigma)).max(0.5);
+            let f2 = (1.0 + rng.normal_ms(0.0, sigma)).max(0.5);
+            let mut c = Cell3T2J::with_variation(cfg.r_lrs_mohm, cfg.tmr, f1, f2);
+            c.program(0);
+            cells.push(c);
+        }
+        let mut xb = Crossbar {
+            rows: cfg.rows,
+            cols: cfg.cols,
+            cells,
+            g_cache: vec![0.0; cfg.rows * cfg.cols],
+            level_g: Self::level_targets(cfg),
+            dev_g: Self::device_levels(cfg),
+            sigma_c2c: cfg.nonideal.sigma_r_c2c,
+            write_pulses: 0,
+        };
+        xb.rebuild_cache();
+        xb
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        row * self.cols + col
+    }
+
+    pub fn cell(&self, row: usize, col: usize) -> &Cell3T2J {
+        &self.cells[self.idx(row, col)]
+    }
+
+    fn rebuild_cache(&mut self) {
+        for i in 0..self.cells.len() {
+            let code = self.cells[i].code() as usize;
+            // Device-true: level_g == dev_g, so this is exactly the cell
+            // conductance. Hypothetical maps keep the cell's variation
+            // ratio but move the nominal level.
+            self.g_cache[i] = self.level_g[code]
+                * (self.cells[i].conductance_us() / self.dev_g[code]);
+        }
+    }
+
+    /// Program the whole array from a row-major code matrix (§III-A write:
+    /// 2 junction writes per cell).
+    pub fn program_codes(&mut self, codes: &[u8]) {
+        assert_eq!(codes.len(), self.rows * self.cols, "code matrix shape");
+        for (i, &code) in codes.iter().enumerate() {
+            self.cells[i].program(code);
+            self.write_pulses += 2;
+        }
+        self.rebuild_cache();
+    }
+
+    /// Read back the programmed codes (row-major).
+    pub fn read_codes(&self) -> Vec<u8> {
+        self.cells.iter().map(|c| c.code()).collect()
+    }
+
+    /// Nominal conductance at (row, col) in µS.
+    #[inline]
+    pub fn g_us(&self, row: usize, col: usize) -> f64 {
+        self.g_cache[self.idx(row, col)]
+    }
+
+    /// Conductance with a fresh cycle-to-cycle noise sample.
+    #[inline]
+    pub fn g_us_noisy(&self, row: usize, col: usize, rng: &mut Rng) -> f64 {
+        let g = self.g_us(row, col);
+        if self.sigma_c2c == 0.0 {
+            g
+        } else {
+            // Resistance noise → conductance divides.
+            g / (1.0 + rng.normal_ms(0.0, self.sigma_c2c)).max(0.5)
+        }
+    }
+
+    /// Row-major conductance matrix view (µS).
+    pub fn conductances(&self) -> &[f64] {
+        &self.g_cache
+    }
+
+    /// One column's conductances (µS), gathered.
+    pub fn column_g(&self, col: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.g_us(r, col)).collect()
+    }
+
+    /// Exact digital MVM oracle on the nominal conductances:
+    /// y[c] = Σ_r x[r]·G[r,c] (x in LSBs, result in LSB·µS).
+    pub fn ideal_mvm(&self, x: &[u32]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let xv = x[r] as f64;
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &self.g_cache[r * self.cols..(r + 1) * self.cols];
+            for (c, &g) in row.iter().enumerate() {
+                y[c] += xv * g;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LevelMap;
+
+    fn cfg() -> MacroConfig {
+        MacroConfig::default()
+    }
+
+    fn small_cfg(rows: usize, cols: usize) -> MacroConfig {
+        MacroConfig {
+            rows,
+            cols,
+            ..MacroConfig::default()
+        }
+    }
+
+    #[test]
+    fn program_read_roundtrip() {
+        let c = small_cfg(8, 8);
+        let mut xb = Crossbar::new(&c);
+        let codes: Vec<u8> = (0..64).map(|i| (i % 4) as u8).collect();
+        xb.program_codes(&codes);
+        assert_eq!(xb.read_codes(), codes);
+        assert_eq!(xb.write_pulses, 128); // 2 junctions per cell
+    }
+
+    #[test]
+    fn conductance_matches_level_map() {
+        let c = small_cfg(4, 4);
+        let levels = LevelMap::DeviceTrue.levels();
+        let mut xb = Crossbar::new(&c);
+        xb.program_codes(&[0, 1, 2, 3, 3, 2, 1, 0, 0, 0, 3, 3, 1, 1, 2, 2]);
+        assert!((xb.g_us(0, 1) - levels[1]).abs() < 1e-12);
+        assert!((xb.g_us(1, 0) - levels[3]).abs() < 1e-12);
+        assert!((xb.g_us(3, 2) - levels[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn column_view_is_consistent() {
+        let c = small_cfg(4, 4);
+        let mut xb = Crossbar::new(&c);
+        xb.program_codes(&(0..16).map(|i| (i % 4) as u8).collect::<Vec<_>>());
+        let col2 = xb.column_g(2);
+        for r in 0..4 {
+            assert_eq!(col2[r], xb.g_us(r, 2));
+        }
+    }
+
+    #[test]
+    fn ideal_mvm_hand_computed() {
+        let c = small_cfg(2, 2);
+        let mut xb = Crossbar::new(&c);
+        // codes [[3,0],[1,2]] → G [[1/3,1/6],[1/5,1/4]]
+        xb.program_codes(&[3, 0, 1, 2]);
+        let y = xb.ideal_mvm(&[2, 4]);
+        assert!((y[0] - (2.0 / 3.0 + 4.0 / 5.0)).abs() < 1e-12);
+        assert!((y[1] - (2.0 / 6.0 + 4.0 / 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_size_array_constructs() {
+        let xb = Crossbar::new(&cfg());
+        assert_eq!(xb.conductances().len(), 128 * 128);
+    }
+
+    #[test]
+    fn d2d_variation_spreads_conductance() {
+        let mut c = cfg();
+        c.nonideal.sigma_r_d2d = 0.05;
+        let mut rng = Rng::new(11);
+        let mut xb = Crossbar::with_variation(&c, &mut rng);
+        xb.program_codes(&vec![3u8; 128 * 128]);
+        let gs = xb.conductances();
+        let mean: f64 = gs.iter().sum::<f64>() / gs.len() as f64;
+        let sd = (gs.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gs.len() as f64)
+            .sqrt();
+        assert!(sd / mean > 0.02, "relative sd {}", sd / mean);
+        assert!(sd / mean < 0.10);
+    }
+
+    #[test]
+    fn c2c_noise_changes_reads_but_not_nominal() {
+        let mut c = small_cfg(2, 2);
+        c.nonideal.sigma_r_c2c = 0.05;
+        let mut xb = Crossbar::new(&c);
+        xb.program_codes(&[3, 3, 3, 3]);
+        let mut rng = Rng::new(5);
+        let a = xb.g_us_noisy(0, 0, &mut rng);
+        let b = xb.g_us_noisy(0, 0, &mut rng);
+        assert_ne!(a, b);
+        assert_eq!(xb.g_us(0, 0), xb.g_us(0, 0)); // nominal stable
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn program_rejects_wrong_shape() {
+        let mut xb = Crossbar::new(&small_cfg(2, 2));
+        xb.program_codes(&[0, 1, 2]);
+    }
+}

@@ -1,0 +1,7 @@
+//! SOT-MRAM crossbar array substrate (DESIGN.md S7).
+
+pub mod array;
+pub mod parasitics;
+
+pub use array::Crossbar;
+pub use parasitics::Parasitics;

@@ -1,0 +1,120 @@
+//! Bit-line wire parasitics (scalability study, §V "scalable analog
+//! computing" made quantitative).
+//!
+//! In a real crossbar the clamp only holds the *near end* of the bit line
+//! at V_clamp; a cell `r` rows away sees the wire resistance of `r`
+//! segments carrying the downstream current, so its effective read
+//! voltage is reduced. With MΩ cells and mΩ–Ω segments the effect is tiny
+//! at 128 rows — exactly why the paper's high-R stack scales — but it
+//! grows quadratically with array height, which is what
+//! `repro::scaling` sweeps.
+//!
+//! Model: uniform segment resistance R_w per cell pitch, all active cells
+//! drawing I_r = V_eff(r)·G_r. First-order (single Jacobi pass, exact to
+//! O((R_w·ΣG)²)): the IR drop seen by cell r is
+//! R_w · Σ_{s≥r} partial sums of downstream currents.
+
+/// Bit-line parasitic parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Parasitics {
+    /// Wire resistance per cell pitch (Ω — NOT MΩ; converted internally).
+    pub r_seg_ohm: f64,
+}
+
+impl Parasitics {
+    /// 28 nm M2-class wire: ≈ 2 Ω per cell pitch.
+    pub fn metal2() -> Self {
+        Parasitics { r_seg_ohm: 2.0 }
+    }
+
+    /// Effective per-cell read voltages (V) for one column.
+    ///
+    /// `g_us[r]` = conductance of the cell at row r (µS, 0 = inactive),
+    /// row 0 is nearest the clamp. `v_read` is the ideal read voltage.
+    pub fn effective_v_read(&self, g_us: &[f64], v_read: f64) -> Vec<f64> {
+        let n = g_us.len();
+        // Ideal currents (µA); Ω·µA = µV → /1e6 to volts.
+        let i_ideal: Vec<f64> = g_us.iter().map(|&g| v_read * g).collect();
+        // Cumulative downstream current through each segment: segment s
+        // (between row s−1 and s) carries Σ_{r≥s} I_r.
+        let mut suffix = vec![0.0f64; n + 1];
+        for r in (0..n).rev() {
+            suffix[r] = suffix[r + 1] + i_ideal[r];
+        }
+        // Voltage drop at row r = R_w · Σ_{s=1..=r} suffix[s].
+        let mut drop_uv = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            if r > 0 {
+                drop_uv += self.r_seg_ohm * suffix[r];
+            }
+            out.push(v_read - drop_uv * 1e-6);
+        }
+        out
+    }
+
+    /// Worst-case (far-end) relative V_read loss for a fully-on column
+    /// of `rows` cells at conductance `g_us` each.
+    pub fn worst_case_loss(&self, rows: usize, g_us: f64, v_read: f64) -> f64 {
+        let g = vec![g_us; rows];
+        let v = self.effective_v_read(&g, v_read);
+        1.0 - v[rows - 1] / v_read
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn near_cell_sees_full_v_read() {
+        let p = Parasitics::metal2();
+        let g = vec![1.0 / 3.0; 128];
+        let v = p.effective_v_read(&g, 0.1);
+        assert_eq!(v[0], 0.1);
+        assert!(v[127] < 0.1);
+    }
+
+    #[test]
+    fn loss_negligible_at_128_rows_with_mohm_cells() {
+        // The paper's scaling argument: MΩ cells + 2 Ω wire → loss ≈
+        // R_w·G·n²/2 ≈ 2·0.33e-6·8192 ≈ 0.5 %. Stays below 1 %.
+        let p = Parasitics::metal2();
+        let loss = p.worst_case_loss(128, 1.0 / 3.0, 0.1);
+        assert!(loss < 0.01, "loss {loss}");
+        assert!(loss > 1e-4); // but not zero — the model is active
+    }
+
+    #[test]
+    fn loss_grows_quadratically_with_rows() {
+        let p = Parasitics::metal2();
+        let l128 = p.worst_case_loss(128, 1.0 / 3.0, 0.1);
+        let l512 = p.worst_case_loss(512, 1.0 / 3.0, 0.1);
+        let ratio = l512 / l128;
+        assert!(
+            (ratio - 16.0).abs() < 1.5,
+            "expected ~16× at 4× rows, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn inactive_cells_draw_no_current() {
+        let p = Parasitics { r_seg_ohm: 100.0 };
+        let mut g = vec![0.0; 64];
+        g[63] = 1.0 / 3.0; // one far cell active
+        let v = p.effective_v_read(&g, 0.1);
+        // Drop = 63 segments × its own current only.
+        let i = 0.1 / 3.0; // µA
+        let want = 0.1 - 63.0 * 100.0 * i * 1e-6;
+        assert!((v[63] - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_resistance_cells_would_break_scaling() {
+        // Counterfactual: kΩ-class cells (ReRAM-like, G = 100 µS) lose
+        // >50 % at 512 rows — the paper's motivation for MΩ MTJ stacks.
+        let p = Parasitics::metal2();
+        let loss = p.worst_case_loss(512, 100.0, 0.1);
+        assert!(loss > 0.5, "loss {loss}");
+    }
+}

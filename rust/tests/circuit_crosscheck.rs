@@ -1,0 +1,165 @@
+//! Cross-checks between the two resolutions of the circuit engine:
+//! the event-analytic hot path and dense RK4/Euler transients must agree
+//! to discretization error, and both must match hand-derived closed forms.
+
+use spikemram::circuit::osg::{self, OsgParams};
+use spikemram::circuit::transient::{integrate, TransientConfig, TransientSystem};
+use spikemram::config::MacroConfig;
+use spikemram::util::rng::Rng;
+
+fn params() -> OsgParams {
+    let cfg = MacroConfig::default();
+    OsgParams::ideal(cfg.v_read(), cfg.c_rt_ff, cfg.c_com_ff, cfg.i_com_ua)
+}
+
+/// The droop-mode column as a TransientSystem for RK4.
+struct DroopColumn {
+    windows: Vec<(f64, f64)>,
+    v_read: f64,
+    c_ff: f64,
+}
+
+impl TransientSystem for DroopColumn {
+    fn dim(&self) -> usize {
+        1
+    }
+    fn deriv(&self, t: f64, v: &[f64], dv: &mut [f64]) {
+        let g_on: f64 = self
+            .windows
+            .iter()
+            .filter(|&&(tf, _)| t < tf)
+            .map(|&(_, g)| g)
+            .sum();
+        dv[0] = g_on * (self.v_read - v[0]) / self.c_ff;
+    }
+    fn names(&self) -> Vec<String> {
+        vec!["v_charge".into()]
+    }
+}
+
+#[test]
+fn analytic_droop_matches_rk4_integration() {
+    let mut rng = Rng::new(2001);
+    for _case in 0..10 {
+        let k = 1 + rng.below(64) as usize;
+        let windows: Vec<(f64, f64)> = (0..k)
+            .map(|_| (rng.uniform(0.5, 40.0), rng.uniform(0.1, 0.34)))
+            .collect();
+        let t_end = windows.iter().map(|&(t, _)| t).fold(0.0, f64::max);
+
+        let mut p = params();
+        p.clamp_cm_enabled = false;
+        let analytic = osg::charge_phase(&p, &windows, t_end);
+
+        let sys = DroopColumn {
+            windows: windows.clone(),
+            v_read: p.v_read,
+            c_ff: p.c_rt_ff,
+        };
+        let (v, _) = integrate(
+            &sys,
+            &[0.0],
+            &TransientConfig {
+                dt_ns: 0.0005,
+                t_end_ns: t_end,
+                record_stride: 1_000_000,
+            },
+        );
+        // RK4 smears the conductance steps over one dt; tolerance reflects
+        // that, not model disagreement.
+        assert!(
+            (v[0] - analytic).abs() < 5e-5,
+            "rk4 {} vs analytic {analytic}",
+            v[0]
+        );
+    }
+}
+
+#[test]
+fn analytic_mirror_charge_equals_closed_form_sum() {
+    let mut rng = Rng::new(2002);
+    let p = params();
+    for _case in 0..20 {
+        let k = 1 + rng.below(128) as usize;
+        let windows: Vec<(f64, f64)> = (0..k)
+            .map(|_| (rng.uniform(0.2, 51.0), rng.uniform(0.16, 0.34)))
+            .collect();
+        let t_end = windows.iter().map(|&(t, _)| t).fold(0.0, f64::max);
+        let got = osg::charge_phase(&p, &windows, t_end);
+        let want: f64 = windows
+            .iter()
+            .map(|&(t, g)| p.v_read * t * g / p.c_rt_ff)
+            .sum();
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn droop_never_exceeds_mirror_charge() {
+    let mut rng = Rng::new(2003);
+    for _case in 0..20 {
+        let k = 1 + rng.below(128) as usize;
+        let windows: Vec<(f64, f64)> = (0..k)
+            .map(|_| (rng.uniform(0.2, 51.0), rng.uniform(0.16, 0.34)))
+            .collect();
+        let t_end = windows.iter().map(|&(t, _)| t).fold(0.0, f64::max);
+        let ideal = params();
+        let mut droop = ideal;
+        droop.clamp_cm_enabled = false;
+        let v_i = osg::charge_phase(&ideal, &windows, t_end);
+        let v_d = osg::charge_phase(&droop, &windows, t_end);
+        assert!(v_d <= v_i + 1e-12, "droop {v_d} > ideal {v_i}");
+        assert!(v_d >= 0.0);
+        // Droop charge is also bounded by V_read (RC asymptote).
+        assert!(v_d <= ideal.v_read + 1e-12);
+    }
+}
+
+#[test]
+fn compare_phase_inverts_charge_linearly() {
+    let p = params();
+    let mut rng = Rng::new(2004);
+    for _ in 0..50 {
+        let v = rng.uniform(0.0, 1.0);
+        let t = osg::compare_phase(&p, v);
+        // slope I/C = 0.01 V/ns ⇒ t = 100·v
+        assert!((t - 100.0 * v).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn full_macro_vs_manual_column_sum() {
+    // The macro's event loop must agree with per-column manual evaluation.
+    use spikemram::macro_model::CimMacro;
+    let cfg = MacroConfig::default();
+    let mut rng = Rng::new(2005);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let mut m = CimMacro::new(cfg.clone());
+    m.program(&codes);
+    let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+    let r = m.mvm(&x);
+
+    let levels = cfg.level_map.levels();
+    let p = params();
+    for c in [0usize, 17, 64, 127] {
+        let windows: Vec<(f64, f64)> = (0..cfg.rows)
+            .filter(|&row| x[row] > 0)
+            .map(|row| {
+                (
+                    x[row] as f64 * cfg.t_bit_ns,
+                    levels[codes[row * cfg.cols + c] as usize],
+                )
+            })
+            .collect();
+        let t_end = windows.iter().map(|&(t, _)| t).fold(0.0, f64::max);
+        let col = osg::convert(&p, &windows, t_end);
+        assert!(
+            (col.t_out_ns - r.t_out_ns[c]).abs() < 1e-9,
+            "col {c}: {} vs {}",
+            col.t_out_ns,
+            r.t_out_ns[c]
+        );
+    }
+}

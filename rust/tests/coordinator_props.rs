@@ -1,0 +1,248 @@
+//! Property-based tests on coordinator + macro invariants (testkit).
+//!
+//! These are the invariants DESIGN.md calls out for the L3 contribution:
+//! routing correctness (results independent of policy/workers), batching
+//! conservation (no request lost or duplicated), tiling linearity, and
+//! the macro's Eq. 2 exactness over the whole input/weight space.
+
+use spikemram::config::MacroConfig;
+use spikemram::coordinator::{
+    Batcher, Policy, Request, Scheduler, TileOp, TiledMatrix,
+};
+use spikemram::macro_model::CimMacro;
+use spikemram::testkit::{self, gen, PropConfig};
+use spikemram::util::rng::Rng;
+
+#[test]
+fn prop_macro_mvm_equals_digital_oracle() {
+    testkit::check(
+        PropConfig { cases: 24, seed: 0xA },
+        "mvm == oracle",
+        |rng| {
+            let density = rng.uniform(0.05, 1.0);
+            (
+                gen::codes(rng, 128, 128),
+                gen::sparse_input(rng, 128, density),
+            )
+        },
+        |(codes, x)| {
+            let mut m = CimMacro::new(MacroConfig::default());
+            m.program(codes);
+            let got = m.mvm(x).y_mac;
+            let want = m.ideal_mvm(x);
+            for (g, w) in got.iter().zip(&want) {
+                testkit::assert_close(*g, *w, 1e-9, 1e-6)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mvm_is_linear_in_inputs() {
+    // Eq. 2: mvm(a + b) == mvm(a) + mvm(b) (within the 8-bit range).
+    testkit::check(
+        PropConfig { cases: 16, seed: 0xB },
+        "mvm additivity",
+        |rng| {
+            let codes = gen::codes(rng, 128, 128);
+            let a: Vec<u32> = (0..128).map(|_| rng.below(128) as u32).collect();
+            let b: Vec<u32> = (0..128).map(|_| rng.below(128) as u32).collect();
+            (codes, a, b)
+        },
+        |(codes, a, b)| {
+            let mut m = CimMacro::new(MacroConfig::default());
+            m.program(codes);
+            let ya = m.mvm(a).y_mac;
+            let yb = m.mvm(b).y_mac;
+            let sum: Vec<u32> = a.iter().zip(b).map(|(x, y)| x + y).collect();
+            let ys = m.mvm(&sum).y_mac;
+            for c in 0..128 {
+                testkit::assert_close(ys[c], ya[c] + yb[c], 1e-9, 1e-6)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_results_independent_of_policy_and_workers() {
+    testkit::check(
+        PropConfig { cases: 8, seed: 0xC },
+        "scheduling invariance",
+        |rng| {
+            let row_tiles = 1 + rng.below(2) as usize;
+            let codes = gen::codes(rng, 128 * row_tiles, 128);
+            let tm = TiledMatrix::new(&codes, 128 * row_tiles, 128, 128);
+            let n_ops = 4 + rng.below(8) as usize;
+            let ops: Vec<TileOp> = (0..n_ops)
+                .map(|_| TileOp {
+                    tile_idx: rng.below(tm.num_tiles() as u64) as usize,
+                    x: gen::input_vec(rng, 128),
+                    arrival_ns: 0.0,
+                })
+                .collect();
+            let workers = 1 + rng.below(4) as usize;
+            (tm, ops, workers)
+        },
+        |(tm, ops, workers)| {
+            let cfg = MacroConfig::default();
+            let base = Scheduler::new(&cfg, 1, Policy::RoundRobin)
+                .run(tm, ops)
+                .results;
+            for policy in
+                [Policy::RoundRobin, Policy::LeastLoaded, Policy::TileAffinity]
+            {
+                let r = Scheduler::new(&cfg, *workers, policy).run(tm, ops);
+                if r.results != base {
+                    return Err(format!(
+                        "results differ under {policy:?}/{workers} workers"
+                    ));
+                }
+                // Completion times never precede arrivals.
+                for (op, done) in ops.iter().zip(&r.completions_ns) {
+                    if *done < op.arrival_ns {
+                        return Err("completion before arrival".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    testkit::check(
+        PropConfig { cases: 32, seed: 0xD },
+        "batching conservation",
+        |rng| {
+            let n = 1 + rng.below(64) as usize;
+            let max_batch = 1 + rng.below(16) as usize;
+            let timeout = rng.uniform(1.0, 500.0);
+            let arrivals: Vec<f64> = {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.uniform(0.0, 100.0);
+                        t
+                    })
+                    .collect()
+            };
+            (arrivals, max_batch, timeout)
+        },
+        |(arrivals, max_batch, timeout)| {
+            let mut b: Batcher<u64> = Batcher::new(*max_batch, *timeout);
+            let mut seen: Vec<u64> = Vec::new();
+            for (i, &t) in arrivals.iter().enumerate() {
+                // Poll timeouts before each arrival (virtual time moves).
+                while let Some(batch) = b.poll(t) {
+                    seen.extend(batch.requests.iter().map(|r| r.id));
+                }
+                if let Some(batch) = b.push(
+                    Request {
+                        id: i as u64,
+                        payload: i as u64,
+                        arrived_ns: t,
+                    },
+                    t,
+                ) {
+                    if batch.requests.len() > *max_batch {
+                        return Err("batch exceeded max size".into());
+                    }
+                    seen.extend(batch.requests.iter().map(|r| r.id));
+                }
+            }
+            let t_end = arrivals.last().unwrap() + timeout * 2.0;
+            while let Some(batch) = b.poll(t_end) {
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            if let Some(batch) = b.flush(t_end) {
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            seen.sort_unstable();
+            let want: Vec<u64> = (0..arrivals.len() as u64).collect();
+            if seen != want {
+                return Err(format!("lost/dup requests: {seen:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_mvm_equals_dense_for_ragged_shapes() {
+    testkit::check(
+        PropConfig { cases: 12, seed: 0xE },
+        "ragged tiling correctness",
+        |rng| {
+            let k = 1 + rng.below(300) as usize;
+            let n = 1 + rng.below(200) as usize;
+            let codes = gen::codes(rng, k, n);
+            let x = gen::input_vec(rng, k);
+            (k, n, codes, x)
+        },
+        |(k, n, codes, x)| {
+            let levels = MacroConfig::default().level_map.levels();
+            let mut want = vec![0.0f64; *n];
+            for r in 0..*k {
+                for c in 0..*n {
+                    want[c] +=
+                        x[r] as f64 * levels[codes[r * n + c] as usize];
+                }
+            }
+            let tm = TiledMatrix::new(codes, *k, *n, 128);
+            let xp = tm.split_input(x);
+            let mut partials = Vec::new();
+            for ti in 0..tm.row_tiles {
+                let mut row = Vec::new();
+                for tj in 0..tm.col_tiles {
+                    let tc = tm.tile_codes(ti, tj);
+                    let mut part = vec![0.0f64; 128];
+                    for r in 0..128 {
+                        let xv = xp[ti][r] as f64;
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        for (c, p) in part.iter_mut().enumerate() {
+                            *p += xv * levels[tc[r * 128 + c] as usize];
+                        }
+                    }
+                    row.push(part);
+                }
+                partials.push(row);
+            }
+            let got = tm.accumulate(&partials);
+            for (g, w) in got.iter().zip(&want) {
+                testkit::assert_close(*g, *w, 1e-9, 1e-6)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_count_tracks_active_rows() {
+    // Event-driven invariant: events = 2·(active rows) + cols.
+    testkit::check(
+        PropConfig { cases: 16, seed: 0xF },
+        "event sparsity",
+        |rng| {
+            let density = rng.uniform(0.0, 1.0);
+            gen::sparse_input(rng, 128, density)
+        },
+        |x| {
+            let mut rng = Rng::new(7);
+            let codes = gen::codes(&mut rng, 128, 128);
+            let mut m = CimMacro::new(MacroConfig::default());
+            m.program(&codes);
+            let active = x.iter().filter(|&&v| v > 0).count() as u64;
+            let r = m.mvm(x);
+            let want = if active == 0 { 128 } else { 2 * active + 128 };
+            if r.events != want {
+                return Err(format!("events {} != {want}", r.events));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,122 @@
+//! End-to-end pipeline test (experiment E9, small scale): generate data,
+//! train float, quantize to conductance codes, run inference through the
+//! full behavioral macro stack, and check accuracy + energy accounting.
+//! The full-size run lives in `examples/snn_inference.rs`.
+
+use spikemram::config::{LevelMap, MacroConfig};
+use spikemram::snn;
+
+#[test]
+fn train_quantize_deploy_pipeline() {
+    let train_data = snn::Dataset::generate(200, 3001);
+    let test_data = snn::Dataset::generate(80, 3002);
+    let (model, train_acc) = snn::train(&train_data, 5, 9);
+    assert!(train_acc > 0.85, "float train acc {train_acc}");
+
+    let cfg = MacroConfig::default();
+    let mut mm = snn::MacroMlp::from_float(
+        &model,
+        &train_data,
+        &cfg,
+        LevelMap::DeviceTrue,
+    );
+    let (acc, stats) = mm.evaluate(&test_data);
+    let float_acc = snn::accuracy(&model, &test_data);
+    assert!(
+        acc > float_acc - 0.2,
+        "macro acc {acc} too far below float {float_acc}"
+    );
+
+    // Energy accounting must be self-consistent.
+    let n = test_data.len() as f64;
+    let per_inf_pj = stats.energy.total_pj() / n;
+    // 5 macro MVMs per inference (2 + 1 + 1 tiles… layer1 has 2 row
+    // tiles ×1 col tile, layers 2–3 one tile each) ≈ 4 × ~134 pJ.
+    assert!(
+        per_inf_pj > 100.0 && per_inf_pj < 2000.0,
+        "per-inference energy {per_inf_pj} pJ"
+    );
+    assert!(stats.latency_ns / n > 100.0); // 3 dependent layers
+    let tops_w = spikemram::energy::tops_per_watt(
+        stats.macs * 2,
+        stats.energy.total_fj(),
+    );
+    // Efficiency on the real (sparse, low-activity) workload can exceed
+    // the uniform-random headline; sanity-band only.
+    assert!(
+        tops_w > 50.0 && tops_w < 5000.0,
+        "end-to-end {tops_w} TOPS/W"
+    );
+}
+
+#[test]
+fn device_true_vs_ideal_levels_ablation() {
+    // DESIGN.md §7: the non-uniform device levels must not collapse
+    // accuracy relative to idealized levels (the quantizer targets the
+    // true levels), but ideal levels should never be *worse*.
+    let train_data = snn::Dataset::generate(200, 3003);
+    let test_data = snn::Dataset::generate(80, 3004);
+    let (model, _) = snn::train(&train_data, 5, 11);
+    let cfg = MacroConfig::default();
+
+    let mut device = snn::MacroMlp::from_float(
+        &model,
+        &train_data,
+        &cfg,
+        LevelMap::DeviceTrue,
+    );
+    let (acc_device, _) = device.evaluate(&test_data);
+
+    let ideal_cfg = MacroConfig {
+        level_map: LevelMap::IdealLinear,
+        ..cfg
+    };
+    let mut ideal = snn::MacroMlp::from_float(
+        &model,
+        &train_data,
+        &ideal_cfg,
+        LevelMap::IdealLinear,
+    );
+    let (acc_ideal, _) = ideal.evaluate(&test_data);
+
+    assert!(acc_device > 0.6, "device-true acc {acc_device}");
+    assert!(
+        acc_ideal >= acc_device - 0.1,
+        "ideal {acc_ideal} vs device {acc_device}"
+    );
+}
+
+#[test]
+fn nonideal_circuits_degrade_gracefully() {
+    use spikemram::config::NonIdeality;
+    let train_data = snn::Dataset::generate(150, 3005);
+    let test_data = snn::Dataset::generate(60, 3006);
+    let (model, _) = snn::train(&train_data, 5, 13);
+
+    let ideal_cfg = MacroConfig::default();
+    let mut ideal = snn::MacroMlp::from_float(
+        &model,
+        &train_data,
+        &ideal_cfg,
+        LevelMap::DeviceTrue,
+    );
+    let (acc_ideal, _) = ideal.evaluate(&test_data);
+
+    let noisy_cfg = MacroConfig {
+        nonideal: NonIdeality::realistic(),
+        ..MacroConfig::default()
+    };
+    let mut noisy = snn::MacroMlp::from_float(
+        &model,
+        &train_data,
+        &noisy_cfg,
+        LevelMap::DeviceTrue,
+    );
+    let (acc_noisy, _) = noisy.evaluate(&test_data);
+
+    // Realistic non-idealities cost a few points, not a collapse.
+    assert!(
+        acc_noisy > acc_ideal - 0.15,
+        "noisy {acc_noisy} vs ideal {acc_ideal}"
+    );
+}

@@ -1,0 +1,236 @@
+//! Integration: the three-layer stack composes.
+//!
+//! Loads the AOT HLO artifacts (built by `make artifacts`) into the PJRT
+//! runtime and cross-checks them against the behavioral macro simulator —
+//! the L1/L2 kernels and the L3 event-driven sim must implement the *same*
+//! math (Eq. 2) through entirely different code paths.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); tests are skipped
+//! with a notice when it is missing so plain `cargo test` stays green.
+
+use spikemram::config::MacroConfig;
+use spikemram::macro_model::CimMacro;
+use spikemram::runtime::{Manifest, Runtime, Value};
+use spikemram::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("SPIKEMRAM_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: {dir}/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_contract_matches_runtime_expectations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for name in [
+        "spiking_mvm_b8_128x128",
+        "spiking_mvm_b32_128x128",
+        "macro_fwd_b8",
+        "mlp_fwd_b16",
+        "fig7b_transient",
+    ] {
+        assert!(m.get(name).is_some(), "manifest missing {name}");
+        let e = m.get(name).unwrap();
+        assert!(
+            std::path::Path::new(&dir).join(&e.file).exists(),
+            "artifact file missing for {name}"
+        );
+    }
+    // The alpha the artifacts were lowered with must equal the rust config.
+    let alpha = m.get("spiking_mvm_b8_128x128").unwrap().alpha;
+    assert!((alpha - MacroConfig::default().alpha()).abs() < 1e-12);
+}
+
+#[test]
+fn pjrt_mvm_matches_behavioral_sim_bit_true() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = MacroConfig::default();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("spiking_mvm_b8_128x128").unwrap();
+
+    let mut rng = Rng::new(1001);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let mut sim = CimMacro::new(cfg.clone());
+    sim.program(&codes);
+
+    let xs: Vec<Vec<u32>> = (0..8)
+        .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+        .collect();
+    let mut t_in = vec![0.0f32; 8 * cfg.rows];
+    for (b, x) in xs.iter().enumerate() {
+        for (r, &v) in x.iter().enumerate() {
+            t_in[b * cfg.rows + r] = v as f32 * cfg.t_bit_ns as f32;
+        }
+    }
+    let out = exe
+        .run_f32(&[
+            Value::f32(t_in, &[8, cfg.rows]),
+            Value::i32(
+                codes.iter().map(|&c| c as i32).collect(),
+                &[cfg.rows, cfg.cols],
+            ),
+        ])
+        .unwrap();
+    for (b, x) in xs.iter().enumerate() {
+        let r = sim.mvm(x);
+        for c in 0..cfg.cols {
+            let pjrt = out[0][b * cfg.cols + c] as f64;
+            let sim_t = r.t_out_ns[c];
+            let rel = (pjrt - sim_t).abs() / sim_t.abs().max(1e-6);
+            assert!(
+                rel < 1e-5,
+                "batch {b} col {c}: pjrt {pjrt} vs sim {sim_t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_macro_fwd_decodes_to_digital_macs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = MacroConfig::default();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("macro_fwd_b8").unwrap();
+    let mut rng = Rng::new(1002);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let x: Vec<i32> = (0..8 * cfg.rows)
+        .map(|_| rng.below(256) as i32)
+        .collect();
+    let out = exe
+        .run_f32(&[
+            Value::i32(x.clone(), &[8, cfg.rows]),
+            Value::i32(
+                codes.iter().map(|&c| c as i32).collect(),
+                &[cfg.rows, cfg.cols],
+            ),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2, "macro_fwd returns (t_out, y)");
+    // y must equal the digital oracle.
+    let mut sim = CimMacro::new(cfg.clone());
+    sim.program(&codes);
+    for b in 0..8 {
+        let xb: Vec<u32> = (0..cfg.rows)
+            .map(|r| x[b * cfg.rows + r] as u32)
+            .collect();
+        let want = sim.ideal_mvm(&xb);
+        for c in 0..cfg.cols {
+            let got = out[1][b * cfg.cols + c] as f64;
+            let rel = (got - want[c]).abs() / want[c].max(1.0);
+            assert!(rel < 1e-4, "b{b} c{c}: {got} vs {}", want[c]);
+        }
+    }
+}
+
+#[test]
+fn pjrt_fig7b_transient_matches_rust_circuit_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = MacroConfig::default();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("fig7b_transient").unwrap();
+
+    let mut rng = Rng::new(1003);
+    let levels = cfg.level_map.levels();
+    let t_in: Vec<f32> = (0..128)
+        .map(|_| (rng.below(256) as f32) * cfg.t_bit_ns as f32)
+        .collect();
+    let g: Vec<f32> = (0..128)
+        .map(|_| levels[rng.below(4) as usize] as f32)
+        .collect();
+    let out = exe
+        .run_f32(&[
+            Value::f32(t_in.clone(), &[128]),
+            Value::f32(g.clone(), &[128]),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2, "(v_mirror, v_droop)");
+    let n = out[0].len();
+    assert_eq!(n, 1000);
+
+    // Rust analytic engine at the same probe time (t = 5 ns, dt = 0.01).
+    use spikemram::circuit::osg::{charge_phase, OsgParams};
+    let windows: Vec<(f64, f64)> = t_in
+        .iter()
+        .zip(&g)
+        .map(|(&t, &gg)| (t as f64, gg as f64))
+        .collect();
+    let ideal =
+        OsgParams::ideal(cfg.v_read(), cfg.c_rt_ff, cfg.c_com_ff, cfg.i_com_ua);
+    let mut droop = ideal;
+    droop.clamp_cm_enabled = false;
+
+    let t_probe = 5.0;
+    let clipped: Vec<(f64, f64)> = windows
+        .iter()
+        .map(|&(t, gg)| (t.min(t_probe), gg))
+        .collect();
+    let v_mirror_rust = charge_phase(&ideal, &clipped, t_probe);
+    let v_droop_rust = charge_phase(&droop, &clipped, t_probe);
+    let idx = 499; // step 499 ends at t = 5.0 ns
+    let v_mirror_pjrt = out[0][idx] as f64;
+    let v_droop_pjrt = out[1][idx] as f64;
+    assert!(
+        (v_mirror_pjrt - v_mirror_rust).abs() < 2e-3,
+        "mirror: {v_mirror_pjrt} vs {v_mirror_rust}"
+    );
+    assert!(
+        (v_droop_pjrt - v_droop_rust).abs() < 2e-3,
+        "droop: {v_droop_pjrt} vs {v_droop_rust}"
+    );
+    // And the droop ordering holds in both engines.
+    assert!(v_droop_pjrt < v_mirror_pjrt);
+}
+
+#[test]
+fn pjrt_server_backend_matches_sim_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    use spikemram::coordinator::{BackendKind, MacroServer, ServerConfig};
+    let cfg = MacroConfig::default();
+    let mut rng = Rng::new(1004);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+
+    let sim = MacroServer::start(
+        cfg.clone(),
+        codes.clone(),
+        ServerConfig {
+            backend: BackendKind::Sim,
+            workers: 1,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let pjrt = MacroServer::start(
+        cfg.clone(),
+        codes,
+        ServerConfig {
+            backend: BackendKind::Pjrt { artifacts_dir: dir },
+            workers: 1,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    for _ in 0..4 {
+        let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+        let a = sim.call(x.clone());
+        let b = pjrt.call(x);
+        for (va, vb) in a.iter().zip(&b) {
+            let rel = (va - vb).abs() / va.abs().max(1.0);
+            assert!(rel < 1e-4, "{va} vs {vb}");
+        }
+    }
+    sim.shutdown();
+    pjrt.shutdown();
+}
