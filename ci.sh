@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI gate for spikemram. Stages:
+#   1. tier-1 (the hard gate, command verbatim from ROADMAP.md): release
+#      build of lib+bin, then the full test suite (debug profile)
+#   2. all-targets compile: benches + examples must keep building
+#   3. lint: rustfmt + clippy, warnings fatal
+#   4. docs: rustdoc must emit zero warnings
+#
+# The default feature set is hermetic (no network, no xla_extension); see
+# Cargo.toml and README.md for the `pjrt` feature.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> tier-1: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+echo "==> compile all targets (benches, examples, bin)"
+cargo build --all-targets --release
+
+echo "==> lint: cargo fmt --check && cargo clippy -D warnings"
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+
+echo "==> docs: cargo doc --no-deps (warnings are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "CI OK"

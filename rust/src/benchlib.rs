@@ -1,5 +1,6 @@
-//! Criterion-style benchmark harness (substrate — the `criterion` crate
-//! is unavailable offline; see Cargo.toml note).
+//! Criterion-style benchmark harness (DESIGN.md S0; substrate — the
+//! `criterion` crate is unavailable offline, so every `benches/*.rs`
+//! target is declared with `harness = false` in Cargo.toml).
 //!
 //! Provides warmup, timed sampling, and robust summary statistics
 //! (median / mean / p95, MAD-based spread) with the familiar

@@ -1,5 +1,6 @@
-//! Monte-Carlo corner analysis (the "thoroughly validated" claim of §I,
-//! made quantitative): sweep process corners and mismatch seeds, measure
+//! Monte-Carlo corner analysis (DESIGN.md S6, experiment E-MC — the
+//! "thoroughly validated" claim of §I made quantitative): sweep process
+//! corners and mismatch seeds, measure
 //! the distribution of linearity (R²), MAC error, and energy across many
 //! virtual die — the behavioral stand-in for the paper's Cadence MC runs.
 

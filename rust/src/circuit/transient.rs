@@ -1,5 +1,5 @@
-//! Fixed-step transient integrator — the waveform-fidelity path of the
-//! behavioral circuit engine (used for Figs 3c / 5 / 7b).
+//! Fixed-step transient integrator (DESIGN.md S6) — the waveform-fidelity
+//! path of the behavioral circuit engine (used for Figs 3c / 5 / 7b).
 //!
 //! The *hot* path of the simulator never uses this: macro ops are solved
 //! event-analytically (piecewise closed forms between spike events, see

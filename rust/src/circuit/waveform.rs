@@ -1,6 +1,6 @@
-//! Waveform capture: named (t, value) traces recorded by the transient
-//! engine, exportable as CSV — the repo's equivalent of the paper's
-//! Cadence transient plots (Figs 3c, 5, 7b).
+//! Waveform capture (DESIGN.md S6): named (t, value) traces recorded by
+//! the transient engine, exportable as CSV — the repo's equivalent of the
+//! paper's Cadence transient plots (Figs 3c, 5, 7b).
 
 use std::fmt::Write as _;
 

@@ -1,6 +1,6 @@
-//! Serving metrics: throughput counters + latency histogram, shared by the
-//! server threads behind a mutex (coarse-grained is fine — the hot path is
-//! the macro computation, not metric updates).
+//! Serving metrics (DESIGN.md S11): throughput counters + latency
+//! histogram, shared by the server threads behind a mutex (coarse-grained
+//! is fine — the hot path is the macro computation, not metric updates).
 
 use std::sync::Mutex;
 use std::time::Instant;

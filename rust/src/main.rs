@@ -10,6 +10,13 @@
 //! spikemram serve [--requests N] [--workers N] [--batch N] [--backend ...]
 //! spikemram selfcheck [--artifacts DIR]
 //! ```
+//!
+//! `--backend pjrt` uses the real XLA/PJRT runtime when the crate is built
+//! with `--features pjrt`, and the pure-Rust artifact interpreter
+//! (DESIGN.md S12) otherwise — so the `pjrt` code paths work on the
+//! hermetic default build. `selfcheck` is the exception: it verifies the
+//! generated `artifacts/` against the simulator and reports an error when
+//! the manifest is missing.
 
 use anyhow::{bail, Context, Result};
 

@@ -1,6 +1,6 @@
-//! Output helpers for the repro harness: results directory management,
-//! CSV/markdown writers, and a tiny fixed-width table builder shared by
-//! all experiments.
+//! Output helpers for the repro harness (DESIGN.md S14): results directory
+//! management, CSV/markdown writers, and a tiny fixed-width table builder
+//! shared by all experiments.
 
 use std::fmt::Write as _;
 use std::path::PathBuf;

@@ -1,0 +1,543 @@
+//! Pure-Rust artifact interpreter (DESIGN.md S12) — the default runtime
+//! backend when the crate is built without the `pjrt` feature.
+//!
+//! Presents the exact same API as `runtime::pjrt` (`Runtime` → `load` →
+//! `Executable::run_f32`) but instead of compiling HLO text it
+//! *interprets the artifact's functional contract*: every AOT entry in
+//! `python/compile/aot.py` is a closed-form map (Eq. 2 and the Euler
+//! transient), so the interpreter re-evaluates the same math in f32 —
+//! bit-close to the XLA execution — with zero native dependencies. The
+//! `artifacts/` directory is optional: when `manifest.json` exists its
+//! `alpha`/`t_bit_ns` calibration is honored and argument shapes are taken
+//! from the contract; otherwise shapes are parsed from the entry name and
+//! the Table I defaults apply (DESIGN.md §1, §6).
+//!
+//! Supported entries: `spiking_mvm_b{B}_{K}x{N}`, `macro_fwd_b{B}`, and
+//! `fig7b_transient`. The MLP forwards (`mlp_fwd_*`) involve per-layer
+//! requantization state and are only served by the real PJRT backend —
+//! loading them here returns a descriptive error.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::Manifest;
+use super::value::Value;
+
+/// Device-true conductance LUT in f32 (matches `LEVELS_DEVICE_TRUE` in
+/// `python/compile/kernels/spiking_mvm.py`).
+const LEVELS: [f32; 4] = [1.0 / 6.0, 1.0 / 5.0, 1.0 / 4.0, 1.0 / 3.0];
+
+/// Which closed-form program an artifact name denotes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Program {
+    /// `spiking_mvm_b{B}_{K}x{N}`: (t_in f32[B,K], codes i32[K,N]) →
+    /// (t_out f32[B,N] = α · T_in·G).
+    SpikingMvm {
+        batch: usize,
+        rows: usize,
+        cols: usize,
+    },
+    /// `macro_fwd_b{B}`: (x i32[B,K], codes i32[K,N]) → (t_out, y) with
+    /// y = t_out / (α·T_bit).
+    MacroFwd {
+        batch: usize,
+        rows: usize,
+        cols: usize,
+    },
+    /// `fig7b_transient`: (t_in f32[K], g f32[K]) → (v_mirror[n], v_droop[n])
+    /// Euler traces, dt = 0.01 ns, n = 1000.
+    Fig7bTransient { rows: usize, n_steps: usize },
+}
+
+/// A "compiled" artifact: its program plus lowering-time calibration.
+pub struct Executable {
+    pub name: String,
+    program: Program,
+    alpha: f64,
+    t_bit_ns: f64,
+}
+
+fn parse_name(name: &str) -> Option<Program> {
+    if let Some(rest) = name.strip_prefix("spiking_mvm_b") {
+        let (b, dims) = rest.split_once('_')?;
+        let (k, n) = dims.split_once('x')?;
+        return Some(Program::SpikingMvm {
+            batch: b.parse().ok()?,
+            rows: k.parse().ok()?,
+            cols: n.parse().ok()?,
+        });
+    }
+    if let Some(b) = name.strip_prefix("macro_fwd_b") {
+        return Some(Program::MacroFwd {
+            batch: b.parse().ok()?,
+            rows: 128,
+            cols: 128,
+        });
+    }
+    if name == "fig7b_transient" {
+        return Some(Program::Fig7bTransient {
+            rows: 128,
+            n_steps: 1000,
+        });
+    }
+    None
+}
+
+/// Override the name-derived geometry with the manifest's argument shapes
+/// (the authoritative contract when artifacts exist): arg 0 is `[B, K]`
+/// (or `[K]` for the transient), arg 1 is `[K, N]`.
+fn reshape_from_manifest(
+    program: Program,
+    args: &[super::artifacts::ArgSpec],
+) -> Program {
+    match (program, args) {
+        (Program::SpikingMvm { .. }, [a0, a1])
+            if a0.shape.len() == 2 && a1.shape.len() == 2 =>
+        {
+            Program::SpikingMvm {
+                batch: a0.shape[0],
+                rows: a0.shape[1],
+                cols: a1.shape[1],
+            }
+        }
+        (Program::MacroFwd { .. }, [a0, a1])
+            if a0.shape.len() == 2 && a1.shape.len() == 2 =>
+        {
+            Program::MacroFwd {
+                batch: a0.shape[0],
+                rows: a0.shape[1],
+                cols: a1.shape[1],
+            }
+        }
+        (Program::Fig7bTransient { n_steps, .. }, [a0, _])
+            if a0.shape.len() == 1 =>
+        {
+            Program::Fig7bTransient {
+                rows: a0.shape[0],
+                n_steps,
+            }
+        }
+        _ => program,
+    }
+}
+
+fn expand_codes_f32(codes: &[i32], rows: usize, cols: usize) -> Result<Vec<f32>> {
+    let mut g = Vec::with_capacity(rows * cols);
+    for &c in codes {
+        if !(0..4).contains(&c) {
+            bail!("weight code {c} out of range 0..=3");
+        }
+        g.push(LEVELS[c as usize]);
+    }
+    Ok(g)
+}
+
+/// t_out[b,n] = alpha · Σ_k t_in[b,k]·G[k,n], f32 accumulation like XLA.
+fn spiking_mvm_f32(
+    t_in: &[f32],
+    g: &[f32],
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    alpha: f32,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * cols];
+    for b in 0..batch {
+        let x = &t_in[b * rows..(b + 1) * rows];
+        let o = &mut out[b * cols..(b + 1) * cols];
+        for (k, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let grow = &g[k * cols..(k + 1) * cols];
+            for (ov, &gv) in o.iter_mut().zip(grow) {
+                *ov += xv * gv;
+            }
+        }
+        for ov in o.iter_mut() {
+            *ov *= alpha;
+        }
+    }
+    out
+}
+
+impl Executable {
+    fn check_shape(&self, got: &Value, want: &[usize], arg: usize) -> Result<()> {
+        if got.shape() != want {
+            bail!(
+                "{}: arg {arg} has shape {:?}, expected {:?}",
+                self.name,
+                got.shape(),
+                want
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with positional args; returns the flattened f32 outputs of
+    /// the result tuple — the same contract as the PJRT backend.
+    pub fn run_f32(&self, args: &[Value]) -> Result<Vec<Vec<f32>>> {
+        match self.program {
+            Program::SpikingMvm { batch, rows, cols } => {
+                if args.len() != 2 {
+                    bail!("{}: expected 2 args, got {}", self.name, args.len());
+                }
+                self.check_shape(&args[0], &[batch, rows], 0)?;
+                self.check_shape(&args[1], &[rows, cols], 1)?;
+                let g = expand_codes_f32(args[1].as_i32(), rows, cols)?;
+                let t_out = spiking_mvm_f32(
+                    args[0].as_f32(),
+                    &g,
+                    batch,
+                    rows,
+                    cols,
+                    self.alpha as f32,
+                );
+                Ok(vec![t_out])
+            }
+            Program::MacroFwd { batch, rows, cols } => {
+                if args.len() != 2 {
+                    bail!("{}: expected 2 args, got {}", self.name, args.len());
+                }
+                self.check_shape(&args[0], &[batch, rows], 0)?;
+                self.check_shape(&args[1], &[rows, cols], 1)?;
+                let t_bit = self.t_bit_ns as f32;
+                let t_in: Vec<f32> = args[0]
+                    .as_i32()
+                    .iter()
+                    .map(|&x| x as f32 * t_bit)
+                    .collect();
+                let g = expand_codes_f32(args[1].as_i32(), rows, cols)?;
+                let t_out = spiking_mvm_f32(
+                    &t_in,
+                    &g,
+                    batch,
+                    rows,
+                    cols,
+                    self.alpha as f32,
+                );
+                let scale = 1.0f32 / (self.alpha as f32 * t_bit);
+                let y: Vec<f32> = t_out.iter().map(|&t| t * scale).collect();
+                Ok(vec![t_out, y])
+            }
+            Program::Fig7bTransient { rows, n_steps } => {
+                if args.len() != 2 {
+                    bail!("{}: expected 2 args, got {}", self.name, args.len());
+                }
+                self.check_shape(&args[0], &[rows], 0)?;
+                self.check_shape(&args[1], &[rows], 1)?;
+                let t_in = args[0].as_f32();
+                let g = args[1].as_f32();
+                // Constants of python/compile/model.py::fig7b_transient.
+                let (dt, v_read, c_ff, k_mirror) = (0.01f32, 0.1f32, 200.0f32, 1.0f32);
+                let mut vm = 0.0f32;
+                let mut vd = 0.0f32;
+                let mut out_m = Vec::with_capacity(n_steps);
+                let mut out_d = Vec::with_capacity(n_steps);
+                for s in 0..n_steps {
+                    let t = s as f32 * dt;
+                    let g_on: f32 = t_in
+                        .iter()
+                        .zip(g)
+                        .filter(|&(&ti, _)| t < ti)
+                        .map(|(_, &gv)| gv)
+                        .sum();
+                    vm += k_mirror * v_read * g_on * dt / c_ff;
+                    vd += g_on * (v_read - vd) * dt / c_ff;
+                    out_m.push(vm);
+                    out_d.push(vd);
+                }
+                Ok(vec![out_m, out_d])
+            }
+        }
+    }
+}
+
+/// Interpreter runtime mirroring the PJRT backend's `Runtime` API.
+pub struct Runtime {
+    artifacts_dir: PathBuf,
+    manifest: Option<Manifest>,
+    cache: HashMap<String, Arc<Executable>>,
+}
+
+impl Runtime {
+    /// Root the interpreter at an artifacts directory. The directory (and
+    /// its `manifest.json`) may be absent — entries are then derived from
+    /// their names with Table I default calibration.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir).ok();
+        Ok(Runtime {
+            artifacts_dir: dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        "interp (pure Rust; build with --features pjrt for PJRT)".to_string()
+    }
+
+    /// Resolve `name` to an interpretable program (cached).
+    pub fn load(&mut self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let program = parse_name(name).with_context(|| {
+            format!(
+                "artifact {name:?} is not interpretable by the pure-Rust \
+                 backend (mlp_fwd_* and custom entries need --features pjrt); \
+                 artifacts dir: {}",
+                self.artifacts_dir.display()
+            )
+        })?;
+        // Calibration and shapes from the manifest when available; the
+        // name-derived contract with Table I defaults otherwise.
+        let cfg = crate::config::MacroConfig::default();
+        let entry = self.manifest.as_ref().and_then(|m| m.get(name));
+        let program = match entry {
+            Some(e) => reshape_from_manifest(program, &e.args),
+            None => program,
+        };
+        let (alpha, t_bit_ns) = match entry {
+            Some(e) => (
+                if e.alpha > 0.0 { e.alpha } else { cfg.alpha() },
+                e.t_bit_ns,
+            ),
+            None => (cfg.alpha(), cfg.t_bit_ns),
+        };
+        let e = Arc::new(Executable {
+            name: name.to_string(),
+            program,
+            alpha,
+            t_bit_ns,
+        });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MacroConfig;
+    use crate::macro_model::CimMacro;
+    use crate::util::rng::Rng;
+
+    fn load(name: &str) -> Arc<Executable> {
+        // Point at a directory that does not exist: name-derived contract.
+        let mut rt = Runtime::new("/nonexistent/artifacts").unwrap();
+        rt.load(name).unwrap()
+    }
+
+    #[test]
+    fn parses_entry_names() {
+        assert_eq!(
+            parse_name("spiking_mvm_b8_128x128"),
+            Some(Program::SpikingMvm {
+                batch: 8,
+                rows: 128,
+                cols: 128
+            })
+        );
+        assert_eq!(
+            parse_name("spiking_mvm_b32_128x128"),
+            Some(Program::SpikingMvm {
+                batch: 32,
+                rows: 128,
+                cols: 128
+            })
+        );
+        assert_eq!(
+            parse_name("macro_fwd_b8"),
+            Some(Program::MacroFwd {
+                batch: 8,
+                rows: 128,
+                cols: 128
+            })
+        );
+        assert!(parse_name("fig7b_transient").is_some());
+        assert!(parse_name("mlp_fwd_b16").is_none());
+        assert!(parse_name("spiking_mvm_bx_128x128").is_none());
+    }
+
+    #[test]
+    fn unsupported_entry_gives_descriptive_error() {
+        let mut rt = Runtime::new("/nonexistent/artifacts").unwrap();
+        let err = rt.load("mlp_fwd_b16").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("mlp_fwd"), "{msg}");
+    }
+
+    #[test]
+    fn spiking_mvm_matches_behavioral_sim() {
+        // The interp backend and the event-driven simulator implement the
+        // same Eq. 2 through different code paths — cross-check (the same
+        // invariant integration_stack.rs asserts for the PJRT backend).
+        let cfg = MacroConfig::default();
+        let exe = load("spiking_mvm_b8_128x128");
+        let mut rng = Rng::new(4001);
+        let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+            .map(|_| rng.below(4) as u8)
+            .collect();
+        let mut sim = CimMacro::new(cfg.clone());
+        sim.program(&codes);
+
+        let xs: Vec<Vec<u32>> = (0..8)
+            .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+            .collect();
+        let mut t_in = vec![0.0f32; 8 * cfg.rows];
+        for (b, x) in xs.iter().enumerate() {
+            for (r, &v) in x.iter().enumerate() {
+                t_in[b * cfg.rows + r] = v as f32 * cfg.t_bit_ns as f32;
+            }
+        }
+        let out = exe
+            .run_f32(&[
+                Value::f32(t_in, &[8, cfg.rows]),
+                Value::i32(
+                    codes.iter().map(|&c| c as i32).collect(),
+                    &[cfg.rows, cfg.cols],
+                ),
+            ])
+            .unwrap();
+        for (b, x) in xs.iter().enumerate() {
+            let r = sim.mvm(x);
+            for c in 0..cfg.cols {
+                let interp = out[0][b * cfg.cols + c] as f64;
+                let simulated = r.t_out_ns[c];
+                let rel = (interp - simulated).abs() / simulated.abs().max(1e-6);
+                assert!(rel < 1e-5, "b{b} c{c}: {interp} vs {simulated}");
+            }
+        }
+    }
+
+    #[test]
+    fn macro_fwd_decodes_to_digital_macs() {
+        let cfg = MacroConfig::default();
+        let exe = load("macro_fwd_b8");
+        let mut rng = Rng::new(4002);
+        let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+            .map(|_| rng.below(4) as u8)
+            .collect();
+        let x: Vec<i32> = (0..8 * cfg.rows)
+            .map(|_| rng.below(256) as i32)
+            .collect();
+        let out = exe
+            .run_f32(&[
+                Value::i32(x.clone(), &[8, cfg.rows]),
+                Value::i32(
+                    codes.iter().map(|&c| c as i32).collect(),
+                    &[cfg.rows, cfg.cols],
+                ),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let mut sim = CimMacro::new(cfg.clone());
+        sim.program(&codes);
+        for b in 0..8 {
+            let xb: Vec<u32> = (0..cfg.rows)
+                .map(|r| x[b * cfg.rows + r] as u32)
+                .collect();
+            let want = sim.ideal_mvm(&xb);
+            for c in 0..cfg.cols {
+                let got = out[1][b * cfg.cols + c] as f64;
+                let rel = (got - want[c]).abs() / want[c].max(1.0);
+                assert!(rel < 1e-4, "b{b} c{c}: {got} vs {}", want[c]);
+            }
+        }
+    }
+
+    #[test]
+    fn fig7b_droop_stays_below_mirror_trace() {
+        let exe = load("fig7b_transient");
+        let mut rng = Rng::new(4003);
+        let t_in: Vec<f32> = (0..128)
+            .map(|_| rng.below(256) as f32 * 0.2)
+            .collect();
+        let g: Vec<f32> = (0..128)
+            .map(|_| LEVELS[rng.below(4) as usize])
+            .collect();
+        let out = exe
+            .run_f32(&[Value::f32(t_in, &[128]), Value::f32(g, &[128])])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 1000);
+        // Mirror trace is monotone; droop trace never exceeds it.
+        for s in 1..1000 {
+            assert!(out[0][s] >= out[0][s - 1]);
+            assert!(out[1][s] <= out[0][s] + 1e-6);
+        }
+        assert!(out[1][999] < out[0][999]);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let exe = load("spiking_mvm_b8_128x128");
+        let err = exe
+            .run_f32(&[
+                Value::f32(vec![0.0; 8 * 127], &[8, 127]),
+                Value::i32(vec![0; 128 * 128], &[128, 128]),
+            ])
+            .unwrap_err();
+        assert!(format!("{err}").contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn manifest_shapes_override_name_derived_geometry() {
+        // A macro_fwd lowered for a 64-row geometry: the manifest's arg
+        // shapes are the contract, not the 128×128 name default.
+        let dir = std::env::temp_dir().join("spikemram_interp_shape_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"macro_fwd_b2": {"file": "x.hlo.txt",
+                "args": [{"shape": [2, 64], "dtype": "int32"},
+                         {"shape": [64, 32], "dtype": "int32"}],
+                "alpha": 0.05, "t_bit_ns": 0.2}}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let exe = rt.load("macro_fwd_b2").unwrap();
+        let out = exe
+            .run_f32(&[
+                Value::i32(vec![1; 2 * 64], &[2, 64]),
+                Value::i32(vec![0; 64 * 32], &[64, 32]),
+            ])
+            .unwrap();
+        assert_eq!(out[0].len(), 2 * 32);
+        // y = Σ x·G = 64 rows × 1 × G(0) = 64/6 per column.
+        assert!((out[1][0] - 64.0 / 6.0).abs() < 1e-3, "{}", out[1][0]);
+    }
+
+    #[test]
+    fn manifest_alpha_overrides_default() {
+        // Write a manifest with a distinctive alpha and confirm it's used.
+        let dir = std::env::temp_dir().join("spikemram_interp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"spiking_mvm_b8_128x128": {"file": "x.hlo.txt",
+                "args": [{"shape": [8, 128], "dtype": "float32"},
+                         {"shape": [128, 128], "dtype": "int32"}],
+                "alpha": 0.1, "t_bit_ns": 0.2}}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let exe = rt.load("spiking_mvm_b8_128x128").unwrap();
+        let t_in = vec![1.0f32; 8 * 128];
+        let codes = vec![3i32; 128 * 128]; // G = 1/3 µS everywhere
+        let out = exe
+            .run_f32(&[
+                Value::f32(t_in, &[8, 128]),
+                Value::i32(codes, &[128, 128]),
+            ])
+            .unwrap();
+        // t_out = alpha · Σ 1·(1/3) over 128 rows = 0.1 · 128/3.
+        let want = 0.1f32 * 128.0 / 3.0;
+        assert!((out[0][0] - want).abs() < 1e-3, "{}", out[0][0]);
+    }
+}

@@ -1,8 +1,28 @@
-//! PJRT runtime bridge (DESIGN.md S12): `artifacts/*.hlo.txt` →
-//! compile-once → execute from the L3 hot path.
+//! Runtime bridge (DESIGN.md S12): `artifacts/*.hlo.txt` → compile-once →
+//! execute from the L3 hot path.
+//!
+//! Two interchangeable backends behind one API surface
+//! (`Runtime::new` → `load` → `Executable::run_f32`, with [`Value`] as the
+//! tensor interchange and [`Manifest`] as the shape/dtype contract):
+//!
+//! * **`pjrt`** (cargo feature `pjrt`) — compiles the AOT HLO text via the
+//!   `xla` crate's CPU PJRT client; requires an `xla_extension` install
+//!   (see README.md).
+//! * **[`interp`]** (default) — a pure-Rust interpreter of the same
+//!   artifact contracts, so the default build is hermetic: no network, no
+//!   native libraries, and `--backend pjrt` code paths still run.
 
 pub mod artifacts;
+pub mod interp;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod value;
 
 pub use artifacts::{ArtifactEntry, Manifest};
-pub use pjrt::{Executable, Runtime, Value};
+pub use value::Value;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+pub use interp::{Executable, Runtime};

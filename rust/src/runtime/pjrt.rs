@@ -3,14 +3,20 @@
 //! PJRT client via the `xla` crate. This is the fast functional backend of
 //! the coordinator; python never runs here.
 //!
+//! Compiled only with the `pjrt` cargo feature (the `xla` dependency needs
+//! a local `xla_extension` install — see README.md). The default build
+//! serves the same API through [`crate::runtime::interp`].
+//!
 //! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+//! reassigns ids (see DESIGN.md §3).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
+
+use super::value::Value;
 
 /// A compiled HLO executable plus its argument contract.
 pub struct Executable {
@@ -18,60 +24,26 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
-/// Argument/output values exchanged with an executable.
-#[derive(Debug, Clone)]
-pub enum Value {
-    F32 { data: Vec<f32>, shape: Vec<usize> },
-    I32 { data: Vec<i32>, shape: Vec<usize> },
-}
-
-impl Value {
-    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Value {
-        assert_eq!(data.len(), shape.iter().product::<usize>());
-        Value::F32 {
-            data,
-            shape: shape.to_vec(),
+fn to_literal(value: &Value) -> Result<xla::Literal> {
+    let lit = match value {
+        Value::F32 { data, shape } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data).reshape(&dims)?
         }
-    }
-
-    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Value {
-        assert_eq!(data.len(), shape.iter().product::<usize>());
-        Value::I32 {
-            data,
-            shape: shape.to_vec(),
+        Value::I32 { data, shape } => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data).reshape(&dims)?
         }
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            Value::F32 { data, shape } => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-            Value::I32 { data, shape } => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-        };
-        Ok(lit)
-    }
-
-    pub fn as_f32(&self) -> &[f32] {
-        match self {
-            Value::F32 { data, .. } => data,
-            _ => panic!("expected f32 value"),
-        }
-    }
+    };
+    Ok(lit)
 }
 
 impl Executable {
     /// Execute with positional args; returns the flattened f32 outputs of
     /// the result tuple (aot.py lowers every entry with return_tuple=True).
     pub fn run_f32(&self, args: &[Value]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|v| v.to_literal())
-            .collect::<Result<_>>()?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(to_literal).collect::<Result<_>>()?;
         let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
             .to_literal_sync()?;
         let tuple = result.to_tuple()?;
@@ -131,29 +103,6 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    // Execution tests live in rust/tests/pjrt_roundtrip.rs (they need the
-    // artifacts). Here only the Value plumbing, which is pure.
-
-    #[test]
-    fn value_shape_product_checked() {
-        let v = Value::f32(vec![0.0; 6], &[2, 3]);
-        assert_eq!(v.as_f32().len(), 6);
-    }
-
-    #[test]
-    #[should_panic]
-    fn value_shape_mismatch_panics() {
-        let _ = Value::f32(vec![0.0; 5], &[2, 3]);
-    }
-
-    #[test]
-    #[should_panic(expected = "expected f32")]
-    fn as_f32_on_i32_panics() {
-        let v = Value::i32(vec![1, 2], &[2]);
-        let _ = v.as_f32();
-    }
-}
+// Execution tests live in rust/tests/pjrt_roundtrip-style integration
+// tests (they need the artifacts); the pure `Value` plumbing is tested in
+// `runtime::value`.

@@ -1,0 +1,82 @@
+//! Backend-agnostic argument/output values (DESIGN.md S12): the typed
+//! tensor interchange between the coordinator and whichever runtime
+//! backend executes the artifacts — PJRT (`pjrt` feature) or the pure-Rust
+//! interpreter (default).
+
+/// Argument/output values exchanged with an executable.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::F32 {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::I32 {
+            data,
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// The value's shape (row-major dims).
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Value::F32 { data, .. } => data,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Value::I32 { data, .. } => data,
+            _ => panic!("expected i32 value"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shape_product_checked() {
+        let v = Value::f32(vec![0.0; 6], &[2, 3]);
+        assert_eq!(v.as_f32().len(), 6);
+        assert_eq!(v.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn value_shape_mismatch_panics() {
+        let _ = Value::f32(vec![0.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected f32")]
+    fn as_f32_on_i32_panics() {
+        let v = Value::i32(vec![1, 2], &[2]);
+        let _ = v.as_f32();
+    }
+
+    #[test]
+    #[should_panic(expected = "expected i32")]
+    fn as_i32_on_f32_panics() {
+        let v = Value::f32(vec![1.0], &[1]);
+        let _ = v.as_i32();
+    }
+}

@@ -1,4 +1,5 @@
-//! Property-testing kit (substrate — `proptest` is unavailable offline).
+//! Property-testing kit (DESIGN.md S0; substrate — `proptest` is
+//! unavailable offline).
 //!
 //! Deterministic random-case property runner with failure reporting and
 //! seed replay: each property runs N generated cases; on failure the

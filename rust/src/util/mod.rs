@@ -1,6 +1,6 @@
-//! Offline-substrate utilities: PRNG (`rand` replacement), JSON
-//! (`serde_json` replacement), CLI parsing (`clap` replacement), and the
-//! statistics helpers shared by the repro harness and benches.
+//! Offline-substrate utilities (DESIGN.md S0): PRNG (`rand` replacement),
+//! JSON (`serde_json` replacement), CLI parsing (`clap` replacement), and
+//! the statistics helpers shared by the repro harness and benches.
 
 pub mod cli;
 pub mod json;

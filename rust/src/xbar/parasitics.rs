@@ -1,5 +1,5 @@
-//! Bit-line wire parasitics (scalability study, §V "scalable analog
-//! computing" made quantitative).
+//! Bit-line wire parasitics (DESIGN.md S7, experiment EX1 — the paper's
+//! §V "scalable analog computing" made quantitative).
 //!
 //! In a real crossbar the clamp only holds the *near end* of the bit line
 //! at V_clamp; a cell `r` rows away sees the wire resistance of `r`

@@ -1,0 +1,94 @@
+//! Smoke test: every `repro/` entry point stays executable (DESIGN.md §5).
+//!
+//! One call per experiment module — fig3–fig7, table1/table2, ablations,
+//! scaling — with deliberately tiny configs, so the documented claims
+//! (`spikemram table1|fig7a|…` and the README quickstart) cannot rot
+//! without CI noticing. Result files go to a throwaway directory.
+
+use spikemram::config::MacroConfig;
+use spikemram::repro::{ablations, fig3, fig5, fig6, fig7, report, scaling, table1, table2};
+
+fn results_to_tmp() {
+    // set_var exactly once per process: concurrent setenv while another
+    // thread getenvs is a libc-level race, and these tests run in parallel.
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        std::env::set_var("SPIKEMRAM_RESULTS", "/tmp/spikemram_smoke_results")
+    });
+}
+
+#[test]
+fn table1_renders_key_parameters() {
+    let s = table1::table1(&MacroConfig::default());
+    assert!(s.contains("Table I"));
+    assert!(s.contains("128×128"));
+}
+
+#[test]
+fn fig3_smu_transient_runs() {
+    results_to_tmp();
+    let f = fig3::run(&MacroConfig::default(), 16);
+    assert!((f.flag_duration_ns - 3.2).abs() < 1e-9);
+    assert!(fig3::render(&f).contains("Fig 3(c)"));
+}
+
+#[test]
+fn fig5_conversion_transient_runs() {
+    results_to_tmp();
+    let f = fig5::run(&MacroConfig::default());
+    assert!((f.t_out_ns - f.t_out_eq2_ns).abs() < 1e-9);
+    assert!(fig5::render(&f).contains("Fig 5"));
+}
+
+#[test]
+fn fig6_power_and_sensing_run_tiny() {
+    results_to_tmp();
+    let cfg = MacroConfig::default();
+    let a = fig6::run_fig6a(&cfg, 3, 7);
+    assert!(a.tops_per_watt > 100.0, "{}", a.tops_per_watt);
+    assert!(fig6::render_fig6a(&a).contains("Fig 6(a)"));
+    let b = fig6::run_fig6b(&cfg);
+    assert_eq!(b.rows.len(), 4);
+    assert!(fig6::render_fig6b(&b).contains("Fig 6(b)"));
+}
+
+#[test]
+fn fig7_linearity_and_droop_run_tiny() {
+    results_to_tmp();
+    let cfg = MacroConfig::default();
+    let a = fig7::run_fig7a(&cfg, 128, 7);
+    assert!(a.fit.r2 > 0.999, "R² {}", a.fit.r2);
+    let b = fig7::run_fig7b(&cfg, fig7::FIG7B_ACTIVE_ROWS);
+    assert!(b.droop_10ns > b.droop_5ns);
+    assert!(fig7::render_fig7b(&b).contains("Fig 7(b)"));
+}
+
+#[test]
+fn table2_comparison_runs_tiny() {
+    let t2 = table2::run(&MacroConfig::default(), 2, 7);
+    assert_eq!(t2.rows.len(), 6);
+    assert!(table2::render(&t2).contains("This Work"));
+}
+
+#[test]
+fn ablations_run_tiny() {
+    let rows = ablations::run(7, 1);
+    assert!(rows.len() >= 6, "{}", rows.len());
+    assert!(ablations::render(&rows).contains("Ablations"));
+}
+
+#[test]
+fn scaling_study_runs() {
+    results_to_tmp();
+    let pts = scaling::run(&MacroConfig::default());
+    assert_eq!(pts.len(), 4);
+    assert!(scaling::render(&pts).contains("512×512"));
+}
+
+#[test]
+fn report_roundtrip_in_smoke_dir() {
+    results_to_tmp();
+    report::save("smoke/probe.txt", "ok");
+    assert_eq!(report::load("smoke/probe.txt").as_deref(), Some("ok"));
+    assert!(report::exists("smoke/probe.txt"));
+}

@@ -1,0 +1,261 @@
+//! Vendored, dependency-free subset of the `anyhow` error-handling API.
+//!
+//! The repo must build hermetically — no network, no registry — so instead
+//! of depending on crates.io this path dependency re-implements exactly the
+//! surface `spikemram` uses: [`Error`], [`Result`], the [`Context`] trait
+//! (`.context(..)` / `.with_context(..)` on `Result` and `Option`), and the
+//! [`anyhow!`] / [`bail!`] macros. Swapping back to the real crate is a
+//! one-line change in the workspace `Cargo.toml`; no source edits needed.
+//!
+//! Differences from the real crate (none observable to this repo's code):
+//! * the cause chain is captured as rendered strings, not live trait
+//!   objects, so `downcast` is not provided;
+//! * no backtrace support.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error with a human-readable message and a rendered cause chain.
+pub struct Error {
+    msg: String,
+    /// Outermost-first rendered causes (`Caused by:` lines in `{:?}`).
+    chain: Vec<String>,
+}
+
+/// `anyhow`-style result alias: `Result<T>` defaults the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Wrap a standard error, capturing its source chain.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error::from(error)
+    }
+
+    /// Attach a higher-level context message; `self` becomes the cause.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Error {
+            msg: context.to_string(),
+            chain,
+        }
+    }
+
+    /// The outermost message plus each cause, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(String::as_str))
+    }
+
+    /// The innermost cause message (the root of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for cause in &self.chain {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.chain.is_empty() {
+            f.write_str("\n\nCaused by:")?;
+            if self.chain.len() == 1 {
+                write!(f, "\n    {}", self.chain[0])?;
+            } else {
+                for (i, cause) in self.chain.iter().enumerate() {
+                    write!(f, "\n    {i}: {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        let mut chain = Vec::new();
+        let mut source = error.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error {
+            msg: error.to_string(),
+            chain,
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+// One blanket impl over `E: Into<Error>` covers both `Result<T, E>` for any
+// std error *and* `Result<T, anyhow::Error>` (via the reflexive `From`).
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_on_result_wraps_and_chains() {
+        let r: Result<(), _> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(e.root_cause(), "gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let r: Result<u32, std::io::Error> = Ok(7);
+        let v = r
+            .with_context(|| -> String { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert!(Some(1u32).context("x").is_ok());
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results() {
+        let r: Result<()> = Err(anyhow!("inner {}", 3));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "inner 3"]);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn bail_and_literal_forms() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+        assert_eq!(f(5).unwrap(), 5);
+    }
+
+    #[test]
+    fn anyhow_accepts_string_expression() {
+        let s = String::from("boom");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn alternate_display_prints_chain_inline() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: inner");
+    }
+}
