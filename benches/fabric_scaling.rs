@@ -1,0 +1,114 @@
+//! Fabric scaling bench (DESIGN.md S15, EXPERIMENTS.md §EX2): wall-clock
+//! per routed MVM as the mesh grows from 1 to 64 macros, next to the
+//! model's own latency/NoC-share numbers, plus a serial-vs-pipelined
+//! two-layer streaming comparison.
+//!
+//! ```bash
+//! cargo bench --bench fabric_scaling            # full sweep
+//! cargo bench --bench fabric_scaling -- --test  # CI smoke (tiny+fast)
+//! ```
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::{FabricConfig, MacroConfig};
+use spikemram::coordinator::TiledMatrix;
+use spikemram::fabric::{FabricChip, FabricPipeline, StageRelay};
+use spikemram::util::rng::Rng;
+
+fn chip(cfg: &MacroConfig, g: usize, seed: u64) -> (FabricChip, Vec<u32>) {
+    let dim = cfg.rows * g;
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..dim * dim).map(|_| rng.below(4) as u8).collect();
+    let tiled = TiledMatrix::new(&codes, dim, dim, cfg.rows);
+    let chip = FabricChip::new(cfg, FabricConfig::square(g), vec![tiled])
+        .expect("one shard per tile");
+    let x: Vec<u32> = (0..dim).map(|_| rng.below(256) as u32).collect();
+    (chip, x)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    if test_mode {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    }
+    let grids: &[usize] = if test_mode { &[1, 2] } else { &[1, 2, 4, 8] };
+    let cfg = MacroConfig::default();
+    let mut h = Harness::new("fabric_scaling");
+
+    for &g in grids {
+        let (mut c, x) = chip(&cfg, g, 7 + g as u64);
+        let r =
+            h.bench_function(&format!("fabric_mvm_{g}x{g}_mesh"), |b| {
+                b.iter(|| black_box(c.mvm(&x).0))
+            });
+        let (_, lr) = c.mvm(&x);
+        let share = lr.energy.noc_fj / lr.energy.total_fj();
+        h.note(&format!(
+            "{} macros: model {:.1} ns/MVM, NoC {:.1} %, {} hops — \
+             wall {:.2} µs",
+            g * g,
+            lr.latency_ns,
+            share * 100.0,
+            lr.hops,
+            r.median_ns() / 1e3
+        ));
+    }
+
+    // Two-layer streaming: serial chip vs thread-per-layer pipeline.
+    let items = if test_mode { 8 } else { 64 };
+    let mk_layers = |seed: u64| -> FabricChip {
+        let mut rng = Rng::new(seed);
+        let layers: Vec<TiledMatrix> = (0..2)
+            .map(|_| {
+                let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+                    .map(|_| rng.below(4) as u8)
+                    .collect();
+                TiledMatrix::new(&codes, cfg.rows, cfg.cols, cfg.rows)
+            })
+            .collect();
+        FabricChip::new(&cfg, FabricConfig::square(2), layers).unwrap()
+    };
+    let mut rng = Rng::new(99);
+    let inputs: Vec<Vec<u32>> = (0..items)
+        .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+        .collect();
+    let requant = |y: Vec<f64>| -> Vec<u32> {
+        y.into_iter()
+            .map(|v| ((v / 40.0).round().max(0.0) as u32).min(255))
+            .collect()
+    };
+
+    h.bench_function("two_layer_serial_chip", |b| {
+        b.iter(|| {
+            let mut c = mk_layers(31);
+            let mut out = Vec::new();
+            for x in &inputs {
+                let mut v = x.clone();
+                for li in 0..2 {
+                    let r = c.forward_layer(li, &v);
+                    v = requant(r.partials[0][0].clone());
+                }
+                out.push(v);
+            }
+            black_box(out)
+        })
+    });
+    h.bench_function("two_layer_pipelined_executor", |b| {
+        b.iter(|| {
+            let relays: Vec<StageRelay> = (0..2)
+                .map(|_| {
+                    Box::new(move |_x: &[u32], mac: Vec<f64>| requant(mac))
+                        as StageRelay
+                })
+                .collect();
+            black_box(
+                FabricPipeline::new(mk_layers(31), relays)
+                    .run(inputs.clone())
+                    .0,
+            )
+        })
+    });
+    h.note(&format!(
+        "{items} items through 2 layers; pipeline overlaps layer \
+         compute across threads"
+    ));
+}

@@ -18,7 +18,13 @@ cargo test -q
 echo "==> compile all targets (benches, examples, bin)"
 cargo build --all-targets --release
 
+echo "==> fabric bench: compile + smoke run in --test mode"
+cargo bench --bench fabric_scaling --no-run
+SPIKEMRAM_BENCH_FAST=1 cargo bench --bench fabric_scaling -- --test
+
 echo "==> lint: cargo fmt --check && cargo clippy -D warnings"
+# --all-targets covers the fabric/ module (lib), its bench, example,
+# and integration test with warnings fatal.
 cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 

@@ -1,0 +1,90 @@
+//! Fabric chip walkthrough (DESIGN.md S15): place a 512×512 weight
+//! matrix onto a 4×4 mesh of macros, run one routed MVM, and inspect the
+//! placement map, NoC traffic, and the energy ledger with its new `noc`
+//! category.
+//!
+//! ```bash
+//! cargo run --release --example fabric_chip
+//! ```
+
+use spikemram::config::{FabricConfig, LevelMap, MacroConfig};
+use spikemram::coordinator::TiledMatrix;
+use spikemram::energy::tops_per_watt;
+use spikemram::fabric::FabricChip;
+use spikemram::util::rng::Rng;
+
+fn main() {
+    // 1. A weight matrix four macros wide and four tall (16 shards).
+    let cfg = MacroConfig::default();
+    let (k, n) = (512usize, 512usize);
+    let mut rng = Rng::new(11);
+    let codes: Vec<u8> = (0..k * n).map(|_| rng.below(4) as u8).collect();
+    let tiled = TiledMatrix::new(&codes, k, n, cfg.rows);
+    println!(
+        "weights: {k}×{n} 2-bit codes → {}×{} tiles of {}×{}",
+        tiled.row_tiles, tiled.col_tiles, cfg.rows, cfg.cols
+    );
+
+    // 2. Place onto a 4×4 mesh (serpentine, weight-stationary).
+    let fabric = FabricConfig::square(4);
+    let mut chip =
+        FabricChip::new(&cfg, fabric, vec![tiled]).expect("placement fits");
+    println!(
+        "\nplacement ({} of {} tiles, I/O port at (0,0)):\n{}",
+        chip.tiles_used(),
+        chip.tiles_total(),
+        chip.placement.render()
+    );
+
+    // 3. One routed MVM: ingress → distribute → 16 concurrent tile
+    //    MVMs → gather to column heads → egress.
+    let x: Vec<u32> = (0..k).map(|_| rng.below(256) as u32).collect();
+    let (y, r) = chip.mvm(&x);
+
+    // 4. Check the decoded MACs against the dense digital oracle.
+    let levels = LevelMap::DeviceTrue.levels();
+    let mut max_err = 0.0f64;
+    for c in 0..n {
+        let want: f64 = (0..k)
+            .map(|row| x[row] as f64 * levels[codes[row * n + c] as usize])
+            .sum();
+        max_err = max_err.max((y[c] - want).abs());
+    }
+    println!("max |err| vs dense oracle over {n} columns: {max_err:.2e}");
+
+    // 5. The chip-level economics: NoC on top of the macro ledger.
+    println!(
+        "\nlatency {:.1} ns  ({} packets, {} flits, {} hops routed)",
+        r.latency_ns, r.packets, r.flits, r.hops
+    );
+    let e = &r.energy;
+    println!(
+        "energy  {:.1} pJ → {:.1} TOPS/W on {} macros",
+        e.total_pj(),
+        tops_per_watt(
+            cfg.ops_per_mvm() * chip.tiles_used() as u64,
+            e.total_fj()
+        ),
+        chip.tiles_used()
+    );
+    let s = e.shares();
+    println!(
+        "breakdown: array {:.1} %, SMU {:.1} %, OSG {:.1} %, \
+         control {:.1} %, NoC {:.1} %",
+        s[0] * 100.0,
+        s[1] * 100.0,
+        s[2] * 100.0,
+        s[3] * 100.0,
+        s[4] * 100.0
+    );
+
+    // 6. Event-driven to the wire: a silent input routes nothing.
+    let zeros = vec![0u32; k];
+    let (_, r0) = chip.mvm(&zeros);
+    println!(
+        "\nall-zero input: {} packets, {:.1} pJ NoC energy (the mesh \
+         idles with the array)",
+        r0.packets,
+        r0.energy.noc_fj / 1000.0
+    );
+}

@@ -188,6 +188,69 @@ impl MacroConfig {
     }
 }
 
+/// Chip-level fabric configuration (DESIGN.md S15): a mesh of macro
+/// tiles joined by an event-driven X-Y NoC carrying spike packets.
+///
+/// The cost model is deliberately first-order — per-hop store-and-forward
+/// latency and per-flit-per-hop link+router energy, congestion-free — the
+/// same altitude as the rest of the behavioral stack. All knobs live here
+/// so the `repro fabric` sweep and the serving backend share one source
+/// of truth.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Mesh width (tiles along X).
+    pub grid_x: usize,
+    /// Mesh height (tiles along Y).
+    pub grid_y: usize,
+    /// Per-hop router+link traversal latency (ns), store-and-forward.
+    pub hop_latency_ns: f64,
+    /// Link+router energy per flit per hop (fJ). 100 fJ per 64-bit flit
+    /// ≈ 1.6 fJ/bit/hop — an optimized 28 nm mesh (DESIGN.md S15).
+    pub hop_energy_fj: f64,
+    /// Flit width (bits).
+    pub flit_bits: u32,
+    /// Packet header (routing + layer/shard tag, bits).
+    pub header_bits: u32,
+    /// Bits per input value on the wire (dual-spike interval code).
+    pub in_value_bits: u32,
+    /// Bits per partial-result value on the wire (output interval code).
+    pub out_value_bits: u32,
+    /// Chip I/O port tile (x, y): inputs enter and results leave here.
+    pub io_tile: (usize, usize),
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            grid_x: 8,
+            grid_y: 8,
+            hop_latency_ns: 1.0,
+            hop_energy_fj: 100.0,
+            flit_bits: 64,
+            header_bits: 32,
+            in_value_bits: 8,
+            out_value_bits: 16,
+            io_tile: (0, 0),
+        }
+    }
+}
+
+impl FabricConfig {
+    /// Total tile slots in the mesh.
+    pub fn tiles(&self) -> usize {
+        self.grid_x * self.grid_y
+    }
+
+    /// Square g×g mesh with the default cost model.
+    pub fn square(g: usize) -> Self {
+        FabricConfig {
+            grid_x: g,
+            grid_y: g,
+            ..FabricConfig::default()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,5 +318,15 @@ mod tests {
         let lm = LevelMap::DeviceTrue;
         let l = lm.levels();
         assert!((lm.g_mid() - l.iter().sum::<f64>() / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fabric_defaults_are_consistent() {
+        let f = FabricConfig::default();
+        assert_eq!(f.tiles(), 64);
+        assert!(f.io_tile.0 < f.grid_x && f.io_tile.1 < f.grid_y);
+        assert!(f.hop_latency_ns > 0.0 && f.hop_energy_fj > 0.0);
+        let s = FabricConfig::square(2);
+        assert_eq!((s.grid_x, s.grid_y, s.tiles()), (2, 2, 4));
     }
 }

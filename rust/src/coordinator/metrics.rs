@@ -1,6 +1,11 @@
 //! Serving metrics (DESIGN.md S11): throughput counters + latency
 //! histogram, shared by the server threads behind a mutex (coarse-grained
 //! is fine — the hot path is the macro computation, not metric updates).
+//!
+//! Readers consume one [`MetricsSnapshot`] — a consistent view taken
+//! under a single lock acquisition — instead of locking around ad-hoc
+//! getter reads. The fabric backend (DESIGN.md S15) additionally feeds
+//! NoC hop/packet counters and the tile-utilization gauge.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -19,6 +24,58 @@ struct Inner {
     macs: u64,
     latency_us: Histogram,
     batch_sizes: Histogram,
+    // --- fabric backend only (S15) ---
+    noc_packets: u64,
+    noc_hops: u64,
+    tiles_used: u64,
+    tiles_total: u64,
+}
+
+/// One consistent view of every serving counter.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    /// MAC operations executed (2 OPs each).
+    pub macs: u64,
+    pub uptime_s: f64,
+    /// Requests per second since startup.
+    pub rps: f64,
+    /// MACs per second since startup.
+    pub macs_per_s: f64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub mean_batch: f64,
+    /// Spike packets routed on the fabric NoC (0 for non-fabric backends).
+    pub noc_packets: u64,
+    /// Total hops those packets travelled.
+    pub noc_hops: u64,
+    /// Fabric tiles carrying a weight shard (gauge; 0 off-fabric).
+    pub tiles_used: u64,
+    /// Fabric mesh size (gauge; 0 off-fabric).
+    pub tiles_total: u64,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of fabric tiles carrying a weight shard (0 off-fabric).
+    pub fn tile_utilization(&self) -> f64 {
+        if self.tiles_total == 0 {
+            0.0
+        } else {
+            self.tiles_used as f64 / self.tiles_total as f64
+        }
+    }
+
+    /// Mean hops per routed spike packet.
+    pub fn hops_per_packet(&self) -> f64 {
+        if self.noc_packets == 0 {
+            0.0
+        } else {
+            self.noc_hops as f64 / self.noc_packets as f64
+        }
+    }
 }
 
 impl Default for Metrics {
@@ -41,6 +98,10 @@ impl Metrics {
                 batch_sizes: Histogram::new(vec![
                     1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
                 ]),
+                noc_packets: 0,
+                noc_hops: 0,
+                tiles_used: 0,
+                tiles_total: 0,
             }),
             started: Instant::now(),
         }
@@ -59,31 +120,85 @@ impl Metrics {
         g.batch_sizes.record(size as f64);
     }
 
+    /// Account routed fabric traffic (counters, monotonic).
+    pub fn record_noc(&self, packets: u64, hops: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.noc_packets += packets;
+        g.noc_hops += hops;
+    }
+
+    /// Set the fabric placement gauge (shard-carrying tiles / mesh size).
+    pub fn set_tile_usage(&self, used: u64, total: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.tiles_used = used;
+        g.tiles_total = total;
+    }
+
+    /// Derive the snapshot from an already-held guard — the one source
+    /// of every rate/quantile, shared by `snapshot()` and `summary()`.
+    fn snapshot_of(&self, g: &Inner) -> MetricsSnapshot {
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            macs: g.macs,
+            uptime_s: secs,
+            rps: g.requests as f64 / secs,
+            macs_per_s: g.macs as f64 / secs,
+            latency_mean_us: g.latency_us.mean(),
+            latency_p50_us: g.latency_us.quantile(0.50),
+            latency_p95_us: g.latency_us.quantile(0.95),
+            latency_p99_us: g.latency_us.quantile(0.99),
+            mean_batch: g.batch_sizes.mean(),
+            noc_packets: g.noc_packets,
+            noc_hops: g.noc_hops,
+            tiles_used: g.tiles_used,
+            tiles_total: g.tiles_total,
+        }
+    }
+
+    /// Take one consistent snapshot (single lock acquisition).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        self.snapshot_of(&g)
+    }
+
+    /// Convenience: request count (one lock, via snapshot).
     pub fn requests(&self) -> u64 {
-        self.inner.lock().unwrap().requests
+        self.snapshot().requests
     }
 
     /// Requests per second since startup.
     pub fn throughput_rps(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
-        self.requests() as f64 / secs
+        self.snapshot().rps
     }
 
     pub fn summary(&self) -> String {
         let g = self.inner.lock().unwrap();
-        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
-        format!(
+        let s = self.snapshot_of(&g); // same guard: one consistent view
+        let mut out = format!(
             "requests={} batches={} macs={} rps={:.1} mac/s={:.3e}\n\
              latency_us: {}\n\
              batch_size: {}",
-            g.requests,
-            g.batches,
-            g.macs,
-            g.requests as f64 / secs,
-            g.macs as f64 / secs,
+            s.requests,
+            s.batches,
+            s.macs,
+            s.rps,
+            s.macs_per_s,
             g.latency_us.summary(),
             g.batch_sizes.summary()
-        )
+        );
+        if s.tiles_total > 0 || s.noc_packets > 0 {
+            out.push_str(&format!(
+                "\nnoc: packets={} hops={} tiles={}/{} ({:.0} % utilized)",
+                s.noc_packets,
+                s.noc_hops,
+                s.tiles_used,
+                s.tiles_total,
+                s.tile_utilization() * 100.0
+            ));
+        }
+        out
     }
 }
 
@@ -101,6 +216,7 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("requests=2"));
         assert!(s.contains("macs=32768"));
+        assert!(!s.contains("noc:"), "no fabric line off-fabric");
     }
 
     #[test]
@@ -108,5 +224,41 @@ mod tests {
         let m = Metrics::new();
         m.record_request(1.0);
         assert!(m.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_one_consistent_view() {
+        let m = Metrics::new();
+        for lat in [50.0, 150.0, 900.0] {
+            m.record_request(lat);
+        }
+        m.record_batch(3, 3 * 16384);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.macs, 3 * 16384);
+        assert!(s.rps > 0.0 && s.macs_per_s > 0.0);
+        assert!(s.latency_mean_us > 0.0);
+        // Histogram upper-edge convention: p50 lands on a bucket bound.
+        assert!(s.latency_p50_us >= 50.0);
+        assert!(s.latency_p99_us >= s.latency_p50_us);
+        assert!((s.mean_batch - 3.0).abs() < 1e-12);
+        assert_eq!(s.noc_packets, 0);
+        assert_eq!(s.tile_utilization(), 0.0);
+    }
+
+    #[test]
+    fn fabric_counters_and_gauges() {
+        let m = Metrics::new();
+        m.record_noc(10, 35);
+        m.record_noc(5, 10);
+        m.set_tile_usage(3, 4);
+        let s = m.snapshot();
+        assert_eq!(s.noc_packets, 15);
+        assert_eq!(s.noc_hops, 45);
+        assert_eq!(s.tiles_used, 3);
+        assert!((s.tile_utilization() - 0.75).abs() < 1e-12);
+        assert!((s.hops_per_packet() - 3.0).abs() < 1e-12);
+        assert!(m.summary().contains("noc: packets=15 hops=45 tiles=3/4"));
     }
 }

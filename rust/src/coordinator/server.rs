@@ -10,8 +10,14 @@
 //!                                        ├─ batcher (size/timeout)
 //!                                        ├─ backend: Sim (CimMacro)
 //!                                        │        or Pjrt (HLO artifact)
+//!                                        │        or Fabric (NoC mesh)
 //!                                        └─ per-request oneshot reply
 //! ```
+//!
+//! The `Fabric` backend (DESIGN.md S15) serves weight matrices *larger
+//! than one macro*: the k×n codes are sharded onto a mesh of tiles and
+//! every request is executed as routed spike packets, with hop counts
+//! and tile utilization reported through [`Metrics`].
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -20,7 +26,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::MacroConfig;
+use crate::config::{FabricConfig, MacroConfig};
+use crate::coordinator::TiledMatrix;
+use crate::fabric::FabricChip;
 use crate::macro_model::CimMacro;
 use crate::runtime::{Runtime, Value};
 
@@ -33,6 +41,24 @@ pub enum BackendKind {
     Sim,
     /// AOT HLO artifact via PJRT (functional fast path).
     Pjrt { artifacts_dir: String },
+    /// Multi-macro fabric chip (DESIGN.md S15): the k×n code matrix is
+    /// sharded onto a NoC mesh; requests take `k` inputs, replies carry
+    /// `n` MACs.
+    Fabric {
+        fabric: FabricConfig,
+        k: usize,
+        n: usize,
+    },
+}
+
+impl BackendKind {
+    /// (input length, output length) served by this backend.
+    fn dims(&self, cfg: &MacroConfig) -> (usize, usize) {
+        match self {
+            BackendKind::Fabric { k, n, .. } => (*k, *n),
+            _ => (cfg.rows, cfg.cols),
+        }
+    }
 }
 
 /// Server configuration.
@@ -61,27 +87,40 @@ struct Job {
     reply: mpsc::Sender<Vec<f64>>,
 }
 
-/// A running macro service for one programmed weight tile.
+/// A running macro service for one programmed weight matrix (one macro
+/// tile for `Sim`/`Pjrt`; an arbitrary k×n matrix for `Fabric`).
 pub struct MacroServer {
     tx: Option<mpsc::Sender<Job>>,
     pub metrics: Arc<Metrics>,
     handles: Vec<JoinHandle<()>>,
-    rows: usize,
+    in_dim: usize,
 }
 
 impl MacroServer {
-    /// Start worker threads for a 128×128 weight tile given as codes.
+    /// Start worker threads for the weight matrix given as codes
+    /// (128×128 for `Sim`/`Pjrt`; k×n for the `Fabric` backend).
     pub fn start(
         cfg: MacroConfig,
         codes: Vec<u8>,
         server_cfg: ServerConfig,
     ) -> Result<MacroServer> {
-        assert_eq!(codes.len(), cfg.rows * cfg.cols);
+        let (in_dim, out_dim) = server_cfg.backend.dims(&cfg);
+        assert_eq!(codes.len(), in_dim * out_dim, "code matrix shape");
+        if let BackendKind::Fabric { fabric, k, n } = &server_cfg.backend {
+            // Fail fast with the chip's own validation (no macro cells
+            // programmed); worker-side construction errors would only
+            // surface as thread panics after start() returned Ok. The
+            // shape mirrors TiledMatrix::new's row/col_tiles derivation.
+            FabricChip::validate(
+                &cfg,
+                fabric,
+                &[(k.div_ceil(cfg.rows), n.div_ceil(cfg.rows))],
+            )?;
+        }
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
         let mut handles = Vec::new();
-        let rows = cfg.rows;
         for wid in 0..server_cfg.workers {
             let rx = rx.clone();
             let metrics = metrics.clone();
@@ -96,13 +135,13 @@ impl MacroServer {
             tx: Some(tx),
             metrics,
             handles,
-            rows,
+            in_dim,
         })
     }
 
     /// Submit one input vector; returns a receiver for the MAC result.
     pub fn submit(&self, x: Vec<u32>) -> mpsc::Receiver<Vec<f64>> {
-        assert_eq!(x.len(), self.rows, "input length");
+        assert_eq!(x.len(), self.in_dim, "input length");
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .as_ref()
@@ -132,6 +171,9 @@ impl MacroServer {
 
 enum WorkerBackend {
     Sim(Box<CimMacro>),
+    /// One fabric chip per worker (weight-stationary, like `Sim`'s
+    /// per-worker macro). NoC counters drain to `Metrics` per batch.
+    Fabric(Box<FabricChip>),
     Pjrt {
         exe: std::sync::Arc<crate::runtime::Executable>,
         codes_i32: Vec<i32>,
@@ -152,6 +194,13 @@ impl WorkerBackend {
                 let mut m = CimMacro::new(cfg.clone());
                 m.program(codes);
                 WorkerBackend::Sim(Box::new(m))
+            }
+            BackendKind::Fabric { fabric, k, n } => {
+                let tiled = TiledMatrix::new(codes, *k, *n, cfg.rows);
+                let chip =
+                    FabricChip::new(cfg, fabric.clone(), vec![tiled])
+                        .expect("fabric placement");
+                WorkerBackend::Fabric(Box::new(chip))
             }
             BackendKind::Pjrt { artifacts_dir } => {
                 let mut rt = Runtime::new(artifacts_dir).expect("pjrt client");
@@ -176,6 +225,9 @@ impl WorkerBackend {
     fn mvm_batch(&mut self, xs: &[Vec<u32>]) -> Vec<Vec<f64>> {
         match self {
             WorkerBackend::Sim(m) => xs.iter().map(|x| m.mvm(x).y_mac).collect(),
+            WorkerBackend::Fabric(chip) => {
+                xs.iter().map(|x| chip.mvm(x).0).collect()
+            }
             WorkerBackend::Pjrt {
                 exe,
                 codes_i32,
@@ -226,7 +278,14 @@ fn worker_loop(
     metrics: Arc<Metrics>,
 ) {
     let mut backend = WorkerBackend::create(&cfg, &codes, &scfg.backend);
-    let macs_per_op = (cfg.rows * cfg.cols) as u64;
+    let (in_dim, out_dim) = scfg.backend.dims(&cfg);
+    let macs_per_op = (in_dim * out_dim) as u64;
+    if let WorkerBackend::Fabric(chip) = &backend {
+        metrics.set_tile_usage(
+            chip.tiles_used() as u64,
+            chip.tiles_total() as u64,
+        );
+    }
     loop {
         // Collect a batch: block for the first job, then fill until the
         // batch is full or the timeout elapses.
@@ -254,6 +313,12 @@ fn worker_loop(
         let xs: Vec<Vec<u32>> = jobs.iter().map(|j| j.x.clone()).collect();
         let results = backend.mvm_batch(&xs);
         metrics.record_batch(jobs.len(), macs_per_op * jobs.len() as u64);
+        if let WorkerBackend::Fabric(chip) = &mut backend {
+            // Drain before replying so a caller who awaits the reply
+            // already sees this batch's traffic in the snapshot.
+            let t = chip.drain_stats();
+            metrics.record_noc(t.packets, t.hops);
+        }
         for (job, y) in jobs.into_iter().zip(results) {
             let lat_us = job.submitted.elapsed().as_secs_f64() * 1e6;
             metrics.record_request(lat_us);
@@ -376,6 +441,69 @@ mod tests {
         assert_eq!(y.len(), 128);
         assert!(router.call("nope", vec![1; 128]).is_none());
         router.shutdown();
+    }
+
+    #[test]
+    fn fabric_backend_rejects_oversized_workload_at_start() {
+        let cfg = MacroConfig::default();
+        let (k, n) = (1024usize, 1024usize); // 64 shards
+        let codes = vec![0u8; k * n];
+        let res = MacroServer::start(
+            cfg,
+            codes,
+            ServerConfig {
+                backend: BackendKind::Fabric {
+                    fabric: FabricConfig::square(2), // 4 tiles
+                    k,
+                    n,
+                },
+                ..ServerConfig::default()
+            },
+        );
+        let err = res.err().expect("placement must fail at start()");
+        assert!(err.to_string().contains("exceed"), "{err}");
+    }
+
+    #[test]
+    fn fabric_backend_serves_matrices_larger_than_one_macro() {
+        let cfg = MacroConfig::default();
+        let (k, n) = (256usize, 256usize);
+        let mut rng = Rng::new(41);
+        let big_codes: Vec<u8> =
+            (0..k * n).map(|_| rng.below(4) as u8).collect();
+        let fabric = FabricConfig::square(2);
+
+        // Serial oracle chip with identical codes/placement.
+        let tiled = TiledMatrix::new(&big_codes, k, n, cfg.rows);
+        let mut oracle =
+            FabricChip::new(&cfg, fabric.clone(), vec![tiled]).unwrap();
+
+        let server = MacroServer::start(
+            cfg,
+            big_codes,
+            ServerConfig {
+                backend: BackendKind::Fabric { fabric, k, n },
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        for _ in 0..4 {
+            let x: Vec<u32> =
+                (0..k).map(|_| rng.below(256) as u32).collect();
+            let got = server.call(x.clone());
+            let (want, _) = oracle.mvm(&x);
+            assert_eq!(got.len(), n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+            }
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.macs, 4 * (k * n) as u64);
+        assert!(snap.noc_packets > 0 && snap.noc_hops > 0);
+        assert_eq!((snap.tiles_used, snap.tiles_total), (4, 4));
+        assert!((snap.tile_utilization() - 1.0).abs() < 1e-12);
+        server.shutdown();
     }
 
     #[test]

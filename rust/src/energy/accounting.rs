@@ -2,7 +2,9 @@
 //!
 //! Every macro op returns an `EnergyBreakdown`; the coordinator sums them
 //! across tiles/batches. Categories follow the paper's Fig 6(a) power
-//! breakdown: array read, SMU, OSG, and control.
+//! breakdown — array read, SMU, OSG, control — plus the chip-level NoC
+//! category charged by the fabric subsystem (DESIGN.md S15). A single
+//! macro op never produces `noc_fj`; only routed fabric traffic does.
 
 /// Energy per component for one (or many accumulated) macro ops, in fJ.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -11,28 +13,32 @@ pub struct EnergyBreakdown {
     pub smu_fj: f64,
     pub osg_fj: f64,
     pub control_fj: f64,
+    /// Spike-packet NoC traffic (fabric link+router energy, S15).
+    pub noc_fj: f64,
 }
 
 impl EnergyBreakdown {
     pub fn total_fj(&self) -> f64 {
         self.array_fj + self.smu_fj + self.osg_fj + self.control_fj
+            + self.noc_fj
     }
 
     pub fn total_pj(&self) -> f64 {
         self.total_fj() / 1000.0
     }
 
-    /// Component shares (array, smu, osg, control), summing to 1.
-    pub fn shares(&self) -> [f64; 4] {
+    /// Component shares (array, smu, osg, control, noc), summing to 1.
+    pub fn shares(&self) -> [f64; 5] {
         let t = self.total_fj();
         if t == 0.0 {
-            return [0.0; 4];
+            return [0.0; 5];
         }
         [
             self.array_fj / t,
             self.smu_fj / t,
             self.osg_fj / t,
             self.control_fj / t,
+            self.noc_fj / t,
         ]
     }
 
@@ -41,6 +47,7 @@ impl EnergyBreakdown {
         self.smu_fj += other.smu_fj;
         self.osg_fj += other.osg_fj;
         self.control_fj += other.control_fj;
+        self.noc_fj += other.noc_fj;
     }
 
     pub fn scaled(&self, f: f64) -> EnergyBreakdown {
@@ -49,6 +56,7 @@ impl EnergyBreakdown {
             smu_fj: self.smu_fj * f,
             osg_fj: self.osg_fj * f,
             control_fj: self.control_fj * f,
+            noc_fj: self.noc_fj * f,
         }
     }
 }
@@ -72,6 +80,7 @@ mod tests {
             smu_fj: 2.0,
             osg_fj: 5.0,
             control_fj: 2.0,
+            noc_fj: 0.0,
         };
         let s = e.shares();
         assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
@@ -85,10 +94,24 @@ mod tests {
             smu_fj: 1.0,
             osg_fj: 1.0,
             control_fj: 1.0,
+            noc_fj: 0.0,
         };
         a.add(&a.clone());
         assert_eq!(a.total_fj(), 8.0);
         assert_eq!(a.scaled(0.5).total_fj(), 4.0);
+    }
+
+    #[test]
+    fn noc_category_counts_toward_total_and_shares() {
+        let e = EnergyBreakdown {
+            noc_fj: 3.0,
+            control_fj: 1.0,
+            ..EnergyBreakdown::default()
+        };
+        assert_eq!(e.total_fj(), 4.0);
+        let s = e.shares();
+        assert!((s[4] - 0.75).abs() < 1e-12);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -112,6 +112,7 @@ pub fn mvm_energy(
         smu_fj,
         osg_fj,
         control_fj,
+        noc_fj: 0.0, // single-macro op; NoC traffic is charged by S15
     }
 }
 

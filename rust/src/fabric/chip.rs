@@ -1,0 +1,485 @@
+//! The fabric chip (DESIGN.md S15): a mesh of weight-stationary
+//! `CimMacro` tiles executing tiled layers as routed spike packets.
+//!
+//! One layer forward runs in five NoC phases, each priced by the S15
+//! cost model and folded into the op's `EnergyBreakdown` (`noc_fj`):
+//!
+//! 1. **ingress** — the input vector reaches the layer head (chip I/O
+//!    port for layer 0; inner layers receive it from the upstream
+//!    egress, which already paid the hops),
+//! 2. **distribute** — the head unicasts each row-tile slice to the
+//!    shards that consume it (all-zero slices emit no spikes, hence no
+//!    packets: the NoC is as event-driven as the array),
+//! 3. **compute** — every shard's MVM, physically concurrent tiles
+//!    (scoped worker threads make wall-clock match the model),
+//! 4. **gather** — row tiles ti>0 stream partials to their column-head
+//!    shard (0, tj),
+//! 5. **egress** — column heads forward accumulated segments to the
+//!    next layer's head (or back to the I/O port).
+//!
+//! Latency is the phase-sequential critical path: max-hop delivery per
+//! NoC phase plus the slowest tile's conversion. Partials come back in
+//! deterministic (ti, tj) order so `TiledMatrix::accumulate` reproduces
+//! the single-macro tiling bit for bit.
+
+use anyhow::{ensure, Result};
+
+use crate::config::{FabricConfig, MacroConfig};
+use crate::coordinator::TiledMatrix;
+use crate::energy::EnergyBreakdown;
+use crate::macro_model::{mvm_tiled, CimMacro};
+
+use super::noc::{SpikePacket, TileCoord};
+use super::placement::{place, Placement};
+
+/// Cumulative NoC traffic counters (whole chip, or one drained interval).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FabricStats {
+    pub packets: u64,
+    pub flits: u64,
+    pub hops: u64,
+    pub noc_fj: f64,
+    /// Layer-0 forwards seen (≈ inferences for a multi-layer chip).
+    pub mvms: u64,
+}
+
+/// Result of one layer forward on the fabric.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    /// Per-tile MAC partials in (ti, tj) order — `partials[ti][tj]` is
+    /// that shard's column output, ready for `TiledMatrix::accumulate`.
+    pub partials: Vec<Vec<Vec<f64>>>,
+    /// Tile compute energy plus this layer's NoC traffic (`noc_fj`).
+    pub energy: EnergyBreakdown,
+    /// Modeled critical path: ingress + distribute + slowest tile +
+    /// gather + egress (ns).
+    pub latency_ns: f64,
+    pub packets: u64,
+    pub flits: u64,
+    pub hops: u64,
+}
+
+/// Account one unicast packet; returns its delivery latency. Zero-hop
+/// (local) delivery is free and uncounted.
+fn send(
+    f: &FabricConfig,
+    src: TileCoord,
+    dst: TileCoord,
+    payload_bits: u64,
+    energy: &mut EnergyBreakdown,
+    tally: &mut FabricStats,
+) -> f64 {
+    let pkt = SpikePacket {
+        src,
+        dst,
+        payload_bits,
+    };
+    let hops = pkt.hops();
+    if hops == 0 {
+        return 0.0;
+    }
+    tally.packets += 1;
+    tally.flits += pkt.flits(f);
+    tally.hops += hops;
+    let e = pkt.energy_fj(f);
+    tally.noc_fj += e;
+    energy.noc_fj += e;
+    pkt.latency_ns(f)
+}
+
+/// One layer's slice of the chip: its shard macros (ti-major order),
+/// their mesh locations, and the routing endpoints. Owns everything it
+/// needs so the dataflow executor can run it on its own thread.
+pub struct LayerStage {
+    pub tiled: TiledMatrix,
+    macros: Vec<CimMacro>,
+    locs: Vec<TileCoord>,
+    /// Where inputs are delivered from (`Some` only for layer 0 — inner
+    /// layers receive at their head via the upstream egress).
+    ingress: Option<TileCoord>,
+    /// Where outputs go: the next layer's head, or the chip I/O port.
+    egress: TileCoord,
+    fabric: FabricConfig,
+}
+
+impl LayerStage {
+    /// This layer's NoC entry point.
+    pub fn head(&self) -> TileCoord {
+        self.locs[0]
+    }
+
+    /// Forward one input vector through this layer's shards.
+    pub fn run(&mut self, x: &[u32]) -> LayerResult {
+        assert_eq!(x.len(), self.tiled.k, "layer input length");
+        let xparts = self.tiled.split_input(x);
+        let ct = self.tiled.col_tiles;
+        let rt = self.tiled.row_tiles;
+        let head = self.locs[0];
+        let mut tally = FabricStats::default();
+        let mut energy = EnergyBreakdown::default();
+        let mut lat = 0.0f64;
+        // Per-row-tile spike activity: a silent slice produces no input
+        // spikes *and* no output spikes at its shards (the flag never
+        // rises, so the OSGs never fire) — such shards route nothing in
+        // either direction.
+        let slice_active: Vec<bool> = xparts
+            .iter()
+            .map(|p| p.iter().any(|&v| v > 0))
+            .collect();
+        let active = slice_active.iter().any(|&a| a);
+
+        // Phase 1 — ingress.
+        if active {
+            if let Some(port) = self.ingress {
+                let bits = self.fabric.in_value_bits as u64 * x.len() as u64;
+                lat +=
+                    send(&self.fabric, port, head, bits, &mut energy, &mut tally);
+            }
+        }
+
+        // Phase 2 — distribute row-tile slices (skip silent slices).
+        let mut t_dist = 0.0f64;
+        if active {
+            for (sidx, &loc) in self.locs.iter().enumerate() {
+                if !slice_active[sidx / ct] {
+                    continue;
+                }
+                let part = &xparts[sidx / ct];
+                let bits =
+                    self.fabric.in_value_bits as u64 * part.len() as u64;
+                t_dist = t_dist.max(send(
+                    &self.fabric,
+                    head,
+                    loc,
+                    bits,
+                    &mut energy,
+                    &mut tally,
+                ));
+            }
+        }
+        lat += t_dist;
+
+        // Phase 3 — compute (concurrent tiles, deterministic order; the
+        // shared `mvm_tiled` keeps the (ti, tj) convention in one place).
+        let (partials, e_tiles, t_compute) =
+            mvm_tiled(&mut self.macros, &xparts, rt, ct);
+        energy.add(&e_tiles);
+        lat += t_compute;
+
+        // Phases 4+5 — gather partials to column heads, then egress. An
+        // all-silent layer emits only zero-interval (no-information)
+        // output pairs, which the event-driven NoC suppresses.
+        let part_bits =
+            self.fabric.out_value_bits as u64 * self.tiled.tile as u64;
+        if active {
+            let mut t_gather = 0.0f64;
+            for sidx in ct..self.locs.len() {
+                if !slice_active[sidx / ct] {
+                    continue; // silent shard: no output spikes to gather
+                }
+                let tj = sidx % ct; // column head = shard (0, tj)
+                t_gather = t_gather.max(send(
+                    &self.fabric,
+                    self.locs[sidx],
+                    self.locs[tj],
+                    part_bits,
+                    &mut energy,
+                    &mut tally,
+                ));
+            }
+            lat += t_gather;
+            let mut t_egress = 0.0f64;
+            for tj in 0..ct {
+                t_egress = t_egress.max(send(
+                    &self.fabric,
+                    self.locs[tj],
+                    self.egress,
+                    part_bits,
+                    &mut energy,
+                    &mut tally,
+                ));
+            }
+            lat += t_egress;
+        }
+
+        LayerResult {
+            partials,
+            energy,
+            latency_ns: lat,
+            packets: tally.packets,
+            flits: tally.flits,
+            hops: tally.hops,
+        }
+    }
+}
+
+/// The assembled chip: placement + per-layer stages + traffic counters.
+pub struct FabricChip {
+    pub fabric: FabricConfig,
+    pub placement: Placement,
+    stages: Vec<LayerStage>,
+    /// Cumulative NoC traffic since construction (or the last drain).
+    pub stats: FabricStats,
+}
+
+impl FabricChip {
+    /// The geometry + placement validation [`FabricChip::new`] performs,
+    /// without programming a single macro cell — the cheap fail-fast
+    /// servers run before spawning workers. `shapes` is each layer's
+    /// (row_tiles, col_tiles).
+    pub fn validate(
+        mcfg: &MacroConfig,
+        fabric: &FabricConfig,
+        shapes: &[(usize, usize)],
+    ) -> Result<Placement> {
+        ensure!(!shapes.is_empty(), "fabric chip needs at least one layer");
+        ensure!(
+            mcfg.rows == mcfg.cols,
+            "fabric tiles are square macros (rows == cols)"
+        );
+        place(shapes, fabric)
+    }
+
+    /// Build a chip for `layers` (already tiled to the macro geometry):
+    /// places every shard, programs one macro per shard.
+    pub fn new(
+        mcfg: &MacroConfig,
+        fabric: FabricConfig,
+        layers: Vec<TiledMatrix>,
+    ) -> Result<FabricChip> {
+        for t in &layers {
+            ensure!(
+                t.tile == mcfg.rows,
+                "layer tile {} must match the macro array ({} rows)",
+                t.tile,
+                mcfg.rows
+            );
+        }
+        let shapes: Vec<(usize, usize)> =
+            layers.iter().map(|t| (t.row_tiles, t.col_tiles)).collect();
+        let placement = Self::validate(mcfg, &fabric, &shapes)?;
+        let io = TileCoord {
+            x: fabric.io_tile.0,
+            y: fabric.io_tile.1,
+        };
+        let n_layers = layers.len();
+        let stages: Vec<LayerStage> = layers
+            .into_iter()
+            .enumerate()
+            .map(|(li, tiled)| {
+                let locs = placement.per_layer[li].clone();
+                let macros = (0..tiled.num_tiles())
+                    .map(|s| {
+                        let mut m = CimMacro::new(mcfg.clone());
+                        m.program(tiled.tile_codes_flat(s));
+                        m
+                    })
+                    .collect();
+                let egress = if li + 1 < n_layers {
+                    placement.head(li + 1)
+                } else {
+                    io
+                };
+                LayerStage {
+                    tiled,
+                    macros,
+                    locs,
+                    ingress: (li == 0).then_some(io),
+                    egress,
+                    fabric: fabric.clone(),
+                }
+            })
+            .collect();
+        Ok(FabricChip {
+            fabric,
+            placement,
+            stages,
+            stats: FabricStats::default(),
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Tiles carrying a weight shard.
+    pub fn tiles_used(&self) -> usize {
+        self.placement.utilization().0
+    }
+
+    /// Total mesh tile slots.
+    pub fn tiles_total(&self) -> usize {
+        self.placement.utilization().1
+    }
+
+    /// Forward one layer; NoC traffic accumulates into `self.stats`.
+    pub fn forward_layer(&mut self, layer: usize, x: &[u32]) -> LayerResult {
+        let r = self.stages[layer].run(x);
+        self.stats.packets += r.packets;
+        self.stats.flits += r.flits;
+        self.stats.hops += r.hops;
+        self.stats.noc_fj += r.energy.noc_fj;
+        if layer == 0 {
+            self.stats.mvms += 1;
+        }
+        r
+    }
+
+    /// Single-layer convenience: run the whole tiled matrix as one MVM
+    /// and accumulate the partials into the dense length-N result.
+    pub fn mvm(&mut self, x: &[u32]) -> (Vec<f64>, LayerResult) {
+        assert_eq!(self.stages.len(), 1, "mvm() is the single-layer path");
+        let r = self.forward_layer(0, x);
+        let y = self.stages[0].tiled.accumulate(&r.partials);
+        (y, r)
+    }
+
+    /// Drain the cumulative traffic counters (serving metrics use this).
+    pub fn drain_stats(&mut self) -> FabricStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// Tear the chip into per-layer stages for the dataflow executor.
+    pub fn into_stages(self) -> Vec<LayerStage> {
+        self.stages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LevelMap;
+    use crate::util::rng::Rng;
+
+    fn random_codes(k: usize, n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        (0..k * n).map(|_| rng.below(4) as u8).collect()
+    }
+
+    #[test]
+    fn single_layer_fabric_mvm_matches_dense_oracle() {
+        let cfg = MacroConfig::default();
+        let (k, n) = (300, 200); // ragged: pads rows and cols
+        let codes = random_codes(k, n, 91);
+        let tiled = TiledMatrix::new(&codes, k, n, cfg.rows);
+        let mut chip =
+            FabricChip::new(&cfg, FabricConfig::square(3), vec![tiled])
+                .unwrap();
+        let mut rng = Rng::new(92);
+        let x: Vec<u32> = (0..k).map(|_| rng.below(256) as u32).collect();
+        let (got, r) = chip.mvm(&x);
+
+        let levels = LevelMap::DeviceTrue.levels();
+        let mut want = vec![0.0f64; n];
+        for row in 0..k {
+            for c in 0..n {
+                want[c] +=
+                    x[row] as f64 * levels[codes[row * n + c] as usize];
+            }
+        }
+        assert_eq!(got.len(), n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+        assert!(r.energy.noc_fj > 0.0, "routed traffic must be charged");
+        assert!(r.packets > 0 && r.hops > 0);
+        assert!(
+            r.energy.noc_fj < 0.5 * r.energy.total_fj(),
+            "NoC must not dominate compute"
+        );
+    }
+
+    #[test]
+    fn latency_includes_noc_phases() {
+        let cfg = MacroConfig::default();
+        let codes = random_codes(256, 256, 93);
+        let mk = |grid: usize| {
+            let tiled = TiledMatrix::new(&codes, 256, 256, cfg.rows);
+            FabricChip::new(&cfg, FabricConfig::square(grid), vec![tiled])
+                .unwrap()
+        };
+        let x: Vec<u32> = vec![200; 256];
+        // The 2×2 mesh pays routing hops on top of compute: fabric
+        // latency must exceed the raw macro critical path.
+        let mut chip = mk(2);
+        let (_, r) = chip.mvm(&x);
+        let mut lone = CimMacro::new(cfg.clone());
+        lone.program(
+            TiledMatrix::new(&codes, 256, 256, cfg.rows).tile_codes_flat(0),
+        );
+        let compute_only = lone.mvm(&x[..cfg.rows]).latency_ns;
+        assert!(
+            r.latency_ns > compute_only,
+            "{} vs {}",
+            r.latency_ns,
+            compute_only
+        );
+        assert_eq!(chip.stats.mvms, 1);
+    }
+
+    #[test]
+    fn zero_input_sends_no_packets() {
+        let cfg = MacroConfig::default();
+        let codes = random_codes(256, 256, 94);
+        let tiled = TiledMatrix::new(&codes, 256, 256, cfg.rows);
+        let mut chip =
+            FabricChip::new(&cfg, FabricConfig::square(2), vec![tiled])
+                .unwrap();
+        let zeros = [0u32; 256];
+        let (y, r) = chip.mvm(&zeros);
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert_eq!(r.packets, 0);
+        assert_eq!(r.hops, 0);
+        assert_eq!(r.energy.noc_fj, 0.0);
+    }
+
+    #[test]
+    fn multi_layer_chip_places_and_routes_between_layers() {
+        let cfg = MacroConfig::default();
+        let l1 = TiledMatrix::new(
+            &random_codes(256, 128, 95),
+            256,
+            128,
+            cfg.rows,
+        );
+        let l2 = TiledMatrix::new(
+            &random_codes(128, 128, 96),
+            128,
+            128,
+            cfg.rows,
+        );
+        let mut chip =
+            FabricChip::new(&cfg, FabricConfig::square(2), vec![l1, l2])
+                .unwrap();
+        assert_eq!(chip.num_layers(), 2);
+        assert_eq!(chip.tiles_used(), 3);
+        assert_eq!(chip.tiles_total(), 4);
+        let mut rng = Rng::new(97);
+        let x: Vec<u32> = (0..256).map(|_| rng.below(256) as u32).collect();
+        let r1 = chip.forward_layer(0, &x);
+        assert_eq!(r1.partials.len(), 2); // two row tiles
+        let x2: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let r2 = chip.forward_layer(1, &x2);
+        // Single-shard inner layer still pays egress back to I/O.
+        assert!(r2.hops > 0);
+        let drained = chip.drain_stats();
+        assert_eq!(drained.packets, r1.packets + r2.packets);
+        assert_eq!(chip.stats.packets, 0, "drain resets the counters");
+    }
+
+    #[test]
+    fn workload_too_big_for_mesh_is_an_error() {
+        let cfg = MacroConfig::default();
+        let tiled = TiledMatrix::new(
+            &random_codes(512, 512, 98),
+            512,
+            512,
+            cfg.rows,
+        );
+        // 16 shards on a 2×2 mesh: must refuse.
+        let err = FabricChip::new(&cfg, FabricConfig::square(2), vec![tiled])
+            .err()
+            .expect("placement must fail");
+        assert!(err.to_string().contains("exceed"), "{err}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Dataflow executor (DESIGN.md S15): thread-per-layer pipelining over
+//! the fabric — item i+1's layer-l work overlaps item i's layer-(l+1)
+//! work, the chip-level analogue of `coordinator::pipeline` with NoC
+//! accounting attached.
+//!
+//! Each stage owns its layer's tiles (torn out of a `FabricChip`), runs
+//! the routed forward, accumulates partials into the layer MAC, and
+//! hands the result to a caller-supplied *relay* that produces the next
+//! stage's input codes (requantization for an SNN, thresholding for a
+//! raw chain, …). Channels preserve order and every stage is
+//! deterministic, so outputs are bit-identical to running the stages
+//! serially — asserted by the tests here and in `rust/tests/`.
+//!
+//! Deliberately *not* built on `coordinator::ThreadedPipeline`: its
+//! `StageFn<T>: FnMut(T) -> T` shape streams one item type end to end,
+//! while fabric stages must own heavy state (a layer's macros) and
+//! return per-stage [`PipelineStats`] at join time — threading tallies
+//! through `T` would push NoC accounting into every relay. The ~40
+//! lines of mpsc wiring are the cheaper coupling.
+
+use std::sync::mpsc;
+
+use crate::energy::EnergyBreakdown;
+
+use super::chip::{FabricChip, LayerStage};
+
+/// Per-stage post-processing: maps (stage input, accumulated layer MAC)
+/// to the next stage's input codes; the last stage's relay produces the
+/// final output codes.
+pub type StageRelay = Box<dyn FnMut(&[u32], Vec<f64>) -> Vec<u32> + Send>;
+
+/// Aggregate tallies of one pipelined run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    pub items: usize,
+    pub energy: EnergyBreakdown,
+    /// Σ per-item per-stage modeled latency — equal to the serial model
+    /// by construction; the pipelining buys wall-clock, not model time.
+    pub latency_ns: f64,
+    pub packets: u64,
+    pub hops: u64,
+}
+
+impl PipelineStats {
+    fn absorb(&mut self, other: &PipelineStats) {
+        self.energy.add(&other.energy);
+        self.latency_ns += other.latency_ns;
+        self.packets += other.packets;
+        self.hops += other.hops;
+    }
+}
+
+/// A chip rearranged for streaming: one thread per layer at run time.
+pub struct FabricPipeline {
+    stages: Vec<(LayerStage, StageRelay)>,
+}
+
+impl FabricPipeline {
+    /// Pair every chip layer with its relay.
+    pub fn new(chip: FabricChip, relays: Vec<StageRelay>) -> FabricPipeline {
+        let stages = chip.into_stages();
+        assert_eq!(stages.len(), relays.len(), "one relay per layer");
+        FabricPipeline {
+            stages: stages.into_iter().zip(relays).collect(),
+        }
+    }
+
+    /// Stream `inputs` through all stages; returns outputs in input
+    /// order plus the run tallies.
+    pub fn run(self, inputs: Vec<Vec<u32>>) -> (Vec<Vec<u32>>, PipelineStats) {
+        assert!(!self.stages.is_empty());
+        let n = inputs.len();
+        let (first_tx, mut prev_rx) = mpsc::channel::<(usize, Vec<u32>)>();
+        let mut handles = Vec::with_capacity(self.stages.len());
+        for (mut stage, mut relay) in self.stages {
+            let (tx, rx) = mpsc::channel::<(usize, Vec<u32>)>();
+            let rx_in = std::mem::replace(&mut prev_rx, rx);
+            handles.push(std::thread::spawn(move || {
+                let mut tally = PipelineStats::default();
+                while let Ok((id, x)) = rx_in.recv() {
+                    let r = stage.run(&x);
+                    tally.energy.add(&r.energy);
+                    tally.latency_ns += r.latency_ns;
+                    tally.packets += r.packets;
+                    tally.hops += r.hops;
+                    let mac = stage.tiled.accumulate(&r.partials);
+                    let _ = tx.send((id, relay(&x, mac)));
+                }
+                tally
+            }));
+        }
+        for (i, x) in inputs.into_iter().enumerate() {
+            first_tx.send((i, x)).expect("stage 0 alive");
+        }
+        drop(first_tx); // end-of-stream ripples down the pipeline
+        let mut out: Vec<Option<Vec<u32>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (id, item) = prev_rx.recv().expect("pipeline output");
+            out[id] = Some(item);
+        }
+        let mut stats = PipelineStats {
+            items: n,
+            ..PipelineStats::default()
+        };
+        for h in handles {
+            stats.absorb(&h.join().expect("stage thread"));
+        }
+        (
+            out.into_iter().map(|o| o.expect("every id answered")).collect(),
+            stats,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FabricConfig, MacroConfig};
+    use crate::coordinator::TiledMatrix;
+    use crate::fabric::FabricChip;
+    use crate::util::rng::Rng;
+
+    fn requant(y: Vec<f64>) -> Vec<u32> {
+        y.into_iter()
+            .map(|v| ((v / 40.0).round().max(0.0) as u32).min(255))
+            .collect()
+    }
+
+    fn two_layer_chip(seed: u64) -> FabricChip {
+        let cfg = MacroConfig::default();
+        let mut rng = Rng::new(seed);
+        let layers: Vec<TiledMatrix> = (0..2)
+            .map(|_| {
+                let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+                    .map(|_| rng.below(4) as u8)
+                    .collect();
+                TiledMatrix::new(&codes, cfg.rows, cfg.cols, cfg.rows)
+            })
+            .collect();
+        FabricChip::new(&cfg, FabricConfig::square(2), layers).unwrap()
+    }
+
+    #[test]
+    fn pipelined_run_matches_serial_chip_bit_for_bit() {
+        let mut rng = Rng::new(606);
+        let inputs: Vec<Vec<u32>> = (0..10)
+            .map(|_| (0..128).map(|_| rng.below(256) as u32).collect())
+            .collect();
+
+        // Serial reference on an identical chip. Each 128×128 layer is a
+        // single shard, so its partial IS the accumulated MAC (the
+        // pipeline's `accumulate` adds it onto zeros — exact in f64).
+        let mut serial_chip = two_layer_chip(605);
+        let mut serial_out = Vec::new();
+        let mut serial_energy = EnergyBreakdown::default();
+        for x in &inputs {
+            let mut v = x.clone();
+            for li in 0..2 {
+                let r = serial_chip.forward_layer(li, &v);
+                serial_energy.add(&r.energy);
+                v = requant(r.partials[0][0].clone());
+            }
+            serial_out.push(v);
+        }
+
+        // Pipelined run.
+        let chip = two_layer_chip(605);
+        let relays: Vec<StageRelay> = (0..2)
+            .map(|_| {
+                Box::new(|_x: &[u32], mac: Vec<f64>| requant(mac))
+                    as StageRelay
+            })
+            .collect();
+        let (pipe_out, stats) =
+            FabricPipeline::new(chip, relays).run(inputs.clone());
+
+        assert_eq!(pipe_out, serial_out);
+        assert_eq!(stats.items, 10);
+        assert!(
+            (stats.energy.total_fj() - serial_energy.total_fj()).abs()
+                / serial_energy.total_fj()
+                < 1e-9
+        );
+        assert!(stats.packets > 0 && stats.hops > 0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Chip-level fabric (DESIGN.md S15): an event-routed multi-macro
+//! subsystem that turns "many macros" from a per-caller loop into a
+//! modeled artifact — a mesh of weight-stationary `CimMacro` tiles
+//! joined by a spike-packet X-Y NoC, a placement engine that shards
+//! tiled weights onto the mesh, and a dataflow executor that pipelines
+//! multi-layer inference across worker threads.
+//!
+//! * [`noc`] — `TileCoord`, `SpikePacket`, deterministic X-Y routing,
+//!   and the per-hop latency/energy cost model.
+//! * [`placement`] — serpentine locality-aware shard→tile assignment
+//!   with validated invariants.
+//! * [`chip`] — `FabricChip`/`LayerStage`: the routed layer forward,
+//!   bit-identical to single-macro tiling, with NoC traffic folded into
+//!   `EnergyBreakdown::noc_fj`.
+//! * [`executor`] — `FabricPipeline`: thread-per-layer streaming.
+//!
+//! Consumers: `snn::MacroMlp::attach_fabric` (fabric-backed inference),
+//! `coordinator::BackendKind::Fabric` (serving matrices larger than one
+//! macro), and `repro::fabric` (the macros 1→64 scaling sweep, EX2).
+
+pub mod chip;
+pub mod executor;
+pub mod noc;
+pub mod placement;
+
+pub use chip::{FabricChip, FabricStats, LayerResult, LayerStage};
+pub use executor::{FabricPipeline, PipelineStats, StageRelay};
+pub use noc::{xy_route, SpikePacket, TileCoord};
+pub use placement::{place, serpentine, Placement, ShardId};

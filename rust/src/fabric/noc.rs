@@ -1,0 +1,146 @@
+//! X-Y mesh NoC model (DESIGN.md S15): deterministic dimension-ordered
+//! routing of spike packets with per-hop latency/energy costs.
+//!
+//! The model is event-driven at packet granularity and congestion-free:
+//! a packet's cost is `flits · hops · E_hop` energy and `hops · T_hop`
+//! store-and-forward latency, and packets that carry no information —
+//! zero-hop local delivery, or slices with no spikes — cost nothing.
+//! Contention/backpressure is out of scope at this altitude (the fabric
+//! phases below serialize around compute anyway); DESIGN.md S15 records
+//! the assumption.
+
+use crate::config::FabricConfig;
+
+/// A tile position on the fabric mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TileCoord {
+    pub x: usize,
+    pub y: usize,
+}
+
+impl TileCoord {
+    /// Row-major grid index.
+    pub fn index(self, grid_x: usize) -> usize {
+        self.y * grid_x + self.x
+    }
+
+    /// Manhattan hop distance (X-Y routes are minimal).
+    pub fn hops(self, other: TileCoord) -> u64 {
+        (self.x.abs_diff(other.x) + self.y.abs_diff(other.y)) as u64
+    }
+}
+
+/// One logical spike packet: a burst of spike-coded values moving from
+/// `src` to `dst`. Multicast is modeled as one packet per destination.
+#[derive(Debug, Clone, Copy)]
+pub struct SpikePacket {
+    pub src: TileCoord,
+    pub dst: TileCoord,
+    pub payload_bits: u64,
+}
+
+impl SpikePacket {
+    pub fn hops(&self) -> u64 {
+        self.src.hops(self.dst)
+    }
+
+    /// Flits on the wire: header + payload, rounded up to flit width.
+    pub fn flits(&self, f: &FabricConfig) -> u64 {
+        (self.payload_bits + f.header_bits as u64)
+            .div_ceil(f.flit_bits as u64)
+    }
+
+    /// Link+router energy over the whole route (fJ).
+    pub fn energy_fj(&self, f: &FabricConfig) -> f64 {
+        (self.flits(f) * self.hops()) as f64 * f.hop_energy_fj
+    }
+
+    /// Delivery latency (ns), store-and-forward per router.
+    pub fn latency_ns(&self, f: &FabricConfig) -> f64 {
+        self.hops() as f64 * f.hop_latency_ns
+    }
+}
+
+/// The deterministic X-then-Y route, inclusive of `src` and `dst`.
+pub fn xy_route(src: TileCoord, dst: TileCoord) -> Vec<TileCoord> {
+    let mut path = vec![src];
+    let mut cur = src;
+    while cur.x != dst.x {
+        cur.x = if dst.x > cur.x { cur.x + 1 } else { cur.x - 1 };
+        path.push(cur);
+    }
+    while cur.y != dst.y {
+        cur.y = if dst.y > cur.y { cur.y + 1 } else { cur.y - 1 };
+        path.push(cur);
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: TileCoord = TileCoord { x: 1, y: 2 };
+    const B: TileCoord = TileCoord { x: 4, y: 0 };
+
+    #[test]
+    fn route_is_minimal_and_deterministic() {
+        let r1 = xy_route(A, B);
+        let r2 = xy_route(A, B);
+        assert_eq!(r1, r2, "routing must be deterministic");
+        assert_eq!(r1.len() as u64, A.hops(B) + 1);
+        assert_eq!(r1.first(), Some(&A));
+        assert_eq!(r1.last(), Some(&B));
+        // Every step moves exactly one hop.
+        assert!(r1.windows(2).all(|w| w[0].hops(w[1]) == 1));
+    }
+
+    #[test]
+    fn route_resolves_x_before_y() {
+        let r = xy_route(A, B);
+        // Once y starts changing, x must already be at the destination.
+        let mut y_started = false;
+        for w in r.windows(2) {
+            if w[0].y != w[1].y {
+                y_started = true;
+            }
+            if y_started {
+                assert_eq!(w[0].x, B.x, "x settled before y turns");
+            }
+        }
+    }
+
+    #[test]
+    fn hops_are_symmetric_and_zero_on_self() {
+        assert_eq!(A.hops(B), B.hops(A));
+        assert_eq!(A.hops(B), 5);
+        assert_eq!(A.hops(A), 0);
+        assert_eq!(xy_route(A, A), vec![A]);
+    }
+
+    #[test]
+    fn flit_and_cost_arithmetic() {
+        let f = FabricConfig::default(); // 64-bit flits, 32-bit header
+        let p = SpikePacket {
+            src: A,
+            dst: B,
+            payload_bits: 1024,
+        };
+        assert_eq!(p.flits(&f), (1024 + 32u64).div_ceil(64)); // 17
+        assert_eq!(p.energy_fj(&f), (17 * 5) as f64 * f.hop_energy_fj);
+        assert_eq!(p.latency_ns(&f), 5.0 * f.hop_latency_ns);
+        // A 1-bit payload still needs one flit.
+        let tiny = SpikePacket {
+            payload_bits: 1,
+            ..p
+        };
+        assert_eq!(tiny.flits(&f), 1);
+        // Zero-hop delivery costs nothing.
+        let local = SpikePacket {
+            dst: A,
+            ..p
+        };
+        assert_eq!(local.energy_fj(&f), 0.0);
+        assert_eq!(local.latency_ns(&f), 0.0);
+    }
+}

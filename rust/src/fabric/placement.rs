@@ -1,0 +1,208 @@
+//! Weight placement (DESIGN.md S15): shard multi-layer tiled weights
+//! onto the fabric mesh, weight-stationary, with a serpentine
+//! locality-aware scan so consecutive layers land on adjacent tiles.
+//!
+//! Policy: tiles are visited in boustrophedon order (row 0 left→right,
+//! row 1 right→left, …) and layers claim tiles contiguously, shards in
+//! (ti, tj) ti-major order. Consecutive scan positions are always
+//! grid-adjacent, so layer *l*'s last shard neighbours layer *l+1*'s
+//! head — the inter-layer egress hop is short by construction.
+//!
+//! Invariants (unit-tested): every shard is placed, every tile carries
+//! at most one shard, and placement fails loudly when the workload
+//! exceeds the mesh (no silent time-multiplexing at this layer).
+
+use anyhow::{ensure, Result};
+
+use crate::config::FabricConfig;
+
+use super::noc::TileCoord;
+
+/// Identity of one weight shard: `layer`'s tile (ti, tj).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardId {
+    pub layer: usize,
+    pub ti: usize,
+    pub tj: usize,
+}
+
+/// A complete, validated shard→tile assignment.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub grid_x: usize,
+    pub grid_y: usize,
+    /// Per layer, shard order (ti-major): the tile each shard occupies.
+    pub per_layer: Vec<Vec<TileCoord>>,
+    /// Grid index (y·grid_x + x) → occupying shard.
+    pub assign: Vec<Option<ShardId>>,
+}
+
+/// Serpentine (boustrophedon) scan order of the mesh.
+pub fn serpentine(grid_x: usize, grid_y: usize) -> Vec<TileCoord> {
+    let mut order = Vec::with_capacity(grid_x * grid_y);
+    for y in 0..grid_y {
+        for i in 0..grid_x {
+            let x = if y % 2 == 0 { i } else { grid_x - 1 - i };
+            order.push(TileCoord { x, y });
+        }
+    }
+    order
+}
+
+/// Place every layer's (row_tiles × col_tiles) shards onto the mesh.
+pub fn place(
+    shapes: &[(usize, usize)],
+    f: &FabricConfig,
+) -> Result<Placement> {
+    ensure!(f.grid_x > 0 && f.grid_y > 0, "empty fabric grid");
+    ensure!(
+        f.io_tile.0 < f.grid_x && f.io_tile.1 < f.grid_y,
+        "io_tile ({}, {}) outside the {}×{} grid",
+        f.io_tile.0,
+        f.io_tile.1,
+        f.grid_x,
+        f.grid_y
+    );
+    let total: usize = shapes.iter().map(|&(rt, ct)| rt * ct).sum();
+    ensure!(total > 0, "nothing to place");
+    ensure!(
+        total <= f.tiles(),
+        "{total} weight shards exceed the {}×{} fabric ({} tiles)",
+        f.grid_x,
+        f.grid_y,
+        f.tiles()
+    );
+    let order = serpentine(f.grid_x, f.grid_y);
+    let mut assign = vec![None; f.tiles()];
+    let mut per_layer = Vec::with_capacity(shapes.len());
+    let mut next = 0usize;
+    for (layer, &(rt, ct)) in shapes.iter().enumerate() {
+        let mut locs = Vec::with_capacity(rt * ct);
+        for ti in 0..rt {
+            for tj in 0..ct {
+                let coord = order[next];
+                next += 1;
+                assign[coord.index(f.grid_x)] =
+                    Some(ShardId { layer, ti, tj });
+                locs.push(coord);
+            }
+        }
+        per_layer.push(locs);
+    }
+    Ok(Placement {
+        grid_x: f.grid_x,
+        grid_y: f.grid_y,
+        per_layer,
+        assign,
+    })
+}
+
+impl Placement {
+    /// (occupied tiles, total tiles).
+    pub fn utilization(&self) -> (usize, usize) {
+        (
+            self.assign.iter().filter(|a| a.is_some()).count(),
+            self.assign.len(),
+        )
+    }
+
+    /// First tile of a layer — its NoC entry point.
+    pub fn head(&self, layer: usize) -> TileCoord {
+        self.per_layer[layer][0]
+    }
+
+    /// ASCII map of the mesh (rows top to bottom): `L<l>.<ti>.<tj>` per
+    /// occupied tile, `·` per free tile.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for y in 0..self.grid_y {
+            for x in 0..self.grid_x {
+                let cell = match self.assign
+                    [TileCoord { x, y }.index(self.grid_x)]
+                {
+                    Some(s) => format!("L{}.{}.{}", s.layer, s.ti, s.tj),
+                    None => "·".to_string(),
+                };
+                out.push_str(&format!("{cell:>7} "));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serpentine_steps_are_grid_adjacent() {
+        let order = serpentine(4, 3);
+        assert_eq!(order.len(), 12);
+        assert!(order.windows(2).all(|w| w[0].hops(w[1]) == 1));
+        // All coordinates distinct.
+        let mut seen = order.clone();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn every_shard_placed_each_tile_at_most_once() {
+        let shapes = [(2usize, 2usize), (3, 1), (1, 1)];
+        let f = FabricConfig::square(4);
+        let p = place(&shapes, &f).unwrap();
+        assert_eq!(p.per_layer[0].len(), 4);
+        assert_eq!(p.per_layer[1].len(), 3);
+        assert_eq!(p.per_layer[2].len(), 1);
+        assert_eq!(p.utilization(), (8, 16));
+        // Assigned coords are pairwise distinct across all layers.
+        let mut all: Vec<TileCoord> =
+            p.per_layer.iter().flatten().copied().collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 8);
+        // assign[] mirrors per_layer with ti-major shard order.
+        for (layer, locs) in p.per_layer.iter().enumerate() {
+            let ct = shapes[layer].1;
+            for (s, loc) in locs.iter().enumerate() {
+                let got = p.assign[loc.index(p.grid_x)].unwrap();
+                assert_eq!(
+                    (got.layer, got.ti, got.tj),
+                    (layer, s / ct, s % ct)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_layers_are_neighbours() {
+        let f = FabricConfig::square(3);
+        let p = place(&[(2, 2), (1, 1)], &f).unwrap();
+        let last0 = *p.per_layer[0].last().unwrap();
+        assert_eq!(
+            last0.hops(p.head(1)),
+            1,
+            "locality-aware: next layer's head adjoins this layer's tail"
+        );
+    }
+
+    #[test]
+    fn overflow_is_an_error() {
+        let f = FabricConfig::square(2);
+        let err = place(&[(2, 2), (1, 1)], &f).unwrap_err();
+        assert!(err.to_string().contains("exceed"), "{err}");
+        assert!(place(&[], &f).is_err());
+    }
+
+    #[test]
+    fn render_shows_shards_and_free_tiles() {
+        let f = FabricConfig::square(2);
+        let p = place(&[(1, 2), (1, 1)], &f).unwrap();
+        let s = p.render();
+        assert!(s.contains("L0.0.0"));
+        assert!(s.contains("L0.0.1"));
+        assert!(s.contains("L1.0.0"));
+        assert!(s.contains('·'));
+    }
+}

@@ -9,7 +9,8 @@
 //! model (HLO text artifacts, python never on the request path).
 //!
 //! Layer map (DESIGN.md §3):
-//! * L3 (this crate): [`coordinator`], [`macro_model`], substrates.
+//! * L3 (this crate): [`coordinator`], [`fabric`], [`macro_model`],
+//!   substrates.
 //! * L2/L1 (build time): `python/compile/{model.py,kernels/}` → `artifacts/`.
 //! * Bridge: [`runtime`] executes the HLO artifacts — via the `xla` crate
 //!   when built with the `pjrt` cargo feature, or through the hermetic
@@ -34,6 +35,7 @@ pub mod coordinator;
 pub mod device;
 pub mod energy;
 pub mod event;
+pub mod fabric;
 pub mod macro_model;
 pub mod repro;
 pub mod runtime;

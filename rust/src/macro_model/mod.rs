@@ -1,5 +1,138 @@
 //! The complete spiking CIM macro (DESIGN.md S8).
 
+use crate::energy::EnergyBreakdown;
+
 pub mod cim_macro;
 
 pub use cim_macro::{CimMacro, MacroResult};
+
+/// Fan a tiled layer's input slices across its shard macros (ti-major
+/// order) and regroup the outputs as `partials[ti][tj]`, plus summed
+/// energy and the critical-path (max) latency. This is the single
+/// implementation of the (ti, tj) convention that both `snn::infer` and
+/// `fabric::chip` rely on for bit-identity — do not fork it.
+pub fn mvm_tiled(
+    macros: &mut [CimMacro],
+    xparts: &[Vec<u32>],
+    row_tiles: usize,
+    col_tiles: usize,
+) -> (Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64) {
+    assert_eq!(macros.len(), row_tiles * col_tiles, "shard count");
+    let jobs: Vec<(&mut CimMacro, &[u32])> = macros
+        .iter_mut()
+        .enumerate()
+        .map(|(sidx, m)| (m, xparts[sidx / col_tiles].as_slice()))
+        .collect();
+    let results = mvm_parallel(jobs);
+    let mut energy = EnergyBreakdown::default();
+    let mut latency = 0.0f64; // tiles are physically concurrent
+    let mut partials: Vec<Vec<Vec<f64>>> = (0..row_tiles)
+        .map(|_| Vec::with_capacity(col_tiles))
+        .collect();
+    for (sidx, r) in results.into_iter().enumerate() {
+        energy.add(&r.energy);
+        latency = latency.max(r.latency_ns);
+        partials[sidx / col_tiles].push(r.y_mac);
+    }
+    (partials, energy, latency)
+}
+
+/// Run many independent tile MVMs on scoped worker threads (DESIGN.md
+/// S15): `jobs` pairs each programmed macro with its input slice.
+///
+/// Results come back in job order, bit-identical to a serial loop — each
+/// macro is its own deterministic simulator, so parallelism changes only
+/// wall-clock (row tiles were always *modeled* as latency-parallel; this
+/// makes the implementation match the model). Jobs are chunked over at
+/// most `available_parallelism` threads so spawn overhead stays
+/// negligible at small tile counts.
+pub fn mvm_parallel(jobs: Vec<(&mut CimMacro, &[u32])>) -> Vec<MacroResult> {
+    let n = jobs.len();
+    if n <= 1 {
+        return jobs.into_iter().map(|(m, x)| m.mvm(x)).collect();
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n);
+    let chunk = n.div_ceil(threads);
+    let mut rest = jobs;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        while !rest.is_empty() {
+            let tail = rest.split_off(chunk.min(rest.len()));
+            let batch = std::mem::replace(&mut rest, tail);
+            handles.push(s.spawn(move || {
+                batch
+                    .into_iter()
+                    .map(|(m, x)| m.mvm(x))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("tile worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MacroConfig;
+    use crate::util::rng::Rng;
+
+    /// Deterministically build `n` programmed macros and `n` inputs.
+    fn fleet(n: usize, seed: u64) -> (Vec<CimMacro>, Vec<Vec<u32>>) {
+        let cfg = MacroConfig::default();
+        let mut rng = Rng::new(seed);
+        let macros = (0..n)
+            .map(|_| {
+                let mut m = CimMacro::new(cfg.clone());
+                let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+                    .map(|_| rng.below(4) as u8)
+                    .collect();
+                m.program(&codes);
+                m
+            })
+            .collect();
+        let xs = (0..n)
+            .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+            .collect();
+        (macros, xs)
+    }
+
+    #[test]
+    fn parallel_tiles_match_serial_bit_for_bit() {
+        let (mut serial, xs) = fleet(5, 77);
+        let want: Vec<MacroResult> = serial
+            .iter_mut()
+            .zip(&xs)
+            .map(|(m, x)| m.mvm(x))
+            .collect();
+
+        let (mut par, _) = fleet(5, 77); // identical rebuild
+        let jobs: Vec<(&mut CimMacro, &[u32])> = par
+            .iter_mut()
+            .zip(&xs)
+            .map(|(m, x)| (m, x.as_slice()))
+            .collect();
+        let got = mvm_parallel(jobs);
+
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.y_mac, w.y_mac);
+            assert_eq!(g.events, w.events);
+            assert_eq!(g.energy, w.energy);
+        }
+    }
+
+    #[test]
+    fn single_job_runs_inline() {
+        let (mut ms, xs) = fleet(1, 78);
+        let jobs = vec![(&mut ms[0], xs[0].as_slice())];
+        let got = mvm_parallel(jobs);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].y_mac.iter().any(|&v| v > 0.0));
+    }
+}

@@ -20,7 +20,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use spikemram::config::{LevelMap, MacroConfig};
+use spikemram::config::{FabricConfig, LevelMap, MacroConfig};
 use spikemram::coordinator::{BackendKind, MacroServer, ServerConfig};
 use spikemram::macro_model::CimMacro;
 use spikemram::repro;
@@ -46,13 +46,16 @@ experiments (paper artifacts → results/):
   all               run everything above
   ablations         design-knob + Monte-Carlo corner sweep [--mvms N]
   scaling           EX1 array-size scaling study (parasitics + headroom)
+  fabric            EX2 multi-macro fabric scaling sweep (macros 1 → 64:
+                    spike-packet NoC share, hops, modeled throughput)
 
 operations:
   mvm        run one 128×128 macro MVM   [--seed N] [--backend sim|pjrt]
   snn        train + quantize + run the digits MLP on macros
              [--train N] [--test N] [--epochs N] [--levels device|ideal]
   serve      spin up the batching server  [--requests N] [--workers N]
-             [--batch N] [--backend sim|pjrt] [--artifacts DIR]
+             [--batch N] [--backend sim|pjrt|fabric] [--artifacts DIR]
+             [--grid G] [--k K] [--n N]   (fabric: K×N weights, G×G mesh)
   selfcheck  verify PJRT artifacts match the behavioral simulator
 
 common options: --seed N   --artifacts DIR (default: artifacts)
@@ -112,6 +115,12 @@ fn main() -> Result<()> {
         }
         "scaling" => {
             println!("{}", repro::scaling::render(&repro::scaling::run(&cfg)));
+        }
+        "fabric" => {
+            println!(
+                "{}",
+                repro::fabric::render(&repro::fabric::run(&cfg, seed))
+            );
         }
         "mvm" => cmd_mvm(&args, &cfg, seed)?,
         "snn" => cmd_snn(&args, &cfg, seed)?,
@@ -224,6 +233,14 @@ fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         "pjrt" => BackendKind::Pjrt {
             artifacts_dir: args.get_str("artifacts", "artifacts"),
         },
+        "fabric" => {
+            let g = args.get_usize("grid", 4);
+            BackendKind::Fabric {
+                fabric: FabricConfig::square(g),
+                k: args.get_usize("k", 2 * cfg.rows),
+                n: args.get_usize("n", 2 * cfg.cols),
+            }
+        }
         other => bail!("unknown backend {other:?}"),
     };
     let scfg = ServerConfig {
@@ -233,13 +250,19 @@ fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         ..ServerConfig::default()
     };
     let mut rng = Rng::new(seed);
-    let codes = random_codes(cfg, &mut rng);
+    let (in_dim, codes) = match &scfg.backend {
+        BackendKind::Fabric { k, n, .. } => (
+            *k,
+            (0..k * n).map(|_| rng.below(4) as u8).collect(),
+        ),
+        _ => (cfg.rows, random_codes(cfg, &mut rng)),
+    };
     let server = MacroServer::start(cfg.clone(), codes, scfg)?;
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|_| {
             let x: Vec<u32> =
-                (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
+                (0..in_dim).map(|_| rng.below(256) as u32).collect();
             server.submit(x)
         })
         .collect();
@@ -253,6 +276,15 @@ fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         n as f64 / dt.as_secs_f64()
     );
     println!("{}", server.metrics.summary());
+    let snap = server.metrics.snapshot();
+    if snap.tiles_total > 0 {
+        println!(
+            "fabric: {:.0} % of {} tiles utilized, {:.1} hops/packet",
+            snap.tile_utilization() * 100.0,
+            snap.tiles_total,
+            snap.hops_per_packet()
+        );
+    }
     server.shutdown();
     Ok(())
 }

@@ -23,8 +23,9 @@ use super::report::{self, Table};
 #[derive(Debug, Clone)]
 pub struct Fig6a {
     pub mean_energy: EnergyBreakdown,
-    /// shares: [array, smu, osg, control]
-    pub shares: [f64; 4],
+    /// shares: [array, smu, osg, control, noc] — noc is always 0 for a
+    /// single macro (the fabric charges it, DESIGN.md S15).
+    pub shares: [f64; 5],
     pub tops_per_watt: f64,
     pub mvms: usize,
 }

@@ -12,10 +12,13 @@
 //! | E6 | [`fig7::run_fig7a`] | Fig 7(a) linearity |
 //! | E7 | [`fig7::run_fig7b`] | Fig 7(b) droop |
 //! | E8 | [`table2`] | Table II comparison |
+//! | EX1 | [`scaling`] | extension: array-size scaling |
+//! | EX2 | [`fabric`] | extension: multi-macro fabric scaling (S15) |
 //!
 //! E9 (end-to-end SNN) lives in `examples/snn_inference.rs`.
 
 pub mod ablations;
+pub mod fabric;
 pub mod fig3;
 pub mod fig5;
 pub mod fig6;

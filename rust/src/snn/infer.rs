@@ -3,11 +3,23 @@
 //! encoded activations, 2-bit conductance weights, OSG readout — with the
 //! conductance-offset trick recovering signed weights, and full energy /
 //! latency accounting from the per-op ledgers.
+//!
+//! Two deployment targets behind one `MacroMlp` (DESIGN.md S15):
+//! * **per-layer tile pools** (the default): each layer owns one macro
+//!   per weight tile; tile MVMs run on scoped worker threads, matching
+//!   the model's latency-parallel row tiles in wall-clock too;
+//! * **fabric chip** (`attach_fabric`): all layers' shards live on one
+//!   event-routed mesh; forwards add NoC traffic (`noc_fj`, hop counts)
+//!   while staying bit-identical to the tile-pool path — the fabric is
+//!   a *transparent* deployment target.
 
-use crate::config::{LevelMap, MacroConfig};
+use anyhow::Result;
+
+use crate::config::{FabricConfig, LevelMap, MacroConfig};
 use crate::coordinator::TiledMatrix;
 use crate::energy::EnergyBreakdown;
-use crate::macro_model::CimMacro;
+use crate::fabric::{FabricChip, FabricPipeline, StageRelay};
+use crate::macro_model::{mvm_tiled, CimMacro};
 use crate::snn::dataset::Dataset;
 use crate::snn::mlp::{argmax, Mlp};
 use crate::snn::quant::{quantize_layer, ActQuant, QuantLayer};
@@ -16,7 +28,8 @@ use crate::snn::quant::{quantize_layer, ActQuant, QuantLayer};
 struct MacroLayer {
     q: QuantLayer,
     tiled: TiledMatrix,
-    /// One programmed macro per weight tile (weight-stationary).
+    /// One programmed macro per weight tile (weight-stationary); empty
+    /// when the whole model executes on a shared fabric chip.
     macros: Vec<CimMacro>,
 }
 
@@ -34,40 +47,58 @@ impl MacroLayer {
         MacroLayer { q, tiled, macros }
     }
 
-    /// MAC through the macros; returns (z floats, energy, latency ns).
-    fn forward(&mut self, x: &[u32]) -> (Vec<f32>, EnergyBreakdown, f64) {
+    /// Run every tile's MVM (scoped worker threads — tiles are
+    /// independent macros) and return partials in deterministic (ti, tj)
+    /// order plus summed energy and the critical-path latency.
+    fn forward_tiles(
+        &mut self,
+        x: &[u32],
+    ) -> (Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64) {
         let xparts = self.tiled.split_input(x);
-        let mut energy = EnergyBreakdown::default();
-        let mut latency: f64 = 0.0; // row tiles run in parallel macros
-        let mut partials: Vec<Vec<Vec<f64>>> = Vec::new();
-        for ti in 0..self.tiled.row_tiles {
-            let mut row = Vec::new();
-            for tj in 0..self.tiled.col_tiles {
-                let idx = ti * self.tiled.col_tiles + tj;
-                let r = self.macros[idx].mvm(&xparts[ti]);
-                energy.add(&r.energy);
-                latency = latency.max(r.latency_ns);
-                row.push(r.y_mac);
-            }
-            partials.push(row);
-        }
-        let mac = self.tiled.accumulate(&partials);
-        let sum_x: f64 = x.iter().map(|&v| v as f64).sum();
-        let z: Vec<f32> = mac
-            .iter()
-            .enumerate()
-            .map(|(o, &m)| {
-                (self.q.scale * (m - self.q.g_mid * sum_x)) as f32
-                    + self.q.bias.get(o).copied().unwrap_or(0.0)
-            })
-            .collect();
-        (z, energy, latency)
+        mvm_tiled(
+            &mut self.macros,
+            &xparts,
+            self.tiled.row_tiles,
+            self.tiled.col_tiles,
+        )
     }
+
+    /// Accumulated MAC → float pre-activations (see [`dequant_z`]).
+    fn finish_z(&self, x: &[u32], mac: &[f64], x_step: f32) -> Vec<f32> {
+        dequant_z(self.q.scale, self.q.g_mid, &self.q.bias, x_step, x, mac)
+    }
+}
+
+/// Accumulated MAC → float pre-activations: removes the conductance
+/// offset, applies the weight scale and the activation step, adds the
+/// bias. The single site shared by the serial path
+/// ([`MacroLayer::finish_z`]) and the pipelined stage relays
+/// ([`MacroMlp::evaluate_pipelined`]) — bit-identity between them
+/// (asserted in `rust/tests/fabric_e2e.rs`) must not drift.
+fn dequant_z(
+    scale: f64,
+    g_mid: f64,
+    bias: &[f32],
+    x_step: f32,
+    x: &[u32],
+    mac: &[f64],
+) -> Vec<f32> {
+    let sum_x: f64 = x.iter().map(|&v| v as f64).sum();
+    mac.iter()
+        .enumerate()
+        .map(|(o, &m)| {
+            (scale * (m - g_mid * sum_x)) as f32 * x_step
+                + bias.get(o).copied().unwrap_or(0.0)
+        })
+        .collect()
 }
 
 /// The full quantized MLP deployed on macros.
 pub struct MacroMlp {
     layers: Vec<MacroLayer>,
+    /// When present, forwards route through this chip (DESIGN.md S15)
+    /// and the per-layer `macros` pools are empty.
+    fabric: Option<FabricChip>,
     /// Activation quantizers between layers (len = layers − 1).
     pub act_quants: Vec<ActQuant>,
     /// Input activation scale (pixels are already 8-bit; step in float
@@ -82,6 +113,10 @@ pub struct InferStats {
     pub latency_ns: f64,
     /// MAC operations executed on macros (2 OPs each).
     pub macs: u64,
+    /// Spike packets routed on the fabric NoC (0 off-fabric).
+    pub noc_packets: u64,
+    /// Total NoC hops those packets travelled (0 off-fabric).
+    pub noc_hops: u64,
 }
 
 impl MacroMlp {
@@ -135,9 +170,33 @@ impl MacroMlp {
                 MacroLayer::new(q2, cfg),
                 MacroLayer::new(q3, cfg),
             ],
+            fabric: None,
             act_quants,
             input_step: 1.0 / 255.0,
         }
+    }
+
+    /// Re-deploy the quantized layers onto a multi-macro fabric chip:
+    /// every layer's weight tiles become NoC-routed mesh tiles
+    /// (weight-stationary). Fails when the mesh cannot hold all shards.
+    pub fn attach_fabric(
+        mut self,
+        cfg: &MacroConfig,
+        fabric: FabricConfig,
+    ) -> Result<MacroMlp> {
+        let tiled: Vec<TiledMatrix> =
+            self.layers.iter().map(|l| l.tiled.clone()).collect();
+        let chip = FabricChip::new(cfg, fabric, tiled)?;
+        for l in &mut self.layers {
+            l.macros.clear(); // the chip owns the programmed tiles now
+        }
+        self.fabric = Some(chip);
+        Ok(self)
+    }
+
+    /// Is this model deployed on a fabric chip?
+    pub fn on_fabric(&self) -> bool {
+        self.fabric.is_some()
     }
 
     /// Forward pass from 8-bit pixels; returns (logits, stats).
@@ -148,24 +207,23 @@ impl MacroMlp {
         let n_layers = self.layers.len();
         let mut logits = Vec::new();
         for li in 0..n_layers {
-            // MACs on macros are in (x LSB)·µS; the layer scale expects
-            // float activations, so fold the activation step in.
-            let (z_lsb, energy, lat) = self.layers[li].forward(&x);
+            let layer = &mut self.layers[li];
+            // MACs on macros are in (x LSB)·µS; finish_z folds the
+            // activation step back in so z comes out in float units.
+            let (partials, energy, lat) = match self.fabric.as_mut() {
+                None => layer.forward_tiles(&x),
+                Some(chip) => {
+                    let r = chip.forward_layer(li, &x);
+                    stats.noc_packets += r.packets;
+                    stats.noc_hops += r.hops;
+                    (r.partials, r.energy, r.latency_ns)
+                }
+            };
             stats.energy.add(&energy);
             stats.latency_ns += lat;
-            stats.macs += (self.layers[li].q.in_dim
-                * self.layers[li].q.out_dim) as u64;
-            // z computed with x in LSB units: scale by x_step to float.
-            let z: Vec<f32> = z_lsb
-                .iter()
-                .enumerate()
-                .map(|(o, &v)| {
-                    let bias = self.layers[li].q.bias.get(o).copied().unwrap_or(0.0);
-                    // layer.forward already added bias once (unscaled);
-                    // remove and re-add correctly scaled.
-                    (v - bias) * x_step + bias
-                })
-                .collect();
+            stats.macs += (layer.q.in_dim * layer.q.out_dim) as u64;
+            let mac = layer.tiled.accumulate(&partials);
+            let z = layer.finish_z(&x, &mac, x_step);
             if li + 1 == n_layers {
                 logits = z;
             } else {
@@ -194,8 +252,77 @@ impl MacroMlp {
             agg.energy.add(&stats.energy);
             agg.latency_ns += stats.latency_ns;
             agg.macs += stats.macs;
+            agg.noc_packets += stats.noc_packets;
+            agg.noc_hops += stats.noc_hops;
         }
         (correct as f64 / data.len() as f64, agg)
+    }
+
+    /// Evaluate with the fabric dataflow executor: one thread per layer,
+    /// inter-layer pipelining (DESIGN.md S15). Consumes the model (the
+    /// chip's stages move onto the worker threads). Predictions are
+    /// bit-identical to the serial [`evaluate`](Self::evaluate) path.
+    ///
+    /// Panics when the model is not fabric-backed — call
+    /// [`attach_fabric`](Self::attach_fabric) first.
+    pub fn evaluate_pipelined(self, data: &Dataset) -> (f64, InferStats) {
+        let MacroMlp {
+            layers,
+            act_quants,
+            input_step,
+            fabric,
+        } = self;
+        let chip = fabric
+            .expect("evaluate_pipelined needs a fabric-backed model");
+        let n_layers = layers.len();
+        let macs_per_inf: u64 = layers
+            .iter()
+            .map(|l| (l.q.in_dim * l.q.out_dim) as u64)
+            .sum();
+
+        // Per-stage relays reproduce finish_z + activation quantization
+        // with stage-constant parameters; the last stage emits the
+        // predicted label (argmax over the 10 digit logits).
+        let mut relays: Vec<StageRelay> = Vec::with_capacity(n_layers);
+        let mut x_step = input_step;
+        for (li, layer) in layers.into_iter().enumerate() {
+            let scale = layer.q.scale;
+            let g_mid = layer.q.g_mid;
+            let bias = layer.q.bias;
+            let step = x_step;
+            let aq = if li + 1 == n_layers {
+                None
+            } else {
+                Some(act_quants[li])
+            };
+            if let Some(a) = aq {
+                x_step = a.step;
+            }
+            relays.push(Box::new(move |x: &[u32], mac: Vec<f64>| {
+                let z = dequant_z(scale, g_mid, &bias, step, x, &mac);
+                match aq {
+                    Some(a) => z.iter().map(|&v| a.quantize(v)).collect(),
+                    None => vec![argmax(&z[..10]) as u32],
+                }
+            }));
+        }
+
+        let inputs: Vec<Vec<u32>> =
+            (0..data.len()).map(|i| data.features_u8(i)).collect();
+        let (outs, p) = FabricPipeline::new(chip, relays).run(inputs);
+        let correct = outs
+            .iter()
+            .zip(&data.examples)
+            .filter(|(o, ex)| o[0] as usize == ex.label)
+            .count();
+        let stats = InferStats {
+            energy: p.energy,
+            latency_ns: p.latency_ns,
+            macs: macs_per_inf * data.len() as u64,
+            noc_packets: p.packets,
+            noc_hops: p.hops,
+        };
+        (correct as f64 / data.len() as f64, stats)
     }
 }
 
@@ -226,6 +353,7 @@ mod tests {
         );
         assert!(stats.macs > 0);
         assert!(stats.energy.total_pj() > 0.0);
+        assert_eq!(stats.noc_packets, 0, "no fabric: no NoC traffic");
     }
 
     #[test]
@@ -251,5 +379,34 @@ mod tests {
         let (p1, _) = mm.predict(&x);
         let (p2, _) = mm.predict(&x);
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn fabric_backed_model_reports_noc_traffic() {
+        let (model, train_data, test_data) = trained();
+        let cfg = MacroConfig::default();
+        let mut mm =
+            MacroMlp::from_float(&model, &train_data, &cfg, LevelMap::DeviceTrue)
+                .attach_fabric(&cfg, FabricConfig::square(2))
+                .unwrap();
+        assert!(mm.on_fabric());
+        let x = test_data.features_u8(1);
+        let (_, stats) = mm.predict(&x);
+        assert!(stats.noc_packets > 0);
+        assert!(stats.noc_hops > 0);
+        assert!(stats.energy.noc_fj > 0.0);
+    }
+
+    #[test]
+    fn fabric_too_small_is_an_error() {
+        let (model, train_data, _) = trained();
+        let cfg = MacroConfig::default();
+        // The 3-layer MLP needs 4 shards; a 1×1 mesh cannot hold them.
+        let err =
+            MacroMlp::from_float(&model, &train_data, &cfg, LevelMap::DeviceTrue)
+                .attach_fabric(&cfg, FabricConfig::square(1))
+                .err()
+                .expect("placement must fail");
+        assert!(err.to_string().contains("exceed"), "{err}");
     }
 }

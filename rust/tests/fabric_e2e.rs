@@ -1,0 +1,106 @@
+//! Fabric integration (DESIGN.md S15): the multi-macro fabric must be a
+//! *transparent* deployment target — bit-identical math, identical
+//! accuracy — while adding only modeled NoC traffic on top, and the
+//! pipelined dataflow executor must match the serial fabric exactly.
+
+use spikemram::config::{FabricConfig, LevelMap, MacroConfig};
+use spikemram::snn;
+
+fn tiny_setup() -> (snn::Mlp, snn::Dataset, snn::Dataset) {
+    let train = snn::Dataset::generate(150, 7001);
+    let test = snn::Dataset::generate(60, 7002);
+    let (model, acc) = snn::train(&train, 5, 17);
+    assert!(acc > 0.85, "float train acc {acc}");
+    (model, train, test)
+}
+
+#[test]
+fn fabric_inference_bit_identical_to_single_macro_tiling() {
+    let (model, train, test) = tiny_setup();
+    let cfg = MacroConfig::default();
+    let mut tiles =
+        snn::MacroMlp::from_float(&model, &train, &cfg, LevelMap::DeviceTrue);
+    let mut fabric =
+        snn::MacroMlp::from_float(&model, &train, &cfg, LevelMap::DeviceTrue)
+            .attach_fabric(&cfg, FabricConfig::square(2))
+            .unwrap();
+    assert!(fabric.on_fabric() && !tiles.on_fabric());
+
+    // Batch-1 streaming: every example's logits must match bit-for-bit.
+    for i in 0..test.len() {
+        let x = test.features_u8(i);
+        let (lt, st) = tiles.forward(&x);
+        let (lf, sf) = fabric.forward(&x);
+        assert_eq!(lt, lf, "logits diverge at example {i}");
+        assert_eq!(st.macs, sf.macs);
+        // Identical macro physics — the fabric only adds NoC energy.
+        let fabric_compute = sf.energy.total_fj() - sf.energy.noc_fj;
+        assert!(
+            (st.energy.total_fj() - fabric_compute).abs() < 1e-6,
+            "compute energy diverged at example {i}"
+        );
+        assert!(sf.energy.noc_fj > 0.0);
+        assert!(sf.noc_hops > 0 && sf.noc_packets > 0);
+        assert!(sf.latency_ns > st.latency_ns, "NoC adds latency");
+    }
+
+    let (acc_t, _) = tiles.evaluate(&test);
+    let (acc_f, stats_f) = fabric.evaluate(&test);
+    assert_eq!(acc_t, acc_f, "fabric must not change accuracy");
+    // NoC overhead is a minority share of the end-to-end breakdown.
+    let share = stats_f.energy.noc_fj / stats_f.energy.total_fj();
+    assert!(share > 0.0 && share < 0.35, "NoC share {share}");
+}
+
+#[test]
+fn pipelined_fabric_evaluate_matches_serial_fabric() {
+    let (model, train, test) = tiny_setup();
+    let cfg = MacroConfig::default();
+    let build = || {
+        snn::MacroMlp::from_float(&model, &train, &cfg, LevelMap::DeviceTrue)
+            .attach_fabric(&cfg, FabricConfig::square(2))
+            .unwrap()
+    };
+    let (acc_serial, st_serial) = build().evaluate(&test);
+    let (acc_pipe, st_pipe) = build().evaluate_pipelined(&test);
+
+    assert_eq!(acc_serial, acc_pipe, "pipelining must not change results");
+    assert_eq!(st_serial.macs, st_pipe.macs);
+    assert_eq!(st_serial.noc_packets, st_pipe.noc_packets);
+    assert_eq!(st_serial.noc_hops, st_pipe.noc_hops);
+    // Per-stage accumulation order differs from per-item order; totals
+    // agree to float roundoff.
+    let rel = (st_serial.energy.total_fj() - st_pipe.energy.total_fj())
+        .abs()
+        / st_serial.energy.total_fj();
+    assert!(rel < 1e-9, "energy rel diff {rel}");
+    let lat_rel = (st_serial.latency_ns - st_pipe.latency_ns).abs()
+        / st_serial.latency_ns;
+    assert!(lat_rel < 1e-9, "latency rel diff {lat_rel}");
+}
+
+#[test]
+fn fabric_grid_shapes_change_routing_not_results() {
+    // Same model on two different meshes: identical predictions, but
+    // more spread-out placement → more hops.
+    let (model, train, test) = tiny_setup();
+    let cfg = MacroConfig::default();
+    let eval = |f: FabricConfig| {
+        let mut mm = snn::MacroMlp::from_float(
+            &model,
+            &train,
+            &cfg,
+            LevelMap::DeviceTrue,
+        )
+        .attach_fabric(&cfg, f)
+        .unwrap();
+        mm.evaluate(&test)
+    };
+    let (acc_small, st_small) = eval(FabricConfig::square(2));
+    let (acc_big, st_big) = eval(FabricConfig {
+        io_tile: (3, 3), // far corner: every route lengthens
+        ..FabricConfig::square(4)
+    });
+    assert_eq!(acc_small, acc_big);
+    assert!(st_big.noc_hops > st_small.noc_hops);
+}

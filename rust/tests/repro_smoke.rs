@@ -1,12 +1,15 @@
 //! Smoke test: every `repro/` entry point stays executable (DESIGN.md §5).
 //!
 //! One call per experiment module — fig3–fig7, table1/table2, ablations,
-//! scaling — with deliberately tiny configs, so the documented claims
+//! scaling, fabric — with deliberately tiny configs, so the documented claims
 //! (`spikemram table1|fig7a|…` and the README quickstart) cannot rot
 //! without CI noticing. Result files go to a throwaway directory.
 
 use spikemram::config::MacroConfig;
-use spikemram::repro::{ablations, fig3, fig5, fig6, fig7, report, scaling, table1, table2};
+use spikemram::repro::{
+    ablations, fabric, fig3, fig5, fig6, fig7, report, scaling, table1,
+    table2,
+};
 
 fn results_to_tmp() {
     // set_var exactly once per process: concurrent setenv while another
@@ -83,6 +86,15 @@ fn scaling_study_runs() {
     let pts = scaling::run(&MacroConfig::default());
     assert_eq!(pts.len(), 4);
     assert!(scaling::render(&pts).contains("512×512"));
+}
+
+#[test]
+fn fabric_scaling_sweep_runs_tiny() {
+    results_to_tmp();
+    let pts = fabric::run_points(&MacroConfig::default(), &[1, 2], 7, 1);
+    assert_eq!(pts.len(), 2);
+    assert!(pts[1].tops > pts[0].tops);
+    assert!(fabric::render(&pts).contains("2×2"));
 }
 
 #[test]

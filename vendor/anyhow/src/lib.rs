@@ -4,8 +4,9 @@
 //! of depending on crates.io this path dependency re-implements exactly the
 //! surface `spikemram` uses: [`Error`], [`Result`], the [`Context`] trait
 //! (`.context(..)` / `.with_context(..)` on `Result` and `Option`), and the
-//! [`anyhow!`] / [`bail!`] macros. Swapping back to the real crate is a
-//! one-line change in the workspace `Cargo.toml`; no source edits needed.
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros. Swapping back to the real
+//! crate is a one-line change in the workspace `Cargo.toml`; no source
+//! edits needed.
 //!
 //! Differences from the real crate (none observable to this repo's code):
 //! * the cause chain is captured as rendered strings, not live trait
@@ -177,6 +178,26 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] unless the condition holds (the real
+/// crate's `ensure!`, message forms included).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(::std::concat!(
+                "Condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            ));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !$cond {
+            $crate::bail!($($tt)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +264,21 @@ mod tests {
         }
         assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
         assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+        assert_eq!(f(5).unwrap(), 5);
+    }
+
+    #[test]
+    fn ensure_bare_and_message_forms() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x != 0);
+            ensure!(x <= 10, "too big: {} > 10", x);
+            Ok(x)
+        }
+        assert!(f(0)
+            .unwrap_err()
+            .to_string()
+            .contains("Condition failed"));
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11 > 10");
         assert_eq!(f(5).unwrap(), 5);
     }
 
