@@ -51,6 +51,18 @@ fn main() {
             lr.hops,
             r.median_ns() / 1e3
         ));
+        // Batched mesh forward (DESIGN.md S16): one weight pass per
+        // shard for the whole minibatch.
+        let xs: Vec<Vec<u32>> = (0..8).map(|_| x.clone()).collect();
+        let rb = h.bench_function_n(
+            &format!("fabric_mvm_batch8_{g}x{g}_mesh"),
+            8,
+            |b| b.iter(|| black_box(c.mvm_batch(&xs).len())),
+        );
+        h.note(&format!(
+            "{:.2}× the serial per-op median on this mesh",
+            rb.per_op_median_ns() / r.median_ns()
+        ));
     }
 
     // Two-layer streaming: serial chip vs thread-per-layer pipeline.
@@ -111,4 +123,21 @@ fn main() {
         "{items} items through 2 layers; pipeline overlaps layer \
          compute across threads"
     ));
+    h.bench_function("two_layer_pipelined_batch4", |b| {
+        b.iter(|| {
+            let relays: Vec<StageRelay> = (0..2)
+                .map(|_| {
+                    Box::new(move |_x: &[u32], mac: Vec<f64>| requant(mac))
+                        as StageRelay
+                })
+                .collect();
+            black_box(
+                FabricPipeline::new(mk_layers(31), relays)
+                    .run_batched(inputs.clone(), 4)
+                    .0,
+            )
+        })
+    });
+
+    h.finish();
 }

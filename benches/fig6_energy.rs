@@ -56,4 +56,6 @@ fn main() {
          (OSG max deviation: <1e-6 %, see fig7a)",
         nl * 100.0
     );
+
+    h.finish();
 }

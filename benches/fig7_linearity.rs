@@ -101,4 +101,6 @@ fn main() {
         "\nmean relative MAC error in droop mode: {:.1} %",
         fig7::droop_mac_error(&cfg, 72) * 100.0
     );
+
+    h.finish();
 }

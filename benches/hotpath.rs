@@ -1,16 +1,26 @@
-//! Bench: L3 hot paths (DESIGN.md §9) — the structures the perf pass
-//! optimizes: event queue throughput, flag tree, single macro MVM at
-//! several sparsities, scheduler dispatch, and the serving loop.
-//! §Perf in EXPERIMENTS.md records before/after from this bench.
+//! Bench: L3 hot paths (DESIGN.md §9, S16) — the structures the perf
+//! pass optimizes: event queue throughput, flag tree, single macro MVM
+//! at several sparsities, the batched MVM engine at B ∈ {1, 8, 64},
+//! scheduler dispatch, and the serving loop. §Perf in EXPERIMENTS.md
+//! records before/after from this bench; `BENCH_hotpath.json` carries
+//! the machine-readable trajectory.
+//!
+//! ```bash
+//! cargo bench --bench hotpath            # full run
+//! cargo bench --bench hotpath -- --test  # CI smoke (fast mode)
+//! ```
 
 use spikemram::benchlib::{black_box, Harness};
 use spikemram::config::MacroConfig;
 use spikemram::coordinator::{Policy, Scheduler, TileOp, TiledMatrix};
 use spikemram::event::{EventKind, EventQueue, FlagTree};
-use spikemram::macro_model::CimMacro;
+use spikemram::macro_model::{CimMacro, MvmBatch};
 use spikemram::util::rng::Rng;
 
 fn main() {
+    if std::env::args().any(|a| a == "--test") {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    }
     let mut h = Harness::new("hotpath");
     let cfg = MacroConfig::default();
 
@@ -87,6 +97,41 @@ fn main() {
         }
     }
 
+    // --- batched MVM engine (DESIGN.md S16) -------------------------------
+    // Per-op medians for B ∈ {1, 8, 64} dense batches vs the serial fast
+    // path: the batch engine streams each conductance row once per batch
+    // and the reused ledger makes the steady state allocation-free.
+    let xs64: Vec<Vec<u32>> = (0..64)
+        .map(|_| (0..cfg.rows).map(|_| 1 + rng.below(255) as u32).collect())
+        .collect();
+    let serial = h.bench_function_n("macro_mvm_serial_dense_x8", 8, |b| {
+        b.iter(|| {
+            let mut acc = 0.0f64;
+            for x in &xs64[..8] {
+                acc += m.mvm(black_box(x)).t_out_ns[0];
+            }
+            acc
+        })
+    });
+    let serial_per_op = serial.per_op_median_ns();
+    let mut ledger = MvmBatch::default();
+    for batch in [1usize, 8, 64] {
+        let r = h.bench_function_n(
+            &format!("macro_mvm_batch{batch}_dense"),
+            batch as u64,
+            |b| {
+                b.iter(|| {
+                    m.mvm_batch_into(black_box(&xs64[..batch]), &mut ledger);
+                    ledger.y_mac(batch - 1)[0]
+                })
+            },
+        );
+        h.note(&format!(
+            "{:.2}× the serial per-op median",
+            r.per_op_median_ns() / serial_per_op
+        ));
+    }
+
     // --- scheduler dispatch ----------------------------------------------
     let big_codes: Vec<u8> = (0..256 * 128).map(|i| (i % 4) as u8).collect();
     let tm = TiledMatrix::new(&big_codes, 256, 128, 128);
@@ -105,4 +150,6 @@ fn main() {
             })
         });
     }
+
+    h.finish();
 }

@@ -8,12 +8,15 @@ use std::time::Duration;
 use spikemram::benchlib::{black_box, Harness};
 use spikemram::config::{LevelMap, MacroConfig};
 use spikemram::coordinator::{BackendKind, MacroServer, ServerConfig};
-use spikemram::macro_model::CimMacro;
+use spikemram::macro_model::{CimMacro, MvmBatch};
 use spikemram::runtime::{Runtime, Value};
 use spikemram::snn;
 use spikemram::util::rng::Rng;
 
 fn main() {
+    if std::env::args().any(|a| a == "--test") {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    }
     let mut h = Harness::new("macro_op");
     let cfg = MacroConfig::default();
     let mut rng = Rng::new(3);
@@ -33,6 +36,28 @@ fn main() {
         "{:.1} MMAC/s simulated MAC throughput",
         (cfg.rows * cfg.cols) as f64 / per_op_ns * 1e3
     ));
+
+    // --- batched sim (DESIGN.md S16): B ∈ {8, 64} ---------------------------
+    let xs: Vec<Vec<u32>> = (0..64)
+        .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+        .collect();
+    let mut ledger = MvmBatch::default();
+    for batch in [8usize, 64] {
+        let r = h.bench_function_n(
+            &format!("sim_mvm_batch{batch}"),
+            batch as u64,
+            |b| {
+                b.iter(|| {
+                    m.mvm_batch_into(black_box(&xs[..batch]), &mut ledger);
+                    ledger.y_mac(batch - 1)[0]
+                })
+            },
+        );
+        h.note(&format!(
+            "{:.1} MMAC/s through the batched engine (batch {batch})",
+            (cfg.rows * cfg.cols) as f64 / r.per_op_median_ns() * 1e3
+        ));
+    }
 
     // --- PJRT artifact (batch 8) -------------------------------------------
     let artifacts = std::env::var("SPIKEMRAM_ARTIFACTS")
@@ -110,4 +135,11 @@ fn main() {
     h.bench_function("snn_single_inference_sim", |b| {
         b.iter(|| mm.predict(black_box(&px)).0)
     });
+    let batch_px: Vec<Vec<u32>> =
+        (0..8).map(|i| data.features_u8(i % data.len())).collect();
+    h.bench_function_n("snn_batch8_inference_sim", 8, |b| {
+        b.iter(|| mm.forward_batch(black_box(&batch_px)).len())
+    });
+
+    h.finish();
 }

@@ -58,4 +58,6 @@ fn main() {
 
     // Print the regenerated table itself.
     println!("\n{}", table2::render(&table2::run(&cfg, 50, 42)));
+
+    h.finish();
 }

@@ -22,6 +22,12 @@ echo "==> fabric bench: compile + smoke run in --test mode"
 cargo bench --bench fabric_scaling --no-run
 SPIKEMRAM_BENCH_FAST=1 cargo bench --bench fabric_scaling -- --test
 
+echo "==> hotpath bench: smoke run in --test mode (batched MVM engine)"
+# Exercises the serial + batched fast paths under the release profile and
+# refreshes BENCH_hotpath.json (the machine-readable perf trajectory).
+cargo bench --bench hotpath --no-run
+SPIKEMRAM_BENCH_FAST=1 cargo bench --bench hotpath -- --test
+
 echo "==> lint: cargo fmt --check && cargo clippy -D warnings"
 # --all-targets covers the fabric/ module (lib), its bench, example,
 # and integration test with warnings fatal.

@@ -18,11 +18,20 @@ pub struct BenchResult {
     pub name: String,
     pub samples_ns: Vec<f64>,
     pub iters_per_sample: u64,
+    /// Logical operations per iteration (batch size for batched benches);
+    /// `per_op_median_ns` divides by this so batched and serial rows
+    /// compare per-op directly.
+    pub ops_per_iter: u64,
 }
 
 impl BenchResult {
     pub fn median_ns(&self) -> f64 {
         crate::util::stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    /// Median per logical op (= `median_ns` for unbatched benches).
+    pub fn per_op_median_ns(&self) -> f64 {
+        self.median_ns() / self.ops_per_iter.max(1) as f64
     }
 
     pub fn mean_ns(&self) -> f64 {
@@ -148,6 +157,18 @@ impl Harness {
     pub fn bench_function<F: FnMut(&mut Bencher)>(
         &mut self,
         name: &str,
+        f: F,
+    ) -> BenchResult {
+        self.bench_function_n(name, 1, f)
+    }
+
+    /// [`bench_function`](Self::bench_function) for a closure doing
+    /// `ops` logical operations per iteration (e.g. one B-item
+    /// `mvm_batch` call): the JSON record carries a per-op median.
+    pub fn bench_function_n<F: FnMut(&mut Bencher)>(
+        &mut self,
+        name: &str,
+        ops: u64,
         mut f: F,
     ) -> BenchResult {
         let mut b = Bencher {
@@ -161,8 +182,16 @@ impl Harness {
             name: name.to_string(),
             samples_ns: b.result_ns,
             iters_per_sample: b.iters_per_sample,
+            ops_per_iter: ops.max(1),
         };
         println!("{}", r.summary_line());
+        if r.ops_per_iter > 1 {
+            println!(
+                "    ↳ {} per op ({} ops/iter)",
+                fmt_ns(r.per_op_median_ns()),
+                r.ops_per_iter
+            );
+        }
         self.results.push(r.clone());
         r
     }
@@ -174,6 +203,70 @@ impl Harness {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Write the group's results as machine-readable
+    /// `BENCH_<group>.json` (into `SPIKEMRAM_BENCH_DIR`, default the
+    /// working directory) so the perf trajectory is tracked across PRs.
+    /// Returns the path written.
+    pub fn finish(&self) -> std::path::PathBuf {
+        let dir = std::env::var("SPIKEMRAM_BENCH_DIR")
+            .unwrap_or_else(|_| ".".to_string());
+        self.finish_to(std::path::Path::new(&dir))
+    }
+
+    /// [`finish`](Self::finish) into an explicit directory (tests use
+    /// this to avoid mutating process-global env vars).
+    pub fn finish_to(&self, dir: &std::path::Path) -> std::path::PathBuf {
+        use crate::util::json::{self, Json};
+        let benches: std::collections::BTreeMap<String, Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    json::obj(vec![
+                        ("median_ns", Json::Num(r.median_ns())),
+                        ("mean_ns", Json::Num(r.mean_ns())),
+                        ("p95_ns", Json::Num(r.p95_ns())),
+                        ("mad_ns", Json::Num(r.mad_ns())),
+                        (
+                            "ops_per_iter",
+                            Json::Num(r.ops_per_iter as f64),
+                        ),
+                        (
+                            "per_op_median_ns",
+                            Json::Num(r.per_op_median_ns()),
+                        ),
+                        (
+                            "iters_per_sample",
+                            Json::Num(r.iters_per_sample as f64),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("group", Json::Str(self.group.clone())),
+            (
+                "profile",
+                Json::Str(
+                    if cfg!(debug_assertions) { "debug" } else { "release" }
+                        .to_string(),
+                ),
+            ),
+            (
+                "fast_mode",
+                Json::Bool(std::env::var("SPIKEMRAM_BENCH_FAST").is_ok()),
+            ),
+            ("samples_per_bench", Json::Num(self.samples as f64)),
+            ("benches", Json::Obj(benches)),
+        ]);
+        let path = dir.join(format!("BENCH_{}.json", self.group));
+        std::fs::write(&path, doc.to_pretty())
+            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        println!("wrote {}", path.display());
+        path
     }
 }
 
@@ -191,6 +284,30 @@ mod tests {
         assert!(r.median_ns() > 0.0);
         assert!(r.iters_per_sample >= 1);
         assert_eq!(r.samples_ns.len(), 5);
+    }
+
+    #[test]
+    fn finish_writes_machine_readable_json() {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+        let dir = std::env::temp_dir().join("spikemram_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut h = Harness::new("selftest_json");
+        h.bench_function("sum_1k", |b| b.iter(|| (0..1000u64).sum::<u64>()));
+        h.bench_function_n("sum_1k_x8", 8, |b| {
+            b.iter(|| (0..8).map(|_| (0..1000u64).sum::<u64>()).sum::<u64>())
+        });
+        let path = h.finish_to(&dir);
+        let doc = crate::util::json::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("group").unwrap().as_str(), Some("selftest_json"));
+        assert!(doc.get("profile").unwrap().as_str().is_some());
+        let b8 = doc.get("benches").unwrap().get("sum_1k_x8").unwrap();
+        assert_eq!(b8.get("ops_per_iter").unwrap().as_f64(), Some(8.0));
+        let per_op = b8.get("per_op_median_ns").unwrap().as_f64().unwrap();
+        let med = b8.get("median_ns").unwrap().as_f64().unwrap();
+        assert!(per_op > 0.0 && (per_op - med / 8.0).abs() < 1e-9);
     }
 
     #[test]

@@ -29,7 +29,7 @@ use anyhow::Result;
 use crate::config::{FabricConfig, MacroConfig};
 use crate::coordinator::TiledMatrix;
 use crate::fabric::FabricChip;
-use crate::macro_model::CimMacro;
+use crate::macro_model::{CimMacro, MvmBatch};
 use crate::runtime::{Runtime, Value};
 
 use super::metrics::Metrics;
@@ -170,7 +170,15 @@ impl MacroServer {
 }
 
 enum WorkerBackend {
-    Sim(Box<CimMacro>),
+    /// The behavioral macro plus a reusable batch ledger: each collected
+    /// batch executes as ONE `mvm_batch_into` call (DESIGN.md S16) — the
+    /// size-or-timeout batcher buys weight-stationary compute
+    /// amortization, not just queueing — and the ledger keeps the steady
+    /// state allocation-free.
+    Sim {
+        m: Box<CimMacro>,
+        ledger: MvmBatch,
+    },
     /// One fabric chip per worker (weight-stationary, like `Sim`'s
     /// per-worker macro). NoC counters drain to `Metrics` per batch.
     Fabric(Box<FabricChip>),
@@ -193,7 +201,10 @@ impl WorkerBackend {
             BackendKind::Sim => {
                 let mut m = CimMacro::new(cfg.clone());
                 m.program(codes);
-                WorkerBackend::Sim(Box::new(m))
+                WorkerBackend::Sim {
+                    m: Box::new(m),
+                    ledger: MvmBatch::default(),
+                }
             }
             BackendKind::Fabric { fabric, k, n } => {
                 let tiled = TiledMatrix::new(codes, *k, *n, cfg.rows);
@@ -221,12 +232,16 @@ impl WorkerBackend {
         }
     }
 
-    /// Compute MACs for a batch of inputs.
+    /// Compute MACs for a batch of inputs — one batched engine call per
+    /// collected batch, bit-identical to per-job serial execution.
     fn mvm_batch(&mut self, xs: &[Vec<u32>]) -> Vec<Vec<f64>> {
         match self {
-            WorkerBackend::Sim(m) => xs.iter().map(|x| m.mvm(x).y_mac).collect(),
+            WorkerBackend::Sim { m, ledger } => {
+                m.mvm_batch_into(xs, ledger);
+                (0..xs.len()).map(|b| ledger.y_mac(b).to_vec()).collect()
+            }
             WorkerBackend::Fabric(chip) => {
-                xs.iter().map(|x| chip.mvm(x).0).collect()
+                chip.mvm_batch(xs).into_iter().map(|(y, _)| y).collect()
             }
             WorkerBackend::Pjrt {
                 exe,
@@ -420,6 +435,48 @@ mod tests {
             assert_eq!(y.len(), 128);
         }
         assert_eq!(server.metrics.requests(), 32);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batched_execution_replies_match_serial_mvm_exactly() {
+        // A single worker with a large batch window collects concurrent
+        // submissions into one `mvm_batch` call (DESIGN.md S16); every
+        // reply must be bitwise what a serial `mvm` would have returned.
+        let cfg = MacroConfig::default();
+        let cs = codes(38);
+        let mut oracle = CimMacro::new(cfg.clone());
+        oracle.program(&cs);
+
+        let server = MacroServer::start(
+            cfg,
+            cs,
+            ServerConfig {
+                workers: 1,
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(5),
+                backend: BackendKind::Sim,
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(39);
+        let xs: Vec<Vec<u32>> = (0..24)
+            .map(|_| (0..128).map(|_| rng.below(256) as u32).collect())
+            .collect();
+        let rxs: Vec<_> =
+            xs.iter().map(|x| server.submit(x.clone())).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx.recv().unwrap();
+            let want = oracle.mvm(x).y_mac;
+            assert_eq!(got, want, "batched reply diverges from serial mvm");
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 24);
+        assert!(
+            snap.batches < 24,
+            "expected some multi-job batches, got {} batches",
+            snap.batches
+        );
         server.shutdown();
     }
 

@@ -5,4 +5,6 @@ pub mod accounting;
 pub mod model;
 
 pub use accounting::{tops_per_watt, EnergyBreakdown};
-pub use model::{mvm_energy, nominal_activity, EnergyParams, MvmActivity};
+pub use model::{
+    mvm_energy, nominal_activity, ActivityView, EnergyParams, MvmActivity,
+};

@@ -69,12 +69,47 @@ pub struct MvmActivity {
     pub events: u64,
 }
 
-/// Compute the energy breakdown of one macro MVM.
-pub fn mvm_energy(
+impl MvmActivity {
+    /// Borrow this activity as an [`ActivityView`].
+    pub fn view(&self) -> ActivityView<'_> {
+        ActivityView {
+            row_windows_ns: &self.row_windows_ns,
+            col_charge_nsus: &self.col_charge_nsus,
+            v_charge: &self.v_charge,
+            t_out_ns: &self.t_out_ns,
+            t_charge_ns: self.t_charge_ns,
+            events: self.events,
+        }
+    }
+}
+
+/// Borrowed view of one MVM's activity (DESIGN.md S16): the macro's hot
+/// path hands its scratch and ledger slices straight to [`mvm_energy`]
+/// without cloning the per-column vectors.
+#[derive(Debug, Clone, Copy)]
+pub struct ActivityView<'a> {
+    pub row_windows_ns: &'a [f64],
+    pub col_charge_nsus: &'a [f64],
+    pub v_charge: &'a [f64],
+    pub t_out_ns: &'a [f64],
+    pub t_charge_ns: f64,
+    pub events: u64,
+}
+
+impl<'a> From<&'a MvmActivity> for ActivityView<'a> {
+    fn from(act: &'a MvmActivity) -> ActivityView<'a> {
+        act.view()
+    }
+}
+
+/// Compute the energy breakdown of one macro MVM. Accepts either an owned
+/// `&MvmActivity` or a borrowed [`ActivityView`] over scratch slices.
+pub fn mvm_energy<'a>(
     cfg: &MacroConfig,
     p: &EnergyParams,
-    act: &MvmActivity,
+    act: impl Into<ActivityView<'a>>,
 ) -> EnergyBreakdown {
+    let act = act.into();
     let v_read = cfg.v_read();
 
     // Array: E = Σ_cells V_read²·G·T = V_read² · Σ_cols (Σ_i T_i·G_ij)...
@@ -96,7 +131,7 @@ pub fn mvm_energy(
     let osg_fj: f64 = act
         .v_charge
         .iter()
-        .zip(&act.t_out_ns)
+        .zip(act.t_out_ns)
         .map(|(&v, &t_out)| {
             p.p_mirror_uw * act.t_charge_ns
                 + p.p_comp_uw * t_out

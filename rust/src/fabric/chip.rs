@@ -27,7 +27,7 @@ use anyhow::{ensure, Result};
 use crate::config::{FabricConfig, MacroConfig};
 use crate::coordinator::TiledMatrix;
 use crate::energy::EnergyBreakdown;
-use crate::macro_model::{mvm_tiled, CimMacro};
+use crate::macro_model::{mvm_tiled_batch, CimMacro};
 
 use super::noc::{SpikePacket, TileCoord};
 use super::placement::{place, Placement};
@@ -102,37 +102,53 @@ pub struct LayerStage {
     fabric: FabricConfig,
 }
 
+/// One input's routed NoC phases (everything but compute): the latency
+/// contributions in phase order plus the traffic charged. Compute is
+/// independent of routing, so [`LayerStage::run_batch`] prices each
+/// item's phases with exactly the same per-packet model as the serial
+/// [`LayerStage::run`].
+struct RoutedPhases {
+    /// Ingress + distribute latency (phases 1–2, before compute).
+    lat_pre: f64,
+    /// Gather latency (phase 4).
+    t_gather: f64,
+    /// Egress latency (phase 5).
+    t_egress: f64,
+    /// NoC energy of all four routed phases.
+    energy: EnergyBreakdown,
+    tally: FabricStats,
+}
+
 impl LayerStage {
     /// This layer's NoC entry point.
     pub fn head(&self) -> TileCoord {
         self.locs[0]
     }
 
-    /// Forward one input vector through this layer's shards.
-    pub fn run(&mut self, x: &[u32]) -> LayerResult {
-        assert_eq!(x.len(), self.tiled.k, "layer input length");
-        let xparts = self.tiled.split_input(x);
+    /// Price the four NoC phases of one input vector (ingress,
+    /// distribute, gather, egress) from its per-row-tile slices.
+    fn route<P: AsRef<[u32]>>(&self, xparts: &[P]) -> RoutedPhases {
         let ct = self.tiled.col_tiles;
-        let rt = self.tiled.row_tiles;
         let head = self.locs[0];
         let mut tally = FabricStats::default();
         let mut energy = EnergyBreakdown::default();
-        let mut lat = 0.0f64;
+        let mut lat_pre = 0.0f64;
         // Per-row-tile spike activity: a silent slice produces no input
         // spikes *and* no output spikes at its shards (the flag never
         // rises, so the OSGs never fire) — such shards route nothing in
         // either direction.
         let slice_active: Vec<bool> = xparts
             .iter()
-            .map(|p| p.iter().any(|&v| v > 0))
+            .map(|p| p.as_ref().iter().any(|&v| v > 0))
             .collect();
         let active = slice_active.iter().any(|&a| a);
 
         // Phase 1 — ingress.
         if active {
             if let Some(port) = self.ingress {
-                let bits = self.fabric.in_value_bits as u64 * x.len() as u64;
-                lat +=
+                let bits = self.fabric.in_value_bits as u64
+                    * self.tiled.k as u64;
+                lat_pre +=
                     send(&self.fabric, port, head, bits, &mut energy, &mut tally);
             }
         }
@@ -144,7 +160,7 @@ impl LayerStage {
                 if !slice_active[sidx / ct] {
                     continue;
                 }
-                let part = &xparts[sidx / ct];
+                let part = xparts[sidx / ct].as_ref();
                 let bits =
                     self.fabric.in_value_bits as u64 * part.len() as u64;
                 t_dist = t_dist.max(send(
@@ -157,22 +173,16 @@ impl LayerStage {
                 ));
             }
         }
-        lat += t_dist;
-
-        // Phase 3 — compute (concurrent tiles, deterministic order; the
-        // shared `mvm_tiled` keeps the (ti, tj) convention in one place).
-        let (partials, e_tiles, t_compute) =
-            mvm_tiled(&mut self.macros, &xparts, rt, ct);
-        energy.add(&e_tiles);
-        lat += t_compute;
+        lat_pre += t_dist;
 
         // Phases 4+5 — gather partials to column heads, then egress. An
         // all-silent layer emits only zero-interval (no-information)
         // output pairs, which the event-driven NoC suppresses.
         let part_bits =
             self.fabric.out_value_bits as u64 * self.tiled.tile as u64;
+        let mut t_gather = 0.0f64;
+        let mut t_egress = 0.0f64;
         if active {
-            let mut t_gather = 0.0f64;
             for sidx in ct..self.locs.len() {
                 if !slice_active[sidx / ct] {
                     continue; // silent shard: no output spikes to gather
@@ -187,8 +197,6 @@ impl LayerStage {
                     &mut tally,
                 ));
             }
-            lat += t_gather;
-            let mut t_egress = 0.0f64;
             for tj in 0..ct {
                 t_egress = t_egress.max(send(
                     &self.fabric,
@@ -199,17 +207,78 @@ impl LayerStage {
                     &mut tally,
                 ));
             }
-            lat += t_egress;
         }
 
+        RoutedPhases {
+            lat_pre,
+            t_gather,
+            t_egress,
+            energy,
+            tally,
+        }
+    }
+
+    /// Fold routed phases and tile compute into one [`LayerResult`],
+    /// keeping the serial path's latency association and energy
+    /// accumulation order.
+    fn assemble(
+        routed: RoutedPhases,
+        partials: Vec<Vec<Vec<f64>>>,
+        e_tiles: &EnergyBreakdown,
+        t_compute: f64,
+    ) -> LayerResult {
+        let mut energy = routed.energy;
+        energy.add(e_tiles);
         LayerResult {
             partials,
             energy,
-            latency_ns: lat,
-            packets: tally.packets,
-            flits: tally.flits,
-            hops: tally.hops,
+            latency_ns: ((routed.lat_pre + t_compute) + routed.t_gather)
+                + routed.t_egress,
+            packets: routed.tally.packets,
+            flits: routed.tally.flits,
+            hops: routed.tally.hops,
         }
+    }
+
+    /// Forward one input vector through this layer's shards. A
+    /// single-item run of [`run_batch`](Self::run_batch).
+    pub fn run(&mut self, x: &[u32]) -> LayerResult {
+        self.run_batch(std::slice::from_ref(&x.to_vec()))
+            .pop()
+            .expect("one item")
+    }
+
+    /// Forward a whole minibatch through this layer (DESIGN.md S16):
+    /// every shard streams its weights once over the batch (phase 3 —
+    /// concurrent tiles, deterministic order; the shared
+    /// `mvm_tiled_batch` keeps the (ti, tj) convention in one place),
+    /// while each item's NoC phases are priced individually with the
+    /// same per-packet cost model — per-item results and traffic are
+    /// batch-size invariant.
+    pub fn run_batch(&mut self, xs: &[Vec<u32>]) -> Vec<LayerResult> {
+        let rt = self.tiled.row_tiles;
+        let ct = self.tiled.col_tiles;
+        // Regroup: per row tile, the whole batch of its input slices.
+        let mut xparts: Vec<Vec<Vec<u32>>> =
+            (0..rt).map(|_| Vec::with_capacity(xs.len())).collect();
+        for x in xs {
+            assert_eq!(x.len(), self.tiled.k, "layer input length");
+            for (ti, part) in self.tiled.split_input(x).into_iter().enumerate()
+            {
+                xparts[ti].push(part);
+            }
+        }
+        let computed = mvm_tiled_batch(&mut self.macros, &xparts, rt, ct);
+        computed
+            .into_iter()
+            .enumerate()
+            .map(|(b, (partials, e_tiles, t_compute))| {
+                let item_parts: Vec<&[u32]> =
+                    (0..rt).map(|ti| xparts[ti][b].as_slice()).collect();
+                let routed = self.route(&item_parts);
+                Self::assemble(routed, partials, &e_tiles, t_compute)
+            })
+            .collect()
     }
 }
 
@@ -312,17 +381,34 @@ impl FabricChip {
         self.placement.utilization().1
     }
 
-    /// Forward one layer; NoC traffic accumulates into `self.stats`.
+    /// Forward one layer; NoC traffic accumulates into `self.stats`. A
+    /// single-item run of [`forward_layer_batch`](Self::forward_layer_batch).
     pub fn forward_layer(&mut self, layer: usize, x: &[u32]) -> LayerResult {
-        let r = self.stages[layer].run(x);
-        self.stats.packets += r.packets;
-        self.stats.flits += r.flits;
-        self.stats.hops += r.hops;
-        self.stats.noc_fj += r.energy.noc_fj;
-        if layer == 0 {
-            self.stats.mvms += 1;
+        self.forward_layer_batch(layer, std::slice::from_ref(&x.to_vec()))
+            .pop()
+            .expect("one item")
+    }
+
+    /// Forward one layer for a whole minibatch (DESIGN.md S16): one
+    /// weight-matrix pass per shard for all B inputs, per-item NoC
+    /// accounting — results and `stats` deltas bit-identical to B
+    /// [`forward_layer`](Self::forward_layer) calls.
+    pub fn forward_layer_batch(
+        &mut self,
+        layer: usize,
+        xs: &[Vec<u32>],
+    ) -> Vec<LayerResult> {
+        let rs = self.stages[layer].run_batch(xs);
+        for r in &rs {
+            self.stats.packets += r.packets;
+            self.stats.flits += r.flits;
+            self.stats.hops += r.hops;
+            self.stats.noc_fj += r.energy.noc_fj;
         }
-        r
+        if layer == 0 {
+            self.stats.mvms += xs.len() as u64;
+        }
+        rs
     }
 
     /// Single-layer convenience: run the whole tiled matrix as one MVM
@@ -332,6 +418,26 @@ impl FabricChip {
         let r = self.forward_layer(0, x);
         let y = self.stages[0].tiled.accumulate(&r.partials);
         (y, r)
+    }
+
+    /// Batched single-layer MVM (DESIGN.md S16): the whole minibatch
+    /// streams through the mesh with one weight pass per shard.
+    pub fn mvm_batch(
+        &mut self,
+        xs: &[Vec<u32>],
+    ) -> Vec<(Vec<f64>, LayerResult)> {
+        assert_eq!(
+            self.stages.len(),
+            1,
+            "mvm_batch() is the single-layer path"
+        );
+        let rs = self.forward_layer_batch(0, xs);
+        rs.into_iter()
+            .map(|r| {
+                let y = self.stages[0].tiled.accumulate(&r.partials);
+                (y, r)
+            })
+            .collect()
     }
 
     /// Drain the cumulative traffic counters (serving metrics use this).
@@ -465,6 +571,46 @@ mod tests {
         let drained = chip.drain_stats();
         assert_eq!(drained.packets, r1.packets + r2.packets);
         assert_eq!(chip.stats.packets, 0, "drain resets the counters");
+    }
+
+    #[test]
+    fn batched_mesh_mvm_bit_identical_to_serial() {
+        let cfg = MacroConfig::default();
+        let codes = random_codes(300, 200, 191);
+        let mk = || {
+            let tiled = TiledMatrix::new(&codes, 300, 200, cfg.rows);
+            FabricChip::new(&cfg, FabricConfig::square(3), vec![tiled])
+                .unwrap()
+        };
+        let mut rng = Rng::new(192);
+        let mut xs: Vec<Vec<u32>> = (0..5)
+            .map(|_| (0..300).map(|_| rng.below(256) as u32).collect())
+            .collect();
+        xs.push(vec![0u32; 300]); // silent item routes nothing
+
+        let mut serial = mk();
+        let want: Vec<(Vec<f64>, LayerResult)> =
+            xs.iter().map(|x| serial.mvm(x)).collect();
+
+        let mut batched = mk();
+        let got = batched.mvm_batch(&xs);
+
+        assert_eq!(got.len(), want.len());
+        for ((gy, gr), (wy, wr)) in got.iter().zip(&want) {
+            assert_eq!(gy, wy, "accumulated MACs diverge");
+            assert_eq!(gr.partials, wr.partials);
+            assert_eq!(gr.energy, wr.energy);
+            assert_eq!(gr.latency_ns, wr.latency_ns);
+            assert_eq!(
+                (gr.packets, gr.flits, gr.hops),
+                (wr.packets, wr.flits, wr.hops)
+            );
+        }
+        // Chip-level counters march identically too.
+        assert_eq!(batched.stats.packets, serial.stats.packets);
+        assert_eq!(batched.stats.hops, serial.stats.hops);
+        assert_eq!(batched.stats.mvms, serial.stats.mvms);
+        assert_eq!(batched.stats.noc_fj, serial.stats.noc_fj);
     }
 
     #[test]

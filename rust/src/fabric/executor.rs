@@ -65,38 +65,62 @@ impl FabricPipeline {
         }
     }
 
-    /// Stream `inputs` through all stages; returns outputs in input
-    /// order plus the run tallies.
+    /// Stream `inputs` through all stages one item at a time; returns
+    /// outputs in input order plus the run tallies.
     pub fn run(self, inputs: Vec<Vec<u32>>) -> (Vec<Vec<u32>>, PipelineStats) {
+        self.run_batched(inputs, 1)
+    }
+
+    /// Stream `inputs` through all stages in minibatches of `batch`
+    /// items (DESIGN.md S16): each stage executes a whole minibatch as
+    /// one `run_batch` call — one weight pass per shard per minibatch —
+    /// and relays move minibatches between stage threads. Outputs and
+    /// tallies are bit-identical to [`run`](Self::run) at any batch
+    /// size; only wall-clock changes.
+    pub fn run_batched(
+        self,
+        inputs: Vec<Vec<u32>>,
+        batch: usize,
+    ) -> (Vec<Vec<u32>>, PipelineStats) {
         assert!(!self.stages.is_empty());
+        assert!(batch > 0, "batch size");
         let n = inputs.len();
-        let (first_tx, mut prev_rx) = mpsc::channel::<(usize, Vec<u32>)>();
+        let n_chunks = n.div_ceil(batch);
+        let (first_tx, mut prev_rx) =
+            mpsc::channel::<(usize, Vec<Vec<u32>>)>();
         let mut handles = Vec::with_capacity(self.stages.len());
         for (mut stage, mut relay) in self.stages {
-            let (tx, rx) = mpsc::channel::<(usize, Vec<u32>)>();
+            let (tx, rx) = mpsc::channel::<(usize, Vec<Vec<u32>>)>();
             let rx_in = std::mem::replace(&mut prev_rx, rx);
             handles.push(std::thread::spawn(move || {
                 let mut tally = PipelineStats::default();
-                while let Ok((id, x)) = rx_in.recv() {
-                    let r = stage.run(&x);
-                    tally.energy.add(&r.energy);
-                    tally.latency_ns += r.latency_ns;
-                    tally.packets += r.packets;
-                    tally.hops += r.hops;
-                    let mac = stage.tiled.accumulate(&r.partials);
-                    let _ = tx.send((id, relay(&x, mac)));
+                while let Ok((id, chunk)) = rx_in.recv() {
+                    let rs = stage.run_batch(&chunk);
+                    let mut outs = Vec::with_capacity(chunk.len());
+                    for (x, r) in chunk.iter().zip(rs) {
+                        tally.energy.add(&r.energy);
+                        tally.latency_ns += r.latency_ns;
+                        tally.packets += r.packets;
+                        tally.hops += r.hops;
+                        let mac = stage.tiled.accumulate(&r.partials);
+                        outs.push(relay(x, mac));
+                    }
+                    let _ = tx.send((id, outs));
                 }
                 tally
             }));
         }
-        for (i, x) in inputs.into_iter().enumerate() {
-            first_tx.send((i, x)).expect("stage 0 alive");
+        let mut feed = inputs.into_iter();
+        for id in 0..n_chunks {
+            let chunk: Vec<Vec<u32>> = feed.by_ref().take(batch).collect();
+            first_tx.send((id, chunk)).expect("stage 0 alive");
         }
         drop(first_tx); // end-of-stream ripples down the pipeline
-        let mut out: Vec<Option<Vec<u32>>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (id, item) = prev_rx.recv().expect("pipeline output");
-            out[id] = Some(item);
+        let mut out: Vec<Option<Vec<Vec<u32>>>> =
+            (0..n_chunks).map(|_| None).collect();
+        for _ in 0..n_chunks {
+            let (id, items) = prev_rx.recv().expect("pipeline output");
+            out[id] = Some(items);
         }
         let mut stats = PipelineStats {
             items: n,
@@ -105,10 +129,11 @@ impl FabricPipeline {
         for h in handles {
             stats.absorb(&h.join().expect("stage thread"));
         }
-        (
-            out.into_iter().map(|o| o.expect("every id answered")).collect(),
-            stats,
-        )
+        let outputs: Vec<Vec<u32>> = out
+            .into_iter()
+            .flat_map(|o| o.expect("every chunk answered"))
+            .collect();
+        (outputs, stats)
     }
 }
 
@@ -182,5 +207,24 @@ mod tests {
                 < 1e-9
         );
         assert!(stats.packets > 0 && stats.hops > 0);
+
+        // Minibatched streaming (DESIGN.md S16): identical outputs and
+        // tallies at any chunk size, including a ragged final chunk.
+        for batch in [1usize, 3, 4, 16] {
+            let chip = two_layer_chip(605);
+            let relays: Vec<StageRelay> = (0..2)
+                .map(|_| {
+                    Box::new(|_x: &[u32], mac: Vec<f64>| requant(mac))
+                        as StageRelay
+                })
+                .collect();
+            let (out_b, stats_b) = FabricPipeline::new(chip, relays)
+                .run_batched(inputs.clone(), batch);
+            assert_eq!(out_b, serial_out, "batch {batch} output diverges");
+            assert_eq!(stats_b.items, 10);
+            assert_eq!(stats_b.packets, stats.packets);
+            assert_eq!(stats_b.hops, stats.hops);
+            assert_eq!(stats_b.latency_ns, stats.latency_ns);
+        }
     }
 }

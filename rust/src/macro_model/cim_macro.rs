@@ -15,7 +15,7 @@ use crate::circuit::components::{Comparator, CurrentMirror};
 use crate::circuit::osg::{self, OsgParams};
 use crate::coding::DualSpikeCodec;
 use crate::config::MacroConfig;
-use crate::energy::{mvm_energy, EnergyBreakdown, EnergyParams, MvmActivity};
+use crate::energy::{mvm_energy, ActivityView, EnergyBreakdown, EnergyParams};
 use crate::event::{EventKind, EventQueue, FlagTree};
 use crate::util::rng::Rng;
 use crate::xbar::Crossbar;
@@ -37,6 +37,163 @@ pub struct MacroResult {
     pub events: u64,
 }
 
+/// Batch ledger (DESIGN.md S16): the results of one [`CimMacro::mvm_batch`]
+/// call, stored as flat `[batch × cols]` row-major arrays so the engine
+/// writes every item into pre-sized memory — zero per-op heap allocation
+/// once the ledger has warmed up (reuse it via
+/// [`CimMacro::mvm_batch_into`]).
+///
+/// Item `b`'s numbers are bit-identical to what the `b`-th of B serial
+/// [`CimMacro::mvm`] calls would return (asserted in
+/// `rust/tests/batch_identity.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct MvmBatch {
+    batch: usize,
+    cols: usize,
+    t_out_ns: Vec<f64>,
+    v_charge: Vec<f64>,
+    y_mac: Vec<f64>,
+    latency_ns: Vec<f64>,
+    t_charge_ns: Vec<f64>,
+    events: Vec<u64>,
+    energy: Vec<EnergyBreakdown>,
+}
+
+impl MvmBatch {
+    /// Number of items in the ledger.
+    pub fn len(&self) -> usize {
+        self.batch
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batch == 0
+    }
+
+    /// Columns per item.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn item(&self, b: usize) -> std::ops::Range<usize> {
+        assert!(b < self.batch, "batch index {b} of {}", self.batch);
+        b * self.cols..(b + 1) * self.cols
+    }
+
+    /// Item `b`'s decoded MACs per column.
+    pub fn y_mac(&self, b: usize) -> &[f64] {
+        &self.y_mac[self.item(b)]
+    }
+
+    /// Item `b`'s output intervals per column (ns).
+    pub fn t_out_ns(&self, b: usize) -> &[f64] {
+        &self.t_out_ns[self.item(b)]
+    }
+
+    /// Item `b`'s V_charge per column (V).
+    pub fn v_charge(&self, b: usize) -> &[f64] {
+        &self.v_charge[self.item(b)]
+    }
+
+    /// Item `b`'s end-to-end latency (ns).
+    pub fn latency_ns(&self, b: usize) -> f64 {
+        self.latency_ns[b]
+    }
+
+    /// Item `b`'s charge-phase length (global flag high time, ns).
+    pub fn t_charge_ns(&self, b: usize) -> f64 {
+        self.t_charge_ns[b]
+    }
+
+    /// Item `b`'s processed event count.
+    pub fn events(&self, b: usize) -> u64 {
+        self.events[b]
+    }
+
+    /// Item `b`'s energy breakdown.
+    pub fn energy(&self, b: usize) -> &EnergyBreakdown {
+        &self.energy[b]
+    }
+
+    /// Summed energy over the whole batch.
+    pub fn total_energy(&self) -> EnergyBreakdown {
+        let mut e = EnergyBreakdown::default();
+        for item in &self.energy {
+            e.add(item);
+        }
+        e
+    }
+
+    /// Total events over the whole batch.
+    pub fn total_events(&self) -> u64 {
+        self.events.iter().sum()
+    }
+
+    /// Clone item `b` out as a standalone [`MacroResult`].
+    pub fn result(&self, b: usize) -> MacroResult {
+        MacroResult {
+            t_out_ns: self.t_out_ns(b).to_vec(),
+            y_mac: self.y_mac(b).to_vec(),
+            v_charge: self.v_charge(b).to_vec(),
+            latency_ns: self.latency_ns[b],
+            energy: self.energy[b],
+            events: self.events[b],
+        }
+    }
+
+    /// Consume a single-item ledger as a [`MacroResult`] (moves the
+    /// column vectors out — no copy).
+    fn into_single(mut self) -> MacroResult {
+        assert_eq!(self.batch, 1, "into_single needs exactly one item");
+        MacroResult {
+            t_out_ns: self.t_out_ns,
+            y_mac: self.y_mac,
+            v_charge: self.v_charge,
+            latency_ns: self.latency_ns[0],
+            energy: self.energy.pop().expect("one item"),
+            events: self.events[0],
+        }
+    }
+
+    /// Re-size for `batch` items of `cols` columns, reusing capacity.
+    fn reset(&mut self, batch: usize, cols: usize) {
+        self.batch = batch;
+        self.cols = cols;
+        let flat = batch * cols;
+        self.t_out_ns.clear();
+        self.t_out_ns.resize(flat, 0.0);
+        self.v_charge.clear();
+        self.v_charge.resize(flat, 0.0);
+        self.y_mac.clear();
+        self.y_mac.resize(flat, 0.0);
+        self.latency_ns.clear();
+        self.latency_ns.resize(batch, 0.0);
+        self.t_charge_ns.clear();
+        self.t_charge_ns.resize(batch, 0.0);
+        self.events.clear();
+        self.events.resize(batch, 0);
+        self.energy.clear();
+    }
+}
+
+/// Reusable per-op working memory (DESIGN.md S16): sized on first use,
+/// then stable across every subsequent `mvm`/`mvm_batch` call — the
+/// general event path allocates nothing per op.
+struct MvmScratch {
+    /// Encoded input windows, `[batch × rows]` flat.
+    windows_ns: Vec<f64>,
+    /// Per-column charge integrals Σ T·G, `[batch × cols]` flat.
+    col_charge_nsus: Vec<f64>,
+    /// Active (non-zero) rows per item.
+    active_rows: Vec<u32>,
+    /// Max window per item (= flag-drop time on the fast path).
+    w_max: Vec<f64>,
+    /// Event_flag OR-tree, reset per item on the general path.
+    flags: FlagTree,
+    /// Per-row c2c read-noise factors; entries are (re)written at each
+    /// row-rise before being read, so no per-item reset is needed.
+    row_factor: Vec<f64>,
+}
+
 /// One spiking CIM macro instance.
 pub struct CimMacro {
     pub cfg: MacroConfig,
@@ -52,6 +209,7 @@ pub struct CimMacro {
     g_on: Vec<f64>,
     charge: Vec<f64>,
     queue: EventQueue,
+    scratch: MvmScratch,
 }
 
 impl CimMacro {
@@ -118,6 +276,14 @@ impl CimMacro {
             g_on: vec![0.0; cols],
             charge: vec![0.0; cols],
             queue: EventQueue::with_capacity(2 * rows + 2),
+            scratch: MvmScratch {
+                windows_ns: Vec::new(),
+                col_charge_nsus: Vec::new(),
+                active_rows: Vec::new(),
+                w_max: Vec::new(),
+                flags: FlagTree::new(rows),
+                row_factor: vec![1.0; rows],
+            },
         }
     }
 
@@ -135,74 +301,193 @@ impl CimMacro {
     ///
     /// Drives the spike events through the queue + flag tree, integrates
     /// the charge per column piecewise-analytically, runs every OSG's
-    /// compare phase at the global flag drop, and accounts energy.
+    /// compare phase at the global flag drop, and accounts energy. A
+    /// single-item run of the batch engine (DESIGN.md S16).
     pub fn mvm(&mut self, x: &[u32]) -> MacroResult {
+        self.begin_batch(1);
+        self.encode_item(0, x);
+        let mut out = MvmBatch::default();
+        self.run_batch(1, &mut out);
+        out.into_single()
+    }
+
+    /// Batched event-driven MVM (DESIGN.md S16): encodes all B inputs up
+    /// front, then — on the fast path — streams each conductance row
+    /// slice once across the whole batch (one pass over the weight
+    /// matrix instead of B), or runs the general event loop per input
+    /// against the preallocated scratch. Bit-identical to B serial
+    /// [`mvm`](Self::mvm) calls in the same order, including the c2c
+    /// noise RNG stream (asserted in `rust/tests/batch_identity.rs`).
+    pub fn mvm_batch(&mut self, xs: &[Vec<u32>]) -> MvmBatch {
+        let mut out = MvmBatch::default();
+        self.mvm_batch_into(xs, &mut out);
+        out
+    }
+
+    /// [`mvm_batch`](Self::mvm_batch) into a caller-held ledger: after
+    /// the first call at a given batch size, the whole op is
+    /// allocation-free (scratch and ledger both reuse their capacity).
+    pub fn mvm_batch_into(&mut self, xs: &[Vec<u32>], out: &mut MvmBatch) {
+        self.begin_batch(xs.len());
+        for (b, x) in xs.iter().enumerate() {
+            self.encode_item(b, x);
+        }
+        self.run_batch(xs.len(), out);
+    }
+
+    /// Size the scratch for `batch` items and zero the accumulators.
+    fn begin_batch(&mut self, batch: usize) {
         let rows = self.cfg.rows;
         let cols = self.cfg.cols;
-        assert_eq!(x.len(), rows, "input length");
-        let droop_mode = !self.cfg.nonideal.clamp_current_mirror;
-        let v_read = self.cfg.v_read();
+        let s = &mut self.scratch;
+        s.windows_ns.clear();
+        s.windows_ns.resize(batch * rows, 0.0);
+        s.col_charge_nsus.clear();
+        s.col_charge_nsus.resize(batch * cols, 0.0);
+        s.active_rows.clear();
+        s.active_rows.resize(batch, 0);
+        s.w_max.clear();
+        s.w_max.resize(batch, 0.0);
+    }
 
-        // --- encode inputs into event windows ---
-        let mut windows_ns = vec![0.0f64; rows];
-        let mut active_rows = 0usize;
+    /// Encode item `b`'s inputs into its scratch window slice.
+    fn encode_item(&mut self, b: usize, x: &[u32]) {
+        let rows = self.cfg.rows;
+        assert_eq!(x.len(), rows, "input length");
+        let w = &mut self.scratch.windows_ns[b * rows..(b + 1) * rows];
+        let mut active = 0u32;
+        let mut w_max = 0.0f64;
         for (r, &xv) in x.iter().enumerate() {
             let pair = self.codec.encode(xv, 0.0);
             if pair.dt_ns > 0.0 {
-                windows_ns[r] = pair.dt_ns;
-                active_rows += 1;
+                w[r] = pair.dt_ns;
+                active += 1;
+                w_max = w_max.max(pair.dt_ns);
             }
         }
+        self.scratch.active_rows[b] = active;
+        self.scratch.w_max[b] = w_max;
+    }
 
-        // Per-row conductance rows are cached in the crossbar. Cycle-to-
-        // cycle read noise is sampled once per row *read* (correlated
-        // across the row, as a read-pulse amplitude error) and the same
-        // factor is removed at the row's fall event so charge integration
-        // stays consistent.
+    /// Run the encoded batch: charge integration (streamed fast path or
+    /// per-item event loop), compare phase, and energy accounting, all
+    /// into the ledger.
+    fn run_batch(&mut self, batch: usize, out: &mut MvmBatch) {
+        let rows = self.cfg.rows;
+        let cols = self.cfg.cols;
+        let droop_mode = !self.cfg.nonideal.clamp_current_mirror;
+        let v_read = self.cfg.v_read();
         let sigma_c2c = self.cfg.nonideal.sigma_r_c2c;
-
-        self.g_on.iter_mut().for_each(|g| *g = 0.0);
-        self.charge.iter_mut().for_each(|c| *c = 0.0);
-        let mut col_charge_nsus = vec![0.0f64; cols];
-
-        let mut t_prev = 0.0f64;
-        let mut t_drop = 0.0f64;
-        let mut events: u64 = 0;
+        out.reset(batch, cols);
 
         // Fast path (§Perf, EXPERIMENTS.md): with the clamp+current-mirror
         // and no per-read noise / gain mismatch, the charge integral is a
         // plain weighted row sum — identical math, evaluated row-major
         // (cache-friendly, auto-vectorized) instead of event-by-event.
         // Every non-ideality falls back to the general event loop below.
-        let fast =
-            !droop_mode && sigma_c2c == 0.0 && self.uniform_gain;
+        let fast = !droop_mode && sigma_c2c == 0.0 && self.uniform_gain;
 
-        if active_rows == 0 {
-            // All-zero input: no events, no charge (fully event-driven —
-            // the array never turns on).
-        } else if fast {
-            for (r, &w) in windows_ns.iter().enumerate() {
-                if w == 0.0 {
-                    continue;
-                }
-                t_drop = t_drop.max(w);
-                let grow = r * cols;
-                let gs = &self.xbar.conductances()[grow..grow + cols];
-                for (q, &g) in col_charge_nsus.iter_mut().zip(gs) {
-                    *q += w * g;
+        if fast {
+            // Weight-stationary batch streaming: each 1-row conductance
+            // slice is read once and applied to every item's accumulator
+            // while still L1-hot — per-item accumulation order over rows
+            // is unchanged, so the sums are bit-identical to serial.
+            let cond = self.xbar.conductances();
+            let windows = &self.scratch.windows_ns;
+            let qs = &mut self.scratch.col_charge_nsus;
+            for r in 0..rows {
+                let gs = &cond[r * cols..(r + 1) * cols];
+                for b in 0..batch {
+                    let w = windows[b * rows + r];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let q = &mut qs[b * cols..(b + 1) * cols];
+                    for (qc, &g) in q.iter_mut().zip(gs) {
+                        *qc += w * g;
+                    }
                 }
             }
-            let scale = self.cfg.k_mirror * v_read / self.cfg.c_rt_ff;
-            for (c, &q) in self.charge.iter_mut().zip(&col_charge_nsus) {
-                *c = scale * q;
+        }
+
+        let scale = self.cfg.k_mirror * v_read / self.cfg.c_rt_ff;
+        let alpha = self.cfg.alpha();
+        for b in 0..batch {
+            let t_drop;
+            let mut events;
+            if self.scratch.active_rows[b] == 0 {
+                // All-zero input: no events, no charge (fully event-
+                // driven — the array never turns on).
+                t_drop = 0.0;
+                events = 0;
+                self.charge.iter_mut().for_each(|c| *c = 0.0);
+            } else if fast {
+                t_drop = self.scratch.w_max[b];
+                let q = &self.scratch.col_charge_nsus[b * cols..(b + 1) * cols];
+                for (c, &qv) in self.charge.iter_mut().zip(q) {
+                    *c = scale * qv;
+                }
+                events = 2 * self.scratch.active_rows[b] as u64;
+            } else {
+                let (td, ev) = self.run_general_item(b);
+                t_drop = td;
+                events = ev;
             }
-            events = 2 * active_rows as u64;
-        } else {
-            // --- general event-driven loop (any non-ideality) ---
-            self.queue.reset();
-            let mut flags = FlagTree::new(rows);
-            let mut row_factor = vec![1.0f64; rows];
-            for (r, &w) in windows_ns.iter().enumerate() {
+
+            // --- OSG compare phase (triggered by the global flag drop) ---
+            let base = b * cols;
+            let mut max_t_out = 0.0f64;
+            for c in 0..cols {
+                let v = self.charge[c];
+                let t = osg::compare_phase(&self.osg_params[c], v);
+                max_t_out = max_t_out.max(t);
+                out.t_out_ns[base + c] = t;
+                out.v_charge[base + c] = v;
+                out.y_mac[base + c] = self.codec.decode_mac(t, alpha);
+            }
+            events += cols as u64; // compare-fire events
+
+            out.latency_ns[b] = t_drop + max_t_out;
+            out.t_charge_ns[b] = t_drop;
+            out.events[b] = events;
+            let activity = ActivityView {
+                row_windows_ns: &self.scratch.windows_ns
+                    [b * rows..(b + 1) * rows],
+                col_charge_nsus: &self.scratch.col_charge_nsus
+                    [b * cols..(b + 1) * cols],
+                v_charge: &out.v_charge[base..base + cols],
+                t_out_ns: &out.t_out_ns[base..base + cols],
+                t_charge_ns: t_drop,
+                events,
+            };
+            out.energy
+                .push(mvm_energy(&self.cfg, &self.energy_params, activity));
+        }
+    }
+
+    /// General event-driven loop for item `b` (any non-ideality): drives
+    /// the spike events through the queue + flag tree against reusable
+    /// scratch. Returns (flag-drop time, events processed).
+    ///
+    /// Cycle-to-cycle read noise is sampled once per row *read*
+    /// (correlated across the row, as a read-pulse amplitude error) and
+    /// the same factor is removed at the row's fall event so charge
+    /// integration stays consistent.
+    fn run_general_item(&mut self, b: usize) -> (f64, u64) {
+        let rows = self.cfg.rows;
+        let cols = self.cfg.cols;
+        let droop_mode = !self.cfg.nonideal.clamp_current_mirror;
+        let v_read = self.cfg.v_read();
+        let sigma_c2c = self.cfg.nonideal.sigma_r_c2c;
+        let qbase = b * cols;
+
+        self.g_on.iter_mut().for_each(|g| *g = 0.0);
+        self.charge.iter_mut().for_each(|c| *c = 0.0);
+        self.queue.reset();
+        self.scratch.flags.reset();
+        {
+            let windows = &self.scratch.windows_ns[b * rows..(b + 1) * rows];
+            for (r, &w) in windows.iter().enumerate() {
                 if w > 0.0 {
                     self.queue
                         .push(0.0, EventKind::RowRise { row: r as u32 });
@@ -210,106 +495,76 @@ impl CimMacro {
                         .push(w, EventKind::RowFall { row: r as u32 });
                 }
             }
-            while let Some(ev) = self.queue.pop() {
-                events += 1;
-                let dt = ev.t_ns - t_prev;
-                if dt > 0.0 {
-                    // advance analog state over [t_prev, ev.t]
-                    if droop_mode {
-                        for c in 0..cols {
-                            let g = self.g_on[c];
-                            if g > 0.0 {
-                                let tau = self.cfg.c_rt_ff / g;
-                                self.charge[c] = v_read
-                                    + (self.charge[c] - v_read)
-                                        * (-dt / tau).exp();
-                                col_charge_nsus[c] += g * dt;
-                            }
-                        }
-                    } else {
-                        let k = self.cfg.k_mirror;
-                        for c in 0..cols {
-                            let g = self.g_on[c];
-                            if g > 0.0 {
-                                let gain = self.osg_params[c].mirror.gain_err;
-                                self.charge[c] += k * gain * v_read * g * dt
-                                    / self.cfg.c_rt_ff;
-                                col_charge_nsus[c] += g * dt;
-                            }
+        }
+        let mut t_prev = 0.0f64;
+        let mut t_drop = 0.0f64;
+        let mut events: u64 = 0;
+        while let Some(ev) = self.queue.pop() {
+            events += 1;
+            let dt = ev.t_ns - t_prev;
+            if dt > 0.0 {
+                // advance analog state over [t_prev, ev.t]
+                if droop_mode {
+                    for c in 0..cols {
+                        let g = self.g_on[c];
+                        if g > 0.0 {
+                            let tau = self.cfg.c_rt_ff / g;
+                            self.charge[c] = v_read
+                                + (self.charge[c] - v_read)
+                                    * (-dt / tau).exp();
+                            self.scratch.col_charge_nsus[qbase + c] += g * dt;
                         }
                     }
-                    t_prev = ev.t_ns;
+                } else {
+                    let k = self.cfg.k_mirror;
+                    for c in 0..cols {
+                        let g = self.g_on[c];
+                        if g > 0.0 {
+                            let gain = self.osg_params[c].mirror.gain_err;
+                            self.charge[c] += k * gain * v_read * g * dt
+                                / self.cfg.c_rt_ff;
+                            self.scratch.col_charge_nsus[qbase + c] += g * dt;
+                        }
+                    }
                 }
-                match ev.kind {
-                    EventKind::RowRise { row } => {
-                        let r = row as usize;
-                        flags.assert_row(r, ev.t_ns);
-                        if sigma_c2c > 0.0 {
-                            let rng = self.rng.get_or_insert_with(|| Rng::new(0));
-                            row_factor[r] = 1.0
-                                / (1.0 + rng.normal_ms(0.0, sigma_c2c)).max(0.5);
-                        }
-                        let f = row_factor[r];
-                        let grow = r * cols;
-                        let gs = &self.xbar.conductances()[grow..grow + cols];
-                        for (c, &g) in gs.iter().enumerate() {
-                            self.g_on[c] += g * f;
-                        }
-                    }
-                    EventKind::RowFall { row } => {
-                        let r = row as usize;
-                        let global_dropped = flags.deassert_row(r, ev.t_ns);
-                        let f = row_factor[r];
-                        let grow = r * cols;
-                        let gs = &self.xbar.conductances()[grow..grow + cols];
-                        for (c, &g) in gs.iter().enumerate() {
-                            self.g_on[c] -= g * f;
-                        }
-                        if global_dropped {
-                            t_drop = ev.t_ns;
-                        }
-                    }
-                    _ => unreachable!("only row events scheduled"),
-                }
+                t_prev = ev.t_ns;
             }
-            // Numerical hygiene: g_on returns to ~0 after all falls.
-            debug_assert!(self.g_on.iter().all(|g| g.abs() < 1e-9));
+            match ev.kind {
+                EventKind::RowRise { row } => {
+                    let r = row as usize;
+                    self.scratch.flags.assert_row(r, ev.t_ns);
+                    if sigma_c2c > 0.0 {
+                        let rng = self.rng.get_or_insert_with(|| Rng::new(0));
+                        self.scratch.row_factor[r] = 1.0
+                            / (1.0 + rng.normal_ms(0.0, sigma_c2c)).max(0.5);
+                    }
+                    let f = self.scratch.row_factor[r];
+                    let grow = r * cols;
+                    let gs = &self.xbar.conductances()[grow..grow + cols];
+                    for (c, &g) in gs.iter().enumerate() {
+                        self.g_on[c] += g * f;
+                    }
+                }
+                EventKind::RowFall { row } => {
+                    let r = row as usize;
+                    let global_dropped =
+                        self.scratch.flags.deassert_row(r, ev.t_ns);
+                    let f = self.scratch.row_factor[r];
+                    let grow = r * cols;
+                    let gs = &self.xbar.conductances()[grow..grow + cols];
+                    for (c, &g) in gs.iter().enumerate() {
+                        self.g_on[c] -= g * f;
+                    }
+                    if global_dropped {
+                        t_drop = ev.t_ns;
+                    }
+                }
+                _ => unreachable!("only row events scheduled"),
+            }
         }
-
-        // --- OSG compare phase (triggered by the global flag drop) ---
-        let mut t_out_ns = Vec::with_capacity(cols);
-        let mut v_charge = Vec::with_capacity(cols);
-        let mut y_mac = Vec::with_capacity(cols);
-        let alpha = self.cfg.alpha();
-        let mut max_t_out = 0.0f64;
-        for c in 0..cols {
-            let v = self.charge[c];
-            let t = osg::compare_phase(&self.osg_params[c], v);
-            max_t_out = max_t_out.max(t);
-            t_out_ns.push(t);
-            v_charge.push(v);
-            y_mac.push(self.codec.decode_mac(t, alpha));
-        }
-        events += cols as u64; // compare-fire events
-
-        let activity = MvmActivity {
-            row_windows_ns: windows_ns,
-            col_charge_nsus,
-            v_charge: v_charge.clone(),
-            t_out_ns: t_out_ns.clone(),
-            t_charge_ns: t_drop,
-            events,
-        };
-        let energy = mvm_energy(&self.cfg, &self.energy_params, &activity);
-
-        MacroResult {
-            t_out_ns,
-            y_mac,
-            v_charge,
-            latency_ns: t_drop + max_t_out,
-            energy,
-            events,
-        }
+        // Numerical hygiene: g_on returns to ~0 after all falls.
+        debug_assert!(self.g_on.iter().all(|g| g.abs() < 1e-9));
+        (t_drop, events)
     }
 
     /// The exact digital oracle for this macro's programmed weights.
@@ -580,5 +835,138 @@ mod tests {
         let b = m.mvm(&x);
         assert_eq!(a.y_mac, b.y_mac);
         assert_eq!(a.events, b.events);
+    }
+
+    /// Run `xs` serially on one macro and batched on an identically
+    /// built one; assert every ledger field is bitwise equal.
+    fn assert_batch_bit_identical(
+        mut serial: CimMacro,
+        mut batched: CimMacro,
+        xs: &[Vec<u32>],
+    ) {
+        let want: Vec<MacroResult> = xs.iter().map(|x| serial.mvm(x)).collect();
+        let got = batched.mvm_batch(xs);
+        assert_eq!(got.len(), xs.len());
+        for (b, w) in want.iter().enumerate() {
+            assert_eq!(got.y_mac(b), w.y_mac.as_slice(), "y_mac item {b}");
+            assert_eq!(got.t_out_ns(b), w.t_out_ns.as_slice());
+            assert_eq!(got.v_charge(b), w.v_charge.as_slice());
+            assert_eq!(got.latency_ns(b), w.latency_ns);
+            assert_eq!(got.events(b), w.events);
+            assert_eq!(*got.energy(b), w.energy, "energy item {b}");
+            assert_eq!(got.result(b).y_mac, w.y_mac);
+        }
+        assert_eq!(got.total_events(), want.iter().map(|r| r.events).sum());
+    }
+
+    fn sparse_inputs(seed: u64, density: f64, n: usize) -> Vec<Vec<u32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..128)
+                    .map(|_| {
+                        if rng.f64() < density {
+                            1 + rng.below(255) as u32
+                        } else {
+                            0
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_bit_identical_across_sparsities_fast_path() {
+        for (seed, density) in
+            [(21u64, 1.0), (22, 0.5), (23, 1.0 / 16.0), (24, 0.0)]
+        {
+            let (serial, _) = macro_with_codes(seed);
+            let (batched, _) = macro_with_codes(seed);
+            let xs = sparse_inputs(seed ^ 0xb, density, 7);
+            assert_batch_bit_identical(serial, batched, &xs);
+        }
+    }
+
+    #[test]
+    fn batch_bit_identical_droop_mode() {
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                clamp_current_mirror: false,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut rng = Rng::new(25);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        let mk = || {
+            let mut m = CimMacro::new(cfg.clone());
+            m.program(&codes);
+            m
+        };
+        let xs = sparse_inputs(26, 0.7, 5);
+        assert_batch_bit_identical(mk(), mk(), &xs);
+    }
+
+    #[test]
+    fn batch_bit_identical_c2c_noise_shares_rng_stream() {
+        // The general path draws one noise factor per row read; the
+        // batch engine must consume the identical RNG stream.
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                sigma_r_c2c: 0.01,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut rng = Rng::new(27);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        let mk = || {
+            let mut m = CimMacro::with_nonidealities(cfg.clone(), 99);
+            m.program(&codes);
+            m
+        };
+        let xs = sparse_inputs(28, 0.8, 5);
+        assert_batch_bit_identical(mk(), mk(), &xs);
+    }
+
+    #[test]
+    fn batch_bit_identical_gain_mismatch() {
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                mirror_gain_sigma: 0.01,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut rng = Rng::new(29);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        let mk = || {
+            let mut m = CimMacro::with_nonidealities(cfg.clone(), 7);
+            m.program(&codes);
+            m
+        };
+        let xs = sparse_inputs(30, 0.9, 4);
+        assert_batch_bit_identical(mk(), mk(), &xs);
+    }
+
+    #[test]
+    fn batch_then_serial_reuse_is_clean() {
+        // Ledger/scratch reuse across differing batch sizes must not
+        // leak state between calls.
+        let (mut m, _) = macro_with_codes(33);
+        let xs = sparse_inputs(34, 1.0, 9);
+        let mut ledger = MvmBatch::default();
+        m.mvm_batch_into(&xs, &mut ledger);
+        let y8 = ledger.y_mac(8).to_vec();
+        m.mvm_batch_into(&xs[3..5], &mut ledger);
+        assert_eq!(ledger.len(), 2);
+        let solo = m.mvm(&xs[8]);
+        assert_eq!(solo.y_mac, y8);
+        m.mvm_batch_into(&[], &mut ledger);
+        assert!(ledger.is_empty());
     }
 }

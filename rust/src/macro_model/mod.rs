@@ -4,37 +4,25 @@ use crate::energy::EnergyBreakdown;
 
 pub mod cim_macro;
 
-pub use cim_macro::{CimMacro, MacroResult};
+pub use cim_macro::{CimMacro, MacroResult, MvmBatch};
 
 /// Fan a tiled layer's input slices across its shard macros (ti-major
 /// order) and regroup the outputs as `partials[ti][tj]`, plus summed
-/// energy and the critical-path (max) latency. This is the single
-/// implementation of the (ti, tj) convention that both `snn::infer` and
-/// `fabric::chip` rely on for bit-identity — do not fork it.
+/// energy and the critical-path (max) latency. A single-item run of
+/// [`mvm_tiled_batch`] — the one implementation of the (ti, tj)
+/// convention that both `snn::infer` and `fabric::chip` rely on for
+/// bit-identity; do not fork it.
 pub fn mvm_tiled(
     macros: &mut [CimMacro],
     xparts: &[Vec<u32>],
     row_tiles: usize,
     col_tiles: usize,
 ) -> (Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64) {
-    assert_eq!(macros.len(), row_tiles * col_tiles, "shard count");
-    let jobs: Vec<(&mut CimMacro, &[u32])> = macros
-        .iter_mut()
-        .enumerate()
-        .map(|(sidx, m)| (m, xparts[sidx / col_tiles].as_slice()))
-        .collect();
-    let results = mvm_parallel(jobs);
-    let mut energy = EnergyBreakdown::default();
-    let mut latency = 0.0f64; // tiles are physically concurrent
-    let mut partials: Vec<Vec<Vec<f64>>> = (0..row_tiles)
-        .map(|_| Vec::with_capacity(col_tiles))
-        .collect();
-    for (sidx, r) in results.into_iter().enumerate() {
-        energy.add(&r.energy);
-        latency = latency.max(r.latency_ns);
-        partials[sidx / col_tiles].push(r.y_mac);
-    }
-    (partials, energy, latency)
+    let xbatch: Vec<Vec<Vec<u32>>> =
+        xparts.iter().map(|p| vec![p.clone()]).collect();
+    mvm_tiled_batch(macros, &xbatch, row_tiles, col_tiles)
+        .pop()
+        .expect("one item")
 }
 
 /// Run many independent tile MVMs on scoped worker threads (DESIGN.md
@@ -47,9 +35,31 @@ pub fn mvm_tiled(
 /// most `available_parallelism` threads so spawn overhead stays
 /// negligible at small tile counts.
 pub fn mvm_parallel(jobs: Vec<(&mut CimMacro, &[u32])>) -> Vec<MacroResult> {
+    par_map_jobs(jobs, |(m, x)| m.mvm(x))
+}
+
+/// Batched [`mvm_parallel`] (DESIGN.md S16): each job pairs a programmed
+/// macro with the *whole request batch* for that macro, so every worker
+/// thread streams its weight matrix once per batch instead of once per
+/// input. Ledgers come back in job order, bit-identical to calling
+/// [`CimMacro::mvm_batch`] serially per job.
+pub fn mvm_parallel_batch(
+    jobs: Vec<(&mut CimMacro, &[Vec<u32>])>,
+) -> Vec<MvmBatch> {
+    par_map_jobs(jobs, |(m, xs)| m.mvm_batch(xs))
+}
+
+/// The shared scoped-thread fan-out behind [`mvm_parallel`] and
+/// [`mvm_parallel_batch`]: chunk `jobs` over at most
+/// `available_parallelism` threads (spawn overhead stays negligible at
+/// small tile counts) and return results in job order.
+fn par_map_jobs<T: Send, R: Send>(
+    jobs: Vec<T>,
+    f: impl Fn(T) -> R + Sync,
+) -> Vec<R> {
     let n = jobs.len();
     if n <= 1 {
-        return jobs.into_iter().map(|(m, x)| m.mvm(x)).collect();
+        return jobs.into_iter().map(f).collect();
     }
     let threads = std::thread::available_parallelism()
         .map(|p| p.get())
@@ -57,23 +67,62 @@ pub fn mvm_parallel(jobs: Vec<(&mut CimMacro, &[u32])>) -> Vec<MacroResult> {
         .min(n);
     let chunk = n.div_ceil(threads);
     let mut rest = jobs;
+    let f = &f;
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
         while !rest.is_empty() {
             let tail = rest.split_off(chunk.min(rest.len()));
             let batch = std::mem::replace(&mut rest, tail);
-            handles.push(s.spawn(move || {
-                batch
-                    .into_iter()
-                    .map(|(m, x)| m.mvm(x))
-                    .collect::<Vec<_>>()
-            }));
+            handles.push(
+                s.spawn(move || batch.into_iter().map(f).collect::<Vec<_>>()),
+            );
         }
         handles
             .into_iter()
             .flat_map(|h| h.join().expect("tile worker panicked"))
             .collect()
     })
+}
+
+/// Batched [`mvm_tiled`] (DESIGN.md S16): `xparts[ti]` carries the whole
+/// minibatch of row-tile `ti`'s input slices. Returns one
+/// `(partials, energy, latency)` triple per batch item, each bit-identical
+/// to what `mvm_tiled` would produce for that item alone — the (ti, tj)
+/// convention and the shard accumulation order are unchanged.
+pub fn mvm_tiled_batch(
+    macros: &mut [CimMacro],
+    xparts: &[Vec<Vec<u32>>],
+    row_tiles: usize,
+    col_tiles: usize,
+) -> Vec<(Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64)> {
+    assert_eq!(macros.len(), row_tiles * col_tiles, "shard count");
+    assert_eq!(xparts.len(), row_tiles, "one slice batch per row tile");
+    let batch = xparts.first().map_or(0, |p| p.len());
+    assert!(
+        xparts.iter().all(|p| p.len() == batch),
+        "ragged batch across row tiles"
+    );
+    let jobs: Vec<(&mut CimMacro, &[Vec<u32>])> = macros
+        .iter_mut()
+        .enumerate()
+        .map(|(sidx, m)| (m, xparts[sidx / col_tiles].as_slice()))
+        .collect();
+    let ledgers = mvm_parallel_batch(jobs);
+    (0..batch)
+        .map(|b| {
+            let mut energy = EnergyBreakdown::default();
+            let mut latency = 0.0f64; // tiles are physically concurrent
+            let mut partials: Vec<Vec<Vec<f64>>> = (0..row_tiles)
+                .map(|_| Vec::with_capacity(col_tiles))
+                .collect();
+            for (sidx, l) in ledgers.iter().enumerate() {
+                energy.add(l.energy(b));
+                latency = latency.max(l.latency_ns(b));
+                partials[sidx / col_tiles].push(l.y_mac(b).to_vec());
+            }
+            (partials, energy, latency)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -134,5 +183,95 @@ mod tests {
         let got = mvm_parallel(jobs);
         assert_eq!(got.len(), 1);
         assert!(got[0].y_mac.iter().any(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_batches_bit_for_bit() {
+        let cfg = MacroConfig::default();
+        let mut rng = Rng::new(81);
+        let batches: Vec<Vec<Vec<u32>>> = (0..5)
+            .map(|_| {
+                (0..4)
+                    .map(|_| {
+                        (0..cfg.rows).map(|_| rng.below(256) as u32).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let (mut serial, _) = fleet(5, 80);
+        let want: Vec<MvmBatch> = serial
+            .iter_mut()
+            .zip(&batches)
+            .map(|(m, xs)| m.mvm_batch(xs))
+            .collect();
+
+        let (mut par, _) = fleet(5, 80); // identical rebuild
+        let jobs: Vec<(&mut CimMacro, &[Vec<u32>])> = par
+            .iter_mut()
+            .zip(&batches)
+            .map(|(m, xs)| (m, xs.as_slice()))
+            .collect();
+        let got = mvm_parallel_batch(jobs);
+
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.len(), w.len());
+            for b in 0..g.len() {
+                assert_eq!(g.y_mac(b), w.y_mac(b));
+                assert_eq!(g.events(b), w.events(b));
+                assert_eq!(g.energy(b), w.energy(b));
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_batch_matches_per_item_tiled_bit_for_bit() {
+        // 2×2 tile grid over a 256×256 matrix, batch of 5 inputs.
+        let cfg = MacroConfig::default();
+        let mut rng = Rng::new(83);
+        let (rt, ct) = (2usize, 2usize);
+        let mk_fleet = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..rt * ct)
+                .map(|_| {
+                    let mut m = CimMacro::new(cfg.clone());
+                    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+                        .map(|_| rng.below(4) as u8)
+                        .collect();
+                    m.program(&codes);
+                    m
+                })
+                .collect::<Vec<_>>()
+        };
+        let batch = 5usize;
+        // xparts[ti][b]: per-row-tile slice batches.
+        let xparts: Vec<Vec<Vec<u32>>> = (0..rt)
+            .map(|_| {
+                (0..batch)
+                    .map(|_| {
+                        (0..cfg.rows).map(|_| rng.below(256) as u32).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut serial = mk_fleet(84);
+        let want: Vec<_> = (0..batch)
+            .map(|b| {
+                let parts: Vec<Vec<u32>> =
+                    (0..rt).map(|ti| xparts[ti][b].clone()).collect();
+                mvm_tiled(&mut serial, &parts, rt, ct)
+            })
+            .collect();
+
+        let mut batched = mk_fleet(84);
+        let got = mvm_tiled_batch(&mut batched, &xparts, rt, ct);
+
+        assert_eq!(got.len(), batch);
+        for ((gp, ge, gl), (wp, we, wl)) in got.iter().zip(&want) {
+            assert_eq!(gp, wp, "partials diverge");
+            assert_eq!(ge, we, "energy diverges");
+            assert_eq!(gl, wl, "latency diverges");
+        }
     }
 }

@@ -37,11 +37,13 @@ pub fn run_fig6a(cfg: &MacroConfig, mvms: usize, seed: u64) -> Fig6a {
         .map(|_| rng.below(4) as u8)
         .collect();
     m.program(&codes);
-    let mut total = EnergyBreakdown::default();
-    for _ in 0..mvms {
-        let x: Vec<u32> = (0..cfg.rows).map(|_| rng.below(256) as u32).collect();
-        total.add(&m.mvm(&x).energy);
-    }
+    // One batched engine call for the whole Monte-Carlo sweep
+    // (DESIGN.md S16) — the draws and per-op ledgers are bit-identical
+    // to the serial per-MVM loop.
+    let xs: Vec<Vec<u32>> = (0..mvms)
+        .map(|_| (0..cfg.rows).map(|_| rng.below(256) as u32).collect())
+        .collect();
+    let total = m.mvm_batch(&xs).total_energy();
     let mean = total.scaled(1.0 / mvms as f64);
     let tops = crate::energy::tops_per_watt(cfg.ops_per_mvm(), mean.total_fj());
     Fig6a {

@@ -19,7 +19,7 @@ use crate::config::{FabricConfig, LevelMap, MacroConfig};
 use crate::coordinator::TiledMatrix;
 use crate::energy::EnergyBreakdown;
 use crate::fabric::{FabricChip, FabricPipeline, StageRelay};
-use crate::macro_model::{mvm_tiled, CimMacro};
+use crate::macro_model::{mvm_tiled_batch, CimMacro};
 use crate::snn::dataset::Dataset;
 use crate::snn::mlp::{argmax, Mlp};
 use crate::snn::quant::{quantize_layer, ActQuant, QuantLayer};
@@ -47,18 +47,29 @@ impl MacroLayer {
         MacroLayer { q, tiled, macros }
     }
 
-    /// Run every tile's MVM (scoped worker threads — tiles are
-    /// independent macros) and return partials in deterministic (ti, tj)
-    /// order plus summed energy and the critical-path latency.
-    fn forward_tiles(
+    /// Run every tile's MVM for a whole minibatch (DESIGN.md S16):
+    /// every tile macro streams its weights once over the batch; scoped
+    /// worker threads fan the independent tile macros out. Partials come
+    /// back per item in deterministic (ti, tj) order plus summed energy
+    /// and the critical-path latency.
+    fn forward_tiles_batch(
         &mut self,
-        x: &[u32],
-    ) -> (Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64) {
-        let xparts = self.tiled.split_input(x);
-        mvm_tiled(
+        xs: &[Vec<u32>],
+    ) -> Vec<(Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64)> {
+        let rt = self.tiled.row_tiles;
+        let mut xparts: Vec<Vec<Vec<u32>>> =
+            (0..rt).map(|_| Vec::with_capacity(xs.len())).collect();
+        for x in xs {
+            for (ti, part) in
+                self.tiled.split_input(x).into_iter().enumerate()
+            {
+                xparts[ti].push(part);
+            }
+        }
+        mvm_tiled_batch(
             &mut self.macros,
             &xparts,
-            self.tiled.row_tiles,
+            rt,
             self.tiled.col_tiles,
         )
     }
@@ -199,40 +210,75 @@ impl MacroMlp {
         self.fabric.is_some()
     }
 
-    /// Forward pass from 8-bit pixels; returns (logits, stats).
+    /// Forward pass from 8-bit pixels; returns (logits, stats). A
+    /// single-item run of [`forward_batch`](Self::forward_batch).
     pub fn forward(&mut self, pixels: &[u32]) -> (Vec<f32>, InferStats) {
-        let mut stats = InferStats::default();
-        let mut x: Vec<u32> = pixels.to_vec();
+        self.forward_batch(std::slice::from_ref(&pixels.to_vec()))
+            .pop()
+            .expect("one item")
+    }
+
+    /// Batched forward pass (DESIGN.md S16): every layer runs the whole
+    /// minibatch through its tile pool (or fabric chip) with one weight
+    /// pass per macro, then requantizes each item for the next layer.
+    /// MACs on macros are in (x LSB)·µS; `finish_z` folds the activation
+    /// step back in so z comes out in float units. Per-item results are
+    /// batch-size invariant (asserted in `rust/tests/fabric_e2e.rs`).
+    pub fn forward_batch(
+        &mut self,
+        pixels: &[Vec<u32>],
+    ) -> Vec<(Vec<f32>, InferStats)> {
+        let n = pixels.len();
+        let mut stats = vec![InferStats::default(); n];
+        let mut xs: Vec<Vec<u32>> = pixels.to_vec();
         let mut x_step = self.input_step;
         let n_layers = self.layers.len();
-        let mut logits = Vec::new();
+        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); n];
         for li in 0..n_layers {
             let layer = &mut self.layers[li];
-            // MACs on macros are in (x LSB)·µS; finish_z folds the
-            // activation step back in so z comes out in float units.
-            let (partials, energy, lat) = match self.fabric.as_mut() {
-                None => layer.forward_tiles(&x),
-                Some(chip) => {
-                    let r = chip.forward_layer(li, &x);
-                    stats.noc_packets += r.packets;
-                    stats.noc_hops += r.hops;
-                    (r.partials, r.energy, r.latency_ns)
-                }
+            // (partials, energy, latency, packets, hops) per item.
+            let per_item: Vec<_> = match self.fabric.as_mut() {
+                None => layer
+                    .forward_tiles_batch(&xs)
+                    .into_iter()
+                    .map(|(p, e, l)| (p, e, l, 0u64, 0u64))
+                    .collect(),
+                Some(chip) => chip
+                    .forward_layer_batch(li, &xs)
+                    .into_iter()
+                    .map(|r| {
+                        (r.partials, r.energy, r.latency_ns, r.packets, r.hops)
+                    })
+                    .collect(),
             };
-            stats.energy.add(&energy);
-            stats.latency_ns += lat;
-            stats.macs += (layer.q.in_dim * layer.q.out_dim) as u64;
-            let mac = layer.tiled.accumulate(&partials);
-            let z = layer.finish_z(&x, &mac, x_step);
-            if li + 1 == n_layers {
-                logits = z;
+            let macs = (layer.q.in_dim * layer.q.out_dim) as u64;
+            let aq = if li + 1 == n_layers {
+                None
             } else {
-                let aq = self.act_quants[li];
-                x = z.iter().map(|&v| aq.quantize(v)).collect();
-                x_step = aq.step;
+                Some(self.act_quants[li])
+            };
+            for (i, (partials, energy, lat, packets, hops)) in
+                per_item.into_iter().enumerate()
+            {
+                stats[i].energy.add(&energy);
+                stats[i].latency_ns += lat;
+                stats[i].macs += macs;
+                stats[i].noc_packets += packets;
+                stats[i].noc_hops += hops;
+                let mac = layer.tiled.accumulate(&partials);
+                let z = layer.finish_z(&xs[i], &mac, x_step);
+                match aq {
+                    None => logits[i] = z,
+                    Some(a) => {
+                        xs[i] = z.iter().map(|&v| a.quantize(v)).collect()
+                    }
+                }
+            }
+            if let Some(a) = aq {
+                x_step = a.step;
             }
         }
-        (logits, stats)
+        logits.into_iter().zip(stats).collect()
     }
 
     pub fn predict(&mut self, pixels: &[u32]) -> (usize, InferStats) {
@@ -240,20 +286,41 @@ impl MacroMlp {
         (argmax(&logits[..10]), stats)
     }
 
-    /// Evaluate on a dataset: (accuracy, aggregate stats).
+    /// Evaluate on a dataset: (accuracy, aggregate stats). Runs on the
+    /// batched engine (DESIGN.md S16) — bit-identical to per-example
+    /// [`predict`](Self::predict) calls, asserted in
+    /// `rust/tests/fabric_e2e.rs`.
     pub fn evaluate(&mut self, data: &Dataset) -> (f64, InferStats) {
+        self.evaluate_batched(data, 32)
+    }
+
+    /// [`evaluate`](Self::evaluate) with an explicit minibatch size.
+    pub fn evaluate_batched(
+        &mut self,
+        data: &Dataset,
+        batch: usize,
+    ) -> (f64, InferStats) {
+        assert!(batch > 0, "batch size");
         let mut agg = InferStats::default();
         let mut correct = 0usize;
-        for i in 0..data.len() {
-            let (pred, stats) = self.predict(&data.features_u8(i));
-            if pred == data.examples[i].label {
-                correct += 1;
+        let mut lo = 0usize;
+        while lo < data.len() {
+            let hi = (lo + batch).min(data.len());
+            let pixels: Vec<Vec<u32>> =
+                (lo..hi).map(|i| data.features_u8(i)).collect();
+            for (j, (logits, stats)) in
+                self.forward_batch(&pixels).into_iter().enumerate()
+            {
+                if argmax(&logits[..10]) == data.examples[lo + j].label {
+                    correct += 1;
+                }
+                agg.energy.add(&stats.energy);
+                agg.latency_ns += stats.latency_ns;
+                agg.macs += stats.macs;
+                agg.noc_packets += stats.noc_packets;
+                agg.noc_hops += stats.noc_hops;
             }
-            agg.energy.add(&stats.energy);
-            agg.latency_ns += stats.latency_ns;
-            agg.macs += stats.macs;
-            agg.noc_packets += stats.noc_packets;
-            agg.noc_hops += stats.noc_hops;
+            lo = hi;
         }
         (correct as f64 / data.len() as f64, agg)
     }
@@ -309,7 +376,10 @@ impl MacroMlp {
 
         let inputs: Vec<Vec<u32>> =
             (0..data.len()).map(|i| data.features_u8(i)).collect();
-        let (outs, p) = FabricPipeline::new(chip, relays).run(inputs);
+        // Minibatches of 8 between stages: each stage does one weight
+        // pass per chunk (DESIGN.md S16); results are batch-invariant.
+        let (outs, p) =
+            FabricPipeline::new(chip, relays).run_batched(inputs, 8);
         let correct = outs
             .iter()
             .zip(&data.examples)

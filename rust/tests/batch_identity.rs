@@ -1,0 +1,161 @@
+//! Batched MVM engine (DESIGN.md S16) — cross-level integration.
+//!
+//! The per-level bit-identity proofs live next to their modules
+//! (`macro_model::cim_macro`, `macro_model`, `fabric::chip`,
+//! `fabric::executor`, `coordinator::server`, `rust/tests/fabric_e2e.rs`);
+//! this file adds a mixed-sparsity soak across batch sizes and records a
+//! fast-mode perf point into `BENCH_hotpath.json` so the machine-readable
+//! trajectory exists even on tier-1-only runs (`ci.sh` refreshes the file
+//! under the release profile, which is where the batch-vs-serial claim is
+//! measured).
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::MacroConfig;
+use spikemram::macro_model::{CimMacro, MvmBatch};
+use spikemram::util::rng::Rng;
+
+fn programmed(seed: u64) -> CimMacro {
+    let cfg = MacroConfig::default();
+    let mut m = CimMacro::new(cfg.clone());
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    m.program(&codes);
+    m
+}
+
+fn mixed_inputs(seed: u64, n: usize) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            // Cycle dense → half → 1/16-sparse → all-zero.
+            let density = [1.0, 0.5, 1.0 / 16.0, 0.0][i % 4];
+            (0..128)
+                .map(|_| {
+                    if rng.f64() < density {
+                        1 + rng.below(255) as u32
+                    } else {
+                        0
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn mixed_sparsity_soak_across_batch_sizes() {
+    let xs = mixed_inputs(4242, 24);
+    let mut serial = programmed(1717);
+    let want: Vec<_> = xs.iter().map(|x| serial.mvm(x)).collect();
+
+    for batch in [1usize, 3, 8, 24] {
+        let mut m = programmed(1717);
+        let mut ledger = MvmBatch::default();
+        let mut done = 0usize;
+        while done < xs.len() {
+            let hi = (done + batch).min(xs.len());
+            m.mvm_batch_into(&xs[done..hi], &mut ledger);
+            for b in 0..ledger.len() {
+                let w = &want[done + b];
+                assert_eq!(
+                    ledger.y_mac(b),
+                    w.y_mac.as_slice(),
+                    "batch {batch}, item {}",
+                    done + b
+                );
+                assert_eq!(ledger.t_out_ns(b), w.t_out_ns.as_slice());
+                assert_eq!(ledger.latency_ns(b), w.latency_ns);
+                assert_eq!(ledger.events(b), w.events);
+                assert_eq!(*ledger.energy(b), w.energy);
+            }
+            done = hi;
+        }
+    }
+}
+
+#[test]
+fn hotpath_bench_json_records_batch_sweep() {
+    // Real (fast-mode) measurements of the same cases benches/hotpath.rs
+    // times, written through the same Harness::finish() path. The JSON's
+    // "profile" field distinguishes this record from the release run —
+    // and an existing release-profile record (from the ci.sh hotpath
+    // smoke) is never clobbered with this binary's numbers: the test
+    // then validates the writer against a scratch directory instead.
+    std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    // Probe the directory the release bench run (ci.sh) writes into.
+    let record_dir = std::path::PathBuf::from(
+        std::env::var("SPIKEMRAM_BENCH_DIR").unwrap_or_else(|_| ".".into()),
+    );
+    let keep_release =
+        std::fs::read_to_string(record_dir.join("BENCH_hotpath.json"))
+            .ok()
+            .and_then(|s| spikemram::util::json::parse(&s).ok())
+            .and_then(|d| {
+                d.get("profile").and_then(|p| p.as_str().map(String::from))
+            })
+            .is_some_and(|p| p == "release");
+    let out_dir = if keep_release {
+        let dir = std::env::temp_dir().join("spikemram_hotpath_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    } else {
+        record_dir
+    };
+    let mut m = programmed(55);
+    let mut rng = Rng::new(56);
+    let xs: Vec<Vec<u32>> = (0..64)
+        .map(|_| (0..128).map(|_| 1 + rng.below(255) as u32).collect())
+        .collect();
+
+    let mut h = Harness::new("hotpath");
+    h.bench_function("macro_mvm_dense", |b| {
+        b.iter(|| m.mvm(black_box(&xs[0])).t_out_ns[0])
+    });
+    h.bench_function_n("macro_mvm_serial_dense_x8", 8, |b| {
+        b.iter(|| {
+            let mut acc = 0.0f64;
+            for x in &xs[..8] {
+                acc += m.mvm(black_box(x)).t_out_ns[0];
+            }
+            acc
+        })
+    });
+    let mut ledger = MvmBatch::default();
+    for batch in [1usize, 8, 64] {
+        h.bench_function_n(
+            &format!("macro_mvm_batch{batch}_dense"),
+            batch as u64,
+            |b| {
+                b.iter(|| {
+                    m.mvm_batch_into(black_box(&xs[..batch]), &mut ledger);
+                    ledger.y_mac(batch - 1)[0]
+                })
+            },
+        );
+    }
+    let path = h.finish_to(&out_dir);
+
+    let doc = spikemram::util::json::parse(
+        &std::fs::read_to_string(&path).expect("BENCH_hotpath.json written"),
+    )
+    .expect("valid JSON");
+    assert_eq!(doc.get("group").unwrap().as_str(), Some("hotpath"));
+    let benches = doc.get("benches").unwrap();
+    let per_op = |name: &str| -> f64 {
+        benches
+            .get(name)
+            .unwrap_or_else(|| panic!("bench {name} recorded"))
+            .get("per_op_median_ns")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    let serial = per_op("macro_mvm_serial_dense_x8");
+    let batch8 = per_op("macro_mvm_batch8_dense");
+    assert!(serial > 0.0 && batch8 > 0.0);
+    // No timing-ratio assertion here: wall-clock claims are only made
+    // under the release profile (ci.sh hotpath smoke, EXPERIMENTS.md
+    // §Perf); this test pins the record's existence and shape.
+}

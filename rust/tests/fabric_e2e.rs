@@ -80,6 +80,60 @@ fn pipelined_fabric_evaluate_matches_serial_fabric() {
 }
 
 #[test]
+fn batched_forward_bit_identical_to_per_input_forward() {
+    // DESIGN.md S16: the batched engine is a pure throughput
+    // optimization — logits, energy, latency, and NoC tallies per item
+    // must be bitwise what the per-input path produces, on both the
+    // tile-pool and fabric deployments.
+    let (model, train, test) = tiny_setup();
+    let cfg = MacroConfig::default();
+    let builds: [fn(&snn::Mlp, &snn::Dataset, &MacroConfig) -> snn::MacroMlp;
+        2] = [
+        |m, d, c| snn::MacroMlp::from_float(m, d, c, LevelMap::DeviceTrue),
+        |m, d, c| {
+            snn::MacroMlp::from_float(m, d, c, LevelMap::DeviceTrue)
+                .attach_fabric(c, FabricConfig::square(2))
+                .unwrap()
+        },
+    ];
+    for build in builds {
+        let mut serial = build(&model, &train, &cfg);
+        let mut batched = build(&model, &train, &cfg);
+        let xs: Vec<Vec<u32>> =
+            (0..11).map(|i| test.features_u8(i)).collect();
+        let want: Vec<_> = xs.iter().map(|x| serial.forward(x)).collect();
+        let got = batched.forward_batch(&xs);
+        assert_eq!(got.len(), want.len());
+        for (i, ((gl, gs), (wl, ws))) in got.iter().zip(&want).enumerate() {
+            assert_eq!(gl, wl, "logits diverge at item {i}");
+            assert_eq!(gs.energy, ws.energy, "energy diverges at item {i}");
+            assert_eq!(gs.latency_ns, ws.latency_ns);
+            assert_eq!(gs.macs, ws.macs);
+            assert_eq!(gs.noc_packets, ws.noc_packets);
+            assert_eq!(gs.noc_hops, ws.noc_hops);
+        }
+    }
+}
+
+#[test]
+fn evaluate_is_batch_size_invariant() {
+    let (model, train, test) = tiny_setup();
+    let cfg = MacroConfig::default();
+    let build = || {
+        snn::MacroMlp::from_float(&model, &train, &cfg, LevelMap::DeviceTrue)
+    };
+    let (acc1, st1) = build().evaluate_batched(&test, 1);
+    let (acc8, st8) = build().evaluate_batched(&test, 8);
+    let (acc_def, st_def) = build().evaluate(&test);
+    assert_eq!(acc1, acc8);
+    assert_eq!(acc1, acc_def);
+    assert_eq!(st1.energy, st8.energy);
+    assert_eq!(st1.energy, st_def.energy);
+    assert_eq!(st1.latency_ns, st8.latency_ns);
+    assert_eq!(st1.macs, st8.macs);
+}
+
+#[test]
 fn fabric_grid_shapes_change_routing_not_results() {
     // Same model on two different meshes: identical predictions, but
     // more spread-out placement → more hops.
