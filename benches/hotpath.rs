@@ -11,7 +11,7 @@
 //! ```
 
 use spikemram::benchlib::{black_box, Harness};
-use spikemram::config::MacroConfig;
+use spikemram::config::{MacroConfig, MvmEngine};
 use spikemram::coordinator::{Policy, Scheduler, TileOp, TiledMatrix};
 use spikemram::event::{EventKind, EventQueue, FlagTree};
 use spikemram::macro_model::{CimMacro, MvmBatch};
@@ -66,6 +66,12 @@ fn main() {
         .collect();
     let mut m = CimMacro::new(cfg.clone());
     m.program(&codes);
+    // Pin the historical trajectory rows to the PR-3 dense streaming
+    // engine: since DESIGN.md S17, `Auto` resolves to the quantized
+    // level-plane engine on an ideal macro, and these rows must keep
+    // measuring the same code across PRs (benches/sparsity.rs carries
+    // the engine-vs-engine comparison).
+    m.set_engine(MvmEngine::Dense);
     for (name, density) in
         [("dense", 1.0), ("half", 0.5), ("sparse_1_16", 1.0 / 16.0)]
     {
@@ -131,6 +137,21 @@ fn main() {
             r.per_op_median_ns() / serial_per_op
         ));
     }
+
+    // The production default: Auto resolves to the quantized
+    // level-plane engine on this ideal macro (DESIGN.md S17).
+    m.set_engine(MvmEngine::Auto);
+    let r = h.bench_function_n("macro_mvm_batch8_auto", 8, |b| {
+        b.iter(|| {
+            m.mvm_batch_into(black_box(&xs64[..8]), &mut ledger);
+            ledger.y_mac(7)[0]
+        })
+    });
+    h.note(&format!(
+        "{:.2}× the serial dense per-op median ({:?} engine)",
+        r.per_op_median_ns() / serial_per_op,
+        ledger.engine_used()
+    ));
 
     // --- scheduler dispatch ----------------------------------------------
     let big_codes: Vec<u8> = (0..256 * 128).map(|i| (i % 4) as u8).collect();

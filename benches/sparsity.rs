@@ -1,0 +1,86 @@
+//! Bench: the event-driven sparsity sweep (DESIGN.md S17, §Perf in
+//! EXPERIMENTS.md) — density ∈ {0.01, 0.1, 0.5, 1.0} × batch ∈ {1, 64}
+//! on the three forced fast-path engines (dense stream, active-row
+//! event lists, quantized level planes). All three are exact on the
+//! ideal macro (event-list bitwise = dense; quantized = the integer
+//! oracle), so every row measures the same math — the table is purely
+//! the wall-clock shape of event-driven execution.
+//!
+//! ```bash
+//! cargo bench --bench sparsity            # full run
+//! cargo bench --bench sparsity -- --test  # CI smoke (fast mode)
+//! ```
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::{MacroConfig, MvmEngine};
+use spikemram::macro_model::{CimMacro, MvmBatch};
+use spikemram::util::rng::Rng;
+
+fn main() {
+    if std::env::args().any(|a| a == "--test") {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    }
+    let mut h = Harness::new("sparsity");
+    let cfg = MacroConfig::default();
+    let mut rng = Rng::new(17);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let mut m = CimMacro::new(cfg.clone());
+    m.program(&codes);
+
+    let engines = [
+        ("dense", MvmEngine::Dense),
+        ("event_list", MvmEngine::EventList),
+        ("quantized", MvmEngine::Quantized),
+    ];
+    let mut ledger = MvmBatch::default();
+    for (dname, density) in
+        [("d001", 0.01), ("d010", 0.1), ("d050", 0.5), ("d100", 1.0)]
+    {
+        // One fixed input set per density point, shared by all engines
+        // and batch sizes so the rows compare like for like.
+        let xs: Vec<u32> = (0..64 * cfg.rows)
+            .map(|_| {
+                if rng.f64() < density {
+                    1 + rng.below(255) as u32
+                } else {
+                    0
+                }
+            })
+            .collect();
+        for batch in [1usize, 64] {
+            let flat = &xs[..batch * cfg.rows];
+            for (ename, engine) in engines {
+                m.set_engine(engine);
+                let r = h.bench_function_n(
+                    &format!("mvm_{dname}_b{batch}_{ename}"),
+                    batch as u64,
+                    |b| {
+                        b.iter(|| {
+                            m.mvm_batch_strided_into(
+                                black_box(flat),
+                                cfg.rows,
+                                &mut ledger,
+                            );
+                            ledger.total_active_rows()
+                        })
+                    },
+                );
+                h.note(&format!(
+                    "{:.3} µs/op on {ename}",
+                    r.per_op_median_ns() / 1e3
+                ));
+            }
+            println!(
+                "    [{dname} b{batch}] {}/{} rows active \
+                 ({:.1} % occupancy)",
+                ledger.total_active_rows(),
+                ledger.row_slots(),
+                100.0 * ledger.occupancy()
+            );
+        }
+    }
+
+    h.finish();
+}

@@ -11,9 +11,20 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# Every bench/test record lands at the repo root regardless of the
+# invoking process's cwd — BENCH_*.json is the cross-PR perf trajectory
+# and must be where the harness reads it (PR 4 fix: PR 3's records were
+# written relative to ambient cwd and never landed here).
+export SPIKEMRAM_BENCH_DIR="$(pwd)"
+
 echo "==> tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
+
+echo "==> tier-1 perf records present at the repo root"
+# cargo test (batch_identity) writes fast-mode hotpath + sparsity
+# records through Harness::finish(); fail loudly if they didn't land.
+ls -l BENCH_hotpath.json BENCH_sparsity.json
 
 echo "==> compile all targets (benches, examples, bin)"
 cargo build --all-targets --release
@@ -28,7 +39,13 @@ echo "==> hotpath bench: smoke run in --test mode (batched MVM engine)"
 cargo bench --bench hotpath --no-run
 SPIKEMRAM_BENCH_FAST=1 cargo bench --bench hotpath -- --test
 
-echo "==> lint: cargo fmt --check && cargo clippy -D warnings"
+echo "==> sparsity bench: smoke run in --test mode (S17 engine sweep)"
+# Refreshes BENCH_sparsity.json under the release profile — the record
+# behind the event-list / quantized expectation bands in EXPERIMENTS.md.
+cargo bench --bench sparsity --no-run
+SPIKEMRAM_BENCH_FAST=1 cargo bench --bench sparsity -- --test
+
+echo "==> lint: cargo fmt --check && cargo clippy -D warnings (hard gate)"
 # --all-targets covers the fabric/ module (lib), its bench, example,
 # and integration test with warnings fatal.
 cargo fmt --check

@@ -41,6 +41,33 @@ impl LevelMap {
     }
 }
 
+/// Which linear fast-path engine `CimMacro` uses for the charge
+/// integral (DESIGN.md S17). The request applies only when the ideal
+/// linear fast path is valid (clamp+current-mirror, no c2c noise, no
+/// mirror-gain mismatch) — any non-ideality hands the op to the general
+/// event loop regardless, because only the event loop models it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MvmEngine {
+    /// Pick per batch: the quantized level-plane engine when it is
+    /// exact (ideal circuits *and* exact level conductances *and*
+    /// 16-bit count headroom), otherwise event-list vs dense streaming
+    /// by batch occupancy.
+    #[default]
+    Auto,
+    /// Row-outer weight-stationary batch streaming (DESIGN.md S16) —
+    /// the PR-3 reference engine.
+    Dense,
+    /// Item-outer streaming over per-item active-row event lists —
+    /// bit-identical to `Dense` (skipping a zero window adds exactly
+    /// `+0.0`), it just never visits silent rows.
+    EventList,
+    /// Integer level-plane accumulation: per-(level, column) spike
+    /// counts, one deterministic f64 scale per level. Exactly equal to
+    /// the integer oracle (`CimMacro::ideal_mvm_quantized`); panics if
+    /// forced while ineligible.
+    Quantized,
+}
+
 /// Analog non-idealities applied by the behavioral circuit engine.
 #[derive(Debug, Clone, Copy)]
 pub struct NonIdeality {
@@ -120,6 +147,8 @@ pub struct MacroConfig {
     pub level_map: LevelMap,
     /// Analog non-idealities.
     pub nonideal: NonIdeality,
+    /// Fast-path engine request (DESIGN.md S17).
+    pub engine: MvmEngine,
 }
 
 impl Default for MacroConfig {
@@ -141,6 +170,7 @@ impl Default for MacroConfig {
             weight_bits: 2,
             level_map: LevelMap::DeviceTrue,
             nonideal: NonIdeality::ideal(),
+            engine: MvmEngine::Auto,
         }
     }
 }

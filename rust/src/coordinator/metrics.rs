@@ -24,6 +24,9 @@ struct Inner {
     macs: u64,
     latency_us: Histogram,
     batch_sizes: Histogram,
+    // --- event-driven input occupancy (S17) ---
+    active_rows: u64,
+    row_slots: u64,
     // --- fabric backend only (S15) ---
     noc_packets: u64,
     noc_hops: u64,
@@ -48,6 +51,11 @@ pub struct MetricsSnapshot {
     pub latency_p95_us: f64,
     pub latency_p99_us: f64,
     pub mean_batch: f64,
+    /// Input rows that carried a spike pair, across all served requests
+    /// (DESIGN.md S17: the event-driven occupancy of the traffic).
+    pub active_rows: u64,
+    /// Input row slots offered (`Σ batch × in_dim`).
+    pub row_slots: u64,
     /// Spike packets routed on the fabric NoC (0 for non-fabric backends).
     pub noc_packets: u64,
     /// Total hops those packets travelled.
@@ -59,6 +67,17 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Fraction of served input rows that were active (0 before any
+    /// traffic) — silent rows cost the macro nothing, so this is the
+    /// knob the event-list engine's win scales with.
+    pub fn input_density(&self) -> f64 {
+        if self.row_slots == 0 {
+            0.0
+        } else {
+            self.active_rows as f64 / self.row_slots as f64
+        }
+    }
+
     /// Fraction of fabric tiles carrying a weight shard (0 off-fabric).
     pub fn tile_utilization(&self) -> f64 {
         if self.tiles_total == 0 {
@@ -98,6 +117,8 @@ impl Metrics {
                 batch_sizes: Histogram::new(vec![
                     1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
                 ]),
+                active_rows: 0,
+                row_slots: 0,
                 noc_packets: 0,
                 noc_hops: 0,
                 tiles_used: 0,
@@ -118,6 +139,14 @@ impl Metrics {
         g.batches += 1;
         g.macs += macs;
         g.batch_sizes.record(size as f64);
+    }
+
+    /// Account one batch's input occupancy (DESIGN.md S17): `active`
+    /// rows carried spikes out of `slots` offered.
+    pub fn record_activity(&self, active: u64, slots: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.active_rows += active;
+        g.row_slots += slots;
     }
 
     /// Account routed fabric traffic (counters, monotonic).
@@ -150,6 +179,8 @@ impl Metrics {
             latency_p95_us: g.latency_us.quantile(0.95),
             latency_p99_us: g.latency_us.quantile(0.99),
             mean_batch: g.batch_sizes.mean(),
+            active_rows: g.active_rows,
+            row_slots: g.row_slots,
             noc_packets: g.noc_packets,
             noc_hops: g.noc_hops,
             tiles_used: g.tiles_used,
@@ -188,6 +219,14 @@ impl Metrics {
             g.latency_us.summary(),
             g.batch_sizes.summary()
         );
+        if s.row_slots > 0 {
+            out.push_str(&format!(
+                "\nactivity: active_rows={} / {} slots ({:.1} % dense)",
+                s.active_rows,
+                s.row_slots,
+                s.input_density() * 100.0
+            ));
+        }
         if s.tiles_total > 0 || s.noc_packets > 0 {
             out.push_str(&format!(
                 "\nnoc: packets={} hops={} tiles={}/{} ({:.0} % utilized)",
@@ -245,6 +284,19 @@ mod tests {
         assert!((s.mean_batch - 3.0).abs() < 1e-12);
         assert_eq!(s.noc_packets, 0);
         assert_eq!(s.tile_utilization(), 0.0);
+    }
+
+    #[test]
+    fn activity_counters_and_density() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().input_density(), 0.0);
+        m.record_activity(13, 128);
+        m.record_activity(0, 128);
+        let s = m.snapshot();
+        assert_eq!(s.active_rows, 13);
+        assert_eq!(s.row_slots, 256);
+        assert!((s.input_density() - 13.0 / 256.0).abs() < 1e-12);
+        assert!(m.summary().contains("active_rows=13 / 256"));
     }
 
     #[test]

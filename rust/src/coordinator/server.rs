@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{FabricConfig, MacroConfig};
+use crate::config::{FabricConfig, MacroConfig, MvmEngine};
 use crate::coordinator::TiledMatrix;
 use crate::fabric::FabricChip;
 use crate::macro_model::{CimMacro, MvmBatch};
@@ -232,17 +232,28 @@ impl WorkerBackend {
         }
     }
 
-    /// Compute MACs for a batch of inputs — one batched engine call per
-    /// collected batch, bit-identical to per-job serial execution.
-    fn mvm_batch(&mut self, xs: &[Vec<u32>]) -> Vec<Vec<f64>> {
+    /// Compute MACs for a collected batch — the inputs arrive as ONE
+    /// flat `[n × in_dim]` buffer (DESIGN.md S17: the worker reuses it
+    /// across batches, no `Vec<Vec<u32>>` per collection) and execute
+    /// as one batched engine call, bit-identical to per-job serial
+    /// execution.
+    fn mvm_batch_strided(
+        &mut self,
+        xs: &[u32],
+        in_dim: usize,
+        n: usize,
+    ) -> Vec<Vec<f64>> {
+        debug_assert_eq!(xs.len(), n * in_dim);
         match self {
             WorkerBackend::Sim { m, ledger } => {
-                m.mvm_batch_into(xs, ledger);
-                (0..xs.len()).map(|b| ledger.y_mac(b).to_vec()).collect()
+                m.mvm_batch_strided_into(xs, in_dim, ledger);
+                (0..n).map(|b| ledger.y_mac(b).to_vec()).collect()
             }
-            WorkerBackend::Fabric(chip) => {
-                chip.mvm_batch(xs).into_iter().map(|(y, _)| y).collect()
-            }
+            WorkerBackend::Fabric(chip) => chip
+                .mvm_batch_strided(xs, in_dim)
+                .into_iter()
+                .map(|(y, _)| y)
+                .collect(),
             WorkerBackend::Pjrt {
                 exe,
                 codes_i32,
@@ -253,11 +264,13 @@ impl WorkerBackend {
                 t_bit,
                 ..
             } => {
-                let mut out = Vec::with_capacity(xs.len());
-                for chunk in xs.chunks(*batch) {
+                let mut out = Vec::with_capacity(n);
+                for lo in (0..n).step_by(*batch) {
+                    let hi = (lo + *batch).min(n);
                     // Encode + pad the chunk to the artifact's batch shape.
                     let mut t_in = vec![0.0f32; *batch * *rows];
-                    for (b, x) in chunk.iter().enumerate() {
+                    for (b, item) in (lo..hi).enumerate() {
+                        let x = &xs[item * in_dim..(item + 1) * in_dim];
                         for (r, &v) in x.iter().enumerate() {
                             t_in[b * *rows + r] = v as f32 * *t_bit as f32;
                         }
@@ -269,7 +282,7 @@ impl WorkerBackend {
                     let outputs = exe.run_f32(&args).expect("pjrt execute");
                     let t_out = &outputs[0];
                     let scale = 1.0 / (*alpha * *t_bit);
-                    for b in 0..chunk.len() {
+                    for b in 0..hi - lo {
                         out.push(
                             t_out[b * *cols..(b + 1) * *cols]
                                 .iter()
@@ -301,6 +314,10 @@ fn worker_loop(
             chip.tiles_total() as u64,
         );
     }
+    // Reusable flat input buffer (DESIGN.md S17): each collected batch
+    // is concatenated here and executed strided — no per-batch
+    // `Vec<Vec<u32>>`.
+    let mut xflat: Vec<u32> = Vec::new();
     loop {
         // Collect a batch: block for the first job, then fill until the
         // batch is full or the timeout elapses.
@@ -325,9 +342,16 @@ fn worker_loop(
             }
         } // release the lock before computing
 
-        let xs: Vec<Vec<u32>> = jobs.iter().map(|j| j.x.clone()).collect();
-        let results = backend.mvm_batch(&xs);
+        xflat.clear();
+        for j in &jobs {
+            xflat.extend_from_slice(&j.x);
+        }
+        let results = backend.mvm_batch_strided(&xflat, in_dim, jobs.len());
         metrics.record_batch(jobs.len(), macs_per_op * jobs.len() as u64);
+        // Event-driven occupancy of the served traffic (S17): count the
+        // input rows that actually carried spikes, backend-independent.
+        let active = xflat.iter().filter(|&&v| v > 0).count() as u64;
+        metrics.record_activity(active, xflat.len() as u64);
         if let WorkerBackend::Fabric(chip) = &mut backend {
             // Drain before replying so a caller who awaits the reply
             // already sees this batch's traffic in the snapshot.
@@ -477,6 +501,55 @@ mod tests {
             "expected some multi-job batches, got {} batches",
             snap.batches
         );
+        // Activity counters (DESIGN.md S17): every input row slot was
+        // offered, and nearly all carried spikes (uniform 0..255 draw).
+        assert_eq!(snap.row_slots, 24 * 128);
+        assert!(snap.active_rows <= snap.row_slots);
+        assert!(snap.input_density() > 0.9, "{}", snap.input_density());
+        server.shutdown();
+    }
+
+    #[test]
+    fn event_list_server_replies_bitwise_equal_dense_oracle() {
+        // Server-level S17 bit-identity: an event-list-engined server's
+        // replies are bitwise what a dense-engined serial macro returns,
+        // under sparse traffic where the engines take different code
+        // paths.
+        let cfg_ev = MacroConfig {
+            engine: MvmEngine::EventList,
+            ..MacroConfig::default()
+        };
+        let cs = codes(44);
+        let mut oracle = CimMacro::new(MacroConfig {
+            engine: MvmEngine::Dense,
+            ..MacroConfig::default()
+        });
+        oracle.program(&cs);
+        let server = MacroServer::start(
+            cfg_ev,
+            cs,
+            ServerConfig {
+                workers: 2,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(45);
+        for _ in 0..6 {
+            let x: Vec<u32> = (0..128)
+                .map(|_| {
+                    if rng.f64() < 0.1 {
+                        1 + rng.below(255) as u32
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let got = server.call(x.clone());
+            assert_eq!(got, oracle.mvm(&x).y_mac);
+        }
+        let snap = server.metrics.snapshot();
+        assert!(snap.input_density() < 0.3, "{}", snap.input_density());
         server.shutdown();
     }
 

@@ -80,6 +80,21 @@ impl TiledMatrix {
             .collect()
     }
 
+    /// Append one item's per-row-tile slices (zero-padded to `tile`,
+    /// exactly like [`split_input`](Self::split_input)) onto reusable
+    /// flat batch buffers — `bufs[ti]` grows by `tile` values per call
+    /// (DESIGN.md S17: no per-item `Vec` allocations on the hot path).
+    pub fn split_input_into(&self, x: &[u32], bufs: &mut [Vec<u32>]) {
+        assert_eq!(x.len(), self.k, "input length");
+        assert_eq!(bufs.len(), self.row_tiles, "one buffer per row tile");
+        for (ti, buf) in bufs.iter_mut().enumerate() {
+            let lo = ti * self.tile;
+            let hi = ((ti + 1) * self.tile).min(self.k);
+            buf.extend_from_slice(&x[lo..hi]);
+            buf.resize(buf.len() + (self.tile - (hi - lo)), 0);
+        }
+    }
+
     /// Accumulate per-tile MAC outputs back into a length-N result:
     /// `partials[ti][tj]` is the tile's `tile`-wide column output.
     pub fn accumulate(&self, partials: &[Vec<Vec<f64>>]) -> Vec<f64> {
@@ -143,6 +158,29 @@ mod tests {
         assert_eq!(parts[0][127], 127);
         assert_eq!(parts[1][0], 128);
         assert_eq!(parts[1][2], 0); // padding
+    }
+
+    #[test]
+    fn split_input_into_matches_split_input_per_item() {
+        let codes = vec![0u8; 130 * 10];
+        let tm = TiledMatrix::new(&codes, 130, 10, 128);
+        let xs: Vec<Vec<u32>> = (0..3)
+            .map(|i| (0..130u32).map(|v| v * (i + 1)).collect())
+            .collect();
+        let mut bufs: Vec<Vec<u32>> = vec![Vec::new(); 2];
+        for x in &xs {
+            tm.split_input_into(x, &mut bufs);
+        }
+        for (b, x) in xs.iter().enumerate() {
+            let want = tm.split_input(x);
+            for ti in 0..2 {
+                assert_eq!(
+                    &bufs[ti][b * 128..(b + 1) * 128],
+                    want[ti].as_slice(),
+                    "item {b} tile {ti}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -27,7 +27,7 @@ use anyhow::{ensure, Result};
 use crate::config::{FabricConfig, MacroConfig};
 use crate::coordinator::TiledMatrix;
 use crate::energy::EnergyBreakdown;
-use crate::macro_model::{mvm_tiled_batch, CimMacro};
+use crate::macro_model::{mvm_tiled_batch_strided, CimMacro, TiledBatchItem};
 
 use super::noc::{SpikePacket, TileCoord};
 use super::placement::{place, Placement};
@@ -41,6 +41,9 @@ pub struct FabricStats {
     pub noc_fj: f64,
     /// Layer-0 forwards seen (≈ inferences for a multi-layer chip).
     pub mvms: u64,
+    /// Macro row activations across all forwards (DESIGN.md S17) — the
+    /// event-driven occupancy gauge the serving metrics surface.
+    pub active_rows: u64,
 }
 
 /// Result of one layer forward on the fabric.
@@ -57,6 +60,10 @@ pub struct LayerResult {
     pub packets: u64,
     pub flits: u64,
     pub hops: u64,
+    /// Macro row activations summed over this layer's shards
+    /// (DESIGN.md S17): each active input row fires once per column
+    /// tile it feeds; 0 for an all-silent input.
+    pub active_rows: u64,
 }
 
 /// Account one unicast packet; returns its delivery latency. Zero-hop
@@ -100,6 +107,10 @@ pub struct LayerStage {
     /// Where outputs go: the next layer's head, or the chip I/O port.
     egress: TileCoord,
     fabric: FabricConfig,
+    /// Reusable per-row-tile flat slice batches (`[batch × tile]` each,
+    /// DESIGN.md S17): refilled per `run_batch*` call, so the steady
+    /// state allocates no per-item `Vec`s.
+    xparts: Vec<Vec<u32>>,
 }
 
 /// One input's routed NoC phases (everything but compute): the latency
@@ -221,14 +232,15 @@ impl LayerStage {
     /// Fold routed phases and tile compute into one [`LayerResult`],
     /// keeping the serial path's latency association and energy
     /// accumulation order.
-    fn assemble(
-        routed: RoutedPhases,
-        partials: Vec<Vec<Vec<f64>>>,
-        e_tiles: &EnergyBreakdown,
-        t_compute: f64,
-    ) -> LayerResult {
+    fn assemble(routed: RoutedPhases, item: TiledBatchItem) -> LayerResult {
+        let TiledBatchItem {
+            partials,
+            energy: e_tiles,
+            latency_ns: t_compute,
+            active_rows,
+        } = item;
         let mut energy = routed.energy;
-        energy.add(e_tiles);
+        energy.add(&e_tiles);
         LayerResult {
             partials,
             energy,
@@ -237,6 +249,7 @@ impl LayerStage {
             packets: routed.tally.packets,
             flits: routed.tally.flits,
             hops: routed.tally.hops,
+            active_rows,
         }
     }
 
@@ -251,32 +264,71 @@ impl LayerStage {
     /// Forward a whole minibatch through this layer (DESIGN.md S16):
     /// every shard streams its weights once over the batch (phase 3 —
     /// concurrent tiles, deterministic order; the shared
-    /// `mvm_tiled_batch` keeps the (ti, tj) convention in one place),
-    /// while each item's NoC phases are priced individually with the
-    /// same per-packet cost model — per-item results and traffic are
-    /// batch-size invariant.
+    /// `mvm_tiled_batch_strided` keeps the (ti, tj) convention in one
+    /// place), while each item's NoC phases are priced individually
+    /// with the same per-packet cost model — per-item results and
+    /// traffic are batch-size invariant.
     pub fn run_batch(&mut self, xs: &[Vec<u32>]) -> Vec<LayerResult> {
-        let rt = self.tiled.row_tiles;
-        let ct = self.tiled.col_tiles;
-        // Regroup: per row tile, the whole batch of its input slices.
-        let mut xparts: Vec<Vec<Vec<u32>>> =
-            (0..rt).map(|_| Vec::with_capacity(xs.len())).collect();
+        self.reset_parts();
         for x in xs {
             assert_eq!(x.len(), self.tiled.k, "layer input length");
-            for (ti, part) in self.tiled.split_input(x).into_iter().enumerate()
-            {
-                xparts[ti].push(part);
-            }
+            self.tiled.split_input_into(x, &mut self.xparts);
         }
-        let computed = mvm_tiled_batch(&mut self.macros, &xparts, rt, ct);
+        self.run_parts(xs.len())
+    }
+
+    /// Flat-input [`run_batch`](Self::run_batch) (DESIGN.md S17): the
+    /// minibatch arrives as one `[batch × k]` slice, so upstream
+    /// collectors feed a reusable buffer instead of a `Vec<Vec<u32>>`.
+    pub fn run_batch_strided(
+        &mut self,
+        xs: &[u32],
+        in_dim: usize,
+    ) -> Vec<LayerResult> {
+        assert_eq!(in_dim, self.tiled.k, "layer input length");
+        assert_eq!(xs.len() % in_dim.max(1), 0, "ragged flat batch");
+        let batch = xs.len() / in_dim.max(1);
+        self.reset_parts();
+        for b in 0..batch {
+            self.tiled.split_input_into(
+                &xs[b * in_dim..(b + 1) * in_dim],
+                &mut self.xparts,
+            );
+        }
+        self.run_parts(batch)
+    }
+
+    /// Clear the reusable per-row-tile slice buffers (capacity kept).
+    fn reset_parts(&mut self) {
+        let rt = self.tiled.row_tiles;
+        self.xparts.resize_with(rt, Vec::new);
+        for p in &mut self.xparts {
+            p.clear();
+        }
+    }
+
+    /// Compute + route the `batch` items already split into
+    /// `self.xparts`.
+    fn run_parts(&mut self, batch: usize) -> Vec<LayerResult> {
+        let rt = self.tiled.row_tiles;
+        let ct = self.tiled.col_tiles;
+        let tile = self.tiled.tile;
+        let computed = mvm_tiled_batch_strided(
+            &mut self.macros,
+            &self.xparts,
+            batch,
+            rt,
+            ct,
+        );
         computed
             .into_iter()
             .enumerate()
-            .map(|(b, (partials, e_tiles, t_compute))| {
-                let item_parts: Vec<&[u32]> =
-                    (0..rt).map(|ti| xparts[ti][b].as_slice()).collect();
+            .map(|(b, item)| {
+                let item_parts: Vec<&[u32]> = (0..rt)
+                    .map(|ti| &self.xparts[ti][b * tile..(b + 1) * tile])
+                    .collect();
                 let routed = self.route(&item_parts);
-                Self::assemble(routed, partials, &e_tiles, t_compute)
+                Self::assemble(routed, item)
             })
             .collect()
     }
@@ -356,6 +408,7 @@ impl FabricChip {
                     ingress: (li == 0).then_some(io),
                     egress,
                     fabric: fabric.clone(),
+                    xparts: Vec::new(),
                 }
             })
             .collect();
@@ -399,16 +452,37 @@ impl FabricChip {
         xs: &[Vec<u32>],
     ) -> Vec<LayerResult> {
         let rs = self.stages[layer].run_batch(xs);
-        for r in &rs {
+        self.absorb_layer(layer, &rs, xs.len());
+        rs
+    }
+
+    /// Flat-input [`forward_layer_batch`](Self::forward_layer_batch)
+    /// (DESIGN.md S17): `xs` is the whole minibatch concatenated,
+    /// `in_dim` values per item.
+    pub fn forward_layer_batch_strided(
+        &mut self,
+        layer: usize,
+        xs: &[u32],
+        in_dim: usize,
+    ) -> Vec<LayerResult> {
+        let rs = self.stages[layer].run_batch_strided(xs, in_dim);
+        self.absorb_layer(layer, &rs, rs.len());
+        rs
+    }
+
+    /// Accumulate one layer batch's traffic + activity into
+    /// `self.stats`.
+    fn absorb_layer(&mut self, layer: usize, rs: &[LayerResult], items: usize) {
+        for r in rs {
             self.stats.packets += r.packets;
             self.stats.flits += r.flits;
             self.stats.hops += r.hops;
             self.stats.noc_fj += r.energy.noc_fj;
+            self.stats.active_rows += r.active_rows;
         }
         if layer == 0 {
-            self.stats.mvms += xs.len() as u64;
+            self.stats.mvms += items as u64;
         }
-        rs
     }
 
     /// Single-layer convenience: run the whole tiled matrix as one MVM
@@ -432,6 +506,28 @@ impl FabricChip {
             "mvm_batch() is the single-layer path"
         );
         let rs = self.forward_layer_batch(0, xs);
+        rs.into_iter()
+            .map(|r| {
+                let y = self.stages[0].tiled.accumulate(&r.partials);
+                (y, r)
+            })
+            .collect()
+    }
+
+    /// Flat-input [`mvm_batch`](Self::mvm_batch) (DESIGN.md S17): the
+    /// serving hot path — one reusable `[batch × k]` buffer in, no
+    /// per-batch `Vec<Vec<u32>>`.
+    pub fn mvm_batch_strided(
+        &mut self,
+        xs: &[u32],
+        in_dim: usize,
+    ) -> Vec<(Vec<f64>, LayerResult)> {
+        assert_eq!(
+            self.stages.len(),
+            1,
+            "mvm_batch_strided() is the single-layer path"
+        );
+        let rs = self.forward_layer_batch_strided(0, xs, in_dim);
         rs.into_iter()
             .map(|r| {
                 let y = self.stages[0].tiled.accumulate(&r.partials);
@@ -537,6 +633,42 @@ mod tests {
         assert_eq!(r.packets, 0);
         assert_eq!(r.hops, 0);
         assert_eq!(r.energy.noc_fj, 0.0);
+        assert_eq!(r.active_rows, 0, "silent input: no row events");
+        assert_eq!(chip.stats.active_rows, 0);
+    }
+
+    #[test]
+    fn strided_mesh_batch_bitwise_equals_vec_of_vecs() {
+        let cfg = MacroConfig::default();
+        let codes = random_codes(300, 200, 195);
+        let mk = || {
+            let tiled = TiledMatrix::new(&codes, 300, 200, cfg.rows);
+            FabricChip::new(&cfg, FabricConfig::square(3), vec![tiled])
+                .unwrap()
+        };
+        let mut rng = Rng::new(196);
+        let mut xs: Vec<Vec<u32>> = (0..4)
+            .map(|_| (0..300).map(|_| 1 + rng.below(255) as u32).collect())
+            .collect();
+        xs.push(vec![0u32; 300]);
+        let flat: Vec<u32> = xs.iter().flatten().copied().collect();
+
+        let mut a = mk();
+        let want = a.mvm_batch(&xs);
+        let mut b = mk();
+        let got = b.mvm_batch_strided(&flat, 300);
+
+        assert_eq!(got.len(), want.len());
+        for ((gy, gr), (wy, wr)) in got.iter().zip(&want) {
+            assert_eq!(gy, wy);
+            assert_eq!(gr.partials, wr.partials);
+            assert_eq!(gr.energy, wr.energy);
+            assert_eq!(gr.active_rows, wr.active_rows);
+        }
+        assert_eq!(a.stats.active_rows, b.stats.active_rows);
+        // 3×2 tile grid over dense 300-row inputs: each of the 4 dense
+        // items activates 300 rows × 2 column tiles.
+        assert_eq!(a.stats.active_rows, 4 * 300 * 2);
     }
 
     #[test]

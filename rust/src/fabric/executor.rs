@@ -1,26 +1,32 @@
-//! Dataflow executor (DESIGN.md S15): thread-per-layer pipelining over
-//! the fabric — item i+1's layer-l work overlaps item i's layer-(l+1)
-//! work, the chip-level analogue of `coordinator::pipeline` with NoC
-//! accounting attached.
+//! Dataflow executor (DESIGN.md S15/S17): pipelined layer execution
+//! over the fabric — item i+1's layer-l work overlaps item i's
+//! layer-(l+1) work, the chip-level analogue of `coordinator::pipeline`
+//! with NoC accounting attached.
 //!
-//! Each stage owns its layer's tiles (torn out of a `FabricChip`), runs
-//! the routed forward, accumulates partials into the layer MAC, and
-//! hands the result to a caller-supplied *relay* that produces the next
-//! stage's input codes (requantization for an SNN, thresholding for a
-//! raw chain, …). Channels preserve order and every stage is
-//! deterministic, so outputs are bit-identical to running the stages
-//! serially — asserted by the tests here and in `rust/tests/`.
+//! Since S17 the executor spawns **no threads of its own**: each layer
+//! is a *stage node* (its `LayerStage` torn out of a `FabricChip`, its
+//! relay, its tally, and an inbox of minibatches), and stage turns are
+//! scheduled as tasks on the persistent shared worker pool
+//! (`util::pool`). A node is claimed by at most one task at a time, so
+//! every stage processes its chunks serially in arrival order —
+//! outputs and tallies are bit-identical to running the stages one
+//! after the other (asserted by the tests here and in `rust/tests/`) —
+//! while distinct stages run concurrently on distinct pool workers.
+//! Stage turns never block (an empty inbox ends the turn; delivering
+//! downstream is a non-blocking push + schedule), which keeps the
+//! shared pool deadlock-free by construction no matter how many
+//! pipelines and tile fan-outs share it.
 //!
-//! Deliberately *not* built on `coordinator::ThreadedPipeline`: its
-//! `StageFn<T>: FnMut(T) -> T` shape streams one item type end to end,
-//! while fabric stages must own heavy state (a layer's macros) and
-//! return per-stage [`PipelineStats`] at join time — threading tallies
-//! through `T` would push NoC accounting into every relay. The ~40
-//! lines of mpsc wiring are the cheaper coupling.
+//! Each stage runs the routed forward, accumulates partials into the
+//! layer MAC, and hands the result to a caller-supplied *relay* that
+//! produces the next stage's input codes (requantization for an SNN,
+//! thresholding for a raw chain, …).
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::energy::EnergyBreakdown;
+use crate::util::pool;
 
 use super::chip::{FabricChip, LayerStage};
 
@@ -39,6 +45,8 @@ pub struct PipelineStats {
     pub latency_ns: f64,
     pub packets: u64,
     pub hops: u64,
+    /// Macro row activations across all stages (DESIGN.md S17).
+    pub active_rows: u64,
 }
 
 impl PipelineStats {
@@ -47,10 +55,136 @@ impl PipelineStats {
         self.latency_ns += other.latency_ns;
         self.packets += other.packets;
         self.hops += other.hops;
+        self.active_rows += other.active_rows;
     }
 }
 
-/// A chip rearranged for streaming: one thread per layer at run time.
+/// What leaves the pipeline: finished chunks, per-stage tallies at
+/// drain time, or a stage panic to re-raise on the caller.
+enum OutMsg {
+    Chunk(usize, Vec<Vec<u32>>),
+    Tally(usize, PipelineStats),
+    Panic(Box<dyn std::any::Any + Send>),
+}
+
+/// The movable compute state of one stage; exactly one scheduled task
+/// holds it at a time.
+struct StageCore {
+    stage: LayerStage,
+    relay: StageRelay,
+    tally: PipelineStats,
+    processed: usize,
+}
+
+/// One stage's scheduling cell.
+struct StageNode {
+    inbox: Mutex<Inbox>,
+}
+
+struct Inbox {
+    queue: VecDeque<(usize, Vec<Vec<u32>>)>,
+    /// `None` while a scheduled task is out processing with the core.
+    core: Option<StageCore>,
+    /// True while a task is scheduled/running for this node; feeders
+    /// only schedule a new task when it is false (single-claimant).
+    scheduled: bool,
+    /// A stage panicked: drop further traffic.
+    poisoned: bool,
+}
+
+struct PipeCtx {
+    nodes: Vec<StageNode>,
+    n_chunks: usize,
+    out_tx: mpsc::Sender<OutMsg>,
+}
+
+/// Deliver one chunk to stage `s`, scheduling a stage turn on the
+/// shared pool if none is in flight. Non-blocking.
+fn feed(ctx: &Arc<PipeCtx>, s: usize, id: usize, chunk: Vec<Vec<u32>>) {
+    let mut g = ctx.nodes[s].inbox.lock().unwrap();
+    if g.poisoned {
+        return;
+    }
+    g.queue.push_back((id, chunk));
+    if !g.scheduled {
+        g.scheduled = true;
+        let ctx = ctx.clone();
+        pool::spawn(move || stage_turns(ctx, s));
+    }
+}
+
+/// One scheduled run of stage `s`: drain the inbox chunk by chunk (in
+/// arrival = id order), forwarding each result downstream, until the
+/// inbox is empty. Never blocks.
+fn stage_turns(ctx: Arc<PipeCtx>, s: usize) {
+    loop {
+        let (id, chunk, mut core) = {
+            let mut g = ctx.nodes[s].inbox.lock().unwrap();
+            match g.queue.pop_front() {
+                Some((id, chunk)) => {
+                    let core = g.core.take().expect("core parked");
+                    (id, chunk, core)
+                }
+                None => {
+                    g.scheduled = false;
+                    return;
+                }
+            }
+        };
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            move || {
+                let rs = core.stage.run_batch(&chunk);
+                let mut outs = Vec::with_capacity(chunk.len());
+                for (x, r) in chunk.iter().zip(rs) {
+                    core.tally.energy.add(&r.energy);
+                    core.tally.latency_ns += r.latency_ns;
+                    core.tally.packets += r.packets;
+                    core.tally.hops += r.hops;
+                    core.tally.active_rows += r.active_rows;
+                    let mac = core.stage.tiled.accumulate(&r.partials);
+                    outs.push((core.relay)(x, mac));
+                }
+                core.processed += 1;
+                (core, outs)
+            },
+        ));
+        match run {
+            Ok((mut core, outs)) => {
+                let finished = core.processed == ctx.n_chunks;
+                let tally = if finished {
+                    Some(std::mem::take(&mut core.tally))
+                } else {
+                    None
+                };
+                {
+                    let mut g = ctx.nodes[s].inbox.lock().unwrap();
+                    g.core = Some(core);
+                }
+                if s + 1 < ctx.nodes.len() {
+                    feed(&ctx, s + 1, id, outs);
+                } else {
+                    let _ = ctx.out_tx.send(OutMsg::Chunk(id, outs));
+                }
+                if let Some(t) = tally {
+                    let _ = ctx.out_tx.send(OutMsg::Tally(s, t));
+                }
+            }
+            Err(p) => {
+                {
+                    let mut g = ctx.nodes[s].inbox.lock().unwrap();
+                    g.poisoned = true;
+                    g.scheduled = false;
+                    g.queue.clear();
+                }
+                let _ = ctx.out_tx.send(OutMsg::Panic(p));
+                return;
+            }
+        }
+    }
+}
+
+/// A chip rearranged for streaming: stage turns scheduled on the shared
+/// worker pool at run time (DESIGN.md S17).
 pub struct FabricPipeline {
     stages: Vec<(LayerStage, StageRelay)>,
 }
@@ -74,9 +208,9 @@ impl FabricPipeline {
     /// Stream `inputs` through all stages in minibatches of `batch`
     /// items (DESIGN.md S16): each stage executes a whole minibatch as
     /// one `run_batch` call — one weight pass per shard per minibatch —
-    /// and relays move minibatches between stage threads. Outputs and
-    /// tallies are bit-identical to [`run`](Self::run) at any batch
-    /// size; only wall-clock changes.
+    /// and minibatches move between stage nodes through their inboxes.
+    /// Outputs and tallies are bit-identical to [`run`](Self::run) at
+    /// any batch size; only wall-clock changes.
     pub fn run_batched(
         self,
         inputs: Vec<Vec<u32>>,
@@ -86,48 +220,64 @@ impl FabricPipeline {
         assert!(batch > 0, "batch size");
         let n = inputs.len();
         let n_chunks = n.div_ceil(batch);
-        let (first_tx, mut prev_rx) =
-            mpsc::channel::<(usize, Vec<Vec<u32>>)>();
-        let mut handles = Vec::with_capacity(self.stages.len());
-        for (mut stage, mut relay) in self.stages {
-            let (tx, rx) = mpsc::channel::<(usize, Vec<Vec<u32>>)>();
-            let rx_in = std::mem::replace(&mut prev_rx, rx);
-            handles.push(std::thread::spawn(move || {
-                let mut tally = PipelineStats::default();
-                while let Ok((id, chunk)) = rx_in.recv() {
-                    let rs = stage.run_batch(&chunk);
-                    let mut outs = Vec::with_capacity(chunk.len());
-                    for (x, r) in chunk.iter().zip(rs) {
-                        tally.energy.add(&r.energy);
-                        tally.latency_ns += r.latency_ns;
-                        tally.packets += r.packets;
-                        tally.hops += r.hops;
-                        let mac = stage.tiled.accumulate(&r.partials);
-                        outs.push(relay(x, mac));
-                    }
-                    let _ = tx.send((id, outs));
-                }
-                tally
-            }));
-        }
-        let mut feed = inputs.into_iter();
-        for id in 0..n_chunks {
-            let chunk: Vec<Vec<u32>> = feed.by_ref().take(batch).collect();
-            first_tx.send((id, chunk)).expect("stage 0 alive");
-        }
-        drop(first_tx); // end-of-stream ripples down the pipeline
-        let mut out: Vec<Option<Vec<Vec<u32>>>> =
-            (0..n_chunks).map(|_| None).collect();
-        for _ in 0..n_chunks {
-            let (id, items) = prev_rx.recv().expect("pipeline output");
-            out[id] = Some(items);
-        }
         let mut stats = PipelineStats {
             items: n,
             ..PipelineStats::default()
         };
-        for h in handles {
-            stats.absorb(&h.join().expect("stage thread"));
+        if n_chunks == 0 {
+            return (Vec::new(), stats);
+        }
+        let n_stages = self.stages.len();
+        let (out_tx, out_rx) = mpsc::channel::<OutMsg>();
+        let ctx = Arc::new(PipeCtx {
+            nodes: self
+                .stages
+                .into_iter()
+                .map(|(stage, relay)| StageNode {
+                    inbox: Mutex::new(Inbox {
+                        queue: VecDeque::new(),
+                        core: Some(StageCore {
+                            stage,
+                            relay,
+                            tally: PipelineStats::default(),
+                            processed: 0,
+                        }),
+                        scheduled: false,
+                        poisoned: false,
+                    }),
+                })
+                .collect(),
+            n_chunks,
+            out_tx,
+        });
+        let mut feed_iter = inputs.into_iter();
+        for id in 0..n_chunks {
+            let chunk: Vec<Vec<u32>> = feed_iter.by_ref().take(batch).collect();
+            feed(&ctx, 0, id, chunk);
+        }
+        let mut out: Vec<Option<Vec<Vec<u32>>>> =
+            (0..n_chunks).map(|_| None).collect();
+        let mut tallies: Vec<Option<PipelineStats>> =
+            (0..n_stages).map(|_| None).collect();
+        let mut chunks_left = n_chunks;
+        let mut tallies_left = n_stages;
+        while chunks_left > 0 || tallies_left > 0 {
+            match out_rx.recv().expect("pipeline ctx alive") {
+                OutMsg::Chunk(id, items) => {
+                    out[id] = Some(items);
+                    chunks_left -= 1;
+                }
+                OutMsg::Tally(s, t) => {
+                    tallies[s] = Some(t);
+                    tallies_left -= 1;
+                }
+                OutMsg::Panic(p) => std::panic::resume_unwind(p),
+            }
+        }
+        // Absorb per-stage tallies in stage order (deterministic f64
+        // accumulation, matching the old join order).
+        for t in tallies.into_iter().flatten() {
+            stats.absorb(&t);
         }
         let outputs: Vec<Vec<u32>> = out
             .into_iter()
@@ -207,6 +357,11 @@ mod tests {
                 < 1e-9
         );
         assert!(stats.packets > 0 && stats.hops > 0);
+        // Two single-shard 128-row layers, 10 items: row activations
+        // are bounded by the full-dense count and, with random inputs,
+        // well above zero.
+        assert!(stats.active_rows > 0);
+        assert!(stats.active_rows <= 10 * 2 * 128);
 
         // Minibatched streaming (DESIGN.md S16): identical outputs and
         // tallies at any chunk size, including a ragged final chunk.
@@ -225,6 +380,23 @@ mod tests {
             assert_eq!(stats_b.packets, stats.packets);
             assert_eq!(stats_b.hops, stats.hops);
             assert_eq!(stats_b.latency_ns, stats.latency_ns);
+            assert_eq!(stats_b.active_rows, stats.active_rows);
         }
+    }
+
+    #[test]
+    fn empty_input_stream_is_a_clean_noop() {
+        let chip = two_layer_chip(607);
+        let relays: Vec<StageRelay> = (0..2)
+            .map(|_| {
+                Box::new(|_x: &[u32], mac: Vec<f64>| requant(mac))
+                    as StageRelay
+            })
+            .collect();
+        let (outs, stats) = FabricPipeline::new(chip, relays).run(Vec::new());
+        assert!(outs.is_empty());
+        assert_eq!(stats.items, 0);
+        assert_eq!(stats.packets, 0);
+        assert_eq!(stats.energy.total_fj(), 0.0);
     }
 }

@@ -12,7 +12,8 @@
 //! * [`chip`] — `FabricChip`/`LayerStage`: the routed layer forward,
 //!   bit-identical to single-macro tiling, with NoC traffic folded into
 //!   `EnergyBreakdown::noc_fj`.
-//! * [`executor`] — `FabricPipeline`: thread-per-layer streaming.
+//! * [`executor`] — `FabricPipeline`: per-layer streaming scheduled on
+//!   the persistent shared worker pool (DESIGN.md S17).
 //!
 //! Consumers: `snn::MacroMlp::attach_fabric` (fabric-backed inference),
 //! `coordinator::BackendKind::Fabric` (serving matrices larger than one

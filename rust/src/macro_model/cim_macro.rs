@@ -14,11 +14,30 @@
 use crate::circuit::components::{Comparator, CurrentMirror};
 use crate::circuit::osg::{self, OsgParams};
 use crate::coding::DualSpikeCodec;
-use crate::config::MacroConfig;
+use crate::config::{MacroConfig, MvmEngine};
 use crate::energy::{mvm_energy, ActivityView, EnergyBreakdown, EnergyParams};
 use crate::event::{EventKind, EventQueue, FlagTree};
 use crate::util::rng::Rng;
 use crate::xbar::Crossbar;
+
+/// Which charge-integration path a batch actually ran (DESIGN.md S17).
+/// `MvmEngine` is the *request*; this records the resolution — any
+/// non-ideality resolves to `General` (the event loop is the only path
+/// that models it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineUsed {
+    /// The general event loop (queue + flag tree), or an empty batch.
+    #[default]
+    General,
+    /// Row-outer weight-stationary batch streaming (DESIGN.md S16).
+    Dense,
+    /// Item-outer active-row event-list streaming (bit-identical to
+    /// `Dense`).
+    EventList,
+    /// Integer level-plane accumulation (exact vs
+    /// [`CimMacro::ideal_mvm_quantized`]).
+    Quantized,
+}
 
 /// Result of one macro MVM.
 #[derive(Debug, Clone)]
@@ -50,6 +69,7 @@ pub struct MacroResult {
 pub struct MvmBatch {
     batch: usize,
     cols: usize,
+    rows: usize,
     t_out_ns: Vec<f64>,
     v_charge: Vec<f64>,
     y_mac: Vec<f64>,
@@ -57,6 +77,11 @@ pub struct MvmBatch {
     t_charge_ns: Vec<f64>,
     events: Vec<u64>,
     energy: Vec<EnergyBreakdown>,
+    /// Rows with a nonzero window per item (DESIGN.md S17) — the
+    /// event-driven occupancy the fabric and server metrics surface.
+    active_rows: Vec<u32>,
+    /// Which engine integrated the charge for this batch.
+    engine: EngineUsed,
 }
 
 impl MvmBatch {
@@ -128,6 +153,38 @@ impl MvmBatch {
         self.events.iter().sum()
     }
 
+    /// Item `b`'s count of rows with a nonzero input window.
+    pub fn active_rows(&self, b: usize) -> u32 {
+        self.active_rows[b]
+    }
+
+    /// Total active rows across the batch (DESIGN.md S17).
+    pub fn total_active_rows(&self) -> u64 {
+        self.active_rows.iter().map(|&a| a as u64).sum()
+    }
+
+    /// Row slots offered to the batch: `batch × rows`. With
+    /// [`total_active_rows`](Self::total_active_rows) this gives the
+    /// batch's input occupancy.
+    pub fn row_slots(&self) -> u64 {
+        (self.batch * self.rows) as u64
+    }
+
+    /// Fraction of row slots that carried a spike pair (0 for an empty
+    /// batch).
+    pub fn occupancy(&self) -> f64 {
+        if self.batch == 0 || self.rows == 0 {
+            0.0
+        } else {
+            self.total_active_rows() as f64 / self.row_slots() as f64
+        }
+    }
+
+    /// Which engine integrated this batch's charge.
+    pub fn engine_used(&self) -> EngineUsed {
+        self.engine
+    }
+
     /// Clone item `b` out as a standalone [`MacroResult`].
     pub fn result(&self, b: usize) -> MacroResult {
         MacroResult {
@@ -155,9 +212,13 @@ impl MvmBatch {
     }
 
     /// Re-size for `batch` items of `cols` columns, reusing capacity.
-    fn reset(&mut self, batch: usize, cols: usize) {
+    fn reset(&mut self, batch: usize, cols: usize, rows: usize) {
         self.batch = batch;
         self.cols = cols;
+        self.rows = rows;
+        self.engine = EngineUsed::General;
+        self.active_rows.clear();
+        self.active_rows.resize(batch, 0);
         let flat = batch * cols;
         self.t_out_ns.clear();
         self.t_out_ns.resize(flat, 0.0);
@@ -181,10 +242,25 @@ impl MvmBatch {
 struct MvmScratch {
     /// Encoded input windows, `[batch × rows]` flat.
     windows_ns: Vec<f64>,
+    /// Clamped integer inputs (LSBs), `[batch × rows]` flat — the
+    /// quantized engine accumulates these, not the f64 windows.
+    x_lsb: Vec<u32>,
     /// Per-column charge integrals Σ T·G, `[batch × cols]` flat.
     col_charge_nsus: Vec<f64>,
     /// Active (non-zero) rows per item.
     active_rows: Vec<u32>,
+    /// Compressed event lists (DESIGN.md S17): the active row indices
+    /// of every item, concatenated in encode order.
+    active_list: Vec<u32>,
+    /// Item `b`'s event list is `active_list[active_start[b]..
+    /// active_start[b + 1]]` (len `batch + 1`).
+    active_start: Vec<usize>,
+    /// Packed per-level spike counts, `[batch × cols]` flat: four
+    /// 16-bit lanes per u64, lane `l` = Σ x over rows coded `l`
+    /// (quantized engine only; sized lazily).
+    level_acc: Vec<u64>,
+    /// Per-column exact MACs of the current item (quantized engine).
+    mac_us: Vec<f64>,
     /// Max window per item (= flag-drop time on the fast path).
     w_max: Vec<f64>,
     /// Event_flag OR-tree, reset per item on the general path.
@@ -203,6 +279,8 @@ pub struct CimMacro {
     osg_params: Vec<OsgParams>,
     /// All mirror gains are exactly 1.0·k (enables the linear fast path).
     uniform_gain: bool,
+    /// Requested fast-path engine (DESIGN.md S17); resolved per batch.
+    engine: MvmEngine,
     /// RNG for cycle-to-cycle noise (None = noiseless reads).
     rng: Option<Rng>,
     // --- reusable buffers (hot path, no per-op allocation) ---
@@ -265,6 +343,7 @@ impl CimMacro {
         let rows = cfg.rows;
         let uniform_gain =
             osg_params.iter().all(|p| p.mirror.gain_err == 1.0);
+        let engine = cfg.engine;
         CimMacro {
             cfg,
             xbar,
@@ -272,19 +351,38 @@ impl CimMacro {
             energy_params: EnergyParams::default(),
             osg_params,
             uniform_gain,
+            engine,
             rng,
             g_on: vec![0.0; cols],
             charge: vec![0.0; cols],
             queue: EventQueue::with_capacity(2 * rows + 2),
             scratch: MvmScratch {
                 windows_ns: Vec::new(),
+                x_lsb: Vec::new(),
                 col_charge_nsus: Vec::new(),
                 active_rows: Vec::new(),
+                active_list: Vec::new(),
+                active_start: Vec::new(),
+                level_acc: Vec::new(),
+                mac_us: vec![0.0; cols],
                 w_max: Vec::new(),
                 flags: FlagTree::new(rows),
                 row_factor: vec![1.0; rows],
             },
         }
+    }
+
+    /// Request a fast-path engine (DESIGN.md S17). Benches force
+    /// `Dense`/`EventList`/`Quantized` to compare them; `Auto` (the
+    /// default, also settable via `MacroConfig::engine`) picks per
+    /// batch.
+    pub fn set_engine(&mut self, engine: MvmEngine) {
+        self.engine = engine;
+    }
+
+    /// The currently requested fast-path engine.
+    pub fn engine(&self) -> MvmEngine {
+        self.engine
     }
 
     /// Program weights (row-major 2-bit codes).
@@ -335,6 +433,37 @@ impl CimMacro {
         self.run_batch(xs.len(), out);
     }
 
+    /// Flat batch input (DESIGN.md S17): `xs` is `batch` inputs of
+    /// `in_dim` values each, concatenated row-major — callers that
+    /// collect requests (server workers, fabric stages) feed one
+    /// reusable flat buffer instead of allocating a `Vec<Vec<u32>>`
+    /// per batch. Bit-identical to [`mvm_batch`](Self::mvm_batch) on
+    /// the same values; the slice-of-vecs entry remains as a thin
+    /// wrapper for callers that already hold that shape.
+    pub fn mvm_batch_strided(&mut self, xs: &[u32], in_dim: usize) -> MvmBatch {
+        let mut out = MvmBatch::default();
+        self.mvm_batch_strided_into(xs, in_dim, &mut out);
+        out
+    }
+
+    /// [`mvm_batch_strided`](Self::mvm_batch_strided) into a
+    /// caller-held ledger (the fully allocation-free steady state).
+    pub fn mvm_batch_strided_into(
+        &mut self,
+        xs: &[u32],
+        in_dim: usize,
+        out: &mut MvmBatch,
+    ) {
+        assert_eq!(in_dim, self.cfg.rows, "strided input dim must be rows");
+        assert_eq!(xs.len() % in_dim, 0, "ragged flat batch");
+        let batch = xs.len() / in_dim;
+        self.begin_batch(batch);
+        for b in 0..batch {
+            self.encode_item(b, &xs[b * in_dim..(b + 1) * in_dim]);
+        }
+        self.run_batch(batch, out);
+    }
+
     /// Size the scratch for `batch` items and zero the accumulators.
     fn begin_batch(&mut self, batch: usize) {
         let rows = self.cfg.rows;
@@ -342,86 +471,219 @@ impl CimMacro {
         let s = &mut self.scratch;
         s.windows_ns.clear();
         s.windows_ns.resize(batch * rows, 0.0);
+        s.x_lsb.clear();
+        s.x_lsb.resize(batch * rows, 0);
         s.col_charge_nsus.clear();
         s.col_charge_nsus.resize(batch * cols, 0.0);
         s.active_rows.clear();
         s.active_rows.resize(batch, 0);
+        s.active_list.clear();
+        s.active_start.clear();
+        s.active_start.push(0);
         s.w_max.clear();
         s.w_max.resize(batch, 0.0);
     }
 
-    /// Encode item `b`'s inputs into its scratch window slice.
+    /// Encode item `b`'s inputs into its scratch window slice and
+    /// append its compressed active-row event list (DESIGN.md S17).
+    /// Items must be encoded in order after [`begin_batch`].
     fn encode_item(&mut self, b: usize, x: &[u32]) {
         let rows = self.cfg.rows;
         assert_eq!(x.len(), rows, "input length");
-        let w = &mut self.scratch.windows_ns[b * rows..(b + 1) * rows];
+        debug_assert_eq!(self.scratch.active_start.len(), b + 1, "encode order");
+        let base = b * rows;
+        let w = &mut self.scratch.windows_ns[base..base + rows];
+        let xq = &mut self.scratch.x_lsb[base..base + rows];
         let mut active = 0u32;
         let mut w_max = 0.0f64;
         for (r, &xv) in x.iter().enumerate() {
             let pair = self.codec.encode(xv, 0.0);
             if pair.dt_ns > 0.0 {
                 w[r] = pair.dt_ns;
+                xq[r] = xv.min(self.codec.max_value());
+                self.scratch.active_list.push(r as u32);
                 active += 1;
                 w_max = w_max.max(pair.dt_ns);
             }
         }
         self.scratch.active_rows[b] = active;
         self.scratch.w_max[b] = w_max;
+        self.scratch.active_start.push(self.scratch.active_list.len());
     }
 
-    /// Run the encoded batch: charge integration (streamed fast path or
-    /// per-item event loop), compare phase, and energy accounting, all
-    /// into the ledger.
+    /// Run the encoded batch: charge integration (one of the linear
+    /// fast-path engines, DESIGN.md S16/S17, or the per-item event
+    /// loop), compare phase, and energy accounting, all into the
+    /// ledger.
     fn run_batch(&mut self, batch: usize, out: &mut MvmBatch) {
         let rows = self.cfg.rows;
         let cols = self.cfg.cols;
         let droop_mode = !self.cfg.nonideal.clamp_current_mirror;
         let v_read = self.cfg.v_read();
         let sigma_c2c = self.cfg.nonideal.sigma_r_c2c;
-        out.reset(batch, cols);
+        out.reset(batch, cols, rows);
+        out.active_rows.copy_from_slice(&self.scratch.active_rows);
 
-        // Fast path (§Perf, EXPERIMENTS.md): with the clamp+current-mirror
-        // and no per-read noise / gain mismatch, the charge integral is a
-        // plain weighted row sum — identical math, evaluated row-major
-        // (cache-friendly, auto-vectorized) instead of event-by-event.
-        // Every non-ideality falls back to the general event loop below.
+        // Linear fast path (§Perf, EXPERIMENTS.md): with the clamp +
+        // current-mirror and no per-read noise / gain mismatch, the
+        // charge integral is a plain weighted row sum — identical math,
+        // evaluated by one of three engines (DESIGN.md S17). Every
+        // non-ideality falls back to the general event loop below.
         let fast = !droop_mode && sigma_c2c == 0.0 && self.uniform_gain;
+        // The quantized level-plane engine is additionally lossless
+        // only when every cell sits exactly at its level target and the
+        // packed 16-bit per-level counts cannot overflow.
+        let quant_ok = fast
+            && self.xbar.uniform_levels()
+            && (rows as u64) * (self.codec.max_value() as u64)
+                <= u16::MAX as u64;
+        let total_active = self.scratch.active_list.len();
+        let resolved = match self.engine {
+            MvmEngine::Quantized => {
+                assert!(
+                    quant_ok,
+                    "quantized engine forced but ineligible: it needs \
+                     ideal circuits (clamp+mirror, no c2c noise, no gain \
+                     mismatch), exact level conductances (no device \
+                     variation), and rows x max_input < 2^16 headroom"
+                );
+                EngineUsed::Quantized
+            }
+            _ if !fast => EngineUsed::General,
+            MvmEngine::Dense => EngineUsed::Dense,
+            MvmEngine::EventList => EngineUsed::EventList,
+            MvmEngine::Auto => {
+                if quant_ok {
+                    EngineUsed::Quantized
+                } else if 4 * total_active <= batch * rows {
+                    // Sparse batch: the event lists skip the silent
+                    // 3/4+ of the rows; dense streaming wins once most
+                    // rows are occupied anyway (bit-identical either
+                    // way, so this is purely a wall-clock knob).
+                    EngineUsed::EventList
+                } else {
+                    EngineUsed::Dense
+                }
+            }
+        };
+        out.engine = resolved;
 
-        if fast {
-            // Weight-stationary batch streaming: each 1-row conductance
-            // slice is read once and applied to every item's accumulator
-            // while still L1-hot — per-item accumulation order over rows
-            // is unchanged, so the sums are bit-identical to serial.
-            let cond = self.xbar.conductances();
-            let windows = &self.scratch.windows_ns;
-            let qs = &mut self.scratch.col_charge_nsus;
-            for r in 0..rows {
-                let gs = &cond[r * cols..(r + 1) * cols];
-                for b in 0..batch {
-                    let w = windows[b * rows + r];
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let q = &mut qs[b * cols..(b + 1) * cols];
-                    for (qc, &g) in q.iter_mut().zip(gs) {
-                        *qc += w * g;
+        match resolved {
+            EngineUsed::Dense => {
+                // Weight-stationary batch streaming (DESIGN.md S16):
+                // each 1-row conductance slice is read once and applied
+                // to every item's accumulator while still L1-hot —
+                // per-item accumulation order over rows is unchanged,
+                // so the sums are bit-identical to serial.
+                let cond = self.xbar.conductances();
+                let windows = &self.scratch.windows_ns;
+                let qs = &mut self.scratch.col_charge_nsus;
+                for r in 0..rows {
+                    let gs = &cond[r * cols..(r + 1) * cols];
+                    for b in 0..batch {
+                        let w = windows[b * rows + r];
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let q = &mut qs[b * cols..(b + 1) * cols];
+                        for (qc, &g) in q.iter_mut().zip(gs) {
+                            *qc += w * g;
+                        }
                     }
                 }
             }
+            EngineUsed::EventList => {
+                // Active-row event lists (DESIGN.md S17): walk each
+                // item's compressed list — silent rows are never
+                // visited. Per item the accumulation still runs over
+                // rows ascending, and a skipped row would have added
+                // exactly +0.0 to every column, so the result is
+                // bitwise identical to the dense stream.
+                let cond = self.xbar.conductances();
+                let windows = &self.scratch.windows_ns;
+                let list = &self.scratch.active_list;
+                let starts = &self.scratch.active_start;
+                let qs = &mut self.scratch.col_charge_nsus;
+                for b in 0..batch {
+                    let q = &mut qs[b * cols..(b + 1) * cols];
+                    for &r in &list[starts[b]..starts[b + 1]] {
+                        let r = r as usize;
+                        let w = windows[b * rows + r];
+                        let gs = &cond[r * cols..(r + 1) * cols];
+                        for (qc, &g) in q.iter_mut().zip(gs) {
+                            *qc += w * g;
+                        }
+                    }
+                }
+            }
+            EngineUsed::Quantized => {
+                // Level-plane decomposition (DESIGN.md S17): with every
+                // cell exactly at its level target, the charge integral
+                // per column is t_bit · Σ_level g_level · S_level with
+                // S_level an *integer* spike count. The inner loop is
+                // an integer MAC over the 1-byte code matrix — the four
+                // 16-bit per-level counts ride packed in one u64 per
+                // column (headroom asserted above); the per-level f64
+                // scales happen once per column at unpack time.
+                let codes = self.xbar.codes();
+                let xq = &self.scratch.x_lsb;
+                let list = &self.scratch.active_list;
+                let starts = &self.scratch.active_start;
+                let acc = &mut self.scratch.level_acc;
+                acc.clear();
+                acc.resize(batch * cols, 0);
+                for b in 0..batch {
+                    let a = &mut acc[b * cols..(b + 1) * cols];
+                    for &r in &list[starts[b]..starts[b + 1]] {
+                        let r = r as usize;
+                        let xv = xq[b * rows + r] as u64;
+                        let crow = &codes[r * cols..(r + 1) * cols];
+                        for (av, &code) in a.iter_mut().zip(crow) {
+                            *av += xv << (16 * code as u32);
+                        }
+                    }
+                }
+            }
+            EngineUsed::General => {} // per-item event loop below
         }
 
         let scale = self.cfg.k_mirror * v_read / self.cfg.c_rt_ff;
         let alpha = self.cfg.alpha();
+        let t_bit = self.cfg.t_bit_ns;
+        let lvl = self.xbar.levels();
         for b in 0..batch {
             let t_drop;
             let mut events;
+            let quant_item = resolved == EngineUsed::Quantized
+                && self.scratch.active_rows[b] > 0;
             if self.scratch.active_rows[b] == 0 {
                 // All-zero input: no events, no charge (fully event-
                 // driven — the array never turns on).
                 t_drop = 0.0;
                 events = 0;
                 self.charge.iter_mut().for_each(|c| *c = 0.0);
-            } else if fast {
+            } else if quant_item {
+                // Unpack the per-level counts: one deterministic f64
+                // scale per level, in fixed level order — exactly the
+                // integer oracle (`ideal_mvm_quantized`).
+                t_drop = self.scratch.w_max[b];
+                let qbase = b * cols;
+                for c in 0..cols {
+                    let a = self.scratch.level_acc[qbase + c];
+                    let mac = lvl[0] * ((a & 0xFFFF) as f64)
+                        + lvl[1] * (((a >> 16) & 0xFFFF) as f64)
+                        + lvl[2] * (((a >> 32) & 0xFFFF) as f64)
+                        + lvl[3] * ((a >> 48) as f64);
+                    let q = mac * t_bit;
+                    self.scratch.mac_us[c] = mac;
+                    self.scratch.col_charge_nsus[qbase + c] = q;
+                    self.charge[c] = scale * q;
+                }
+                events = 2 * self.scratch.active_rows[b] as u64;
+            } else if matches!(
+                resolved,
+                EngineUsed::Dense | EngineUsed::EventList
+            ) {
                 t_drop = self.scratch.w_max[b];
                 let q = &self.scratch.col_charge_nsus[b * cols..(b + 1) * cols];
                 for (c, &qv) in self.charge.iter_mut().zip(q) {
@@ -443,7 +705,15 @@ impl CimMacro {
                 max_t_out = max_t_out.max(t);
                 out.t_out_ns[base + c] = t;
                 out.v_charge[base + c] = v;
-                out.y_mac[base + c] = self.codec.decode_mac(t, alpha);
+                // The quantized engine's decoded MAC *is* the exact
+                // level-plane sum (the analog roundtrip would only
+                // re-round it); the other engines decode T_out per
+                // Eq. 2 as the hardware does.
+                out.y_mac[base + c] = if quant_item {
+                    self.scratch.mac_us[c]
+                } else {
+                    self.codec.decode_mac(t, alpha)
+                };
             }
             events += cols as u64; // compare-fire events
 
@@ -570,6 +840,39 @@ impl CimMacro {
     /// The exact digital oracle for this macro's programmed weights.
     pub fn ideal_mvm(&self, x: &[u32]) -> Vec<f64> {
         self.xbar.ideal_mvm(x)
+    }
+
+    /// The integer level-plane oracle (DESIGN.md S17): per column,
+    /// accumulate the *integer* spike count per conductance level
+    /// (exact — integer addition is order-independent), then combine
+    /// with one f64 multiply per level in fixed level order. The
+    /// quantized engine's `y_mac` is asserted **bitwise equal** to this
+    /// (same integers, same combination); it also agrees with
+    /// [`ideal_mvm`](Self::ideal_mvm) to f64 rounding of the row-order
+    /// sum. Inputs are clamped to the codec's max value, exactly as the
+    /// SMU encoding saturates them.
+    pub fn ideal_mvm_quantized(&self, x: &[u32]) -> Vec<f64> {
+        let rows = self.cfg.rows;
+        let cols = self.cfg.cols;
+        assert_eq!(x.len(), rows);
+        let codes = self.xbar.codes();
+        let lvl = self.xbar.levels();
+        let xmax = self.codec.max_value();
+        let mut y = Vec::with_capacity(cols);
+        for c in 0..cols {
+            let mut counts = [0u64; 4];
+            for (r, &xv) in x.iter().enumerate() {
+                counts[codes[r * cols + c] as usize] +=
+                    xv.min(xmax) as u64;
+            }
+            y.push(
+                lvl[0] * (counts[0] as f64)
+                    + lvl[1] * (counts[1] as f64)
+                    + lvl[2] * (counts[2] as f64)
+                    + lvl[3] * (counts[3] as f64),
+            );
+        }
+        y
     }
 
     /// Bit-serial MVM (§IV-B extension, `coding::bitserial`): run one
@@ -877,15 +1180,205 @@ mod tests {
     }
 
     #[test]
-    fn batch_bit_identical_across_sparsities_fast_path() {
-        for (seed, density) in
-            [(21u64, 1.0), (22, 0.5), (23, 1.0 / 16.0), (24, 0.0)]
-        {
-            let (serial, _) = macro_with_codes(seed);
-            let (batched, _) = macro_with_codes(seed);
-            let xs = sparse_inputs(seed ^ 0xb, density, 7);
-            assert_batch_bit_identical(serial, batched, &xs);
+    fn batch_bit_identical_across_sparsities_every_engine() {
+        for engine in [
+            MvmEngine::Auto,
+            MvmEngine::Dense,
+            MvmEngine::EventList,
+            MvmEngine::Quantized,
+        ] {
+            for (seed, density) in
+                [(21u64, 1.0), (22, 0.5), (23, 1.0 / 16.0), (24, 0.0)]
+            {
+                let (mut serial, _) = macro_with_codes(seed);
+                let (mut batched, _) = macro_with_codes(seed);
+                serial.set_engine(engine);
+                batched.set_engine(engine);
+                let xs = sparse_inputs(seed ^ 0xb, density, 7);
+                assert_batch_bit_identical(serial, batched, &xs);
+            }
         }
+    }
+
+    #[test]
+    fn event_list_engine_bitwise_equals_dense_stream() {
+        // The event-list acceptance bar (DESIGN.md S17): bitwise equal
+        // to the PR-3 dense batched engine across densities, with
+        // all-zero and all-dense items in the same batch.
+        let (mut dense, _) = macro_with_codes(61);
+        let (mut evlist, _) = macro_with_codes(61);
+        dense.set_engine(MvmEngine::Dense);
+        evlist.set_engine(MvmEngine::EventList);
+        let mut xs: Vec<Vec<u32>> = Vec::new();
+        let mut rng = Rng::new(62);
+        for density in [0.0, 0.01, 0.1, 0.5, 1.0] {
+            xs.push(
+                (0..128)
+                    .map(|_| {
+                        if rng.f64() < density {
+                            1 + rng.below(255) as u32
+                        } else {
+                            0
+                        }
+                    })
+                    .collect(),
+            );
+        }
+        xs.push(vec![255u32; 128]); // saturated all-dense item
+        let want = dense.mvm_batch(&xs);
+        let got = evlist.mvm_batch(&xs);
+        assert_eq!(want.engine_used(), EngineUsed::Dense);
+        assert_eq!(got.engine_used(), EngineUsed::EventList);
+        for b in 0..xs.len() {
+            assert_eq!(got.y_mac(b), want.y_mac(b), "item {b}");
+            assert_eq!(got.t_out_ns(b), want.t_out_ns(b));
+            assert_eq!(got.v_charge(b), want.v_charge(b));
+            assert_eq!(got.latency_ns(b), want.latency_ns(b));
+            assert_eq!(got.events(b), want.events(b));
+            assert_eq!(got.energy(b), want.energy(b));
+            assert_eq!(got.active_rows(b), want.active_rows(b));
+        }
+        // Serial calls agree too (a single-item batch per call).
+        for x in &xs {
+            let a = dense.mvm(x);
+            let e = evlist.mvm(x);
+            assert_eq!(a.y_mac, e.y_mac);
+            assert_eq!(a.energy, e.energy);
+        }
+    }
+
+    #[test]
+    fn quantized_engine_exactly_matches_integer_oracle() {
+        // Every code-alphabet size (1..=4 distinct levels in the
+        // programmed matrix) and a density sweep: the quantized engine
+        // must equal `ideal_mvm_quantized` bitwise and the row-order
+        // `ideal_mvm` to f64 rounding.
+        let cfg = MacroConfig::default();
+        let mut rng = Rng::new(71);
+        for alphabet in 1u8..=4 {
+            let mut m = CimMacro::new(cfg.clone());
+            m.set_engine(MvmEngine::Quantized);
+            let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+                .map(|_| rng.below(alphabet as u64) as u8)
+                .collect();
+            m.program(&codes);
+            for density in [0.0, 0.05, 0.5, 1.0] {
+                let x: Vec<u32> = (0..cfg.rows)
+                    .map(|_| {
+                        if rng.f64() < density {
+                            1 + rng.below(255) as u32
+                        } else {
+                            0
+                        }
+                    })
+                    .collect();
+                let r = m.mvm(&x);
+                let oracle = m.ideal_mvm_quantized(&x);
+                assert_eq!(
+                    r.y_mac, oracle,
+                    "alphabet {alphabet}, density {density}"
+                );
+                let ideal = m.ideal_mvm(&x);
+                for (g, w) in r.y_mac.iter().zip(&ideal) {
+                    assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_flat_batch_bitwise_equals_slice_of_vecs() {
+        let (mut a, _) = macro_with_codes(81);
+        let (mut b, _) = macro_with_codes(81);
+        let xs = sparse_inputs(82, 0.3, 6);
+        let flat: Vec<u32> = xs.iter().flatten().copied().collect();
+        let want = a.mvm_batch(&xs);
+        let got = b.mvm_batch_strided(&flat, 128);
+        assert_eq!(got.len(), want.len());
+        for i in 0..xs.len() {
+            assert_eq!(got.y_mac(i), want.y_mac(i));
+            assert_eq!(got.t_out_ns(i), want.t_out_ns(i));
+            assert_eq!(got.events(i), want.events(i));
+            assert_eq!(got.energy(i), want.energy(i));
+        }
+        // Empty flat batch is a clean no-op.
+        let empty = b.mvm_batch_strided(&[], 128);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn auto_engine_selection_rules() {
+        // Ideal macro: quantized is exact, so Auto picks it.
+        let (mut ideal, _) = macro_with_codes(91);
+        let dense_x = vec![200u32; 128];
+        let r = ideal.mvm_batch(std::slice::from_ref(&dense_x));
+        assert_eq!(r.engine_used(), EngineUsed::Quantized);
+
+        // Device variation breaks the level planes: Auto falls back to
+        // the bit-identity pair, chosen by occupancy.
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                sigma_r_d2d: 0.02,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut varied = CimMacro::with_nonidealities(cfg, 9);
+        let mut rng = Rng::new(92);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        varied.program(&codes);
+        let r = varied.mvm_batch(std::slice::from_ref(&dense_x));
+        assert_eq!(r.engine_used(), EngineUsed::Dense);
+        let mut sparse_x = vec![0u32; 128];
+        sparse_x[7] = 40;
+        let r = varied.mvm_batch(std::slice::from_ref(&sparse_x));
+        assert_eq!(r.engine_used(), EngineUsed::EventList);
+
+        // Any circuit non-ideality → the general event loop.
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                sigma_r_c2c: 0.01,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut noisy = CimMacro::with_nonidealities(cfg, 10);
+        noisy.program(&codes);
+        let r = noisy.mvm_batch(std::slice::from_ref(&dense_x));
+        assert_eq!(r.engine_used(), EngineUsed::General);
+    }
+
+    #[test]
+    #[should_panic(expected = "quantized engine forced but ineligible")]
+    fn forcing_quantized_on_varied_array_panics() {
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                sigma_r_d2d: 0.02,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut m = CimMacro::with_nonidealities(cfg, 11);
+        m.set_engine(MvmEngine::Quantized);
+        let _ = m.mvm(&vec![1u32; 128]);
+    }
+
+    #[test]
+    fn ledger_surfaces_activity_counters() {
+        let (mut m, _) = macro_with_codes(95);
+        let mut xs = vec![vec![0u32; 128]; 3];
+        xs[1][3] = 9;
+        xs[1][100] = 200;
+        xs[2] = vec![7u32; 128];
+        let r = m.mvm_batch(&xs);
+        assert_eq!(r.active_rows(0), 0);
+        assert_eq!(r.active_rows(1), 2);
+        assert_eq!(r.active_rows(2), 128);
+        assert_eq!(r.total_active_rows(), 130);
+        assert_eq!(r.row_slots(), 3 * 128);
+        assert!((r.occupancy() - 130.0 / 384.0).abs() < 1e-12);
+        assert_eq!(MvmBatch::default().occupancy(), 0.0);
     }
 
     #[test]

@@ -1,15 +1,17 @@
 //! The complete spiking CIM macro (DESIGN.md S8).
 
 use crate::energy::EnergyBreakdown;
+use crate::util::pool;
 
 pub mod cim_macro;
 
-pub use cim_macro::{CimMacro, MacroResult, MvmBatch};
+pub use cim_macro::{CimMacro, EngineUsed, MacroResult, MvmBatch};
 
 /// Fan a tiled layer's input slices across its shard macros (ti-major
 /// order) and regroup the outputs as `partials[ti][tj]`, plus summed
 /// energy and the critical-path (max) latency. A single-item run of
-/// [`mvm_tiled_batch`] — the one implementation of the (ti, tj)
+/// [`mvm_tiled_batch`], itself a wrapper over
+/// [`mvm_tiled_batch_strided`] — the one implementation of the (ti, tj)
 /// convention that both `snn::infer` and `fabric::chip` rely on for
 /// bit-identity; do not fork it.
 pub fn mvm_tiled(
@@ -25,22 +27,22 @@ pub fn mvm_tiled(
         .expect("one item")
 }
 
-/// Run many independent tile MVMs on scoped worker threads (DESIGN.md
-/// S15): `jobs` pairs each programmed macro with its input slice.
+/// Run many independent tile MVMs on the persistent shared worker pool
+/// (DESIGN.md S15/S17): `jobs` pairs each programmed macro with its
+/// input slice.
 ///
 /// Results come back in job order, bit-identical to a serial loop — each
 /// macro is its own deterministic simulator, so parallelism changes only
 /// wall-clock (row tiles were always *modeled* as latency-parallel; this
-/// makes the implementation match the model). Jobs are chunked over at
-/// most `available_parallelism` threads so spawn overhead stays
-/// negligible at small tile counts.
+/// makes the implementation match the model). The pool is long-lived and
+/// channel-fed, so repeated calls pay no thread-spawn cost.
 pub fn mvm_parallel(jobs: Vec<(&mut CimMacro, &[u32])>) -> Vec<MacroResult> {
     par_map_jobs(jobs, |(m, x)| m.mvm(x))
 }
 
 /// Batched [`mvm_parallel`] (DESIGN.md S16): each job pairs a programmed
-/// macro with the *whole request batch* for that macro, so every worker
-/// thread streams its weight matrix once per batch instead of once per
+/// macro with the *whole request batch* for that macro, so every pool
+/// worker streams its weight matrix once per batch instead of once per
 /// input. Ledgers come back in job order, bit-identical to calling
 /// [`CimMacro::mvm_batch`] serially per job.
 pub fn mvm_parallel_batch(
@@ -49,78 +51,116 @@ pub fn mvm_parallel_batch(
     par_map_jobs(jobs, |(m, xs)| m.mvm_batch(xs))
 }
 
-/// The shared scoped-thread fan-out behind [`mvm_parallel`] and
-/// [`mvm_parallel_batch`]: chunk `jobs` over at most
-/// `available_parallelism` threads (spawn overhead stays negligible at
-/// small tile counts) and return results in job order.
+/// Flat-input [`mvm_parallel_batch`] (DESIGN.md S17): each job carries
+/// its batch as one `[batch × in_dim]` flat slice, so upstream callers
+/// (fabric stages, servers) feed reusable buffers instead of allocating
+/// `Vec<Vec<u32>>` per batch.
+pub fn mvm_parallel_batch_strided(
+    jobs: Vec<(&mut CimMacro, &[u32])>,
+    in_dim: usize,
+) -> Vec<MvmBatch> {
+    par_map_jobs(jobs, move |(m, xs)| m.mvm_batch_strided(xs, in_dim))
+}
+
+/// The shared fan-out behind [`mvm_parallel`] and friends — since
+/// DESIGN.md S17 a thin veneer over [`util::pool::scope_map`]
+/// (persistent channel-fed workers, deterministic job order, zero
+/// per-call spawns); single jobs run inline.
+///
+/// [`util::pool::scope_map`]: crate::util::pool::scope_map
 fn par_map_jobs<T: Send, R: Send>(
     jobs: Vec<T>,
     f: impl Fn(T) -> R + Sync,
 ) -> Vec<R> {
-    let n = jobs.len();
-    if n <= 1 {
-        return jobs.into_iter().map(f).collect();
-    }
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n);
-    let chunk = n.div_ceil(threads);
-    let mut rest = jobs;
-    let f = &f;
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(threads);
-        while !rest.is_empty() {
-            let tail = rest.split_off(chunk.min(rest.len()));
-            let batch = std::mem::replace(&mut rest, tail);
-            handles.push(
-                s.spawn(move || batch.into_iter().map(f).collect::<Vec<_>>()),
-            );
-        }
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("tile worker panicked"))
-            .collect()
-    })
+    pool::scope_map(jobs, f)
+}
+
+/// One batch item's tiled-MVM output (DESIGN.md S17): the per-shard
+/// partials in (ti, tj) order plus the op-level tallies.
+#[derive(Debug, Clone)]
+pub struct TiledBatchItem {
+    /// `partials[ti][tj]` — ready for `TiledMatrix::accumulate`.
+    pub partials: Vec<Vec<Vec<f64>>>,
+    /// Summed energy over all shards.
+    pub energy: EnergyBreakdown,
+    /// Critical-path latency (tiles are physically concurrent, ns).
+    pub latency_ns: f64,
+    /// Macro row activations summed over *all* shards of this item
+    /// (each active input row fires once per column tile it feeds).
+    pub active_rows: u64,
 }
 
 /// Batched [`mvm_tiled`] (DESIGN.md S16): `xparts[ti]` carries the whole
 /// minibatch of row-tile `ti`'s input slices. Returns one
 /// `(partials, energy, latency)` triple per batch item, each bit-identical
 /// to what `mvm_tiled` would produce for that item alone — the (ti, tj)
-/// convention and the shard accumulation order are unchanged.
+/// convention and the shard accumulation order are unchanged. A thin
+/// flattening wrapper over [`mvm_tiled_batch_strided`].
 pub fn mvm_tiled_batch(
     macros: &mut [CimMacro],
     xparts: &[Vec<Vec<u32>>],
     row_tiles: usize,
     col_tiles: usize,
 ) -> Vec<(Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64)> {
-    assert_eq!(macros.len(), row_tiles * col_tiles, "shard count");
     assert_eq!(xparts.len(), row_tiles, "one slice batch per row tile");
     let batch = xparts.first().map_or(0, |p| p.len());
     assert!(
         xparts.iter().all(|p| p.len() == batch),
         "ragged batch across row tiles"
     );
-    let jobs: Vec<(&mut CimMacro, &[Vec<u32>])> = macros
+    let flat: Vec<Vec<u32>> = xparts
+        .iter()
+        .map(|p| p.iter().flatten().copied().collect())
+        .collect();
+    mvm_tiled_batch_strided(macros, &flat, batch, row_tiles, col_tiles)
+        .into_iter()
+        .map(|i| (i.partials, i.energy, i.latency_ns))
+        .collect()
+}
+
+/// Flat-input batched tiled MVM (DESIGN.md S17): `xparts[ti]` is row
+/// tile `ti`'s whole minibatch as one `[batch × tile]` flat slice.
+/// The one implementation of the (ti, tj) convention that `snn::infer`
+/// and `fabric::chip` rely on for bit-identity; do not fork it.
+pub fn mvm_tiled_batch_strided(
+    macros: &mut [CimMacro],
+    xparts: &[Vec<u32>],
+    batch: usize,
+    row_tiles: usize,
+    col_tiles: usize,
+) -> Vec<TiledBatchItem> {
+    assert_eq!(macros.len(), row_tiles * col_tiles, "shard count");
+    assert_eq!(xparts.len(), row_tiles, "one flat batch per row tile");
+    let tile = macros.first().map_or(0, |m| m.cfg.rows);
+    for p in xparts {
+        assert_eq!(p.len(), batch * tile, "flat batch shape");
+    }
+    let jobs: Vec<(&mut CimMacro, &[u32])> = macros
         .iter_mut()
         .enumerate()
         .map(|(sidx, m)| (m, xparts[sidx / col_tiles].as_slice()))
         .collect();
-    let ledgers = mvm_parallel_batch(jobs);
+    let ledgers = mvm_parallel_batch_strided(jobs, tile);
     (0..batch)
         .map(|b| {
             let mut energy = EnergyBreakdown::default();
             let mut latency = 0.0f64; // tiles are physically concurrent
+            let mut active_rows = 0u64;
             let mut partials: Vec<Vec<Vec<f64>>> = (0..row_tiles)
                 .map(|_| Vec::with_capacity(col_tiles))
                 .collect();
             for (sidx, l) in ledgers.iter().enumerate() {
                 energy.add(l.energy(b));
                 latency = latency.max(l.latency_ns(b));
+                active_rows += l.active_rows(b) as u64;
                 partials[sidx / col_tiles].push(l.y_mac(b).to_vec());
             }
-            (partials, energy, latency)
+            TiledBatchItem {
+                partials,
+                energy,
+                latency_ns: latency,
+                active_rows,
+            }
         })
         .collect()
 }
@@ -272,6 +312,71 @@ mod tests {
             assert_eq!(gp, wp, "partials diverge");
             assert_eq!(ge, we, "energy diverges");
             assert_eq!(gl, wl, "latency diverges");
+        }
+
+        // The flat-input entry (DESIGN.md S17) is the same engine:
+        // bitwise identical output, plus the activity tallies.
+        let mut strided = mk_fleet(84);
+        let flat: Vec<Vec<u32>> = xparts
+            .iter()
+            .map(|p| p.iter().flatten().copied().collect())
+            .collect();
+        let got2 =
+            mvm_tiled_batch_strided(&mut strided, &flat, batch, rt, ct);
+        assert_eq!(got2.len(), batch);
+        for (b, (g2, (wp, we, wl))) in got2.iter().zip(&want).enumerate() {
+            assert_eq!(&g2.partials, wp);
+            assert_eq!(&g2.energy, we);
+            assert_eq!(g2.latency_ns, *wl);
+            // Each active input row fires once per column tile it feeds.
+            let nonzero: u64 = (0..rt)
+                .map(|ti| {
+                    xparts[ti][b].iter().filter(|&&v| v > 0).count() as u64
+                })
+                .sum();
+            assert_eq!(g2.active_rows, nonzero * ct as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_strided_matches_parallel_batch() {
+        let cfg = MacroConfig::default();
+        let mut rng = Rng::new(85);
+        let batches: Vec<Vec<Vec<u32>>> = (0..4)
+            .map(|_| {
+                (0..3)
+                    .map(|_| {
+                        (0..cfg.rows).map(|_| rng.below(256) as u32).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let (mut a, _) = fleet(4, 86);
+        let want = mvm_parallel_batch(
+            a.iter_mut()
+                .zip(&batches)
+                .map(|(m, xs)| (m, xs.as_slice()))
+                .collect(),
+        );
+        let (mut b, _) = fleet(4, 86);
+        let flats: Vec<Vec<u32>> = batches
+            .iter()
+            .map(|xs| xs.iter().flatten().copied().collect())
+            .collect();
+        let got = mvm_parallel_batch_strided(
+            b.iter_mut()
+                .zip(&flats)
+                .map(|(m, xs)| (m, xs.as_slice()))
+                .collect(),
+            cfg.rows,
+        );
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            for i in 0..g.len() {
+                assert_eq!(g.y_mac(i), w.y_mac(i));
+                assert_eq!(g.energy(i), w.energy(i));
+                assert_eq!(g.active_rows(i), w.active_rows(i));
+            }
         }
     }
 }

@@ -19,7 +19,7 @@ use crate::config::{FabricConfig, LevelMap, MacroConfig};
 use crate::coordinator::TiledMatrix;
 use crate::energy::EnergyBreakdown;
 use crate::fabric::{FabricChip, FabricPipeline, StageRelay};
-use crate::macro_model::{mvm_tiled_batch, CimMacro};
+use crate::macro_model::{mvm_tiled_batch_strided, CimMacro, TiledBatchItem};
 use crate::snn::dataset::Dataset;
 use crate::snn::mlp::{argmax, Mlp};
 use crate::snn::quant::{quantize_layer, ActQuant, QuantLayer};
@@ -31,6 +31,8 @@ struct MacroLayer {
     /// One programmed macro per weight tile (weight-stationary); empty
     /// when the whole model executes on a shared fabric chip.
     macros: Vec<CimMacro>,
+    /// Reusable per-row-tile flat slice batches (DESIGN.md S17).
+    xparts: Vec<Vec<u32>>,
 }
 
 impl MacroLayer {
@@ -44,31 +46,33 @@ impl MacroLayer {
                 m
             })
             .collect();
-        MacroLayer { q, tiled, macros }
+        MacroLayer {
+            q,
+            tiled,
+            macros,
+            xparts: Vec::new(),
+        }
     }
 
-    /// Run every tile's MVM for a whole minibatch (DESIGN.md S16):
-    /// every tile macro streams its weights once over the batch; scoped
-    /// worker threads fan the independent tile macros out. Partials come
+    /// Run every tile's MVM for a whole minibatch (DESIGN.md S16/S17):
+    /// every tile macro streams its weights once over the batch; the
+    /// persistent worker pool fans the independent tile macros out, and
+    /// the input slices land in reusable flat buffers. Partials come
     /// back per item in deterministic (ti, tj) order plus summed energy
     /// and the critical-path latency.
-    fn forward_tiles_batch(
-        &mut self,
-        xs: &[Vec<u32>],
-    ) -> Vec<(Vec<Vec<Vec<f64>>>, EnergyBreakdown, f64)> {
+    fn forward_tiles_batch(&mut self, xs: &[Vec<u32>]) -> Vec<TiledBatchItem> {
         let rt = self.tiled.row_tiles;
-        let mut xparts: Vec<Vec<Vec<u32>>> =
-            (0..rt).map(|_| Vec::with_capacity(xs.len())).collect();
-        for x in xs {
-            for (ti, part) in
-                self.tiled.split_input(x).into_iter().enumerate()
-            {
-                xparts[ti].push(part);
-            }
+        self.xparts.resize_with(rt, Vec::new);
+        for p in &mut self.xparts {
+            p.clear();
         }
-        mvm_tiled_batch(
+        for x in xs {
+            self.tiled.split_input_into(x, &mut self.xparts);
+        }
+        mvm_tiled_batch_strided(
             &mut self.macros,
-            &xparts,
+            &self.xparts,
+            xs.len(),
             rt,
             self.tiled.col_tiles,
         )
@@ -128,6 +132,9 @@ pub struct InferStats {
     pub noc_packets: u64,
     /// Total NoC hops those packets travelled (0 off-fabric).
     pub noc_hops: u64,
+    /// Macro row activations across all layers (DESIGN.md S17) — the
+    /// event-driven occupancy of the inference.
+    pub active_rows: u64,
 }
 
 impl MacroMlp {
@@ -236,18 +243,34 @@ impl MacroMlp {
         let mut logits: Vec<Vec<f32>> = vec![Vec::new(); n];
         for li in 0..n_layers {
             let layer = &mut self.layers[li];
-            // (partials, energy, latency, packets, hops) per item.
+            // (partials, energy, latency, packets, hops, active) per item.
             let per_item: Vec<_> = match self.fabric.as_mut() {
                 None => layer
                     .forward_tiles_batch(&xs)
                     .into_iter()
-                    .map(|(p, e, l)| (p, e, l, 0u64, 0u64))
+                    .map(|t| {
+                        (
+                            t.partials,
+                            t.energy,
+                            t.latency_ns,
+                            0u64,
+                            0u64,
+                            t.active_rows,
+                        )
+                    })
                     .collect(),
                 Some(chip) => chip
                     .forward_layer_batch(li, &xs)
                     .into_iter()
                     .map(|r| {
-                        (r.partials, r.energy, r.latency_ns, r.packets, r.hops)
+                        (
+                            r.partials,
+                            r.energy,
+                            r.latency_ns,
+                            r.packets,
+                            r.hops,
+                            r.active_rows,
+                        )
                     })
                     .collect(),
             };
@@ -257,7 +280,7 @@ impl MacroMlp {
             } else {
                 Some(self.act_quants[li])
             };
-            for (i, (partials, energy, lat, packets, hops)) in
+            for (i, (partials, energy, lat, packets, hops, active)) in
                 per_item.into_iter().enumerate()
             {
                 stats[i].energy.add(&energy);
@@ -265,6 +288,7 @@ impl MacroMlp {
                 stats[i].macs += macs;
                 stats[i].noc_packets += packets;
                 stats[i].noc_hops += hops;
+                stats[i].active_rows += active;
                 let mac = layer.tiled.accumulate(&partials);
                 let z = layer.finish_z(&xs[i], &mac, x_step);
                 match aq {
@@ -319,6 +343,7 @@ impl MacroMlp {
                 agg.macs += stats.macs;
                 agg.noc_packets += stats.noc_packets;
                 agg.noc_hops += stats.noc_hops;
+                agg.active_rows += stats.active_rows;
             }
             lo = hi;
         }
@@ -391,6 +416,7 @@ impl MacroMlp {
             macs: macs_per_inf * data.len() as u64,
             noc_packets: p.packets,
             noc_hops: p.hops,
+            active_rows: p.active_rows,
         };
         (correct as f64 / data.len() as f64, stats)
     }
@@ -437,6 +463,10 @@ mod tests {
         // 3 layers: 256×128 + 128×128 + 128×16 MACs.
         assert_eq!(s1.macs, (256 * 128 + 128 * 128 + 128 * 16) as u64);
         assert!(s1.latency_ns > 0.0);
+        // Event-driven occupancy: some rows fire, bounded by the row
+        // slots the three layers offer (256 + 128 + 128 per inference).
+        assert!(s1.active_rows > 0);
+        assert!(s1.active_rows <= 256 + 128 + 128);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Offline-substrate utilities (DESIGN.md S0): PRNG (`rand` replacement),
-//! JSON (`serde_json` replacement), CLI parsing (`clap` replacement), and
-//! the statistics helpers shared by the repro harness and benches.
+//! JSON (`serde_json` replacement), CLI parsing (`clap` replacement), the
+//! statistics helpers shared by the repro harness and benches, and the
+//! persistent shared worker pool (DESIGN.md S17, `rayon` replacement).
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,310 @@
+//! Persistent shared worker pool (DESIGN.md S17).
+//!
+//! Before S17 every parallel fan-out in the crate —
+//! `macro_model::par_map_jobs` behind `mvm_parallel[_batch]`, and the
+//! thread-per-layer `FabricPipeline` — paid a `thread::scope`/`spawn`
+//! per call. This module replaces all of them with ONE long-lived,
+//! channel-fed pool of `available_parallelism` workers, started lazily
+//! on first use and shared by every subsystem (tiles, fabric, server
+//! examples, benches).
+//!
+//! Two entry points:
+//!
+//! * [`scope_map`] — run `jobs` through `f` on the pool and return the
+//!   results **in job order** (deterministic, like the scoped-thread
+//!   fan-out it replaces). Jobs may borrow non-`'static` data: the call
+//!   does not return until every job has finished, and the submitted
+//!   tickets are self-scheduling claims that can never touch a job
+//!   after the scope's counter says it is spent. The *caller claims
+//!   jobs too* — even with every worker busy (or blocked inside a
+//!   nested `scope_map`), the calling thread drains its own scope, so
+//!   nesting cannot deadlock the pool.
+//! * [`spawn`] — fire-and-forget a `'static` task (the fabric dataflow
+//!   executor schedules its stage turns this way).
+//!
+//! Panic policy: a panicking job is caught on the worker, carried back,
+//! and re-raised on the calling thread (matching `thread::scope`);
+//! workers themselves never die, because they are shared state.
+
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    tx: mpsc::Sender<Task>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        for i in 0..workers {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("spikemram-pool-{i}"))
+                .spawn(move || loop {
+                    // Take one task with the lock *released* before
+                    // running it; a panicking task must not poison the
+                    // shared receiver.
+                    let task = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match task {
+                        Ok(t) => {
+                            if catch_unwind(AssertUnwindSafe(t)).is_err() {
+                                // Scoped jobs catch their own panics and
+                                // re-raise on the caller; anything that
+                                // reaches here is a detached task's bug.
+                                eprintln!(
+                                    "spikemram pool: detached task panicked"
+                                );
+                            }
+                        }
+                        Err(_) => return, // sender gone: process exit
+                    }
+                })
+                .expect("spawn pool worker");
+        }
+        Pool { tx, workers }
+    })
+}
+
+/// Number of worker threads in the shared pool.
+pub fn workers() -> usize {
+    pool().workers
+}
+
+/// Fire-and-forget a task onto the shared pool.
+pub fn spawn(task: impl FnOnce() + Send + 'static) {
+    pool().tx.send(Box::new(task)).expect("pool alive");
+}
+
+/// Shared state of one `scope_map` call. Job `i` is claimed exactly
+/// once (a `fetch_add` ticket), so the `UnsafeCell` slots are accessed
+/// exclusively; `done` is incremented *after* the result write with
+/// `Release`, and the caller returns only after acquiring `done == n` —
+/// no borrow escapes the call.
+struct Scope<T, R, F> {
+    /// The job closure; shared (`&F`) while any claim index < n is in
+    /// flight, then taken back by the caller before `scope_map`
+    /// returns, so a late ticket's Arc never runs non-trivial drop glue
+    /// (a closure's captures may own Drop types borrowing caller state).
+    f: UnsafeCell<Option<F>>,
+    jobs: Vec<UnsafeCell<Option<T>>>,
+    results: Vec<UnsafeCell<Option<R>>>,
+    claimed: AtomicUsize,
+    done: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Blocks the caller until `done == n` (no busy spin: in-flight
+    /// jobs can be whole batched MVMs).
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: job/result slots are accessed only by the unique claimant of
+// their index (`claimed` ticket) and by the caller after it has
+// acquired `done == n`; `f` is only *read* (`&F`, hence F: Sync) while
+// claims < n are possible, and the caller takes it back after
+// `done == n`, when no ticket can touch it again (claims only grow). A
+// late ticket's Arc may therefore drop the Scope on a worker thread
+// after `scope_map` returned, but by then every cell is `None` — no
+// drop glue of T, R, or F runs outside the caller's lifetime.
+unsafe impl<T: Send, R: Send, F: Sync> Sync for Scope<T, R, F> {}
+unsafe impl<T: Send, R: Send, F: Sync> Send for Scope<T, R, F> {}
+
+/// Claim and run the next unclaimed job of `s`; false when none are
+/// left. Tickets that arrive after the scope is drained claim an index
+/// `>= n` and touch nothing.
+fn run_one<T, R, F: Fn(T) -> R>(s: &Scope<T, R, F>) -> bool {
+    let i = s.claimed.fetch_add(1, Ordering::Relaxed);
+    if i >= s.jobs.len() {
+        return false;
+    }
+    let job = unsafe { (*s.jobs[i].get()).take() }.expect("claimed once");
+    // SAFETY: `f` is Some for every claim index < n (the caller only
+    // takes it after done == n, which requires this call to have
+    // finished); concurrent claimants share it immutably.
+    let f = unsafe { (*s.f.get()).as_ref() }.expect("f alive while claiming");
+    match catch_unwind(AssertUnwindSafe(|| f(job))) {
+        Ok(r) => unsafe { *s.results[i].get() = Some(r) },
+        Err(p) => *s.panic.lock().unwrap() = Some(p),
+    }
+    if s.done.fetch_add(1, Ordering::Release) + 1 == s.jobs.len() {
+        // Last job: wake the (possibly waiting) caller. Taking the lock
+        // orders this notify after the caller's condition check.
+        let _g = s.done_lock.lock().unwrap();
+        s.done_cv.notify_all();
+    }
+    true
+}
+
+/// Run every job through `f` on the shared pool; results come back in
+/// job order, bit-identical to a serial loop (each job is independent
+/// and deterministic — parallelism only changes wall-clock). Single
+/// jobs run inline without touching the pool.
+pub fn scope_map<T: Send, R: Send, F: Fn(T) -> R + Sync>(
+    jobs: Vec<T>,
+    f: F,
+) -> Vec<R> {
+    let n = jobs.len();
+    if n <= 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let p = pool();
+    let scope = Arc::new(Scope {
+        f: UnsafeCell::new(Some(f)),
+        jobs: jobs.into_iter().map(|j| UnsafeCell::new(Some(j))).collect(),
+        results: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+        claimed: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+        done_lock: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+    // One self-scheduling ticket per job the caller cannot take itself,
+    // capped at the worker count (each ticket loops until the scope is
+    // dry, so more would be pure queue traffic).
+    for _ in 0..(n - 1).min(p.workers) {
+        let s = scope.clone();
+        let ticket: Box<dyn FnOnce() + Send + '_> =
+            Box::new(move || while run_one(&s) {});
+        // SAFETY: the ticket borrows non-'static job/result/closure
+        // data only through `Scope`, whose slots it touches only for
+        // claim indices < n. Every such access happens before the
+        // matching `done` increment, and this function returns only
+        // after `done == n` — so no borrow is used after `scope_map`
+        // returns. Late-arriving tickets hold the Arc (alive memory)
+        // but claim an index >= n and exit immediately.
+        let ticket: Task = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + '_>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(ticket)
+        };
+        p.tx.send(ticket).expect("pool alive");
+    }
+    // The caller claims jobs too: guaranteed progress even if every
+    // worker is busy or parked inside another scope.
+    while run_one(&scope) {}
+    // Block (no spin) until the in-flight remainder lands on workers.
+    {
+        let mut g = scope.done_lock.lock().unwrap();
+        while scope.done.load(Ordering::Acquire) < n {
+            g = scope.done_cv.wait(g).unwrap();
+        }
+    }
+    // Reclaim the closure and all results on THIS thread, before any
+    // borrow expires — a late ticket's Arc then drops only empty cells.
+    let f = unsafe { (*scope.f.get()).take() };
+    let panic = scope.panic.lock().unwrap().take();
+    let results: Vec<Option<R>> = scope
+        .results
+        .iter()
+        .map(|c| unsafe { (*c.get()).take() })
+        .collect();
+    if let Some(p) = panic {
+        drop(results); // drop partial results before unwinding
+        drop(f);
+        resume_unwind(p);
+    }
+    drop(f);
+    results
+        .into_iter()
+        .map(|r| r.expect("every job produced a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_returns_results_in_job_order() {
+        let jobs: Vec<usize> = (0..64).collect();
+        let got = scope_map(jobs, |i| i * i);
+        assert_eq!(got, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_may_borrow_and_mutate_caller_state() {
+        // The mvm_parallel shape: each job owns &mut into caller data.
+        let mut cells = vec![0u64; 16];
+        let jobs: Vec<(&mut u64, u64)> = cells
+            .iter_mut()
+            .zip(1..)
+            .map(|(c, i)| (c, i))
+            .collect();
+        let returned = scope_map(jobs, |(c, i)| {
+            *c = i * 10;
+            i
+        });
+        assert_eq!(returned, (1..=16).collect::<Vec<u64>>());
+        assert_eq!(cells[0], 10);
+        assert_eq!(cells[15], 160);
+    }
+
+    #[test]
+    fn nested_scopes_make_progress() {
+        // Saturate the pool with outer jobs that each fan out again:
+        // the caller-claims rule keeps everything live.
+        let outer: Vec<u64> = (0..(workers() * 4) as u64).collect();
+        let got = scope_map(outer, |i| {
+            let inner: Vec<u64> = (0..8).map(|j| i * 8 + j).collect();
+            scope_map(inner, |v| v * 2).into_iter().sum::<u64>()
+        });
+        for (i, v) in got.iter().enumerate() {
+            let i = i as u64;
+            let want: u64 = (0..8).map(|j| (i * 8 + j) * 2).sum();
+            assert_eq!(*v, want);
+        }
+    }
+
+    #[test]
+    fn concurrent_scopes_from_many_threads() {
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                s.spawn(move || {
+                    let jobs: Vec<u64> = (0..32).map(|i| t * 100 + i).collect();
+                    let got = scope_map(jobs.clone(), |v| v + 1);
+                    assert_eq!(
+                        got,
+                        jobs.iter().map(|v| v + 1).collect::<Vec<_>>()
+                    );
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn job_panic_propagates_to_caller() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            scope_map((0..8).collect::<Vec<i32>>(), |i| {
+                assert!(i != 5, "job five exploded");
+                i
+            })
+        }));
+        assert!(r.is_err(), "panic must reach the caller");
+        // The pool survives: a fresh scope still works.
+        assert_eq!(scope_map(vec![1, 2, 3], |i| i * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn detached_spawn_runs() {
+        let (tx, rx) = mpsc::channel();
+        spawn(move || tx.send(41 + 1).unwrap());
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            42
+        );
+    }
+}

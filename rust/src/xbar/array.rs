@@ -17,6 +17,14 @@ pub struct Crossbar {
     cells: Vec<Cell3T2J>,
     /// Cached conductance matrix (µS), row-major; rebuilt on programming.
     g_cache: Vec<f64>,
+    /// Cached programmed codes, row-major; rebuilt on programming. The
+    /// quantized level-plane engine (DESIGN.md S17) walks this 1-byte
+    /// matrix instead of the 8-byte conductances.
+    codes_cache: Vec<u8>,
+    /// True iff every cell's conductance is *exactly* its level target
+    /// (no device variation) — the precondition for the level-plane
+    /// decomposition to be lossless.
+    uniform_levels: bool,
     /// Target conductance per code (µS) from `cfg.level_map`.
     level_g: [f64; 4],
     /// Nominal device conductance per code (µS) for the 3T-2MTJ stack —
@@ -43,6 +51,8 @@ impl Crossbar {
             cols: cfg.cols,
             cells,
             g_cache: vec![0.0; cfg.rows * cfg.cols],
+            codes_cache: vec![0; cfg.rows * cfg.cols],
+            uniform_levels: false,
             level_g: Self::level_targets(cfg),
             dev_g: Self::device_levels(cfg),
             sigma_c2c: cfg.nonideal.sigma_r_c2c,
@@ -90,6 +100,8 @@ impl Crossbar {
             cols: cfg.cols,
             cells,
             g_cache: vec![0.0; cfg.rows * cfg.cols],
+            codes_cache: vec![0; cfg.rows * cfg.cols],
+            uniform_levels: false,
             level_g: Self::level_targets(cfg),
             dev_g: Self::device_levels(cfg),
             sigma_c2c: cfg.nonideal.sigma_r_c2c,
@@ -110,6 +122,7 @@ impl Crossbar {
     }
 
     fn rebuild_cache(&mut self) {
+        let mut uniform = true;
         for i in 0..self.cells.len() {
             let code = self.cells[i].code() as usize;
             // Device-true: level_g == dev_g, so this is exactly the cell
@@ -117,7 +130,10 @@ impl Crossbar {
             // ratio but move the nominal level.
             self.g_cache[i] = self.level_g[code]
                 * (self.cells[i].conductance_us() / self.dev_g[code]);
+            self.codes_cache[i] = code as u8;
+            uniform &= self.g_cache[i] == self.level_g[code];
         }
+        self.uniform_levels = uniform;
     }
 
     /// Program the whole array from a row-major code matrix (§III-A write:
@@ -157,6 +173,26 @@ impl Crossbar {
     /// Row-major conductance matrix view (µS).
     pub fn conductances(&self) -> &[f64] {
         &self.g_cache
+    }
+
+    /// Row-major programmed-code matrix view (cached, no allocation —
+    /// unlike [`read_codes`](Self::read_codes)).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes_cache
+    }
+
+    /// The four per-code conductance targets (µS) of this array's level
+    /// map at its R_LRS.
+    pub fn levels(&self) -> [f64; 4] {
+        self.level_g
+    }
+
+    /// True iff every cell sits *exactly* at its code's level target —
+    /// the lossless-decomposition precondition of the quantized
+    /// level-plane engine (DESIGN.md S17). False as soon as any
+    /// device-to-device variation moved a conductance off its level.
+    pub fn uniform_levels(&self) -> bool {
+        self.uniform_levels
     }
 
     /// One column's conductances (µS), gathered.
@@ -276,6 +312,37 @@ mod tests {
         let b = xb.g_us_noisy(0, 0, &mut rng);
         assert_ne!(a, b);
         assert_eq!(xb.g_us(0, 0), xb.g_us(0, 0)); // nominal stable
+    }
+
+    #[test]
+    fn codes_view_matches_read_codes_without_alloc_per_read() {
+        let mut xb = Crossbar::new(&small_cfg(4, 4));
+        let codes: Vec<u8> = (0..16).map(|i| ((i * 3) % 4) as u8).collect();
+        xb.program_codes(&codes);
+        assert_eq!(xb.codes(), codes.as_slice());
+        assert_eq!(xb.codes(), xb.read_codes().as_slice());
+    }
+
+    #[test]
+    fn uniform_levels_tracks_device_variation() {
+        let c = cfg();
+        let mut ideal = Crossbar::new(&c);
+        ideal.program_codes(&vec![2u8; 128 * 128]);
+        assert!(ideal.uniform_levels());
+        assert_eq!(ideal.levels(), LevelMap::DeviceTrue.levels());
+
+        let mut vc = c.clone();
+        vc.nonideal.sigma_r_d2d = 0.05;
+        let mut rng = Rng::new(7);
+        let mut varied = Crossbar::with_variation(&vc, &mut rng);
+        varied.program_codes(&vec![2u8; 128 * 128]);
+        assert!(!varied.uniform_levels());
+
+        // σ = 0 variation is *exactly* nominal: still uniform.
+        let mut rng = Rng::new(8);
+        let mut zero_sigma = Crossbar::with_variation(&c, &mut rng);
+        zero_sigma.program_codes(&vec![1u8; 128 * 128]);
+        assert!(zero_sigma.uniform_levels());
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //! measured).
 
 use spikemram::benchlib::{black_box, Harness};
-use spikemram::config::MacroConfig;
-use spikemram::macro_model::{CimMacro, MvmBatch};
+use spikemram::config::{MacroConfig, MvmEngine};
+use spikemram::macro_model::{CimMacro, EngineUsed, MvmBatch};
 use spikemram::util::rng::Rng;
 
 fn programmed(seed: u64) -> CimMacro {
@@ -75,35 +75,148 @@ fn mixed_sparsity_soak_across_batch_sizes() {
     }
 }
 
+/// Random inputs at `density`, with `n` items.
+fn density_inputs(rng: &mut Rng, density: f64, n: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|_| {
+            (0..128)
+                .map(|_| {
+                    if rng.f64() < density {
+                        1 + rng.below(255) as u32
+                    } else {
+                        0
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
 #[test]
-fn hotpath_bench_json_records_batch_sweep() {
-    // Real (fast-mode) measurements of the same cases benches/hotpath.rs
-    // times, written through the same Harness::finish() path. The JSON's
-    // "profile" field distinguishes this record from the release run —
-    // and an existing release-profile record (from the ci.sh hotpath
-    // smoke) is never clobbered with this binary's numbers: the test
-    // then validates the writer against a scratch directory instead.
-    std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
-    // Probe the directory the release bench run (ci.sh) writes into.
+fn property_event_list_bitwise_equals_dense_across_densities() {
+    // The S17 bit-identity property: for random batches mixing every
+    // density — all-zero and all-dense items in the SAME batch — the
+    // event-list engine's full ledger is bitwise equal to the dense
+    // stream's, at every batch size.
+    let mut rng = Rng::new(90210);
+    for trial in 0..6u64 {
+        let mut xs: Vec<Vec<u32>> = Vec::new();
+        xs.push(vec![0u32; 128]); // all-zero item
+        xs.push(vec![255u32; 128]); // saturated all-dense item
+        for density in [0.01, 0.1, 0.33, 0.5, 0.9, 1.0] {
+            xs.extend(density_inputs(&mut rng, density, 2));
+        }
+        for batch in [1usize, 5, xs.len()] {
+            let mut dense = programmed(3000 + trial);
+            let mut evlist = programmed(3000 + trial);
+            dense.set_engine(MvmEngine::Dense);
+            evlist.set_engine(MvmEngine::EventList);
+            let mut dl = MvmBatch::default();
+            let mut el = MvmBatch::default();
+            let mut lo = 0usize;
+            while lo < xs.len() {
+                let hi = (lo + batch).min(xs.len());
+                dense.mvm_batch_into(&xs[lo..hi], &mut dl);
+                evlist.mvm_batch_into(&xs[lo..hi], &mut el);
+                assert_eq!(dl.engine_used(), EngineUsed::Dense);
+                assert_eq!(el.engine_used(), EngineUsed::EventList);
+                for b in 0..dl.len() {
+                    assert_eq!(
+                        el.y_mac(b),
+                        dl.y_mac(b),
+                        "trial {trial} batch {batch} item {}",
+                        lo + b
+                    );
+                    assert_eq!(el.t_out_ns(b), dl.t_out_ns(b));
+                    assert_eq!(el.v_charge(b), dl.v_charge(b));
+                    assert_eq!(el.latency_ns(b), dl.latency_ns(b));
+                    assert_eq!(el.events(b), dl.events(b));
+                    assert_eq!(*el.energy(b), *dl.energy(b));
+                    assert_eq!(el.active_rows(b), dl.active_rows(b));
+                }
+                lo = hi;
+            }
+        }
+    }
+}
+
+#[test]
+fn property_quantized_equals_integer_oracle_every_alphabet() {
+    // The S17 exactness property: for every code-alphabet size (1..=4
+    // distinct programmed levels) and random densities, the quantized
+    // engine equals `ideal_mvm_quantized` BITWISE — serial and batched.
+    let cfg = MacroConfig::default();
+    let mut rng = Rng::new(60606);
+    for alphabet in 1u8..=4 {
+        let mut m = CimMacro::new(cfg.clone());
+        m.set_engine(MvmEngine::Quantized);
+        let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+            .map(|_| rng.below(alphabet as u64) as u8)
+            .collect();
+        m.program(&codes);
+        let mut xs: Vec<Vec<u32>> = vec![vec![0u32; 128], vec![255u32; 128]];
+        for density in [0.02, 0.25, 0.75, 1.0] {
+            xs.extend(density_inputs(&mut rng, density, 2));
+        }
+        let oracle: Vec<Vec<f64>> =
+            xs.iter().map(|x| m.ideal_mvm_quantized(x)).collect();
+        // Serial.
+        for (x, want) in xs.iter().zip(&oracle) {
+            assert_eq!(
+                &m.mvm(x).y_mac,
+                want,
+                "alphabet {alphabet} serial"
+            );
+        }
+        // Batched.
+        let ledger = m.mvm_batch(&xs);
+        assert_eq!(ledger.engine_used(), EngineUsed::Quantized);
+        for (b, want) in oracle.iter().enumerate() {
+            assert_eq!(
+                ledger.y_mac(b),
+                want.as_slice(),
+                "alphabet {alphabet} batched item {b}"
+            );
+        }
+    }
+}
+
+/// Where a fast-mode tier-1 record for bench `group` should land: the
+/// bench dir, unless a release-profile record (from the ci.sh smoke
+/// runs) already sits there — never clobber that one; validate the
+/// writer against a scratch directory instead.
+fn record_dir_for(group: &str) -> std::path::PathBuf {
     let record_dir = std::path::PathBuf::from(
         std::env::var("SPIKEMRAM_BENCH_DIR").unwrap_or_else(|_| ".".into()),
     );
-    let keep_release =
-        std::fs::read_to_string(record_dir.join("BENCH_hotpath.json"))
-            .ok()
-            .and_then(|s| spikemram::util::json::parse(&s).ok())
-            .and_then(|d| {
-                d.get("profile").and_then(|p| p.as_str().map(String::from))
-            })
-            .is_some_and(|p| p == "release");
-    let out_dir = if keep_release {
-        let dir = std::env::temp_dir().join("spikemram_hotpath_json_test");
+    let keep_release = std::fs::read_to_string(
+        record_dir.join(format!("BENCH_{group}.json")),
+    )
+    .ok()
+    .and_then(|s| spikemram::util::json::parse(&s).ok())
+    .and_then(|d| d.get("profile").and_then(|p| p.as_str().map(String::from)))
+    .is_some_and(|p| p == "release");
+    if keep_release {
+        let dir =
+            std::env::temp_dir().join(format!("spikemram_{group}_json_test"));
         std::fs::create_dir_all(&dir).unwrap();
         dir
     } else {
         record_dir
-    };
+    }
+}
+
+#[test]
+fn hotpath_bench_json_records_batch_sweep() {
+    // Real (fast-mode) measurements of the same cases benches/hotpath.rs
+    // times, written through the same Harness::finish() path. The JSON's
+    // "profile" field distinguishes this record from the release run.
+    std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    let out_dir = record_dir_for("hotpath");
     let mut m = programmed(55);
+    // The trajectory rows measure the PR-3 dense engine (S17 note in
+    // benches/hotpath.rs).
+    m.set_engine(MvmEngine::Dense);
     let mut rng = Rng::new(56);
     let xs: Vec<Vec<u32>> = (0..64)
         .map(|_| (0..128).map(|_| 1 + rng.below(255) as u32).collect())
@@ -158,4 +271,69 @@ fn hotpath_bench_json_records_batch_sweep() {
     // No timing-ratio assertion here: wall-clock claims are only made
     // under the release profile (ci.sh hotpath smoke, EXPERIMENTS.md
     // §Perf); this test pins the record's existence and shape.
+}
+
+#[test]
+fn sparsity_bench_json_recorded_on_tier1() {
+    // A fast-mode BENCH_sparsity.json through the same Harness::finish()
+    // path as benches/sparsity.rs, so the sparsity trajectory exists on
+    // tier-1-only runs too (ci.sh refreshes the release record). Shape
+    // only — timing claims live in EXPERIMENTS.md §Perf and are
+    // release-profile.
+    std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    let out_dir = record_dir_for("sparsity");
+    let cfg = MacroConfig::default();
+    let mut m = programmed(66);
+    let mut rng = Rng::new(67);
+    let mut h = Harness::new("sparsity");
+    let mut ledger = MvmBatch::default();
+    for (dname, density) in [("d010", 0.1), ("d100", 1.0)] {
+        let flat: Vec<u32> = (0..cfg.rows)
+            .map(|_| {
+                if rng.f64() < density {
+                    1 + rng.below(255) as u32
+                } else {
+                    0
+                }
+            })
+            .collect();
+        for (ename, engine) in [
+            ("dense", MvmEngine::Dense),
+            ("event_list", MvmEngine::EventList),
+            ("quantized", MvmEngine::Quantized),
+        ] {
+            m.set_engine(engine);
+            h.bench_function_n(&format!("mvm_{dname}_b1_{ename}"), 1, |b| {
+                b.iter(|| {
+                    m.mvm_batch_strided_into(
+                        black_box(&flat),
+                        cfg.rows,
+                        &mut ledger,
+                    );
+                    ledger.total_active_rows()
+                })
+            });
+        }
+    }
+    let path = h.finish_to(&out_dir);
+    let doc = spikemram::util::json::parse(
+        &std::fs::read_to_string(&path).expect("BENCH_sparsity.json written"),
+    )
+    .expect("valid JSON");
+    assert_eq!(doc.get("group").unwrap().as_str(), Some("sparsity"));
+    let benches = doc.get("benches").unwrap();
+    for name in [
+        "mvm_d010_b1_dense",
+        "mvm_d010_b1_event_list",
+        "mvm_d100_b1_quantized",
+    ] {
+        assert!(
+            benches
+                .get(name)
+                .and_then(|b| b.get("per_op_median_ns"))
+                .and_then(|v| v.as_f64())
+                .is_some_and(|v| v > 0.0),
+            "row {name} missing"
+        );
+    }
 }

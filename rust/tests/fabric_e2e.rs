@@ -3,7 +3,7 @@
 //! accuracy — while adding only modeled NoC traffic on top, and the
 //! pipelined dataflow executor must match the serial fabric exactly.
 
-use spikemram::config::{FabricConfig, LevelMap, MacroConfig};
+use spikemram::config::{FabricConfig, LevelMap, MacroConfig, MvmEngine};
 use spikemram::snn;
 
 fn tiny_setup() -> (snn::Mlp, snn::Dataset, snn::Dataset) {
@@ -131,6 +131,63 @@ fn evaluate_is_batch_size_invariant() {
     assert_eq!(st1.energy, st_def.energy);
     assert_eq!(st1.latency_ns, st8.latency_ns);
     assert_eq!(st1.macs, st8.macs);
+}
+
+#[test]
+fn engine_choice_is_invisible_end_to_end() {
+    // DESIGN.md S17: Dense and EventList are interchangeable bit for
+    // bit through the whole MLP stack — tile pools and fabric alike —
+    // and the Auto default (quantized on these ideal arrays) cannot
+    // move accuracy.
+    let (model, train, test) = tiny_setup();
+    let mk = |engine: MvmEngine| MacroConfig {
+        engine,
+        ..MacroConfig::default()
+    };
+    let xs: Vec<Vec<u32>> = (0..9).map(|i| test.features_u8(i)).collect();
+
+    // Tile pools.
+    let cfg_d = mk(MvmEngine::Dense);
+    let cfg_e = mk(MvmEngine::EventList);
+    let mut dense =
+        snn::MacroMlp::from_float(&model, &train, &cfg_d, LevelMap::DeviceTrue);
+    let mut evlist =
+        snn::MacroMlp::from_float(&model, &train, &cfg_e, LevelMap::DeviceTrue);
+    for ((dl, ds), (el, es)) in
+        dense.forward_batch(&xs).iter().zip(&evlist.forward_batch(&xs))
+    {
+        assert_eq!(dl, el, "tile-pool logits diverge across engines");
+        assert_eq!(ds.energy, es.energy);
+        assert_eq!(ds.latency_ns, es.latency_ns);
+        assert_eq!(ds.active_rows, es.active_rows);
+    }
+
+    // Fabric deployment.
+    let mut fd =
+        snn::MacroMlp::from_float(&model, &train, &cfg_d, LevelMap::DeviceTrue)
+            .attach_fabric(&cfg_d, FabricConfig::square(2))
+            .unwrap();
+    let mut fe =
+        snn::MacroMlp::from_float(&model, &train, &cfg_e, LevelMap::DeviceTrue)
+            .attach_fabric(&cfg_e, FabricConfig::square(2))
+            .unwrap();
+    let (acc_d, st_d) = fd.evaluate(&test);
+    let (acc_e, st_e) = fe.evaluate(&test);
+    assert_eq!(acc_d, acc_e, "fabric accuracy diverges across engines");
+    assert_eq!(st_d.energy, st_e.energy);
+    assert_eq!(st_d.active_rows, st_e.active_rows);
+    assert_eq!(st_d.noc_packets, st_e.noc_packets);
+
+    // Auto (→ quantized here): exact integer math, accuracy in family.
+    let cfg_a = mk(MvmEngine::Auto);
+    let mut auto_mlp =
+        snn::MacroMlp::from_float(&model, &train, &cfg_a, LevelMap::DeviceTrue);
+    let (acc_a, _) = auto_mlp.evaluate(&test);
+    let (acc_ref, _) = dense.evaluate(&test);
+    assert!(
+        (acc_a - acc_ref).abs() < 0.05,
+        "auto {acc_a} vs dense {acc_ref}"
+    );
 }
 
 #[test]
