@@ -1,0 +1,67 @@
+//! Bench: the temporal streaming runtime (DESIGN.md S18, §Perf in
+//! EXPERIMENTS.md) — timestep sweep T ∈ {1, 4, 16} × frame density
+//! {0.05, 0.5} on the binary-spike path. One iteration is a full
+//! T-step inference (reset → stream → readout) through the 3-stage
+//! digit MLP on a 2×2 fabric mesh; the JSON rows carry per-timestep
+//! medians (`ops_per_iter = T`), so the wall-clock shape of event-
+//! driven *time* is directly comparable across T and density.
+//!
+//! ```bash
+//! cargo bench --bench stream            # full run
+//! cargo bench --bench stream -- --test  # CI smoke (fast mode)
+//! ```
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::{
+    FabricConfig, LevelMap, MacroConfig, StreamConfig,
+};
+use spikemram::snn::{Dataset, Mlp};
+use spikemram::stream::{collect_frames, PoissonStream, SpikingMlp};
+
+fn main() {
+    if std::env::args().any(|a| a == "--test") {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    }
+    let mut h = Harness::new("stream");
+    // Untrained weights: the bench measures the runtime, not the model.
+    let calib = Dataset::generate(32, 5);
+    let model = Mlp::new(6);
+    let mut mlp = SpikingMlp::from_float(
+        &model,
+        &calib,
+        &MacroConfig::default(),
+        FabricConfig::square(2),
+        LevelMap::DeviceTrue,
+        &StreamConfig::default(),
+    )
+    .expect("2x2 mesh holds the digit MLP");
+
+    for t in [1usize, 4, 16] {
+        for (dname, density) in [("d005", 0.05), ("d050", 0.5)] {
+            // One fixed Poisson stream per point: every sample times
+            // identical frames.
+            let mut src = PoissonStream::uniform(
+                256,
+                t,
+                density,
+                17 + t as u64,
+            );
+            let frames = collect_frames(&mut src);
+            let r = h.bench_function_n(
+                &format!("stream_t{t}_{dname}"),
+                t as u64,
+                |b| {
+                    b.iter(|| {
+                        mlp.run(black_box(&frames)).stats.active_rows
+                    })
+                },
+            );
+            h.note(&format!(
+                "{:.2} µs per timestep at density {density}",
+                r.per_op_median_ns() / 1e3
+            ));
+        }
+    }
+
+    h.finish();
+}

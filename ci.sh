@@ -22,12 +22,16 @@ cargo build --release
 cargo test -q
 
 echo "==> tier-1 perf records present at the repo root"
-# cargo test (batch_identity) writes fast-mode hotpath + sparsity
-# records through Harness::finish(); fail loudly if they didn't land.
-ls -l BENCH_hotpath.json BENCH_sparsity.json
+# cargo test (batch_identity, stream_e2e) writes fast-mode hotpath +
+# sparsity + stream records through Harness::finish(); fail loudly if
+# they didn't land.
+ls -l BENCH_hotpath.json BENCH_sparsity.json BENCH_stream.json
 
 echo "==> compile all targets (benches, examples, bin)"
 cargo build --all-targets --release
+
+echo "==> examples build as a dedicated target set (stream_infer et al.)"
+cargo build --examples --release
 
 echo "==> fabric bench: compile + smoke run in --test mode"
 cargo bench --bench fabric_scaling --no-run
@@ -44,6 +48,12 @@ echo "==> sparsity bench: smoke run in --test mode (S17 engine sweep)"
 # behind the event-list / quantized expectation bands in EXPERIMENTS.md.
 cargo bench --bench sparsity --no-run
 SPIKEMRAM_BENCH_FAST=1 cargo bench --bench sparsity -- --test
+
+echo "==> stream bench: smoke run in --test mode (S18 timestep sweep)"
+# Refreshes BENCH_stream.json under the release profile — the record
+# behind the per-timestep expectation bands in EXPERIMENTS.md.
+cargo bench --bench stream --no-run
+SPIKEMRAM_BENCH_FAST=1 cargo bench --bench stream -- --test
 
 echo "==> lint: cargo fmt --check && cargo clippy -D warnings (hard gate)"
 # --all-targets covers the fabric/ module (lib), its bench, example,

@@ -1,0 +1,104 @@
+//! Temporal streaming walkthrough (DESIGN.md S18): train the digit MLP,
+//! deploy it as a spiking network on a 2×2 fabric mesh, and watch one
+//! digit stream through time — per-timestep spike counts, running
+//! readout evidence, and the accuracy-vs-T trade.
+//!
+//! ```bash
+//! cargo run --release --example stream_infer
+//! ```
+
+use anyhow::Result;
+
+use spikemram::config::{
+    FabricConfig, LevelMap, MacroConfig, StreamConfig,
+};
+use spikemram::snn::{self, Dataset};
+use spikemram::stream::{
+    collect_frames, FrameEncoder, PoissonStream, SpikingMlp, TemporalCode,
+};
+
+fn main() -> Result<()> {
+    let cfg = MacroConfig::default();
+    println!("training the float MLP on 300 synthetic digits…");
+    let train = Dataset::generate(300, 42);
+    let test = Dataset::generate(40, 4242);
+    let (model, acc) = snn::train(&train, 6, 42);
+    println!("float train accuracy: {acc:.3}");
+
+    let mut mlp = SpikingMlp::from_float(
+        &model,
+        &train,
+        &cfg,
+        FabricConfig::square(2),
+        LevelMap::DeviceTrue,
+        &StreamConfig::default(),
+    )?;
+
+    // One digit, timestep by timestep: evidence accumulates on the
+    // readout membranes while hidden spikes ripple through the mesh.
+    let x = test.features_u8(0);
+    let label = test.examples[0].label;
+    let t_steps = 8;
+    let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);
+    let frames = enc.encode_frames(&x);
+    println!("\nstreaming digit {label} over {t_steps} timesteps:");
+    println!("{:>4} {:>9} {:>9} {:>9} {:>7}", "t", "in", "h1", "h2", "argmax");
+    mlp.reset();
+    for (t, f) in frames.iter().enumerate() {
+        let step = mlp.step_frame(f);
+        println!(
+            "{:>4} {:>9} {:>9} {:>9} {:>7}",
+            t,
+            f.len(),
+            step.spikes[0],
+            step.spikes[1],
+            mlp.label()
+        );
+    }
+    println!("prediction after {t_steps} steps: {}", mlp.label());
+
+    // The temporal knob: accuracy and energy vs T.
+    println!("\naccuracy / energy vs timesteps on {} digits:", test.len());
+    println!(
+        "{:>4} {:>10} {:>14} {:>12} {:>11}",
+        "T", "accuracy", "energy/inf", "spikes/inf", "occupancy"
+    );
+    for t in [1usize, 4, 16] {
+        let enc = FrameEncoder::new(TemporalCode::Rate, t, 255);
+        let mut correct = 0usize;
+        let mut energy = 0.0f64;
+        let mut spikes = 0u64;
+        let mut occ = 0.0f64;
+        for i in 0..test.len() {
+            let run = mlp.run(&enc.encode_frames(&test.features_u8(i)));
+            if run.label == test.examples[i].label {
+                correct += 1;
+            }
+            energy += run.stats.energy.total_pj();
+            spikes += run.stats.spikes_total();
+            occ += run.stats.occupancy();
+        }
+        let n = test.len() as f64;
+        println!(
+            "{:>4} {:>10.3} {:>11.1} pJ {:>12.0} {:>10.1} %",
+            t,
+            correct as f64 / n,
+            energy / n,
+            spikes as f64 / n,
+            100.0 * occ / n
+        );
+    }
+
+    // DVS-style traffic: pipelined execution over a Poisson stream.
+    let mut dvs = PoissonStream::uniform(256, 16, 0.1, 7);
+    let frames = collect_frames(&mut dvs);
+    let run = mlp.run_pipelined(&frames);
+    println!(
+        "\nPoisson stream (16 frames, 10 % density, pipelined): \
+         {} input spikes, {:.1} pJ, occupancy {:.1} %",
+        run.stats.in_spikes,
+        run.stats.energy.total_pj(),
+        run.stats.occupancy() * 100.0
+    );
+    Ok(())
+}

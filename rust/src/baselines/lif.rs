@@ -78,6 +78,75 @@ impl LifNeuron {
     }
 }
 
+/// Discrete-time LIF layer state (DESIGN.md S18): one membrane per
+/// neuron, stepped once per streaming timestep. The stream runtime
+/// carries one of these per [`SpikingMlp`] stage, resident across
+/// timesteps.
+///
+/// Update rule per step (deterministic, fixed neuron order — the
+/// pipelined-vs-serial bit-identity contract leans on this):
+/// `v ← v·(1 − leak) + i`; if `v ≥ v_th`, emit a spike and subtract
+/// the threshold (reset-by-subtraction, so residual charge carries —
+/// the spike count stays linear in the drive, the property §II-B
+/// demands). With `leak = 0` this is the exact integrate-and-fire used
+/// for rate-coded ANN→SNN conversion.
+///
+/// [`SpikingMlp`]: crate::stream::SpikingMlp
+#[derive(Debug, Clone)]
+pub struct DiscreteLif {
+    /// Membrane potentials (float activation units).
+    pub v: Vec<f64>,
+    /// Firing threshold (set `f64::INFINITY` for a pure accumulator).
+    pub v_th: f64,
+    /// Per-step decay fraction in `[0, 1)`.
+    pub leak: f64,
+}
+
+impl DiscreteLif {
+    pub fn new(n: usize, v_th: f64, leak: f64) -> DiscreteLif {
+        assert!(v_th > 0.0, "threshold must be positive");
+        assert!((0.0..1.0).contains(&leak), "leak in [0, 1)");
+        DiscreteLif {
+            v: vec![0.0; n],
+            v_th,
+            leak,
+        }
+    }
+
+    /// Zero every membrane (start of a new stream/session).
+    pub fn reset(&mut self) {
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Leak + integrate one timestep's input currents without firing
+    /// (the readout accumulator path).
+    pub fn integrate(&mut self, cur: &[f64]) {
+        assert_eq!(cur.len(), self.v.len(), "current vector length");
+        let keep = 1.0 - self.leak;
+        for (v, &i) in self.v.iter_mut().zip(cur) {
+            *v = *v * keep + i;
+        }
+    }
+
+    /// Leak, integrate, fire: appends the spiking neuron indices to
+    /// `out` (ascending — already a valid macro event list) and returns
+    /// the spike count. At most one spike per neuron per step; excess
+    /// drive stays on the membrane.
+    pub fn step(&mut self, cur: &[f64], out: &mut Vec<u32>) -> u32 {
+        assert_eq!(cur.len(), self.v.len(), "current vector length");
+        out.clear();
+        let keep = 1.0 - self.leak;
+        for (n, (v, &i)) in self.v.iter_mut().zip(cur).enumerate() {
+            *v = *v * keep + i;
+            if *v >= self.v_th {
+                *v -= self.v_th;
+                out.push(n as u32);
+            }
+        }
+        out.len() as u32
+    }
+}
+
 /// Readout-trait wrapper: energy for a full-precision conversion window
 /// (2^bits spike slots at the nominal rate).
 #[derive(Debug, Clone, Copy)]
@@ -156,6 +225,58 @@ mod tests {
         let e_busy = n.conversion_energy_fj(2.0, 100.0);
         assert!((e_idle - 400.0).abs() < 1e-9); // bias only
         assert!(e_busy > e_idle);
+    }
+
+    #[test]
+    fn discrete_lif_rate_tracks_drive_linearly() {
+        // Reset-by-subtraction keeps the count linear: constant drive d
+        // over T steps yields floor-ish T·d/v_th spikes.
+        let mut lif = DiscreteLif::new(1, 1.0, 0.0);
+        let mut out = Vec::new();
+        let mut spikes = 0u32;
+        for _ in 0..100 {
+            spikes += lif.step(&[0.3], &mut out);
+        }
+        assert_eq!(spikes, 30);
+        // Double drive → double rate.
+        lif.reset();
+        assert_eq!(lif.v, vec![0.0]);
+        let mut spikes2 = 0u32;
+        for _ in 0..100 {
+            spikes2 += lif.step(&[0.6], &mut out);
+        }
+        assert_eq!(spikes2, 60);
+    }
+
+    #[test]
+    fn discrete_lif_leak_suppresses_subthreshold_drive() {
+        // With leak, v converges to d/leak; below threshold it never
+        // fires — the LIF nonlinearity the IF (leak = 0) variant lacks.
+        let mut leaky = DiscreteLif::new(1, 1.0, 0.5);
+        let mut ifree = DiscreteLif::new(1, 1.0, 0.0);
+        let mut out = Vec::new();
+        let (mut s_leaky, mut s_if) = (0u32, 0u32);
+        for _ in 0..200 {
+            s_leaky += leaky.step(&[0.4], &mut out);
+            s_if += ifree.step(&[0.4], &mut out);
+        }
+        assert_eq!(s_leaky, 0, "v∞ = 0.8 < 1.0 never crosses");
+        assert_eq!(s_if, 80);
+    }
+
+    #[test]
+    fn discrete_lif_emits_sorted_event_list() {
+        let mut lif = DiscreteLif::new(4, 1.0, 0.0);
+        let mut out = Vec::new();
+        lif.step(&[1.5, 0.2, 3.0, 1.0], &mut out);
+        assert_eq!(out, vec![0, 2, 3]);
+        // Residuals carry: neuron 0 holds 0.5, neuron 2 holds 2.0.
+        assert_eq!(lif.v, vec![0.5, 0.2, 2.0, 0.0]);
+        // Readout accumulator: integrate never fires.
+        let mut acc = DiscreteLif::new(2, f64::INFINITY, 0.0);
+        acc.integrate(&[5.0, -1.0]);
+        acc.integrate(&[5.0, -1.0]);
+        assert_eq!(acc.v, vec![10.0, -2.0]);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod tdc;
 
 pub use adc::SarAdc;
 pub use cog::CogReadout;
-pub use lif::{LifNeuron, LifReadout};
+pub use lif::{DiscreteLif, LifNeuron, LifReadout};
 pub use osg_readout::OsgReadout;
 pub use rate_ifc::RateIfc;
 pub use tdc::Tdc;

@@ -84,4 +84,24 @@ mod tests {
         assert_eq!(RateCodec::new(10.0, 255).effective_bits(), 8);
         assert_eq!(RateCodec::new(10.0, 15).effective_bits(), 4);
     }
+
+    #[test]
+    fn encode_times_bin_into_distinct_unit_frames() {
+        // The stream frame adapter (DESIGN.md S18) bins these times
+        // into T unit-width timestep frames: encode(n) must land
+        // exactly one spike in each of the FIRST n bins — the property
+        // that makes the frame round trip a pure count.
+        let c = RateCodec::new(8.0, 8);
+        let period = c.window_ns / c.max_spikes as f64;
+        for n in [0u32, 1, 5, 8] {
+            let frames: Vec<usize> = c
+                .encode(n)
+                .iter()
+                .map(|&t| (t / period) as usize)
+                .collect();
+            assert_eq!(frames, (0..n as usize).collect::<Vec<_>>());
+            // Counting the binned spikes IS the decode.
+            assert_eq!(c.decode(&c.encode(n)) as usize, frames.len());
+        }
+    }
 }

@@ -75,4 +75,22 @@ mod tests {
         let e = c.skew_error(0, 10.0);
         assert_eq!(e, 0); // already latest possible spike
     }
+
+    #[test]
+    fn unit_lsb_spike_times_are_integer_frame_slots() {
+        // The stream frame adapter (DESIGN.md S18) runs this codec at a
+        // 1-frame LSB so a value's spike time IS its timestep index:
+        // integer, inside the T-frame window, strictly earlier for
+        // larger values, and exactly invertible.
+        let c = TtfsCodec::new(1.0, 4);
+        let mut last = f64::INFINITY;
+        for q in 1..=15u32 {
+            let t = c.encode(q);
+            assert_eq!(t.fract(), 0.0, "integer frame slot");
+            assert!((0.0..16.0).contains(&t));
+            assert!(t < last, "larger value spikes strictly earlier");
+            last = t;
+            assert_eq!(c.decode(t), q);
+        }
+    }
 }

@@ -218,6 +218,34 @@ impl MacroConfig {
     }
 }
 
+/// Temporal streaming SNN runtime knobs (DESIGN.md S18): how static or
+/// DVS-style inputs unroll into timesteps and how the per-stage LIF
+/// membranes behave. One value fully determines a `stream::SpikingMlp`
+/// deployment given the quantized weights.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Timesteps per inference (T) for static-input re-encoding.
+    pub t_steps: usize,
+    /// Per-step membrane decay fraction in `[0, 1)`: `v ← v·(1−leak)`
+    /// before integration. 0 (default) is exact integrate-and-fire —
+    /// the lossless limit of rate-coded conversion; small values model
+    /// a leaky membrane.
+    pub leak: f64,
+    /// Calibration percentile for the per-layer normalization
+    /// thresholds λ_l (same convention as `snn::quant::ActQuant`).
+    pub theta_pct: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            t_steps: 8,
+            leak: 0.0,
+            theta_pct: 99.5,
+        }
+    }
+}
+
 /// Chip-level fabric configuration (DESIGN.md S15): a mesh of macro
 /// tiles joined by an event-driven X-Y NoC carrying spike packets.
 ///
@@ -348,6 +376,14 @@ mod tests {
         let lm = LevelMap::DeviceTrue;
         let l = lm.levels();
         assert!((lm.g_mid() - l.iter().sum::<f64>() / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stream_defaults_are_sane() {
+        let s = StreamConfig::default();
+        assert!(s.t_steps >= 1);
+        assert!((0.0..1.0).contains(&s.leak));
+        assert!(s.theta_pct > 90.0 && s.theta_pct <= 100.0);
     }
 
     #[test]

@@ -27,6 +27,8 @@ struct Inner {
     // --- event-driven input occupancy (S17) ---
     active_rows: u64,
     row_slots: u64,
+    // --- modeled compute energy (S18: per-timestep stream serving) ---
+    energy_fj: f64,
     // --- fabric backend only (S15) ---
     noc_packets: u64,
     noc_hops: u64,
@@ -54,8 +56,12 @@ pub struct MetricsSnapshot {
     /// Input rows that carried a spike pair, across all served requests
     /// (DESIGN.md S17: the event-driven occupancy of the traffic).
     pub active_rows: u64,
-    /// Input row slots offered (`Σ batch × in_dim`).
+    /// Input row slots offered (`Σ batch × in_dim`; for the stream
+    /// backend, macro row slots across all stages).
     pub row_slots: u64,
+    /// Modeled compute energy of all served work (fJ; 0 unless the
+    /// backend reports it — the stream server does, per timestep).
+    pub energy_fj: f64,
     /// Spike packets routed on the fabric NoC (0 for non-fabric backends).
     pub noc_packets: u64,
     /// Total hops those packets travelled.
@@ -119,6 +125,7 @@ impl Metrics {
                 ]),
                 active_rows: 0,
                 row_slots: 0,
+                energy_fj: 0.0,
                 noc_packets: 0,
                 noc_hops: 0,
                 tiles_used: 0,
@@ -147,6 +154,20 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.active_rows += active;
         g.row_slots += slots;
+    }
+
+    /// Account modeled compute energy for served work (fJ, monotonic).
+    /// The stream backend calls this per timestep (DESIGN.md S18).
+    pub fn record_energy(&self, fj: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.energy_fj += fj;
+    }
+
+    /// Convenience: input density of all served traffic so far (one
+    /// lock, via snapshot). Returns 0.0 — never NaN, never a panic —
+    /// on a fresh server with no traffic (`row_slots == 0`).
+    pub fn input_density(&self) -> f64 {
+        self.snapshot().input_density()
     }
 
     /// Account routed fabric traffic (counters, monotonic).
@@ -181,6 +202,7 @@ impl Metrics {
             mean_batch: g.batch_sizes.mean(),
             active_rows: g.active_rows,
             row_slots: g.row_slots,
+            energy_fj: g.energy_fj,
             noc_packets: g.noc_packets,
             noc_hops: g.noc_hops,
             tiles_used: g.tiles_used,
@@ -225,6 +247,13 @@ impl Metrics {
                 s.active_rows,
                 s.row_slots,
                 s.input_density() * 100.0
+            ));
+        }
+        if s.energy_fj > 0.0 {
+            out.push_str(&format!(
+                "\nenergy: {:.1} pJ modeled ({:.2} pJ/request)",
+                s.energy_fj / 1e3,
+                s.energy_fj / 1e3 / s.requests.max(1) as f64
             ));
         }
         if s.tiles_total > 0 || s.noc_packets > 0 {
@@ -296,7 +325,37 @@ mod tests {
         assert_eq!(s.active_rows, 13);
         assert_eq!(s.row_slots, 256);
         assert!((s.input_density() - 13.0 / 256.0).abs() < 1e-12);
+        assert!((m.input_density() - 13.0 / 256.0).abs() < 1e-12);
         assert!(m.summary().contains("active_rows=13 / 256"));
+    }
+
+    #[test]
+    fn fresh_server_input_density_is_zero_not_nan() {
+        // The S18 satellite fix: a fresh server (no traffic, zero row
+        // slots) must report density 0.0 — finite, no NaN, no panic —
+        // through both the snapshot and the Metrics convenience.
+        let m = Metrics::new();
+        let d = m.input_density();
+        assert_eq!(d, 0.0);
+        assert!(d.is_finite());
+        assert_eq!(m.snapshot().input_density(), 0.0);
+        assert_eq!(MetricsSnapshot::default().input_density(), 0.0);
+        // Zero-slot activity records keep it well-defined too.
+        m.record_activity(0, 0);
+        assert_eq!(m.input_density(), 0.0);
+    }
+
+    #[test]
+    fn energy_accumulates_and_shows_in_summary() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().energy_fj, 0.0);
+        assert!(!m.summary().contains("energy:"), "no line before traffic");
+        m.record_energy(1500.0);
+        m.record_energy(500.0);
+        m.record_request(10.0);
+        let s = m.snapshot();
+        assert_eq!(s.energy_fj, 2000.0);
+        assert!(m.summary().contains("energy: 2.0 pJ modeled"));
     }
 
     #[test]

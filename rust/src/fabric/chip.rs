@@ -27,7 +27,9 @@ use anyhow::{ensure, Result};
 use crate::config::{FabricConfig, MacroConfig};
 use crate::coordinator::TiledMatrix;
 use crate::energy::EnergyBreakdown;
-use crate::macro_model::{mvm_tiled_batch_strided, CimMacro, TiledBatchItem};
+use crate::macro_model::{
+    mvm_events_parallel, mvm_tiled_batch_strided, CimMacro, TiledBatchItem,
+};
 
 use super::noc::{SpikePacket, TileCoord};
 use super::placement::{place, Placement};
@@ -111,6 +113,10 @@ pub struct LayerStage {
     /// DESIGN.md S17): refilled per `run_batch*` call, so the steady
     /// state allocates no per-item `Vec`s.
     xparts: Vec<Vec<u32>>,
+    /// Reusable per-row-tile event sublists (DESIGN.md S18): refilled
+    /// per [`run_events`](Self::run_events) call with tile-local row
+    /// indices.
+    eparts: Vec<Vec<u32>>,
 }
 
 /// One input's routed NoC phases (everything but compute): the latency
@@ -139,11 +145,6 @@ impl LayerStage {
     /// Price the four NoC phases of one input vector (ingress,
     /// distribute, gather, egress) from its per-row-tile slices.
     fn route<P: AsRef<[u32]>>(&self, xparts: &[P]) -> RoutedPhases {
-        let ct = self.tiled.col_tiles;
-        let head = self.locs[0];
-        let mut tally = FabricStats::default();
-        let mut energy = EnergyBreakdown::default();
-        let mut lat_pre = 0.0f64;
         // Per-row-tile spike activity: a silent slice produces no input
         // spikes *and* no output spikes at its shards (the flag never
         // rises, so the OSGs never fire) — such shards route nothing in
@@ -152,6 +153,21 @@ impl LayerStage {
             .iter()
             .map(|p| p.as_ref().iter().any(|&v| v > 0))
             .collect();
+        self.route_flags(&slice_active)
+    }
+
+    /// The routed-phase pricing behind [`route`](Self::route), from
+    /// per-row-tile activity flags alone (DESIGN.md S18): packet sizes
+    /// depend only on the (padded) slice length `tiled.tile` and the
+    /// layer width `tiled.k`, never on the values — so the binary-spike
+    /// path ([`run_events`](Self::run_events)) prices its traffic with
+    /// exactly the per-packet model the value path uses.
+    fn route_flags(&self, slice_active: &[bool]) -> RoutedPhases {
+        let ct = self.tiled.col_tiles;
+        let head = self.locs[0];
+        let mut tally = FabricStats::default();
+        let mut energy = EnergyBreakdown::default();
+        let mut lat_pre = 0.0f64;
         let active = slice_active.iter().any(|&a| a);
 
         // Phase 1 — ingress.
@@ -171,9 +187,10 @@ impl LayerStage {
                 if !slice_active[sidx / ct] {
                     continue;
                 }
-                let part = xparts[sidx / ct].as_ref();
-                let bits =
-                    self.fabric.in_value_bits as u64 * part.len() as u64;
+                // Slices are zero-padded to the tile size, so every
+                // distribute packet carries `tile` values.
+                let bits = self.fabric.in_value_bits as u64
+                    * self.tiled.tile as u64;
                 t_dist = t_dist.max(send(
                     &self.fabric,
                     head,
@@ -298,6 +315,66 @@ impl LayerStage {
         self.run_parts(batch)
     }
 
+    /// Binary-spike layer forward (DESIGN.md S18): one timestep's
+    /// sorted input-row event list drives every shard's
+    /// [`CimMacro::mvm_events`] fast path — no window matrix is ever
+    /// materialized — and the NoC phases are priced from slice activity
+    /// with exactly the per-packet model [`run`](Self::run) uses.
+    /// Bitwise identical to `run` on the equivalent 0/1 vector
+    /// (asserted in `rust/tests/stream_e2e.rs`): identical per-shard
+    /// scratch, identical (ti, tj) partial order, identical energy
+    /// accumulation order, identical routed traffic.
+    pub fn run_events(&mut self, events: &[u32]) -> LayerResult {
+        let rt = self.tiled.row_tiles;
+        let ct = self.tiled.col_tiles;
+        let tile = self.tiled.tile;
+        self.eparts.resize_with(rt, Vec::new);
+        for p in &mut self.eparts {
+            p.clear();
+        }
+        let mut prev: i64 = -1;
+        for &r in events {
+            assert!((r as usize) < self.tiled.k, "event row {r} of layer");
+            assert!(
+                i64::from(r) > prev,
+                "event list must be sorted ascending without duplicates"
+            );
+            prev = i64::from(r);
+            self.eparts[r as usize / tile].push((r as usize % tile) as u32);
+        }
+        let slice_active: Vec<bool> =
+            self.eparts.iter().map(|p| !p.is_empty()).collect();
+        let eparts = &self.eparts;
+        let jobs: Vec<(&mut CimMacro, &[u32])> = self
+            .macros
+            .iter_mut()
+            .enumerate()
+            .map(|(sidx, m)| (m, eparts[sidx / ct].as_slice()))
+            .collect();
+        let results = mvm_events_parallel(jobs);
+        let mut energy = EnergyBreakdown::default();
+        let mut latency = 0.0f64; // tiles are physically concurrent
+        let mut partials: Vec<Vec<Vec<f64>>> =
+            (0..rt).map(|_| Vec::with_capacity(ct)).collect();
+        for (sidx, r) in results.into_iter().enumerate() {
+            energy.add(&r.energy);
+            latency = latency.max(r.latency_ns);
+            partials[sidx / ct].push(r.y_mac);
+        }
+        // Each active input row fires once per column tile it feeds.
+        let active_rows = events.len() as u64 * ct as u64;
+        let routed = self.route_flags(&slice_active);
+        Self::assemble(
+            routed,
+            TiledBatchItem {
+                partials,
+                energy,
+                latency_ns: latency,
+                active_rows,
+            },
+        )
+    }
+
     /// Clear the reusable per-row-tile slice buffers (capacity kept).
     fn reset_parts(&mut self) {
         let rt = self.tiled.row_tiles;
@@ -409,6 +486,7 @@ impl FabricChip {
                     egress,
                     fabric: fabric.clone(),
                     xparts: Vec::new(),
+                    eparts: Vec::new(),
                 }
             })
             .collect();
@@ -454,6 +532,20 @@ impl FabricChip {
         let rs = self.stages[layer].run_batch(xs);
         self.absorb_layer(layer, &rs, xs.len());
         rs
+    }
+
+    /// Binary-spike layer forward (DESIGN.md S18): one timestep's
+    /// sorted event list through [`LayerStage::run_events`], traffic
+    /// absorbed into `self.stats` like
+    /// [`forward_layer`](Self::forward_layer).
+    pub fn forward_layer_events(
+        &mut self,
+        layer: usize,
+        events: &[u32],
+    ) -> LayerResult {
+        let r = self.stages[layer].run_events(events);
+        self.absorb_layer(layer, std::slice::from_ref(&r), 1);
+        r
     }
 
     /// Flat-input [`forward_layer_batch`](Self::forward_layer_batch)
@@ -743,6 +835,53 @@ mod tests {
         assert_eq!(batched.stats.hops, serial.stats.hops);
         assert_eq!(batched.stats.mvms, serial.stats.mvms);
         assert_eq!(batched.stats.noc_fj, serial.stats.noc_fj);
+    }
+
+    #[test]
+    fn run_events_bitwise_equals_value_forward_on_binary_input() {
+        // The S18 fabric-level contract: a timestep's event list through
+        // `forward_layer_events` is the same op as the equivalent 0/1
+        // vector through `forward_layer` — partials, energy, latency,
+        // and every NoC tally, across densities (incl. an all-silent
+        // frame, which routes nothing, and a frame that leaves a whole
+        // row tile silent).
+        let cfg = MacroConfig::default();
+        let codes = random_codes(300, 200, 501);
+        let mk = || {
+            let tiled = TiledMatrix::new(&codes, 300, 200, cfg.rows);
+            FabricChip::new(&cfg, FabricConfig::square(3), vec![tiled])
+                .unwrap()
+        };
+        let mut values = mk();
+        let mut events = mk();
+        let mut rng = Rng::new(502);
+        let mut frames: Vec<Vec<u32>> = [0.0, 0.04, 0.4, 1.0]
+            .iter()
+            .map(|&density| {
+                (0..300u32).filter(|_| rng.f64() < density).collect()
+            })
+            .collect();
+        frames.push((0..128).collect()); // row tiles 1–2 fully silent
+        for (i, ev) in frames.iter().enumerate() {
+            let mut x = vec![0u32; 300];
+            for &r in ev {
+                x[r as usize] = 1;
+            }
+            let want = values.forward_layer(0, &x);
+            let got = events.forward_layer_events(0, ev);
+            assert_eq!(got.partials, want.partials, "frame {i}");
+            assert_eq!(got.energy, want.energy);
+            assert_eq!(got.latency_ns, want.latency_ns);
+            assert_eq!(
+                (got.packets, got.flits, got.hops),
+                (want.packets, want.flits, want.hops)
+            );
+            assert_eq!(got.active_rows, want.active_rows);
+        }
+        assert_eq!(values.stats.packets, events.stats.packets);
+        assert_eq!(values.stats.noc_fj, events.stats.noc_fj);
+        assert_eq!(values.stats.active_rows, events.stats.active_rows);
+        assert_eq!(values.stats.mvms, events.stats.mvms);
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod macro_model;
 pub mod repro;
 pub mod runtime;
 pub mod snn;
+pub mod stream;
 pub mod testkit;
 pub mod util;
 pub mod xbar;

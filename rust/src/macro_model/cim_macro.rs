@@ -433,6 +433,46 @@ impl CimMacro {
         self.run_batch(xs.len(), out);
     }
 
+    /// Binary-spike fast path (DESIGN.md S18): `active` lists the rows
+    /// that carry a unit spike this timestep — sorted ascending, no
+    /// duplicates, every index `< rows`. Each listed row's window is
+    /// exactly one T_bit (the dual-spike encoding of the value 1), so
+    /// the per-row codec encode is skipped entirely: the event list IS
+    /// the encoded input. Bitwise identical to [`mvm`](Self::mvm) on
+    /// the equivalent 0/1 vector — same scratch contents, same engine
+    /// resolution, same RNG stream — asserted across densities and
+    /// engines in `rust/tests/stream_e2e.rs`.
+    pub fn mvm_events(&mut self, active: &[u32]) -> MacroResult {
+        self.begin_batch(1);
+        self.encode_event_item(0, active);
+        let mut out = MvmBatch::default();
+        self.run_batch(1, &mut out);
+        out.into_single()
+    }
+
+    /// Batched [`mvm_events`](Self::mvm_events): one sorted active-row
+    /// list per timestep/item.
+    pub fn mvm_events_batch(&mut self, lists: &[Vec<u32>]) -> MvmBatch {
+        let mut out = MvmBatch::default();
+        self.mvm_events_batch_into(lists, &mut out);
+        out
+    }
+
+    /// [`mvm_events_batch`](Self::mvm_events_batch) into a caller-held
+    /// ledger (allocation-free steady state, like
+    /// [`mvm_batch_into`](Self::mvm_batch_into)).
+    pub fn mvm_events_batch_into(
+        &mut self,
+        lists: &[Vec<u32>],
+        out: &mut MvmBatch,
+    ) {
+        self.begin_batch(lists.len());
+        for (b, ev) in lists.iter().enumerate() {
+            self.encode_event_item(b, ev);
+        }
+        self.run_batch(lists.len(), out);
+    }
+
     /// Flat batch input (DESIGN.md S17): `xs` is `batch` inputs of
     /// `in_dim` values each, concatenated row-major — callers that
     /// collect requests (server workers, fabric stages) feed one
@@ -508,6 +548,36 @@ impl CimMacro {
         }
         self.scratch.active_rows[b] = active;
         self.scratch.w_max[b] = w_max;
+        self.scratch.active_start.push(self.scratch.active_list.len());
+    }
+
+    /// Encode item `b` from a sorted binary-spike event list
+    /// (DESIGN.md S18): every listed row gets a one-T_bit window and a
+    /// 1-LSB quantized input — exactly what [`encode_item`] writes for
+    /// the equivalent 0/1 vector, without touching the silent rows or
+    /// the per-row codec. Items must be encoded in order after
+    /// [`begin_batch`].
+    ///
+    /// [`encode_item`]: Self::encode_item
+    fn encode_event_item(&mut self, b: usize, active: &[u32]) {
+        let rows = self.cfg.rows;
+        debug_assert_eq!(self.scratch.active_start.len(), b + 1, "encode order");
+        let t_bit = self.codec.t_bit_ns;
+        let base = b * rows;
+        let mut prev: i64 = -1;
+        for &r in active {
+            assert!((r as usize) < rows, "event row {r} of {rows}");
+            assert!(
+                i64::from(r) > prev,
+                "event list must be sorted ascending without duplicates"
+            );
+            prev = i64::from(r);
+            self.scratch.windows_ns[base + r as usize] = t_bit;
+            self.scratch.x_lsb[base + r as usize] = 1;
+            self.scratch.active_list.push(r);
+        }
+        self.scratch.active_rows[b] = active.len() as u32;
+        self.scratch.w_max[b] = if active.is_empty() { 0.0 } else { t_bit };
         self.scratch.active_start.push(self.scratch.active_list.len());
     }
 
@@ -1444,6 +1514,112 @@ mod tests {
         };
         let xs = sparse_inputs(30, 0.9, 4);
         assert_batch_bit_identical(mk(), mk(), &xs);
+    }
+
+    /// Binary 0/1 input vector and its sorted active-row event list.
+    fn binary_input(seed: u64, density: f64) -> (Vec<u32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<u32> = (0..128)
+            .map(|_| if rng.f64() < density { 1 } else { 0 })
+            .collect();
+        let ev: Vec<u32> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0)
+            .map(|(r, _)| r as u32)
+            .collect();
+        (x, ev)
+    }
+
+    #[test]
+    fn mvm_events_bitwise_equals_mvm_on_binary_vector() {
+        // The S18 binary-spike contract: the event-list entry is the
+        // same op as the 0/1 vector, for every engine and density —
+        // including the empty frame and the all-dense frame.
+        for engine in [
+            MvmEngine::Auto,
+            MvmEngine::Dense,
+            MvmEngine::EventList,
+            MvmEngine::Quantized,
+        ] {
+            for (seed, density) in
+                [(301u64, 0.0), (302, 0.05), (303, 0.5), (304, 1.0)]
+            {
+                let (mut a, _) = macro_with_codes(seed);
+                let (mut b, _) = macro_with_codes(seed);
+                a.set_engine(engine);
+                b.set_engine(engine);
+                let (x, ev) = binary_input(seed ^ 0xe, density);
+                let want = a.mvm(&x);
+                let got = b.mvm_events(&ev);
+                assert_eq!(got.y_mac, want.y_mac, "{engine:?} d={density}");
+                assert_eq!(got.t_out_ns, want.t_out_ns);
+                assert_eq!(got.v_charge, want.v_charge);
+                assert_eq!(got.latency_ns, want.latency_ns);
+                assert_eq!(got.events, want.events);
+                assert_eq!(got.energy, want.energy);
+            }
+        }
+    }
+
+    #[test]
+    fn mvm_events_batch_bitwise_equals_mvm_batch() {
+        let (mut a, _) = macro_with_codes(311);
+        let (mut b, _) = macro_with_codes(311);
+        let mut xs = Vec::new();
+        let mut evs = Vec::new();
+        for (i, density) in [0.0, 0.02, 0.3, 1.0].into_iter().enumerate() {
+            let (x, ev) = binary_input(320 + i as u64, density);
+            xs.push(x);
+            evs.push(ev);
+        }
+        let want = a.mvm_batch(&xs);
+        let got = b.mvm_events_batch(&evs);
+        assert_eq!(got.engine_used(), want.engine_used());
+        for i in 0..xs.len() {
+            assert_eq!(got.y_mac(i), want.y_mac(i), "item {i}");
+            assert_eq!(got.t_out_ns(i), want.t_out_ns(i));
+            assert_eq!(got.latency_ns(i), want.latency_ns(i));
+            assert_eq!(got.events(i), want.events(i));
+            assert_eq!(got.energy(i), want.energy(i));
+            assert_eq!(got.active_rows(i), want.active_rows(i));
+        }
+    }
+
+    #[test]
+    fn mvm_events_nonideal_consumes_same_rng_stream() {
+        // The general event loop (c2c noise) must see the same windows
+        // and draw the same per-row factors either way.
+        let cfg = MacroConfig {
+            nonideal: NonIdeality {
+                sigma_r_c2c: 0.01,
+                ..NonIdeality::ideal()
+            },
+            ..MacroConfig::default()
+        };
+        let mut rng = Rng::new(331);
+        let codes: Vec<u8> =
+            (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+        let mk = || {
+            let mut m = CimMacro::with_nonidealities(cfg.clone(), 5);
+            m.program(&codes);
+            m
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for (i, density) in [0.3, 0.0, 0.9].into_iter().enumerate() {
+            let (x, ev) = binary_input(340 + i as u64, density);
+            let want = a.mvm(&x);
+            let got = b.mvm_events(&ev);
+            assert_eq!(got.y_mac, want.y_mac, "step {i}");
+            assert_eq!(got.energy, want.energy);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted ascending")]
+    fn mvm_events_rejects_unsorted_list() {
+        let (mut m, _) = macro_with_codes(351);
+        let _ = m.mvm_events(&[5, 3]);
     }
 
     #[test]

@@ -51,6 +51,17 @@ pub fn mvm_parallel_batch(
     par_map_jobs(jobs, |(m, xs)| m.mvm_batch(xs))
 }
 
+/// [`mvm_parallel`] for the binary-spike fast path (DESIGN.md S18):
+/// each job pairs a programmed macro with its *sorted active-row event
+/// list* for one timestep — the stream runtime's per-tile fan-out.
+/// Results in job order, bit-identical to serial
+/// [`CimMacro::mvm_events`] calls.
+pub fn mvm_events_parallel(
+    jobs: Vec<(&mut CimMacro, &[u32])>,
+) -> Vec<MacroResult> {
+    par_map_jobs(jobs, |(m, ev)| m.mvm_events(ev))
+}
+
 /// Flat-input [`mvm_parallel_batch`] (DESIGN.md S17): each job carries
 /// its batch as one `[batch × in_dim]` flat slice, so upstream callers
 /// (fabric stages, servers) feed reusable buffers instead of allocating

@@ -48,14 +48,18 @@ experiments (paper artifacts → results/):
   scaling           EX1 array-size scaling study (parasitics + headroom)
   fabric            EX2 multi-macro fabric scaling sweep (macros 1 → 64:
                     spike-packet NoC share, hops, modeled throughput)
+  stream            EX3 temporal streaming sweep (accuracy/energy/occupancy
+                    vs T ∈ {1,2,4,8,16} on the binary-spike path)
 
 operations:
   mvm        run one 128×128 macro MVM   [--seed N] [--backend sim|pjrt]
   snn        train + quantize + run the digits MLP on macros
              [--train N] [--test N] [--epochs N] [--levels device|ideal]
   serve      spin up the batching server  [--requests N] [--workers N]
-             [--batch N] [--backend sim|pjrt|fabric] [--artifacts DIR]
-             [--grid G] [--k K] [--n N]   (fabric: K×N weights, G×G mesh)
+             [--batch N] [--backend sim|pjrt|fabric|stream]
+             [--artifacts DIR] [--grid G] [--k K] [--n N]
+             (fabric: K×N weights, G×G mesh)
+             (stream: [--sessions S] [--steps T] per-session LIF state)
   selfcheck  verify PJRT artifacts match the behavioral simulator
 
 common options: --seed N   --artifacts DIR (default: artifacts)
@@ -120,6 +124,12 @@ fn main() -> Result<()> {
             println!(
                 "{}",
                 repro::fabric::render(&repro::fabric::run(&cfg, seed))
+            );
+        }
+        "stream" => {
+            println!(
+                "{}",
+                repro::stream::render(&repro::stream::run(&cfg, seed))
             );
         }
         "mvm" => cmd_mvm(&args, &cfg, seed)?,
@@ -228,6 +238,9 @@ fn cmd_snn(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
 
 fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
     let n = args.get_usize("requests", 256);
+    if args.get_str("backend", "sim") == "stream" {
+        return cmd_serve_stream(args, cfg, seed);
+    }
     let backend = match args.get_str("backend", "sim").as_str() {
         "sim" => BackendKind::Sim,
         "pjrt" => BackendKind::Pjrt {
@@ -285,6 +298,83 @@ fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
             snap.hops_per_packet()
         );
     }
+    server.shutdown();
+    Ok(())
+}
+
+/// `serve --backend stream` (DESIGN.md S18): session mode — every
+/// request stream is a temporal inference with per-session LIF state
+/// resident on the server; metrics report per-timestep latency,
+/// energy, and occupancy.
+fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
+    use spikemram::config::StreamConfig;
+    use spikemram::stream::{
+        FrameEncoder, StreamServer, StreamServerConfig, StreamSpec,
+        TemporalCode,
+    };
+
+    let sessions = args.get_usize("sessions", 8);
+    let t_steps = args.get_usize("steps", 8);
+    let n_train = args.get_usize("train", 200);
+    println!("training the digit MLP ({n_train} examples)…");
+    let train_data = snn::Dataset::generate(n_train, seed);
+    let (model, acc) = snn::train(&train_data, 4, seed);
+    println!("float train accuracy {acc:.3}; deploying per worker…");
+    let spec = StreamSpec {
+        model,
+        calib: train_data,
+        mcfg: cfg.clone(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig {
+            t_steps,
+            ..StreamConfig::default()
+        },
+    };
+    let server = StreamServer::start(
+        spec,
+        StreamServerConfig {
+            workers: args.get_usize("workers", 2),
+        },
+    )?;
+
+    let test = snn::Dataset::generate(sessions, seed ^ 0xabcd);
+    let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);
+    let t0 = std::time::Instant::now();
+    let ids: Vec<u64> =
+        (0..sessions).map(|_| server.open_session()).collect();
+    // Interleave the sessions' timesteps — streaming traffic, not
+    // one-shot batches.
+    let frames: Vec<Vec<Vec<u32>>> = (0..sessions)
+        .map(|i| enc.encode_frames(&test.features_u8(i)))
+        .collect();
+    for t in 0..t_steps {
+        for (s, &id) in ids.iter().enumerate() {
+            let _ = server.frame(id, frames[s][t].clone());
+        }
+    }
+    let mut correct = 0usize;
+    for (s, &id) in ids.iter().enumerate() {
+        let r = server.finish(id);
+        if r.label == test.examples[s].label {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{sessions} sessions × {t_steps} timesteps in {:.1} ms → \
+         {:.0} frames/s; {} / {sessions} labels correct",
+        dt.as_secs_f64() * 1e3,
+        (sessions * t_steps) as f64 / dt.as_secs_f64(),
+        correct
+    );
+    println!("{}", server.metrics.summary());
+    let snap = server.metrics.snapshot();
+    println!(
+        "per-timestep: {:.2} pJ, occupancy {:.1} %",
+        snap.energy_fj / 1e3 / snap.requests.max(1) as f64,
+        snap.input_density() * 100.0
+    );
     server.shutdown();
     Ok(())
 }

@@ -14,6 +14,7 @@
 //! | E8 | [`table2`] | Table II comparison |
 //! | EX1 | [`scaling`] | extension: array-size scaling |
 //! | EX2 | [`fabric`] | extension: multi-macro fabric scaling (S15) |
+//! | EX3 | [`stream`] | extension: temporal streaming sweep (S18) |
 //!
 //! E9 (end-to-end SNN) lives in `examples/snn_inference.rs`.
 
@@ -25,6 +26,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod report;
 pub mod scaling;
+pub mod stream;
 pub mod table1;
 pub mod table2;
 

@@ -108,6 +108,26 @@ fn dequant_z(
         .collect()
 }
 
+/// Float-forward the first `cap` calibration examples and collect the
+/// hidden activations `(h1, h2)` — the single calibration sweep shared
+/// by [`MacroMlp::from_float`]'s `ActQuant` steps and the stream
+/// runtime's λ-threshold normalization (DESIGN.md S18).
+pub fn collect_activations(
+    model: &Mlp,
+    calib: &Dataset,
+    cap: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut h1_all = Vec::new();
+    let mut h2_all = Vec::new();
+    for i in 0..calib.len().min(cap) {
+        let x = calib.features_f32(i);
+        let (h1, h2, _) = model.forward(&x);
+        h1_all.extend(h1);
+        h2_all.extend(h2);
+    }
+    (h1_all, h2_all)
+}
+
 /// The full quantized MLP deployed on macros.
 pub struct MacroMlp {
     layers: Vec<MacroLayer>,
@@ -169,14 +189,7 @@ impl MacroMlp {
         );
 
         // Calibrate activation ranges with float forward passes.
-        let mut h1_all = Vec::new();
-        let mut h2_all = Vec::new();
-        for i in 0..calib.len().min(64) {
-            let x = calib.features_f32(i);
-            let (h1, h2, _) = model.forward(&x);
-            h1_all.extend(h1);
-            h2_all.extend(h2);
-        }
+        let (h1_all, h2_all) = collect_activations(model, calib, 64);
         let act_quants = vec![
             ActQuant::calibrate(&h1_all, 99.5),
             ActQuant::calibrate(&h2_all, 99.5),

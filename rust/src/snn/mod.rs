@@ -9,6 +9,6 @@ pub mod mlp;
 pub mod quant;
 
 pub use dataset::{Dataset, Example};
-pub use infer::{InferStats, MacroMlp};
+pub use infer::{collect_activations, InferStats, MacroMlp};
 pub use mlp::{accuracy, train, Mlp};
 pub use quant::{quantize_layer, ActQuant, QuantLayer};

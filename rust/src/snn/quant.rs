@@ -155,6 +155,13 @@ impl ActQuant {
         }
     }
 
+    /// The calibrated full-scale activation a_max (= `step · 255`) —
+    /// the stream runtime's per-layer normalization threshold λ
+    /// (DESIGN.md S18).
+    pub fn a_max(&self) -> f32 {
+        self.step * 255.0
+    }
+
     pub fn quantize(&self, a: f32) -> u32 {
         ((a.max(0.0) / self.step).round() as u32).min(255)
     }

@@ -1,0 +1,310 @@
+//! Static-input → temporal-frame re-encoding (DESIGN.md S18): unrolls a
+//! static 8-bit input vector into T binary timestep frames through the
+//! *existing* §II-B codecs — [`RateCodec`] (spike count over the window)
+//! or [`TtfsCodec`] (single spike, earlier = larger) — so the streaming
+//! runtime consumes exactly the codes the paper compares against.
+//!
+//! A frame is a sorted list of active row indices: precisely the event
+//! list `CimMacro::mvm_events` takes. Zero values emit nothing in
+//! either code (the event-driven convention; note this deviates from a
+//! raw TTFS decoder, which would reserve the *latest* slot for zero —
+//! here that slot is simply never used, and an absent spike decodes to
+//! zero).
+//!
+//! Accumulated decode (`decode_accumulated`) reconstructs the static
+//! value from the frames to within [`quant_tolerance`] — the round-trip
+//! contract the encoder tests pin down, including all-zero and
+//! saturating inputs.
+//!
+//! [`quant_tolerance`]: FrameEncoder::quant_tolerance
+
+use crate::coding::{RateCodec, TtfsCodec};
+
+/// Which temporal code unrolls static values into frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TemporalCode {
+    /// Value → spike *count*: n = round(x·T/x_max) spikes in the first
+    /// n frames (the codec's evenly spaced times land one per frame).
+    Rate,
+    /// Value → spike *position*: one spike at frame T−1−q with
+    /// q = round(x·(T−1)/x_max); requires T a power of two (the codec's
+    /// bit-width constraint). Far sparser than rate coding — at most
+    /// one spike per row over the whole stream.
+    Ttfs,
+}
+
+/// Re-encoder from static values to T binary frames and back.
+#[derive(Debug, Clone)]
+pub struct FrameEncoder {
+    pub code: TemporalCode,
+    /// Timesteps per inference (T ≥ 1).
+    pub t_steps: usize,
+    /// Static full scale (255 for 8-bit pixels); inputs saturate here.
+    pub max_in: u32,
+    /// Rate codec over a T-frame window (1 ns frames, max T spikes).
+    rate: RateCodec,
+    /// TTFS codec with a 1-frame LSB; `None` for `Rate` or T = 1.
+    ttfs: Option<TtfsCodec>,
+}
+
+impl FrameEncoder {
+    pub fn new(code: TemporalCode, t_steps: usize, max_in: u32) -> Self {
+        assert!(t_steps >= 1, "at least one timestep");
+        assert!(max_in >= 1, "full scale");
+        let ttfs = match code {
+            TemporalCode::Ttfs if t_steps > 1 => {
+                assert!(
+                    t_steps.is_power_of_two() && t_steps <= 1 << 16,
+                    "TTFS frames must be a power of two (codec bit-width)"
+                );
+                Some(TtfsCodec::new(1.0, t_steps.trailing_zeros()))
+            }
+            _ => None,
+        };
+        FrameEncoder {
+            code,
+            t_steps,
+            max_in,
+            rate: RateCodec::new(t_steps as f64, t_steps as u32),
+            ttfs,
+        }
+    }
+
+    /// Quantize a static value onto this code's temporal alphabet:
+    /// spike count for `Rate` (0..=T), level for `Ttfs` (0..=T−1).
+    pub fn quantize(&self, x: u32) -> u32 {
+        let x = x.min(self.max_in) as f64;
+        let levels = match self.code {
+            TemporalCode::Rate => self.t_steps,
+            TemporalCode::Ttfs => self.t_steps - 1,
+        }
+        .max(1) as f64;
+        (x * levels / self.max_in as f64).round() as u32
+    }
+
+    /// Reconstruct the static value from its temporal alphabet symbol.
+    pub fn dequantize(&self, q: u32) -> u32 {
+        let levels = match self.code {
+            TemporalCode::Rate => self.t_steps,
+            TemporalCode::Ttfs => self.t_steps - 1,
+        }
+        .max(1) as f64;
+        (q.min(levels as u32) as f64 * self.max_in as f64 / levels).round()
+            as u32
+    }
+
+    /// Encode a static vector into T frames of sorted active-row lists.
+    pub fn encode_frames(&self, x: &[u32]) -> Vec<Vec<u32>> {
+        let mut frames: Vec<Vec<u32>> = vec![Vec::new(); self.t_steps];
+        for (r, &xv) in x.iter().enumerate() {
+            match self.code {
+                TemporalCode::Rate => {
+                    // The codec's spike times are i·(window/T) for
+                    // i < n — exactly one per unit-width frame bin.
+                    let period = self.rate.window_ns
+                        / self.rate.max_spikes as f64;
+                    for t_ns in self.rate.encode(self.quantize(xv)) {
+                        frames[(t_ns / period) as usize].push(r as u32);
+                    }
+                }
+                TemporalCode::Ttfs => {
+                    let q = self.quantize(xv);
+                    if q == 0 {
+                        continue; // zero emits nothing (event-driven)
+                    }
+                    let f = match &self.ttfs {
+                        // 1-frame LSB: the codec's spike time IS the
+                        // frame index (earlier = larger value).
+                        Some(c) => c.encode(q).round() as usize,
+                        None => 0, // T = 1: the only frame
+                    };
+                    frames[f].push(r as u32);
+                }
+            }
+        }
+        frames
+    }
+
+    /// Accumulate T frames back into static values — the inverse of
+    /// [`encode_frames`](Self::encode_frames) up to
+    /// [`quant_tolerance`](Self::quant_tolerance).
+    pub fn decode_accumulated(
+        &self,
+        frames: &[Vec<u32>],
+        rows: usize,
+    ) -> Vec<u32> {
+        assert_eq!(frames.len(), self.t_steps, "frame count");
+        match self.code {
+            TemporalCode::Rate => {
+                // Count spikes per row (what RateCodec::decode does to
+                // a spike train) and map the count back to the value.
+                let mut counts = vec![0u32; rows];
+                for frame in frames {
+                    for &r in frame {
+                        counts[r as usize] += 1;
+                    }
+                }
+                counts.into_iter().map(|c| self.dequantize(c)).collect()
+            }
+            TemporalCode::Ttfs => {
+                // First (only) spike position per row → level → value.
+                let mut out = vec![0u32; rows];
+                for (f, frame) in frames.iter().enumerate() {
+                    for &r in frame {
+                        if out[r as usize] == 0 {
+                            let q = match &self.ttfs {
+                                Some(c) => c.decode(f as f64),
+                                None => 1, // T = 1: any spike is full scale
+                            };
+                            out[r as usize] = self.dequantize(q);
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Worst-case |decode − encode input| of the round trip: half a
+    /// temporal quantization step (the whole scale for T = 1).
+    pub fn quant_tolerance(&self) -> u32 {
+        let levels = match self.code {
+            TemporalCode::Rate => self.t_steps,
+            TemporalCode::Ttfs => self.t_steps - 1,
+        }
+        .max(1) as u32;
+        self.max_in.div_ceil(2 * levels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn probe_values() -> Vec<u32> {
+        let mut v = vec![0u32, 1, 64, 127, 128, 200, 254, 255, 400];
+        let mut rng = Rng::new(71);
+        v.extend((0..32).map(|_| rng.below(256) as u32));
+        v
+    }
+
+    #[test]
+    fn rate_roundtrip_within_quantization_tolerance() {
+        // The satellite contract: encode → temporal frames →
+        // accumulated decode stays within the T-step quantization of
+        // the static window encoding, for every T.
+        for t in [1usize, 2, 4, 8, 16] {
+            let enc = FrameEncoder::new(TemporalCode::Rate, t, 255);
+            let x = probe_values();
+            let frames = enc.encode_frames(&x);
+            assert_eq!(frames.len(), t);
+            let got = enc.decode_accumulated(&frames, x.len());
+            let tol = enc.quant_tolerance();
+            for (r, (&xv, &g)) in x.iter().zip(&got).enumerate() {
+                let want = xv.min(255);
+                assert!(
+                    (g as i64 - want as i64).unsigned_abs() <= tol as u64,
+                    "T={t} row {r}: {want} -> {g} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ttfs_roundtrip_within_quantization_tolerance() {
+        for t in [1usize, 2, 4, 8, 16] {
+            let enc = FrameEncoder::new(TemporalCode::Ttfs, t, 255);
+            let x = probe_values();
+            let frames = enc.encode_frames(&x);
+            let got = enc.decode_accumulated(&frames, x.len());
+            let tol = enc.quant_tolerance();
+            for (r, (&xv, &g)) in x.iter().zip(&got).enumerate() {
+                let want = xv.min(255);
+                assert!(
+                    (g as i64 - want as i64).unsigned_abs() <= tol as u64,
+                    "T={t} row {r}: {want} -> {g} (tol {tol})"
+                );
+            }
+            // TTFS sends at most one spike per row over the stream.
+            let mut seen = vec![0u32; x.len()];
+            for frame in &frames {
+                for &r in frame {
+                    seen[r as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c <= 1));
+        }
+    }
+
+    #[test]
+    fn zero_and_saturating_inputs_are_exact() {
+        for code in [TemporalCode::Rate, TemporalCode::Ttfs] {
+            for t in [1usize, 4, 16] {
+                let enc = FrameEncoder::new(code, t, 255);
+                let frames = enc.encode_frames(&[0, 255, 0, 300]);
+                // All-zero rows never appear in any frame.
+                for frame in &frames {
+                    assert!(!frame.contains(&0));
+                    assert!(!frame.contains(&2));
+                }
+                let got = enc.decode_accumulated(&frames, 4);
+                assert_eq!(got[0], 0, "{code:?} T={t}");
+                assert_eq!(got[1], 255, "saturating input decodes exactly");
+                assert_eq!(got[3], 255, "above-scale input saturates");
+            }
+        }
+        // An all-zero vector produces T empty frames.
+        let enc = FrameEncoder::new(TemporalCode::Rate, 8, 255);
+        assert!(enc
+            .encode_frames(&[0u32; 32])
+            .iter()
+            .all(|f| f.is_empty()));
+    }
+
+    #[test]
+    fn frames_are_sorted_event_lists() {
+        let mut rng = Rng::new(73);
+        let x: Vec<u32> =
+            (0..200).map(|_| rng.below(256) as u32).collect();
+        for code in [TemporalCode::Rate, TemporalCode::Ttfs] {
+            let enc = FrameEncoder::new(code, 8, 255);
+            for frame in enc.encode_frames(&x) {
+                assert!(frame.windows(2).all(|w| w[0] < w[1]), "{code:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rate_frames_agree_with_raw_codec() {
+        // The adapter is a *binning* of RateCodec, not a reimplementation:
+        // row r's spike count across frames equals the codec's count.
+        let enc = FrameEncoder::new(TemporalCode::Rate, 8, 255);
+        let codec = RateCodec::new(8.0, 8);
+        for x in [0u32, 31, 128, 255] {
+            let frames = enc.encode_frames(&[x]);
+            let count: usize =
+                frames.iter().map(|f| f.len()).sum();
+            assert_eq!(count as u32, codec.decode(&codec.encode(enc.quantize(x))));
+        }
+    }
+
+    #[test]
+    fn ttfs_frames_agree_with_raw_codec() {
+        // Larger values spike earlier, exactly at the codec's slot.
+        let enc = FrameEncoder::new(TemporalCode::Ttfs, 16, 255);
+        let codec = TtfsCodec::new(1.0, 4);
+        for x in [17u32, 100, 255] {
+            let frames = enc.encode_frames(&[x]);
+            let f = frames
+                .iter()
+                .position(|fr| !fr.is_empty())
+                .expect("nonzero value spikes");
+            assert_eq!(f, codec.encode(enc.quantize(x)).round() as usize);
+        }
+        let lo = enc.encode_frames(&[40]);
+        let hi = enc.encode_frames(&[240]);
+        let pos = |fs: &[Vec<u32>]| fs.iter().position(|f| !f.is_empty());
+        assert!(pos(&hi) < pos(&lo), "larger value spikes earlier");
+    }
+}

@@ -1,0 +1,168 @@
+//! Pipelined streaming executor (DESIGN.md S18): timestep t at stage l
+//! overlaps timestep t−1 at stage l+1, with every stage's LIF membranes
+//! resident on that stage — the temporal analogue of the fabric
+//! dataflow executor, built on the same persistent worker pool.
+//!
+//! Shape: one `scope_map` job per stage. Stage 0 walks the caller's
+//! frame slice directly; stage l > 0 drains an mpsc channel fed by
+//! stage l−1 and stops when the upstream sender drops. Jobs therefore
+//! *block* on their inboxes (unlike the fabric executor's non-blocking
+//! stage turns) — safe here because:
+//!
+//! * stage 0's input is fully materialized before the run starts, so
+//!   the most-upstream unfinished stage can always make progress;
+//! * `scope_map` claims jobs in index = stage order, so the claimed
+//!   set is always a prefix that contains that stage; and
+//! * the caller claims jobs too, so even a single-worker pool (or a
+//!   pool saturated by other scopes) drives the chain to completion.
+//!   Nested fan-outs inside a stage (the shard `mvm_events_parallel`)
+//!   are caller-claiming for the same reason.
+//!
+//! Bit-identity: each stage processes timesteps in channel FIFO = time
+//! order against its own membranes, folds its tally in the same
+//! per-stage order as the serial loop, and the final fold is the shared
+//! `SpikingMlp::assemble_run` — so membranes, spike trains, and every
+//! energy tally come out *bitwise* equal to [`SpikingMlp::run`]
+//! (asserted here and in `rust/tests/stream_e2e.rs`). The pipelining
+//! buys wall-clock only.
+
+use std::sync::mpsc;
+
+use crate::util::pool;
+
+use super::snn::{SpikingMlp, SpikingStage, StageTally, StreamRun};
+
+/// Where a stage's frames come from.
+enum Feed<'a> {
+    /// Stage 0: the caller's frame stream.
+    Source(&'a [Vec<u32>]),
+    /// Stage l > 0: the upstream stage's output events.
+    Upstream(mpsc::Receiver<Vec<u32>>),
+}
+
+/// One stage job: the stage (with resident membranes), its feed, and
+/// the downstream sender (`None` for the readout stage).
+struct StageJob<'a> {
+    stage: &'a mut SpikingStage,
+    feed: Feed<'a>,
+    down: Option<mpsc::Sender<Vec<u32>>>,
+}
+
+/// Run one stage to completion: step every inbound frame in order,
+/// forward the emitted events downstream, tally locally.
+fn stage_task(job: StageJob<'_>) -> (Vec<Vec<u32>>, StageTally) {
+    let StageJob { stage, feed, down } = job;
+    let mut tally = StageTally::default();
+    let mut trains: Vec<Vec<u32>> = Vec::new();
+    let mut handle = |stage: &mut SpikingStage, events: &[u32]| {
+        let (next, r) = stage.step(events);
+        stage.tally_into(&mut tally, &r, &next);
+        if let Some(tx) = &down {
+            // A dropped downstream only happens on a sibling panic,
+            // which scope_map re-raises on the caller anyway.
+            let _ = tx.send(next.clone());
+        }
+        trains.push(next);
+    };
+    match feed {
+        Feed::Source(frames) => {
+            for f in frames {
+                handle(stage, f);
+            }
+        }
+        Feed::Upstream(rx) => {
+            while let Ok(events) = rx.recv() {
+                handle(stage, &events);
+            }
+        }
+    }
+    // `handle`'s borrows end here; `down` drops with the job, closing
+    // the downstream inbox.
+    (trains, tally)
+}
+
+impl SpikingMlp {
+    /// [`run`](Self::run), pipelined across the worker pool: distinct
+    /// stages overlap on distinct workers while each stage's membranes
+    /// stay resident with it. Bitwise identical to the serial loop —
+    /// membranes, spike trains, tallies (see module docs).
+    pub fn run_pipelined(&mut self, frames: &[Vec<u32>]) -> StreamRun {
+        self.reset();
+        let ns = self.stages.len();
+        let in_spikes: u64 = frames.iter().map(|f| f.len() as u64).sum();
+
+        let mut feeds: Vec<Feed> = Vec::with_capacity(ns);
+        let mut downs: Vec<Option<mpsc::Sender<Vec<u32>>>> =
+            Vec::with_capacity(ns);
+        feeds.push(Feed::Source(frames));
+        for _ in 1..ns {
+            let (tx, rx) = mpsc::channel();
+            downs.push(Some(tx));
+            feeds.push(Feed::Upstream(rx));
+        }
+        downs.push(None);
+
+        let jobs: Vec<StageJob> = self
+            .stages
+            .iter_mut()
+            .zip(feeds.into_iter().zip(downs))
+            .map(|(stage, (feed, down))| StageJob { stage, feed, down })
+            .collect();
+        let results = pool::scope_map(jobs, stage_task);
+
+        let mut trains = Vec::with_capacity(ns);
+        let mut tallies = Vec::with_capacity(ns);
+        for (t, tally) in results {
+            trains.push(t);
+            tallies.push(tally);
+        }
+        self.assemble_run(frames.len(), in_spikes, tallies, trains)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::{FrameEncoder, TemporalCode};
+    use super::super::snn::tiny_mlp;
+    use super::super::source::{collect_frames, PoissonStream};
+
+    #[test]
+    fn pipelined_run_bitwise_equals_serial() {
+        let (mut mlp, data) = tiny_mlp(41);
+        let enc = FrameEncoder::new(TemporalCode::Rate, 8, 255);
+        for i in 0..3 {
+            let frames = enc.encode_frames(&data.features_u8(i));
+            let serial = mlp.run(&frames);
+            let piped = mlp.run_pipelined(&frames);
+            assert_eq!(piped.label, serial.label, "item {i}");
+            assert_eq!(piped.out_v, serial.out_v, "membranes item {i}");
+            assert_eq!(piped.trains, serial.trains, "spike trains item {i}");
+            let (s, p) = (&serial.stats, &piped.stats);
+            assert_eq!(p.energy, s.energy, "energy tallies item {i}");
+            assert_eq!(p.latency_ns, s.latency_ns);
+            assert_eq!(p.active_rows, s.active_rows);
+            assert_eq!(p.row_slots, s.row_slots);
+            assert_eq!(p.macs, s.macs);
+            assert_eq!((p.noc_packets, p.noc_hops), (s.noc_packets, s.noc_hops));
+            assert_eq!(p.in_spikes, s.in_spikes);
+            assert_eq!(p.layer_spikes, s.layer_spikes);
+        }
+    }
+
+    #[test]
+    fn pipelined_handles_dvs_streams_and_empty_input() {
+        let (mut mlp, _) = tiny_mlp(43);
+        let mut src = PoissonStream::uniform(256, 12, 0.15, 44);
+        let frames = collect_frames(&mut src);
+        let serial = mlp.run(&frames);
+        let piped = mlp.run_pipelined(&frames);
+        assert_eq!(piped.out_v, serial.out_v);
+        assert_eq!(piped.stats.energy, serial.stats.energy);
+
+        // Zero timesteps: a clean no-op with zeroed membranes.
+        let empty = mlp.run_pipelined(&[]);
+        assert_eq!(empty.stats.timesteps, 0);
+        assert!(empty.out_v.iter().all(|&v| v == 0.0));
+        assert_eq!(empty.stats.energy.total_fj(), 0.0);
+    }
+}

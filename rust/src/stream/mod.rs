@@ -1,0 +1,38 @@
+//! Temporal streaming SNN runtime (DESIGN.md S18): time-stepped LIF
+//! inference over event streams, end-to-end on the event-list engine.
+//!
+//! The macro is event-driven *in space* (silent rows cost nothing —
+//! S17); this subsystem makes it event-driven *in time*: inputs arrive
+//! as T binary frames (DVS-style [`PoissonStream`] traffic, or a static
+//! input unrolled by [`FrameEncoder`] through the §II-B rate/TTFS
+//! codecs), each frame is an active-row event list fed straight into
+//! `CimMacro::mvm_events` — binary spikes skip window computation
+//! entirely — and per-stage LIF membranes ([`baselines::DiscreteLif`])
+//! carry the state between timesteps.
+//!
+//! Pieces:
+//! * [`source`] — event-stream sources (Poisson/DVS, encoded-static);
+//! * [`encode`] — static → T-frame re-encoding + accumulated decode;
+//! * [`snn`] — [`SpikingMlp`]: the quantized digit MLP as a temporal
+//!   network on a fabric chip, serial reference loop;
+//! * [`exec`] — the pipelined executor on `util::pool` (bitwise equal
+//!   to serial);
+//! * [`serve`] — [`StreamServer`]: per-session membrane state behind
+//!   the serving metrics.
+//!
+//! The sweep lives in `repro::stream` (`spikemram stream`), the perf
+//! rows in `benches/stream.rs`, and the cross-level bit-identity proofs
+//! in `rust/tests/stream_e2e.rs`.
+//!
+//! [`baselines::DiscreteLif`]: crate::baselines::DiscreteLif
+
+pub mod encode;
+pub mod exec;
+pub mod serve;
+pub mod snn;
+pub mod source;
+
+pub use encode::{FrameEncoder, TemporalCode};
+pub use serve::{StreamReply, StreamServer, StreamServerConfig, StreamSpec};
+pub use snn::{FrameStep, SpikingMlp, StreamRun, StreamStats};
+pub use source::{collect_frames, EncodedStream, EventStream, PoissonStream};

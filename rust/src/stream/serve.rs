@@ -1,0 +1,373 @@
+//! Streaming session server (DESIGN.md S18): `serve --backend stream`.
+//!
+//! Serving a temporal SNN differs from the one-shot `MacroServer` in
+//! one essential way: a request is not a vector, it is a *session* — an
+//! ordered frame stream whose state (per-stage LIF membranes) must
+//! survive between frames. The server keeps the weights stationary and
+//! the state mobile:
+//!
+//! * every worker owns one deployed [`SpikingMlp`] (weights programmed
+//!   once, like `MacroServer`'s per-worker macro);
+//! * a session is pinned to `worker = id % workers`, so its frames are
+//!   processed in submission order (worker channels are FIFO) — the
+//!   temporal analogue of the scheduler's weight-stationary affinity;
+//! * per-session membrane snapshots are swapped into the worker's
+//!   model around each frame ([`SpikingMlp::swap_state`]) — membranes
+//!   are a few hundred f64s, the macros are the expensive part.
+//!
+//! Per-frame serving metrics flow into the shared [`Metrics`]:
+//! latency (`record_request`), energy (`record_energy`), occupancy
+//! (`record_activity` with macro row slots across all stages), and
+//! MACs. Session replies carry the running readout membranes, so a
+//! client can take the argmax at any timestep (anytime inference).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{FabricConfig, LevelMap, MacroConfig, StreamConfig};
+use crate::coordinator::Metrics;
+use crate::snn::dataset::Dataset;
+use crate::snn::mlp::Mlp;
+
+use super::snn::SpikingMlp;
+
+/// Everything needed to deploy one [`SpikingMlp`] per worker.
+#[derive(Clone)]
+pub struct StreamSpec {
+    pub model: Mlp,
+    pub calib: Dataset,
+    pub mcfg: MacroConfig,
+    pub fabric: FabricConfig,
+    pub level_map: LevelMap,
+    pub stream: StreamConfig,
+}
+
+impl StreamSpec {
+    /// Deploy the spec (quantize, calibrate, place on the mesh).
+    pub fn build(&self) -> Result<SpikingMlp> {
+        SpikingMlp::from_float(
+            &self.model,
+            &self.calib,
+            &self.mcfg,
+            self.fabric.clone(),
+            self.level_map,
+            &self.stream,
+        )
+    }
+}
+
+/// One session reply: the state of the readout after a frame.
+#[derive(Debug, Clone)]
+pub struct StreamReply {
+    pub session: u64,
+    /// Timesteps this session has processed (after this frame).
+    pub t: usize,
+    /// Readout membranes (running evidence).
+    pub out_v: Vec<f64>,
+    /// Argmax of the digit classes at this timestep.
+    pub label: usize,
+}
+
+enum StreamJob {
+    Frame {
+        session: u64,
+        events: Vec<u32>,
+        submitted: Instant,
+        reply: mpsc::Sender<StreamReply>,
+    },
+    Finish {
+        session: u64,
+        reply: mpsc::Sender<StreamReply>,
+    },
+}
+
+/// Stream server configuration.
+#[derive(Debug, Clone)]
+pub struct StreamServerConfig {
+    pub workers: usize,
+}
+
+impl Default for StreamServerConfig {
+    fn default() -> Self {
+        StreamServerConfig { workers: 2 }
+    }
+}
+
+struct SessionState {
+    /// Per-stage membrane snapshot.
+    state: Vec<Vec<f64>>,
+    /// Timesteps processed so far.
+    t: usize,
+}
+
+/// A running streaming-SNN service.
+pub struct StreamServer {
+    txs: Vec<mpsc::Sender<StreamJob>>,
+    pub metrics: Arc<Metrics>,
+    handles: Vec<JoinHandle<()>>,
+    next_session: AtomicU64,
+    in_dim: usize,
+}
+
+impl StreamServer {
+    /// Deploy one model per worker and start the session loops. Fails
+    /// fast (on the caller's thread) when the spec cannot deploy, e.g.
+    /// the mesh is too small for the layer shards.
+    pub fn start(
+        spec: StreamSpec,
+        scfg: StreamServerConfig,
+    ) -> Result<StreamServer> {
+        assert!(scfg.workers >= 1, "at least one worker");
+        let metrics = Arc::new(Metrics::new());
+        let mut txs = Vec::with_capacity(scfg.workers);
+        let mut handles = Vec::with_capacity(scfg.workers);
+        let mut in_dim = 0;
+        for _ in 0..scfg.workers {
+            let mlp = spec.build()?;
+            in_dim = mlp.in_dim();
+            let (tx, rx) = mpsc::channel::<StreamJob>();
+            let m = metrics.clone();
+            handles.push(std::thread::spawn(move || worker_loop(mlp, rx, m)));
+            txs.push(tx);
+        }
+        Ok(StreamServer {
+            txs,
+            metrics,
+            handles,
+            next_session: AtomicU64::new(0),
+            in_dim,
+        })
+    }
+
+    /// Open a new session (fresh membranes on first frame). Sessions
+    /// are sticky to one worker, so frames submitted in order are
+    /// processed in order.
+    pub fn open_session(&self) -> u64 {
+        self.next_session.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn tx_for(&self, session: u64) -> &mpsc::Sender<StreamJob> {
+        &self.txs[(session as usize) % self.txs.len()]
+    }
+
+    /// Submit one timestep frame (sorted active-row event list).
+    ///
+    /// The frame is validated here, on the *caller's* thread — a
+    /// malformed list must fail the offending caller, not panic a
+    /// shared worker and take every session pinned to it down with
+    /// opaque disconnect errors.
+    pub fn submit_frame(
+        &self,
+        session: u64,
+        events: Vec<u32>,
+    ) -> mpsc::Receiver<StreamReply> {
+        let mut prev: i64 = -1;
+        for &r in &events {
+            assert!(
+                (r as usize) < self.in_dim,
+                "event row {r} of {}",
+                self.in_dim
+            );
+            assert!(
+                i64::from(r) > prev,
+                "event list must be sorted ascending without duplicates"
+            );
+            prev = i64::from(r);
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx_for(session)
+            .send(StreamJob::Frame {
+                session,
+                events,
+                submitted: Instant::now(),
+                reply: rtx,
+            })
+            .expect("workers alive");
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn frame(&self, session: u64, events: Vec<u32>) -> StreamReply {
+        self.submit_frame(session, events).recv().expect("reply")
+    }
+
+    /// Close a session: returns its final reply and drops its state.
+    pub fn finish(&self, session: u64) -> StreamReply {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx_for(session)
+            .send(StreamJob::Finish {
+                session,
+                reply: rtx,
+            })
+            .expect("workers alive");
+        rrx.recv().expect("reply")
+    }
+
+    /// Stop accepting work and join the workers.
+    pub fn shutdown(mut self) {
+        self.txs.clear(); // closes every channel; workers drain & exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    mut mlp: SpikingMlp,
+    rx: mpsc::Receiver<StreamJob>,
+    metrics: Arc<Metrics>,
+) {
+    let mut sessions: HashMap<u64, SessionState> = HashMap::new();
+    while let Ok(job) = rx.recv() {
+        match job {
+            StreamJob::Frame {
+                session,
+                events,
+                submitted,
+                reply,
+            } => {
+                let sess = sessions.entry(session).or_insert_with(|| {
+                    SessionState {
+                        state: mlp.fresh_state(),
+                        t: 0,
+                    }
+                });
+                mlp.swap_state(&mut sess.state);
+                let step = mlp.step_frame(&events);
+                sess.t += 1;
+                let out = StreamReply {
+                    session,
+                    t: sess.t,
+                    out_v: mlp.out_membranes().to_vec(),
+                    label: mlp.label(),
+                };
+                mlp.swap_state(&mut sess.state);
+                metrics.record_batch(1, step.macs);
+                metrics.record_activity(step.active_rows, step.row_slots);
+                metrics.record_energy(step.energy.total_fj());
+                metrics.record_noc(step.noc_packets, step.noc_hops);
+                metrics
+                    .record_request(submitted.elapsed().as_secs_f64() * 1e6);
+                let _ = reply.send(out); // receiver may have gone away
+            }
+            StreamJob::Finish { session, reply } => {
+                let out = match sessions.remove(&session) {
+                    Some(mut sess) => {
+                        mlp.swap_state(&mut sess.state);
+                        let r = StreamReply {
+                            session,
+                            t: sess.t,
+                            out_v: mlp.out_membranes().to_vec(),
+                            label: mlp.label(),
+                        };
+                        mlp.swap_state(&mut sess.state);
+                        r
+                    }
+                    None => StreamReply {
+                        session,
+                        t: 0,
+                        out_v: vec![0.0; mlp.out_dim()],
+                        label: 0,
+                    },
+                };
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::encode::{FrameEncoder, TemporalCode};
+
+    fn spec(seed: u64) -> StreamSpec {
+        StreamSpec {
+            model: Mlp::new(seed),
+            calib: Dataset::generate(24, seed ^ 0x9),
+            mcfg: MacroConfig::default(),
+            fabric: FabricConfig::square(2),
+            level_map: LevelMap::DeviceTrue,
+            stream: StreamConfig::default(),
+        }
+    }
+
+    #[test]
+    fn interleaved_sessions_match_serial_runs_bitwise() {
+        let sp = spec(61);
+        let mut serial = sp.build().unwrap();
+        let enc = FrameEncoder::new(TemporalCode::Rate, 5, 255);
+        let data = Dataset::generate(6, 77);
+        let server = StreamServer::start(
+            sp,
+            StreamServerConfig { workers: 2 },
+        )
+        .unwrap();
+
+        // Three concurrent sessions, frames interleaved round-robin.
+        let frames: Vec<Vec<Vec<u32>>> = (0..3)
+            .map(|i| enc.encode_frames(&data.features_u8(i)))
+            .collect();
+        let ids: Vec<u64> = (0..3).map(|_| server.open_session()).collect();
+        for t in 0..5 {
+            for (s, id) in ids.iter().enumerate() {
+                let r = server.frame(*id, frames[s][t].clone());
+                assert_eq!(r.t, t + 1);
+            }
+        }
+        for (s, id) in ids.iter().enumerate() {
+            let want = serial.run(&frames[s]);
+            let got = server.finish(*id);
+            assert_eq!(got.t, 5);
+            assert_eq!(got.out_v, want.out_v, "session {s} membranes");
+            assert_eq!(got.label, want.label);
+        }
+
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 15, "one request per frame");
+        assert_eq!(snap.batches, 15);
+        assert!(snap.energy_fj > 0.0, "per-timestep energy recorded");
+        assert!(snap.row_slots > 0);
+        let d = snap.input_density();
+        assert!(d > 0.0 && d < 1.0, "occupancy {d}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn finishing_an_unknown_session_is_benign() {
+        let server =
+            StreamServer::start(spec(63), StreamServerConfig::default())
+                .unwrap();
+        let r = server.finish(1234);
+        assert_eq!(r.t, 0);
+        assert!(r.out_v.iter().all(|&v| v == 0.0));
+        server.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted ascending")]
+    fn malformed_frame_fails_the_caller_not_the_worker() {
+        let server =
+            StreamServer::start(spec(67), StreamServerConfig::default())
+                .unwrap();
+        let id = server.open_session();
+        let _ = server.submit_frame(id, vec![5, 3]);
+    }
+
+    #[test]
+    fn too_small_mesh_fails_at_start() {
+        let sp = StreamSpec {
+            fabric: FabricConfig::square(1),
+            ..spec(65)
+        };
+        let err = StreamServer::start(sp, StreamServerConfig::default())
+            .err()
+            .expect("placement must fail");
+        assert!(err.to_string().contains("exceed"), "{err}");
+    }
+}

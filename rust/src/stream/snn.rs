@@ -1,0 +1,559 @@
+//! The time-stepped spiking MLP (DESIGN.md S18): the quantized digit
+//! model deployed as a *temporal* network — per-stage LIF membranes
+//! carried across timesteps, every timestep's binary spike vector fed
+//! straight into the macro fabric as an active-row event list
+//! (`LayerStage::run_events` → `CimMacro::mvm_events`; no window matrix
+//! is ever built).
+//!
+//! Rate-domain semantics (data-based normalization, the standard
+//! ANN→SNN conversion): spikes entering stage l each carry the float
+//! value λ_{l−1} (λ_0 = 1 — pixels arrive as x/255 rates), the stage's
+//! per-step drive is `scale·(mac − G_mid·n_active)·λ_{l−1} + bias`, and
+//! its LIF threshold is λ_l (the calibrated activation ceiling). A
+//! neuron's firing rate then tracks `h_l/λ_l`, so accumulated output
+//! membranes approach `T · logits` as T grows — the accuracy-vs-T knob
+//! `repro::stream` sweeps. The readout stage never fires; it integrates
+//! (λ_leak = 0) and the label is the argmax of its membranes.
+//!
+//! Bit-identity rule: a timestep is processed stage by stage in fixed
+//! neuron order with f64 state, and per-run statistics are folded
+//! per-stage first, then across stages in stage order — the pipelined
+//! executor (`stream::exec`) reproduces both orders exactly, so serial
+//! and pipelined runs agree *bitwise* (membranes, spike trains, energy
+//! tallies; asserted in `rust/tests/stream_e2e.rs`).
+
+use anyhow::Result;
+
+use crate::baselines::DiscreteLif;
+use crate::config::{FabricConfig, LevelMap, MacroConfig, StreamConfig};
+use crate::coordinator::TiledMatrix;
+use crate::energy::EnergyBreakdown;
+use crate::fabric::{FabricChip, LayerResult, LayerStage};
+use crate::snn::collect_activations;
+use crate::snn::dataset::Dataset;
+use crate::snn::mlp::Mlp;
+use crate::snn::quant::{quantize_layer, ActQuant};
+
+/// Argmax over f64 membranes (ties break to the lower index).
+fn argmax64(xs: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// One deployed layer: its fabric stage (weight-stationary shard
+/// macros + NoC endpoints) plus the temporal state and the dequant
+/// constants that turn a binary-spike MAC into membrane drive.
+pub(crate) struct SpikingStage {
+    pub(crate) stage: LayerStage,
+    /// Weight scale s of the quantized layer.
+    scale: f64,
+    /// Conductance offset G_mid (signed-weight scheme).
+    g_mid: f64,
+    /// Digital bias, added to the drive every timestep.
+    bias: Vec<f32>,
+    /// Float value one incoming spike carries (λ_{l−1}; 1.0 for the
+    /// pixel-rate input layer).
+    in_unit: f64,
+    /// Membrane state, resident across timesteps.
+    pub(crate) lif: DiscreteLif,
+    /// Readout stages integrate and never fire.
+    readout: bool,
+    /// Dense MAC count of one timestep (k·n, the serving convention).
+    macs_per_step: u64,
+    /// Macro row slots offered per timestep (shards × tile rows).
+    slots_per_step: u64,
+    /// Reusable per-step drive buffer (no per-timestep allocation on
+    /// the streaming hot path).
+    cur: Vec<f64>,
+}
+
+impl SpikingStage {
+    /// One timestep: binary input event list → (output event list,
+    /// macro-level result). The output list of a readout stage is
+    /// always empty; read its membranes instead.
+    pub(crate) fn step(&mut self, events: &[u32]) -> (Vec<u32>, LayerResult) {
+        let r = self.stage.run_events(events);
+        let mac = self.stage.tiled.accumulate(&r.partials);
+        let n_active = events.len() as f64;
+        let (scale, g_mid, in_unit) = (self.scale, self.g_mid, self.in_unit);
+        let bias = &self.bias;
+        self.cur.clear();
+        self.cur.extend(mac.iter().enumerate().map(|(o, &m)| {
+            scale * (m - g_mid * n_active) * in_unit
+                + bias.get(o).copied().unwrap_or(0.0) as f64
+        }));
+        // `out` is owned per step by design: it leaves the stage (next
+        // stage's input / pipeline message / spike-train record).
+        let mut out = Vec::new();
+        if self.readout {
+            self.lif.integrate(&self.cur);
+        } else {
+            self.lif.step(&self.cur, &mut out);
+        }
+        (out, r)
+    }
+
+    /// Fold one timestep's result into this stage's running tally —
+    /// the single accumulation order both the serial loop and the
+    /// pipelined executor use (bit-identity rule above).
+    pub(crate) fn tally_into(
+        &self,
+        t: &mut StageTally,
+        r: &LayerResult,
+        out: &[u32],
+    ) {
+        t.energy.add(&r.energy);
+        t.latency_ns += r.latency_ns;
+        t.active_rows += r.active_rows;
+        t.row_slots += self.slots_per_step;
+        t.macs += self.macs_per_step;
+        t.packets += r.packets;
+        t.hops += r.hops;
+        t.spikes += out.len() as u64;
+    }
+}
+
+/// One stage's running statistics over a stream.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct StageTally {
+    pub energy: EnergyBreakdown,
+    pub latency_ns: f64,
+    pub active_rows: u64,
+    pub row_slots: u64,
+    pub macs: u64,
+    pub packets: u64,
+    pub hops: u64,
+    pub spikes: u64,
+}
+
+/// Aggregate statistics of one streamed inference.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    /// Timesteps processed.
+    pub timesteps: usize,
+    pub energy: EnergyBreakdown,
+    /// Σ per-timestep per-stage modeled latency (model time; the
+    /// pipelined executor buys wall-clock, not model time).
+    pub latency_ns: f64,
+    /// Dense MAC count (k·n per stage per step, the Table II
+    /// convention).
+    pub macs: u64,
+    /// Macro row activations across all stages and steps.
+    pub active_rows: u64,
+    /// Macro row slots offered (stages × shards × tile × steps).
+    pub row_slots: u64,
+    pub noc_packets: u64,
+    pub noc_hops: u64,
+    /// Input spikes consumed (Σ frame lengths).
+    pub in_spikes: u64,
+    /// Spikes emitted per stage (readout entry is always 0).
+    pub layer_spikes: Vec<u64>,
+}
+
+impl StreamStats {
+    /// Fraction of offered row slots that carried a spike (0 before
+    /// any traffic — never NaN).
+    pub fn occupancy(&self) -> f64 {
+        if self.row_slots == 0 {
+            0.0
+        } else {
+            self.active_rows as f64 / self.row_slots as f64
+        }
+    }
+
+    /// All spikes moved this run (input + every stage's output).
+    pub fn spikes_total(&self) -> u64 {
+        self.in_spikes + self.layer_spikes.iter().sum::<u64>()
+    }
+}
+
+/// One streamed inference's outcome.
+#[derive(Debug, Clone)]
+pub struct StreamRun {
+    /// Argmax of the readout membranes over the digit classes.
+    pub label: usize,
+    /// Final readout membranes (all 16 padded columns).
+    pub out_v: Vec<f64>,
+    /// Spike trains: `trains[stage][t]` is the event list stage `stage`
+    /// emitted at timestep `t` (readout rows are empty).
+    pub trains: Vec<Vec<Vec<u32>>>,
+    pub stats: StreamStats,
+}
+
+/// One timestep's aggregate across all stages (the serving path).
+#[derive(Debug, Clone, Default)]
+pub struct FrameStep {
+    pub energy: EnergyBreakdown,
+    pub latency_ns: f64,
+    pub active_rows: u64,
+    pub row_slots: u64,
+    pub macs: u64,
+    pub noc_packets: u64,
+    pub noc_hops: u64,
+    /// Spikes emitted per stage this step.
+    pub spikes: Vec<u64>,
+}
+
+/// The quantized MLP deployed as a streaming SNN on a fabric chip.
+pub struct SpikingMlp {
+    pub(crate) stages: Vec<SpikingStage>,
+    /// Digit classes scored by the readout (first `classes` membranes).
+    pub classes: usize,
+}
+
+impl SpikingMlp {
+    /// Quantize a trained float model, calibrate the per-layer
+    /// normalization thresholds λ on `calib`, and deploy every layer's
+    /// weight shards onto a fabric mesh (fails when the mesh cannot
+    /// hold them — the 3-layer digit MLP needs 4 tiles).
+    pub fn from_float(
+        model: &Mlp,
+        calib: &Dataset,
+        mcfg: &MacroConfig,
+        fabric: FabricConfig,
+        level_map: LevelMap,
+        scfg: &StreamConfig,
+    ) -> Result<SpikingMlp> {
+        let qs = [
+            quantize_layer(
+                &model.l1.w,
+                &model.l1.b,
+                model.l1.in_dim,
+                model.l1.out_dim,
+                level_map,
+            ),
+            quantize_layer(
+                &model.l2.w,
+                &model.l2.b,
+                model.l2.in_dim,
+                model.l2.out_dim,
+                level_map,
+            ),
+            quantize_layer(
+                &model.l3.w,
+                &model.l3.b,
+                model.l3.in_dim,
+                model.l3.out_dim,
+                level_map,
+            ),
+        ];
+        let (h1, h2) = collect_activations(model, calib, 64);
+        let lam1 = ActQuant::calibrate(&h1, scfg.theta_pct).a_max() as f64;
+        let lam2 = ActQuant::calibrate(&h2, scfg.theta_pct).a_max() as f64;
+
+        let tiled: Vec<TiledMatrix> = qs
+            .iter()
+            .map(|q| TiledMatrix::new(&q.codes, q.in_dim, q.out_dim, mcfg.rows))
+            .collect();
+        let chip = FabricChip::new(mcfg, fabric, tiled)?;
+        let raw = chip.into_stages();
+
+        // Stage l: incoming spikes carry λ_{l−1}, threshold λ_l; the
+        // last stage is the integrating readout.
+        let in_units = [1.0, lam1, lam2];
+        let thresholds = [lam1, lam2, f64::INFINITY];
+        let n_stages = raw.len();
+        let stages: Vec<SpikingStage> = raw
+            .into_iter()
+            .zip(qs)
+            .enumerate()
+            .map(|(l, (stage, q))| {
+                let readout = l + 1 == n_stages;
+                SpikingStage {
+                    macs_per_step: (q.in_dim * q.out_dim) as u64,
+                    slots_per_step: (stage.tiled.row_tiles
+                        * stage.tiled.col_tiles
+                        * stage.tiled.tile)
+                        as u64,
+                    scale: q.scale,
+                    g_mid: q.g_mid,
+                    bias: q.bias,
+                    in_unit: in_units[l],
+                    lif: DiscreteLif::new(
+                        q.out_dim,
+                        thresholds[l],
+                        if readout { 0.0 } else { scfg.leak },
+                    ),
+                    readout,
+                    cur: Vec::new(),
+                    stage,
+                }
+            })
+            .collect();
+        Ok(SpikingMlp {
+            stages,
+            classes: 10,
+        })
+    }
+
+    /// Input rows a frame spans (the first layer's width).
+    pub fn in_dim(&self) -> usize {
+        self.stages[0].stage.tiled.k
+    }
+
+    /// Readout width (padded output columns).
+    pub fn out_dim(&self) -> usize {
+        self.stages.last().expect("stages").lif.v.len()
+    }
+
+    /// Zero every stage's membranes (start of a new stream).
+    pub fn reset(&mut self) {
+        for s in &mut self.stages {
+            s.lif.reset();
+        }
+    }
+
+    /// The readout membranes as they stand.
+    pub fn out_membranes(&self) -> &[f64] {
+        &self.stages.last().expect("stages").lif.v
+    }
+
+    /// Current prediction: argmax of the readout membranes over the
+    /// digit classes.
+    pub fn label(&self) -> usize {
+        argmax64(&self.out_membranes()[..self.classes])
+    }
+
+    /// A zeroed membrane snapshot, one vector per stage — the
+    /// per-session state the stream server keeps (DESIGN.md S18).
+    pub fn fresh_state(&self) -> Vec<Vec<f64>> {
+        self.stages.iter().map(|s| vec![0.0; s.lif.v.len()]).collect()
+    }
+
+    /// Exchange the resident membranes with `state` (shape-checked):
+    /// swap a session in, step frames, swap it back out. The macros
+    /// themselves are weight-stationary and stateless across ideal
+    /// ops, so one deployed model serves many sessions.
+    pub fn swap_state(&mut self, state: &mut [Vec<f64>]) {
+        assert_eq!(state.len(), self.stages.len(), "one vector per stage");
+        for (s, st) in self.stages.iter_mut().zip(state) {
+            assert_eq!(st.len(), s.lif.v.len(), "membrane count");
+            std::mem::swap(&mut s.lif.v, st);
+        }
+    }
+
+    /// Process one timestep through every stage in order, mutating the
+    /// resident membranes; returns the step's aggregate tallies (the
+    /// serving hot path — per-stage folding is irrelevant for state,
+    /// which only depends on the stage-by-stage math).
+    pub fn step_frame(&mut self, events: &[u32]) -> FrameStep {
+        let mut out = FrameStep::default();
+        let mut cur: Vec<u32> = Vec::new();
+        for (s, stage) in self.stages.iter_mut().enumerate() {
+            let input: &[u32] = if s == 0 { events } else { &cur };
+            let (next, r) = stage.step(input);
+            out.energy.add(&r.energy);
+            out.latency_ns += r.latency_ns;
+            out.active_rows += r.active_rows;
+            out.row_slots += stage.slots_per_step;
+            out.macs += stage.macs_per_step;
+            out.noc_packets += r.packets;
+            out.noc_hops += r.hops;
+            out.spikes.push(next.len() as u64);
+            cur = next;
+        }
+        out
+    }
+
+    /// Run a whole frame stream serially (reset → T timesteps stage by
+    /// stage). The reference order the pipelined executor is asserted
+    /// bitwise against.
+    pub fn run(&mut self, frames: &[Vec<u32>]) -> StreamRun {
+        self.reset();
+        let ns = self.stages.len();
+        let mut tallies = vec![StageTally::default(); ns];
+        let mut trains: Vec<Vec<Vec<u32>>> = (0..ns)
+            .map(|_| Vec::with_capacity(frames.len()))
+            .collect();
+        let mut in_spikes = 0u64;
+        for f in frames {
+            in_spikes += f.len() as u64;
+            let mut cur: Vec<u32> = Vec::new();
+            for (s, stage) in self.stages.iter_mut().enumerate() {
+                let input: &[u32] = if s == 0 { f } else { &cur };
+                let (next, r) = stage.step(input);
+                stage.tally_into(&mut tallies[s], &r, &next);
+                trains[s].push(next.clone());
+                cur = next;
+            }
+        }
+        self.assemble_run(frames.len(), in_spikes, tallies, trains)
+    }
+
+    /// Fold per-stage tallies (in stage order — the shared fold both
+    /// execution modes use) and snapshot the readout.
+    pub(crate) fn assemble_run(
+        &self,
+        timesteps: usize,
+        in_spikes: u64,
+        tallies: Vec<StageTally>,
+        trains: Vec<Vec<Vec<u32>>>,
+    ) -> StreamRun {
+        let mut stats = StreamStats {
+            timesteps,
+            in_spikes,
+            ..StreamStats::default()
+        };
+        for t in &tallies {
+            stats.energy.add(&t.energy);
+            stats.latency_ns += t.latency_ns;
+            stats.active_rows += t.active_rows;
+            stats.row_slots += t.row_slots;
+            stats.macs += t.macs;
+            stats.noc_packets += t.packets;
+            stats.noc_hops += t.hops;
+            stats.layer_spikes.push(t.spikes);
+        }
+        StreamRun {
+            label: self.label(),
+            out_v: self.out_membranes().to_vec(),
+            trains,
+            stats,
+        }
+    }
+}
+
+/// Shared test fixture (also used by `stream::exec` tests): an
+/// untrained model deployed on a 2×2 mesh — bit-identity proofs need
+/// determinism, not accuracy.
+#[cfg(test)]
+pub(crate) fn tiny_mlp(seed: u64) -> (SpikingMlp, Dataset) {
+    let calib = Dataset::generate(32, seed);
+    let model = Mlp::new(seed ^ 0x5);
+    let mlp = SpikingMlp::from_float(
+        &model,
+        &calib,
+        &MacroConfig::default(),
+        FabricConfig::square(2),
+        LevelMap::DeviceTrue,
+        &StreamConfig::default(),
+    )
+    .unwrap();
+    (mlp, calib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::encode::{FrameEncoder, TemporalCode};
+
+    #[test]
+    fn stream_run_shapes_and_counters() {
+        let (mut mlp, data) = tiny_mlp(11);
+        assert_eq!(mlp.in_dim(), 256);
+        assert_eq!(mlp.out_dim(), 16);
+        let enc = FrameEncoder::new(TemporalCode::Rate, 4, 255);
+        let frames = enc.encode_frames(&data.features_u8(0));
+        let run = mlp.run(&frames);
+        assert!(run.label < 10);
+        assert_eq!(run.out_v.len(), 16);
+        assert_eq!(run.trains.len(), 3);
+        assert!(run.trains.iter().all(|t| t.len() == 4));
+        assert!(run.trains[2].iter().all(|f| f.is_empty()), "readout");
+        let s = &run.stats;
+        assert_eq!(s.timesteps, 4);
+        // Shards: 2 + 1 + 1, each offering 128 rows per step.
+        assert_eq!(s.row_slots, 4 * (2 + 1 + 1) * 128);
+        assert!(s.active_rows > 0 && s.active_rows <= s.row_slots);
+        assert!(s.occupancy() > 0.0 && s.occupancy() <= 1.0);
+        assert_eq!(s.macs, 4 * (256 * 128 + 128 * 128 + 128 * 16) as u64);
+        assert!(s.energy.total_fj() > 0.0);
+        assert!(s.noc_packets > 0, "multi-tile layer 0 must route");
+        assert_eq!(s.in_spikes, frames.iter().map(|f| f.len() as u64).sum());
+        assert_eq!(s.layer_spikes.len(), 3);
+        assert_eq!(s.layer_spikes[2], 0, "readout never fires");
+    }
+
+    #[test]
+    fn membranes_accumulate_evidence_and_reset_clears_them() {
+        let (mut mlp, data) = tiny_mlp(13);
+        let enc = FrameEncoder::new(TemporalCode::Rate, 8, 255);
+        let frames = enc.encode_frames(&data.features_u8(1));
+        let a = mlp.run(&frames);
+        let b = mlp.run(&frames);
+        // run() resets: identical streams give identical outcomes.
+        assert_eq!(a.out_v, b.out_v);
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.trains, b.trains);
+        assert_eq!(a.stats.energy, b.stats.energy);
+        mlp.reset();
+        assert!(mlp.out_membranes().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn more_timesteps_accumulate_more_energy_and_spikes() {
+        let (mut mlp, data) = tiny_mlp(17);
+        let x = data.features_u8(2);
+        let mut prev_energy = 0.0f64;
+        let mut prev_spikes = 0u64;
+        for t in [1usize, 4, 16] {
+            let enc = FrameEncoder::new(TemporalCode::Rate, t, 255);
+            let run = mlp.run(&enc.encode_frames(&x));
+            let e = run.stats.energy.total_fj();
+            assert!(e >= prev_energy, "T={t}: {e} < {prev_energy}");
+            assert!(run.stats.spikes_total() >= prev_spikes);
+            prev_energy = e;
+            prev_spikes = run.stats.spikes_total();
+        }
+    }
+
+    #[test]
+    fn swapped_session_state_matches_uninterrupted_run() {
+        // The server path: membranes swapped out between every frame
+        // must land exactly where the uninterrupted serial run does.
+        let (mut mlp, data) = tiny_mlp(19);
+        let enc = FrameEncoder::new(TemporalCode::Rate, 6, 255);
+        let frames = enc.encode_frames(&data.features_u8(3));
+        let want = mlp.run(&frames);
+
+        let mut session = mlp.fresh_state();
+        // Dirty the resident membranes to prove isolation.
+        let noise = enc.encode_frames(&data.features_u8(4));
+        mlp.reset();
+        mlp.step_frame(&noise[0]);
+        for f in &frames {
+            mlp.swap_state(&mut session);
+            mlp.step_frame(f);
+            mlp.swap_state(&mut session);
+        }
+        assert_eq!(session.last().unwrap(), &want.out_v);
+    }
+
+    #[test]
+    fn leak_changes_the_dynamics() {
+        let calib = Dataset::generate(32, 23);
+        let model = Mlp::new(24);
+        let mk = |leak: f64| {
+            SpikingMlp::from_float(
+                &model,
+                &calib,
+                &MacroConfig::default(),
+                FabricConfig::square(2),
+                LevelMap::DeviceTrue,
+                &StreamConfig {
+                    leak,
+                    ..StreamConfig::default()
+                },
+            )
+            .unwrap()
+        };
+        let enc = FrameEncoder::new(TemporalCode::Rate, 8, 255);
+        let frames = enc.encode_frames(&calib.features_u8(0));
+        let mut if_net = mk(0.0);
+        let mut lif_net = mk(0.3);
+        // The leak is plumbed into every hidden stage's membrane.
+        assert_eq!(if_net.stages[0].lif.leak, 0.0);
+        assert_eq!(lif_net.stages[0].lif.leak, 0.3);
+        assert_eq!(lif_net.stages[1].lif.leak, 0.3);
+        assert_eq!(lif_net.stages[2].lif.leak, 0.0, "readout integrates");
+        let if_run = if_net.run(&frames);
+        let lif_run = lif_net.run(&frames);
+        assert!(if_run.label < 10 && lif_run.label < 10);
+        assert_eq!(if_run.stats.timesteps, lif_run.stats.timesteps);
+    }
+}

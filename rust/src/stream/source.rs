@@ -1,0 +1,185 @@
+//! Event-stream sources (DESIGN.md S18): where timestep frames come
+//! from. Two producers behind one trait:
+//!
+//! * [`PoissonStream`] — synthetic DVS-style traffic: every row fires
+//!   independently per frame with its own rate (a discrete-time Poisson
+//!   process), deterministic in the seed. This is the serving/bench
+//!   workload knob: mean frame density ≈ rate.
+//! * [`EncodedStream`] — a static input re-encoded into T frames by a
+//!   [`FrameEncoder`] (rate or TTFS), the ANN→SNN conversion path.
+//!
+//! A frame is a sorted active-row event list — the exact shape
+//! `CimMacro::mvm_events` and `LayerStage::run_events` consume, so a
+//! source plugs straight into the runtime with no re-encoding.
+
+use crate::util::rng::Rng;
+
+use super::encode::FrameEncoder;
+
+/// A finite sequence of binary timestep frames.
+pub trait EventStream {
+    /// Input rows each frame spans.
+    fn rows(&self) -> usize;
+
+    /// Write the next frame's sorted active-row list into `out`;
+    /// returns `false` (leaving `out` empty) when the stream is done.
+    fn next_frame(&mut self, out: &mut Vec<u32>) -> bool;
+}
+
+/// Drain a stream into owned frames (tests, sweeps, benches).
+pub fn collect_frames(stream: &mut dyn EventStream) -> Vec<Vec<u32>> {
+    let mut frames = Vec::new();
+    let mut frame = Vec::new();
+    while stream.next_frame(&mut frame) {
+        frames.push(frame.clone());
+    }
+    frames
+}
+
+/// Synthetic DVS-style source: independent per-row Bernoulli firing per
+/// frame, deterministic in the seed.
+#[derive(Debug, Clone)]
+pub struct PoissonStream {
+    rates: Vec<f64>,
+    frames_left: usize,
+    rng: Rng,
+}
+
+impl PoissonStream {
+    /// Every row fires with probability `density` per frame.
+    pub fn uniform(
+        rows: usize,
+        frames: usize,
+        density: f64,
+        seed: u64,
+    ) -> PoissonStream {
+        assert!((0.0..=1.0).contains(&density), "density in [0, 1]");
+        PoissonStream {
+            rates: vec![density; rows],
+            frames_left: frames,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Per-row firing rates (a DVS scene with hot and cold pixels).
+    pub fn with_rates(rates: Vec<f64>, frames: usize, seed: u64) -> PoissonStream {
+        assert!(rates.iter().all(|r| (0.0..=1.0).contains(r)));
+        PoissonStream {
+            rates,
+            frames_left: frames,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl EventStream for PoissonStream {
+    fn rows(&self) -> usize {
+        self.rates.len()
+    }
+
+    fn next_frame(&mut self, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        if self.frames_left == 0 {
+            return false;
+        }
+        self.frames_left -= 1;
+        for (r, &rate) in self.rates.iter().enumerate() {
+            if self.rng.f64() < rate {
+                out.push(r as u32);
+            }
+        }
+        true
+    }
+}
+
+/// A static input unrolled into T frames by a [`FrameEncoder`].
+#[derive(Debug, Clone)]
+pub struct EncodedStream {
+    frames: Vec<Vec<u32>>,
+    next: usize,
+    rows: usize,
+}
+
+impl EncodedStream {
+    pub fn new(enc: &FrameEncoder, x: &[u32]) -> EncodedStream {
+        EncodedStream {
+            frames: enc.encode_frames(x),
+            next: 0,
+            rows: x.len(),
+        }
+    }
+}
+
+impl EventStream for EncodedStream {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn next_frame(&mut self, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        if self.next >= self.frames.len() {
+            return false;
+        }
+        out.extend_from_slice(&self.frames[self.next]);
+        self.next += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::encode::TemporalCode;
+
+    #[test]
+    fn poisson_stream_is_deterministic_and_bounded() {
+        let mut a = PoissonStream::uniform(128, 10, 0.2, 9);
+        let mut b = PoissonStream::uniform(128, 10, 0.2, 9);
+        let fa = collect_frames(&mut a);
+        let fb = collect_frames(&mut b);
+        assert_eq!(fa, fb);
+        assert_eq!(fa.len(), 10);
+        for f in &fa {
+            assert!(f.windows(2).all(|w| w[0] < w[1]), "sorted");
+            assert!(f.iter().all(|&r| r < 128));
+        }
+        // Mean density over 10×128 draws lands near the rate.
+        let total: usize = fa.iter().map(|f| f.len()).sum();
+        let density = total as f64 / (10.0 * 128.0);
+        assert!((0.08..0.35).contains(&density), "{density}");
+    }
+
+    #[test]
+    fn poisson_rate_extremes() {
+        let mut silent = PoissonStream::uniform(64, 3, 0.0, 1);
+        assert!(collect_frames(&mut silent).iter().all(|f| f.is_empty()));
+        let mut dense = PoissonStream::uniform(64, 3, 1.0, 1);
+        assert!(collect_frames(&mut dense)
+            .iter()
+            .all(|f| f.len() == 64));
+    }
+
+    #[test]
+    fn per_row_rates_shape_the_traffic() {
+        let mut rates = vec![0.0; 32];
+        rates[7] = 1.0;
+        let mut s = PoissonStream::with_rates(rates, 5, 3);
+        for f in collect_frames(&mut s) {
+            assert_eq!(f, vec![7]);
+        }
+    }
+
+    #[test]
+    fn encoded_stream_replays_the_frame_encoder() {
+        let enc = FrameEncoder::new(TemporalCode::Rate, 4, 255);
+        let x = vec![255u32, 0, 128, 64];
+        let mut s = EncodedStream::new(&enc, &x);
+        assert_eq!(s.rows(), 4);
+        let frames = collect_frames(&mut s);
+        assert_eq!(frames, enc.encode_frames(&x));
+        // Exhausted stream stays exhausted.
+        let mut out = vec![9u32];
+        assert!(!s.next_frame(&mut out));
+        assert!(out.is_empty());
+    }
+}

@@ -45,6 +45,34 @@ where
     }
 }
 
+/// Where a fast-mode tier-1 record for bench `group` should land: the
+/// bench dir (`SPIKEMRAM_BENCH_DIR`, default the working directory),
+/// unless a release-profile record (from the ci.sh smoke runs) already
+/// sits there — never clobber that one; validate the writer against a
+/// scratch directory instead. The single keep-release-record policy
+/// shared by the tier-1 record writers in `rust/tests/batch_identity.rs`
+/// and `rust/tests/stream_e2e.rs`.
+pub fn bench_record_dir(group: &str) -> std::path::PathBuf {
+    let record_dir = std::path::PathBuf::from(
+        std::env::var("SPIKEMRAM_BENCH_DIR").unwrap_or_else(|_| ".".into()),
+    );
+    let keep_release = std::fs::read_to_string(
+        record_dir.join(format!("BENCH_{group}.json")),
+    )
+    .ok()
+    .and_then(|s| crate::util::json::parse(&s).ok())
+    .and_then(|d| d.get("profile").and_then(|p| p.as_str().map(String::from)))
+    .is_some_and(|p| p == "release");
+    if keep_release {
+        let dir =
+            std::env::temp_dir().join(format!("spikemram_{group}_json_test"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    } else {
+        record_dir
+    }
+}
+
 /// Common generators.
 pub mod gen {
     use crate::util::rng::Rng;

@@ -12,6 +12,7 @@
 use spikemram::benchlib::{black_box, Harness};
 use spikemram::config::{MacroConfig, MvmEngine};
 use spikemram::macro_model::{CimMacro, EngineUsed, MvmBatch};
+use spikemram::testkit::bench_record_dir as record_dir_for;
 use spikemram::util::rng::Rng;
 
 fn programmed(seed: u64) -> CimMacro {
@@ -178,31 +179,6 @@ fn property_quantized_equals_integer_oracle_every_alphabet() {
                 "alphabet {alphabet} batched item {b}"
             );
         }
-    }
-}
-
-/// Where a fast-mode tier-1 record for bench `group` should land: the
-/// bench dir, unless a release-profile record (from the ci.sh smoke
-/// runs) already sits there — never clobber that one; validate the
-/// writer against a scratch directory instead.
-fn record_dir_for(group: &str) -> std::path::PathBuf {
-    let record_dir = std::path::PathBuf::from(
-        std::env::var("SPIKEMRAM_BENCH_DIR").unwrap_or_else(|_| ".".into()),
-    );
-    let keep_release = std::fs::read_to_string(
-        record_dir.join(format!("BENCH_{group}.json")),
-    )
-    .ok()
-    .and_then(|s| spikemram::util::json::parse(&s).ok())
-    .and_then(|d| d.get("profile").and_then(|p| p.as_str().map(String::from)))
-    .is_some_and(|p| p == "release");
-    if keep_release {
-        let dir =
-            std::env::temp_dir().join(format!("spikemram_{group}_json_test"));
-        std::fs::create_dir_all(&dir).unwrap();
-        dir
-    } else {
-        record_dir
     }
 }
 

@@ -7,8 +7,8 @@
 
 use spikemram::config::MacroConfig;
 use spikemram::repro::{
-    ablations, fabric, fig3, fig5, fig6, fig7, report, scaling, table1,
-    table2,
+    ablations, fabric, fig3, fig5, fig6, fig7, report, scaling, stream,
+    table1, table2,
 };
 
 fn results_to_tmp() {
@@ -95,6 +95,16 @@ fn fabric_scaling_sweep_runs_tiny() {
     assert_eq!(pts.len(), 2);
     assert!(pts[1].tops > pts[0].tops);
     assert!(fabric::render(&pts).contains("2×2"));
+}
+
+#[test]
+fn stream_sweep_runs_tiny() {
+    results_to_tmp();
+    let pts =
+        stream::run_points(&MacroConfig::default(), &[1, 2], 7, 60, 10, 2);
+    assert_eq!(pts.len(), 2);
+    assert!(pts[0].energy_pj <= pts[1].energy_pj);
+    assert!(stream::render(&pts).contains("EX3"));
 }
 
 #[test]

@@ -1,0 +1,204 @@
+//! Temporal streaming runtime (DESIGN.md S18) — cross-level acceptance.
+//!
+//! The per-level proofs live next to their modules (`cim_macro` unit
+//! tests, `fabric::chip`, `stream::{snn,exec,serve}`); this file pins
+//! the S18 acceptance bars end-to-end:
+//!
+//! * the binary-spike fast path is bitwise equal to the dense engine on
+//!   0/1 inputs across densities (macro level, forced engines);
+//! * pipelined streaming execution is bitwise identical to the serial
+//!   timestep loop — membrane potentials, spike trains, accumulated
+//!   MACs (membranes are a deterministic function of the per-step
+//!   y_mac, and the spike trains pin every intermediate), energy
+//!   tallies — at fabric and server levels;
+//! * a fast-mode `BENCH_stream.json` lands through `Harness::finish()`
+//!   so the stream perf trajectory exists on tier-1-only runs (ci.sh
+//!   refreshes the release record).
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::{
+    FabricConfig, LevelMap, MacroConfig, MvmEngine, StreamConfig,
+};
+use spikemram::macro_model::CimMacro;
+use spikemram::snn::{Dataset, Mlp};
+use spikemram::stream::{
+    collect_frames, FrameEncoder, PoissonStream, SpikingMlp, StreamServer,
+    StreamServerConfig, StreamSpec, TemporalCode,
+};
+use spikemram::util::rng::Rng;
+
+fn programmed(seed: u64, engine: MvmEngine) -> CimMacro {
+    let cfg = MacroConfig {
+        engine,
+        ..MacroConfig::default()
+    };
+    let mut m = CimMacro::new(cfg);
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+    m.program(&codes);
+    m
+}
+
+#[test]
+fn binary_spike_fast_path_bitwise_equals_dense_engine() {
+    // Acceptance bar: the event-list fast path on 0/1 inputs equals the
+    // dense engine bitwise, across densities — including the empty and
+    // the saturated frame, interleaved in one stream.
+    let mut dense = programmed(11, MvmEngine::Dense);
+    let mut evlist = programmed(11, MvmEngine::EventList);
+    let mut rng = Rng::new(12);
+    for density in [0.0, 0.01, 0.1, 0.5, 0.9, 1.0] {
+        let x: Vec<u32> = (0..128)
+            .map(|_| if rng.f64() < density { 1 } else { 0 })
+            .collect();
+        let ev: Vec<u32> = x
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v > 0)
+            .map(|(r, _)| r as u32)
+            .collect();
+        let want = dense.mvm(&x);
+        let got = evlist.mvm_events(&ev);
+        assert_eq!(got.y_mac, want.y_mac, "density {density}");
+        assert_eq!(got.t_out_ns, want.t_out_ns);
+        assert_eq!(got.v_charge, want.v_charge);
+        assert_eq!(got.latency_ns, want.latency_ns);
+        assert_eq!(got.events, want.events);
+        assert_eq!(got.energy, want.energy);
+    }
+}
+
+fn deployed(seed: u64) -> (SpikingMlp, Dataset) {
+    let calib = Dataset::generate(40, seed);
+    let model = Mlp::new(seed ^ 0x7);
+    let mlp = SpikingMlp::from_float(
+        &model,
+        &calib,
+        &MacroConfig::default(),
+        FabricConfig::square(2),
+        LevelMap::DeviceTrue,
+        &StreamConfig::default(),
+    )
+    .unwrap();
+    (mlp, calib)
+}
+
+#[test]
+fn pipelined_stream_bitwise_equals_serial_timestep_loop() {
+    // Acceptance bar: pipelined == serial bitwise — membranes, spike
+    // trains, energy tallies — over encoded digits AND DVS-style
+    // Poisson traffic, at several T.
+    let (mut mlp, data) = deployed(21);
+    for (i, t) in [1usize, 4, 16].into_iter().enumerate() {
+        let enc = FrameEncoder::new(TemporalCode::Rate, t, 255);
+        let frames = enc.encode_frames(&data.features_u8(i));
+        let serial = mlp.run(&frames);
+        let piped = mlp.run_pipelined(&frames);
+        assert_eq!(piped.out_v, serial.out_v, "membranes T={t}");
+        assert_eq!(piped.trains, serial.trains, "spike trains T={t}");
+        assert_eq!(piped.label, serial.label);
+        assert_eq!(piped.stats.energy, serial.stats.energy, "energy T={t}");
+        assert_eq!(piped.stats.latency_ns, serial.stats.latency_ns);
+        assert_eq!(piped.stats.active_rows, serial.stats.active_rows);
+        assert_eq!(piped.stats.macs, serial.stats.macs);
+        assert_eq!(piped.stats.noc_packets, serial.stats.noc_packets);
+        assert_eq!(piped.stats.noc_hops, serial.stats.noc_hops);
+        assert_eq!(piped.stats.layer_spikes, serial.stats.layer_spikes);
+    }
+    // DVS-style traffic, TTFS-encoded statics: same contract.
+    let mut dvs = PoissonStream::uniform(256, 10, 0.12, 23);
+    let frames = collect_frames(&mut dvs);
+    let serial = mlp.run(&frames);
+    let piped = mlp.run_pipelined(&frames);
+    assert_eq!(piped.out_v, serial.out_v);
+    assert_eq!(piped.trains, serial.trains);
+    assert_eq!(piped.stats.energy, serial.stats.energy);
+    let enc = FrameEncoder::new(TemporalCode::Ttfs, 8, 255);
+    let frames = enc.encode_frames(&data.features_u8(3));
+    let serial = mlp.run(&frames);
+    let piped = mlp.run_pipelined(&frames);
+    assert_eq!(piped.out_v, serial.out_v);
+    assert_eq!(piped.trains, serial.trains);
+}
+
+#[test]
+fn stream_server_sessions_bitwise_equal_serial_runs() {
+    // Acceptance bar at the server level: interleaved sessions with
+    // swapped-out membrane state reproduce the serial loop bitwise.
+    let spec = StreamSpec {
+        model: Mlp::new(31),
+        calib: Dataset::generate(24, 32),
+        mcfg: MacroConfig::default(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig::default(),
+    };
+    let mut serial = spec.build().unwrap();
+    let server = StreamServer::start(
+        spec,
+        StreamServerConfig { workers: 2 },
+    )
+    .unwrap();
+    let data = Dataset::generate(4, 33);
+    let enc = FrameEncoder::new(TemporalCode::Rate, 6, 255);
+    let frames: Vec<Vec<Vec<u32>>> = (0..4)
+        .map(|i| enc.encode_frames(&data.features_u8(i)))
+        .collect();
+    let ids: Vec<u64> = (0..4).map(|_| server.open_session()).collect();
+    for t in 0..6 {
+        for (s, &id) in ids.iter().enumerate() {
+            server.frame(id, frames[s][t].clone());
+        }
+    }
+    for (s, &id) in ids.iter().enumerate() {
+        let want = serial.run(&frames[s]);
+        let got = server.finish(id);
+        assert_eq!(got.out_v, want.out_v, "session {s} membranes");
+        assert_eq!(got.label, want.label);
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 24);
+    assert!(snap.energy_fj > 0.0);
+    assert!(snap.input_density() > 0.0 && snap.input_density() < 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn stream_bench_json_recorded_on_tier1() {
+    // A fast-mode BENCH_stream.json through the same Harness::finish()
+    // path as benches/stream.rs, so the stream perf trajectory exists
+    // on tier-1-only runs (ci.sh refreshes the release record and fails
+    // when the file is missing). Shape only — timing claims live in
+    // EXPERIMENTS.md §Perf and are release-profile.
+    std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    let out_dir = spikemram::testkit::bench_record_dir("stream");
+    let (mut mlp, _) = deployed(41);
+    let mut h = Harness::new("stream");
+    for (t, density) in [(1usize, 0.5), (4, 0.05)] {
+        let mut src =
+            PoissonStream::uniform(256, t, density, 42 + t as u64);
+        let frames = collect_frames(&mut src);
+        h.bench_function_n(
+            &format!("stream_t{t}_d{:03}", (density * 100.0) as u32),
+            t as u64,
+            |b| b.iter(|| mlp.run(black_box(&frames)).stats.active_rows),
+        );
+    }
+    let path = h.finish_to(&out_dir);
+    let doc = spikemram::util::json::parse(
+        &std::fs::read_to_string(&path).expect("BENCH_stream.json written"),
+    )
+    .expect("valid JSON");
+    assert_eq!(doc.get("group").unwrap().as_str(), Some("stream"));
+    let benches = doc.get("benches").unwrap();
+    for name in ["stream_t1_d050", "stream_t4_d005"] {
+        assert!(
+            benches
+                .get(name)
+                .and_then(|b| b.get("per_op_median_ns"))
+                .and_then(|v| v.as_f64())
+                .is_some_and(|v| v > 0.0),
+            "row {name} missing"
+        );
+    }
+}
