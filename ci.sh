@@ -55,6 +55,12 @@ echo "==> stream bench: smoke run in --test mode (S18 timestep sweep)"
 cargo bench --bench stream --no-run
 SPIKEMRAM_BENCH_FAST=1 cargo bench --bench stream -- --test
 
+echo "==> EX4 reliability smoke sweep (S19 fault-injection runtime)"
+# A small uptime sweep through the release binary: drift, recalibrate,
+# scrub. Hard-fails if the CSV artifact does not land.
+cargo run --release --quiet -- reliability --seed 7
+ls -l results/ex4_reliability.csv
+
 echo "==> lint: cargo fmt --check && cargo clippy -D warnings (hard gate)"
 # --all-targets covers the fabric/ module (lib), its bench, example,
 # and integration test with warnings fatal.

@@ -34,6 +34,14 @@ struct Inner {
     noc_hops: u64,
     tiles_used: u64,
     tiles_total: u64,
+    // --- reliability runtime (S19) ---
+    flips_injected: u64,
+    flips_detected: u64,
+    flips_repaired: u64,
+    scrubs: u64,
+    scrub_energy_fj: f64,
+    scrub_busy_ns: f64,
+    sim_time_ns: f64,
 }
 
 /// One consistent view of every serving counter.
@@ -70,6 +78,22 @@ pub struct MetricsSnapshot {
     pub tiles_used: u64,
     /// Fabric mesh size (gauge; 0 off-fabric).
     pub tiles_total: u64,
+    /// Cells changed by injected retention drift (S19; 0 without a
+    /// fault plan).
+    pub flips_injected: u64,
+    /// Cells found disagreeing with golden during scrub passes.
+    pub flips_detected: u64,
+    /// Cells restored to golden by scrub rewrites.
+    pub flips_repaired: u64,
+    /// Scrub passes completed.
+    pub scrubs: u64,
+    /// SOT write energy spent scrubbing (fJ; also folded into
+    /// `energy_fj` so the serving ledger sees it).
+    pub scrub_energy_fj: f64,
+    /// Simulated array time occupied by scrubbing (ns).
+    pub scrub_busy_ns: f64,
+    /// Simulated uptime advanced by drift injection (ns).
+    pub sim_time_ns: f64,
 }
 
 impl MetricsSnapshot {
@@ -101,6 +125,17 @@ impl MetricsSnapshot {
             self.noc_hops as f64 / self.noc_packets as f64
         }
     }
+
+    /// Fraction of simulated uptime spent scrubbing, clamped to [0, 1]
+    /// (an aggressive wall-clock scrubber can overlap serving, so the
+    /// raw ratio may exceed 1; 0 before any drift is injected).
+    pub fn scrub_duty_cycle(&self) -> f64 {
+        if self.sim_time_ns <= 0.0 {
+            0.0
+        } else {
+            (self.scrub_busy_ns / self.sim_time_ns).min(1.0)
+        }
+    }
 }
 
 impl Default for Metrics {
@@ -130,6 +165,13 @@ impl Metrics {
                 noc_hops: 0,
                 tiles_used: 0,
                 tiles_total: 0,
+                flips_injected: 0,
+                flips_detected: 0,
+                flips_repaired: 0,
+                scrubs: 0,
+                scrub_energy_fj: 0.0,
+                scrub_busy_ns: 0.0,
+                sim_time_ns: 0.0,
             }),
             started: Instant::now(),
         }
@@ -184,6 +226,34 @@ impl Metrics {
         g.tiles_total = total;
     }
 
+    /// Account one drift-injection round (S19): `flips` cells changed
+    /// while the simulated clock advanced by `dt_ns`.
+    pub fn record_fault_injection(&self, flips: u64, dt_ns: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.flips_injected += flips;
+        g.sim_time_ns += dt_ns;
+    }
+
+    /// Account one scrub pass (S19): mismatches found, cells restored,
+    /// write energy spent, and simulated array time occupied. The
+    /// energy also lands in the serving ledger (`energy_fj`), so scrub
+    /// cost is visible wherever compute energy is.
+    pub fn record_scrub(
+        &self,
+        detected: u64,
+        repaired: u64,
+        energy_fj: f64,
+        busy_ns: f64,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.scrubs += 1;
+        g.flips_detected += detected;
+        g.flips_repaired += repaired;
+        g.scrub_energy_fj += energy_fj;
+        g.scrub_busy_ns += busy_ns;
+        g.energy_fj += energy_fj;
+    }
+
     /// Derive the snapshot from an already-held guard — the one source
     /// of every rate/quantile, shared by `snapshot()` and `summary()`.
     fn snapshot_of(&self, g: &Inner) -> MetricsSnapshot {
@@ -207,6 +277,13 @@ impl Metrics {
             noc_hops: g.noc_hops,
             tiles_used: g.tiles_used,
             tiles_total: g.tiles_total,
+            flips_injected: g.flips_injected,
+            flips_detected: g.flips_detected,
+            flips_repaired: g.flips_repaired,
+            scrubs: g.scrubs,
+            scrub_energy_fj: g.scrub_energy_fj,
+            scrub_busy_ns: g.scrub_busy_ns,
+            sim_time_ns: g.sim_time_ns,
         }
     }
 
@@ -264,6 +341,18 @@ impl Metrics {
                 s.tiles_used,
                 s.tiles_total,
                 s.tile_utilization() * 100.0
+            ));
+        }
+        if s.flips_injected > 0 || s.scrubs > 0 {
+            out.push_str(&format!(
+                "\nreliability: flips injected={} detected={} repaired={} \
+                 scrubs={} duty={:.1} % scrub_energy={:.1} pJ",
+                s.flips_injected,
+                s.flips_detected,
+                s.flips_repaired,
+                s.scrubs,
+                s.scrub_duty_cycle() * 100.0,
+                s.scrub_energy_fj / 1e3
             ));
         }
         out
@@ -356,6 +445,37 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.energy_fj, 2000.0);
         assert!(m.summary().contains("energy: 2.0 pJ modeled"));
+    }
+
+    #[test]
+    fn reliability_counters_accumulate_and_show() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().scrub_duty_cycle(), 0.0);
+        assert!(!m.summary().contains("reliability:"));
+        m.record_fault_injection(12, 1e6);
+        m.record_scrub(12, 12, 5_000.0, 2e5);
+        m.record_fault_injection(3, 1e6);
+        m.record_scrub(3, 3, 1_000.0, 2e5);
+        let s = m.snapshot();
+        assert_eq!(s.flips_injected, 15);
+        assert_eq!(s.flips_detected, 15);
+        assert_eq!(s.flips_repaired, 15);
+        assert_eq!(s.scrubs, 2);
+        assert_eq!(s.scrub_energy_fj, 6_000.0);
+        assert!((s.scrub_duty_cycle() - 0.2).abs() < 1e-12);
+        // Scrub energy is folded into the serving ledger.
+        assert_eq!(s.energy_fj, 6_000.0);
+        assert!(m.summary().contains(
+            "reliability: flips injected=15 detected=15 repaired=15"
+        ));
+    }
+
+    #[test]
+    fn scrub_duty_cycle_clamps_at_one() {
+        let m = Metrics::new();
+        m.record_fault_injection(0, 10.0);
+        m.record_scrub(0, 0, 0.0, 100.0);
+        assert_eq!(m.snapshot().scrub_duty_cycle(), 1.0);
     }
 
     #[test]

@@ -15,5 +15,6 @@ pub use batcher::{Batch, Batcher, CloseReason, Request};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use pipeline::{pipeline_makespan_ns, serial_makespan_ns, ThreadedPipeline};
 pub use scheduler::{Policy, ScheduleReport, Scheduler, TileOp};
+pub use scrub::{ScrubPolicy, Scrubber};
 pub use server::{BackendKind, MacroServer, Router, ServerConfig};
 pub use tiler::TiledMatrix;

@@ -1,0 +1,305 @@
+//! Seeded fault-injection plans for deployed arrays (DESIGN.md S19).
+//!
+//! The retention/write/endurance models (this directory) describe what
+//! *can* go wrong; this module is the runtime that makes it happen to a
+//! live [`Crossbar`] on a simulated wall-clock. Three fault classes,
+//! matching the wafer-scale SOT-MRAM characterization literature:
+//!
+//! * **Retention drift** — junction states relax toward thermal
+//!   equilibrium per [`RetentionParams::flip_probability`]. Drift flips
+//!   *states*, not device geometry: conductances stay on their level
+//!   targets, so a drifted array still passes `uniform_levels()` and
+//!   the quantized engine remains eligible (the codes are wrong, not
+//!   non-uniform).
+//! * **Stuck-at cells** — a seeded fraction of cells pinned at an
+//!   extreme code (half G_AP = code 0, half G_P = code 3) at deploy
+//!   time. Pins survive drift *and* scrubbing: every mutation re-pins.
+//! * **Die-to-die variation** — a one-shot lognormal-ish scale on every
+//!   junction's R_P at deploy. This is the class that moves
+//!   conductances off their level targets and forces `MvmEngine::Auto`
+//!   away from the quantized level-plane engine.
+//!
+//! Everything is deterministic under `FaultPlan::seed`: each macro gets
+//! a [`FaultState`] with two decoupled RNG streams — one for drift, one
+//! for scrub-write stochasticity — so arms of an experiment that share
+//! a plan see *identical* flip sequences whether or not they scrub.
+
+use crate::device::retention::RetentionParams;
+use crate::device::write::SotWriteParams;
+use crate::util::rng::Rng;
+use crate::xbar::Crossbar;
+
+/// What goes wrong, and how fast. `Copy` so configs can embed it.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// Master seed; per-macro streams are forked from it.
+    pub seed: u64,
+    /// Retention corner driving the drift schedule.
+    pub retention: RetentionParams,
+    /// Fraction of cells stuck at an extreme code from deploy time.
+    pub stuck_frac: f64,
+    /// Extra die-to-die sigma on junction R_P frozen in at deploy
+    /// (breaks `uniform_levels`, disqualifying the quantized engine).
+    pub d2d_sigma: f64,
+}
+
+impl FaultPlan {
+    /// Healthy silicon: standard retention, no stuck cells, no extra
+    /// variation. Drift at Δ = 60 is negligible over any sane uptime.
+    pub fn none(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            retention: RetentionParams::standard(),
+            stuck_frac: 0.0,
+            d2d_sigma: 0.0,
+        }
+    }
+
+    /// Pure retention drift at the given corner — the scrubbable fault
+    /// class (EX4's subject).
+    pub fn drift_only(retention: RetentionParams, seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            retention,
+            stuck_frac: 0.0,
+            d2d_sigma: 0.0,
+        }
+    }
+
+    /// Everything at once: stress-corner drift, 0.2 % stuck cells, 3 %
+    /// die-to-die R_P spread. The differential engine tests run here.
+    pub fn harsh(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            retention: RetentionParams::stress(),
+            stuck_frac: 0.002,
+            d2d_sigma: 0.03,
+        }
+    }
+}
+
+/// Tally of one scrub pass over an array (or the sum over many).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ScrubOutcome {
+    /// Cells compared against the golden snapshot.
+    pub checked: usize,
+    /// Cells whose stored code disagreed with golden (flips detected).
+    pub mismatched: usize,
+    /// Cells whose code matches golden after rewriting (stuck cells
+    /// stay mismatched: detected but not repairable).
+    pub repaired: usize,
+    /// SOT write pulses issued (wear, via `Mtj::writes`).
+    pub junction_pulses: u64,
+    /// Write energy dissipated (fJ), I²·R·t per pulse.
+    pub energy_fj: f64,
+}
+
+impl ScrubOutcome {
+    /// Fold another pass into this tally (multi-macro aggregation).
+    pub fn absorb(&mut self, other: &ScrubOutcome) {
+        self.checked += other.checked;
+        self.mismatched += other.mismatched;
+        self.repaired += other.repaired;
+        self.junction_pulses += other.junction_pulses;
+        self.energy_fj += other.energy_fj;
+    }
+}
+
+/// Per-macro fault-injection state: the plan, this macro's RNG streams,
+/// its stuck-cell pin list, and the simulated clock.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    plan: FaultPlan,
+    /// Drift stream — advanced only by [`advance`](Self::advance), so
+    /// scrubbing never perturbs the flip sequence.
+    drift_rng: Rng,
+    /// Write stream for scrub pulses (overdrive writes are
+    /// deterministic anyway, but `apply_write` still draws).
+    scrub_rng: Rng,
+    /// Linear cell index → pinned code.
+    stuck: Vec<(usize, u8)>,
+    /// Simulated uptime accumulated through `advance` (ns).
+    pub now_ns: f64,
+    /// Cells changed by drift so far (re-flips counted each time).
+    pub flips_injected: u64,
+}
+
+impl FaultState {
+    /// Deterministic state for macro number `index` under `plan`.
+    pub fn new(plan: FaultPlan, index: u64) -> Self {
+        let mut root =
+            Rng::new(plan.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(index.wrapping_add(1)));
+        let drift_rng = root.fork();
+        let scrub_rng = root.fork();
+        FaultState {
+            plan,
+            drift_rng,
+            scrub_rng,
+            stuck: Vec::new(),
+            now_ns: 0.0,
+            flips_injected: 0,
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Number of pinned (stuck-at) cells after deploy.
+    pub fn stuck_cells(&self) -> usize {
+        self.stuck.len()
+    }
+
+    /// Apply deploy-time faults to `xbar`: freeze die-to-die variation
+    /// into the junction resistances and sample + pin the stuck-at set.
+    /// Returns the number of stuck cells.
+    pub fn deploy(&mut self, xbar: &mut Crossbar) -> usize {
+        if self.plan.d2d_sigma > 0.0 {
+            xbar.inject_gain_variation(self.plan.d2d_sigma, &mut self.drift_rng);
+        }
+        self.stuck.clear();
+        if self.plan.stuck_frac > 0.0 {
+            for i in 0..xbar.rows * xbar.cols {
+                if self.drift_rng.f64() < self.plan.stuck_frac {
+                    let code = if self.drift_rng.f64() < 0.5 { 0 } else { 3 };
+                    self.stuck.push((i, code));
+                }
+            }
+            xbar.force_codes(&self.stuck);
+        }
+        self.stuck.len()
+    }
+
+    /// Advance the simulated clock by `dt_ns`: retention flips land on
+    /// `xbar` (no wear — Néel relaxation is not a write) and stuck
+    /// cells are re-pinned. Returns cells whose code changed.
+    pub fn advance(&mut self, xbar: &mut Crossbar, dt_ns: f64) -> usize {
+        self.now_ns += dt_ns;
+        let flipped =
+            xbar.corrupt_retention(dt_ns, &self.plan.retention, &mut self.drift_rng);
+        if !self.stuck.is_empty() {
+            xbar.force_codes(&self.stuck);
+        }
+        self.flips_injected += flipped as u64;
+        flipped
+    }
+
+    /// Verify-and-rewrite `xbar` against a golden code snapshot, then
+    /// re-pin stuck cells (their rewrites do not stick, and they are
+    /// subtracted back out of `repaired`).
+    pub fn scrub(
+        &mut self,
+        xbar: &mut Crossbar,
+        golden: &[u8],
+        wp: &SotWriteParams,
+    ) -> ScrubOutcome {
+        let mut out = xbar.scrub_to(golden, wp, &mut self.scrub_rng);
+        if !self.stuck.is_empty() {
+            let repinned = xbar.force_codes(&self.stuck);
+            out.repaired = out.repaired.saturating_sub(repinned);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MacroConfig;
+
+    fn small() -> MacroConfig {
+        MacroConfig {
+            rows: 16,
+            cols: 16,
+            ..MacroConfig::default()
+        }
+    }
+
+    fn programmed(cfg: &MacroConfig) -> Crossbar {
+        let mut xb = Crossbar::new(cfg);
+        let codes: Vec<u8> =
+            (0..cfg.rows * cfg.cols).map(|i| (i % 4) as u8).collect();
+        xb.program_codes(&codes);
+        xb
+    }
+
+    #[test]
+    fn drift_is_deterministic_per_seed_and_index() {
+        let cfg = small();
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 42);
+        let (mut a, mut b) = (programmed(&cfg), programmed(&cfg));
+        let mut fa = FaultState::new(plan, 3);
+        let mut fb = FaultState::new(plan, 3);
+        let tau = plan.retention.tau_ret_ns();
+        assert_eq!(fa.advance(&mut a, tau), fb.advance(&mut b, tau));
+        assert_eq!(a.codes(), b.codes());
+        // A different macro index draws a different flip pattern.
+        let mut c = programmed(&cfg);
+        let mut fc = FaultState::new(plan, 4);
+        fc.advance(&mut c, tau);
+        assert_ne!(a.codes(), c.codes());
+    }
+
+    #[test]
+    fn drift_keeps_levels_uniform_but_d2d_breaks_them() {
+        let cfg = small();
+        let mut drifted = programmed(&cfg);
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 7);
+        let mut fs = FaultState::new(plan, 0);
+        let flips = fs.advance(&mut drifted, plan.retention.tau_ret_ns());
+        assert!(flips > 0, "stress corner at t=τ must flip something");
+        assert!(drifted.uniform_levels(), "drift moves codes, not levels");
+
+        let mut varied = programmed(&cfg);
+        let mut fv = FaultState::new(FaultPlan::harsh(7), 0);
+        fv.deploy(&mut varied);
+        assert!(!varied.uniform_levels(), "d2d variation must break levels");
+    }
+
+    #[test]
+    fn stuck_cells_survive_drift_and_scrub() {
+        let cfg = small();
+        let mut xb = programmed(&cfg);
+        let golden = xb.read_codes();
+        let plan = FaultPlan {
+            stuck_frac: 0.1,
+            d2d_sigma: 0.0,
+            ..FaultPlan::harsh(9)
+        };
+        let mut fs = FaultState::new(plan, 1);
+        let stuck = fs.deploy(&mut xb);
+        assert!(stuck > 0, "10 % of 256 cells must pin at least one");
+        fs.advance(&mut xb, plan.retention.tau_ret_ns());
+        let out = fs.scrub(&mut xb, &golden, &SotWriteParams::default());
+        assert_eq!(out.checked, 256);
+        assert!(out.mismatched > 0);
+        // Every non-stuck cell is back on golden; stuck pins remain.
+        let now = xb.read_codes();
+        let stuck_set: Vec<usize> =
+            (0..256).filter(|i| now[*i] != golden[*i]).collect();
+        assert!(stuck_set.len() <= stuck);
+        assert!(out.repaired >= out.mismatched.saturating_sub(stuck));
+    }
+
+    #[test]
+    fn scrub_does_not_perturb_the_drift_stream() {
+        // Two arms, same plan: one scrubs between drift steps, one
+        // does not. The *drift* flip sequences must stay identical.
+        let cfg = small();
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 17);
+        let wp = SotWriteParams::default();
+        let (mut a, mut b) = (programmed(&cfg), programmed(&cfg));
+        let golden = a.read_codes();
+        let mut fa = FaultState::new(plan, 0);
+        let mut fb = FaultState::new(plan, 0);
+        let dt = plan.retention.tau_ret_ns() * 0.3;
+        for _ in 0..3 {
+            let na = fa.advance(&mut a, dt);
+            let nb = fb.advance(&mut b, dt);
+            assert_eq!(na, nb, "scrubbing must not desync drift");
+            fb.scrub(&mut b, &golden, &wp);
+        }
+        assert_eq!(fa.flips_injected, fb.flips_injected);
+        assert_eq!(b.read_codes(), golden, "arm b ends fully scrubbed");
+    }
+}

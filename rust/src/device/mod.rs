@@ -1,12 +1,15 @@
 //! SOT-MRAM device substrate (DESIGN.md S1): MTJ resistance model, the
-//! paper's 3T-2MTJ series cell, and SOT write-switching dynamics.
+//! paper's 3T-2MTJ series cell, SOT write-switching dynamics, and the
+//! seeded fault-injection runtime built on them (DESIGN.md S19).
 
 pub mod cell;
+pub mod faults;
 pub mod mtj;
 pub mod retention;
 pub mod write;
 
 pub use cell::Cell3T2J;
+pub use faults::{FaultPlan, FaultState, ScrubOutcome};
 pub use mtj::{Mtj, MtjState};
 pub use retention::{EnduranceParams, RetentionParams};
 pub use write::{SotWriteParams, WritePulse};

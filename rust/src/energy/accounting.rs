@@ -3,8 +3,10 @@
 //! Every macro op returns an `EnergyBreakdown`; the coordinator sums them
 //! across tiles/batches. Categories follow the paper's Fig 6(a) power
 //! breakdown — array read, SMU, OSG, control — plus the chip-level NoC
-//! category charged by the fabric subsystem (DESIGN.md S15). A single
-//! macro op never produces `noc_fj`; only routed fabric traffic does.
+//! category charged by the fabric subsystem (DESIGN.md S15) and the SOT
+//! write/scrub category charged by the reliability runtime (DESIGN.md
+//! S19). A single macro op never produces `noc_fj` or `write_fj`; only
+//! routed fabric traffic and scrub/reprogram pulses do.
 
 /// Energy per component for one (or many accumulated) macro ops, in fJ.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -15,23 +17,28 @@ pub struct EnergyBreakdown {
     pub control_fj: f64,
     /// Spike-packet NoC traffic (fabric link+router energy, S15).
     pub noc_fj: f64,
+    /// SOT programming pulses: scrub rewrites and reprogramming (S19).
+    pub write_fj: f64,
 }
 
 impl EnergyBreakdown {
     pub fn total_fj(&self) -> f64 {
         self.array_fj + self.smu_fj + self.osg_fj + self.control_fj
             + self.noc_fj
+            + self.write_fj
     }
 
     pub fn total_pj(&self) -> f64 {
         self.total_fj() / 1000.0
     }
 
-    /// Component shares (array, smu, osg, control, noc), summing to 1.
-    pub fn shares(&self) -> [f64; 5] {
+    /// Component shares (array, smu, osg, control, noc, write), summing
+    /// to 1. The first five indices predate `write_fj` and keep their
+    /// positions (fig6/EX consumers index into this array).
+    pub fn shares(&self) -> [f64; 6] {
         let t = self.total_fj();
         if t == 0.0 {
-            return [0.0; 5];
+            return [0.0; 6];
         }
         [
             self.array_fj / t,
@@ -39,6 +46,7 @@ impl EnergyBreakdown {
             self.osg_fj / t,
             self.control_fj / t,
             self.noc_fj / t,
+            self.write_fj / t,
         ]
     }
 
@@ -48,6 +56,7 @@ impl EnergyBreakdown {
         self.osg_fj += other.osg_fj;
         self.control_fj += other.control_fj;
         self.noc_fj += other.noc_fj;
+        self.write_fj += other.write_fj;
     }
 
     pub fn scaled(&self, f: f64) -> EnergyBreakdown {
@@ -57,6 +66,7 @@ impl EnergyBreakdown {
             osg_fj: self.osg_fj * f,
             control_fj: self.control_fj * f,
             noc_fj: self.noc_fj * f,
+            write_fj: self.write_fj * f,
         }
     }
 }
@@ -80,7 +90,7 @@ mod tests {
             smu_fj: 2.0,
             osg_fj: 5.0,
             control_fj: 2.0,
-            noc_fj: 0.0,
+            ..EnergyBreakdown::default()
         };
         let s = e.shares();
         assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
@@ -94,7 +104,7 @@ mod tests {
             smu_fj: 1.0,
             osg_fj: 1.0,
             control_fj: 1.0,
-            noc_fj: 0.0,
+            ..EnergyBreakdown::default()
         };
         a.add(&a.clone());
         assert_eq!(a.total_fj(), 8.0);
@@ -111,6 +121,23 @@ mod tests {
         assert_eq!(e.total_fj(), 4.0);
         let s = e.shares();
         assert!((s[4] - 0.75).abs() < 1e-12);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn write_category_counts_toward_total_and_shares() {
+        // Scrub energy (S19) must be visible in the ledger: it moves
+        // the total and takes the sixth share slot without disturbing
+        // the five original indices.
+        let e = EnergyBreakdown {
+            array_fj: 1.0,
+            write_fj: 3.0,
+            ..EnergyBreakdown::default()
+        };
+        assert_eq!(e.total_fj(), 4.0);
+        let s = e.shares();
+        assert!((s[0] - 0.25).abs() < 1e-12);
+        assert!((s[5] - 0.75).abs() < 1e-12);
         assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
     }
 

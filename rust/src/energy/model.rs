@@ -147,7 +147,9 @@ pub fn mvm_energy<'a>(
         smu_fj,
         osg_fj,
         control_fj,
-        noc_fj: 0.0, // single-macro op; NoC traffic is charged by S15
+        // Single-macro op: NoC traffic is charged by S15, write/scrub
+        // pulses by the S19 reliability runtime.
+        ..EnergyBreakdown::default()
     }
 }
 

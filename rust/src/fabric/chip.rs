@@ -142,6 +142,20 @@ impl LayerStage {
         self.locs[0]
     }
 
+    /// This stage's shard macros (ti-major order) — read access for
+    /// golden-code snapshots (DESIGN.md S19).
+    pub fn macros(&self) -> &[CimMacro] {
+        &self.macros
+    }
+
+    /// Mutable shard access for the reliability runtime (DESIGN.md
+    /// S19): fault injection and scrubbing mutate deployed arrays in
+    /// place. Weights-as-computed change, so callers own the
+    /// consistency of anything derived from the old conductances.
+    pub fn macros_mut(&mut self) -> &mut [CimMacro] {
+        &mut self.macros
+    }
+
     /// Price the four NoC phases of one input vector (ingress,
     /// distribute, gather, egress) from its per-row-tile slices.
     fn route<P: AsRef<[u32]>>(&self, xparts: &[P]) -> RoutedPhases {

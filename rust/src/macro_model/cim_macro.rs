@@ -390,6 +390,24 @@ impl CimMacro {
         self.xbar.program_codes(codes);
     }
 
+    /// Golden-code snapshot of the programmed array (row-major) — the
+    /// scrubber's reference copy (DESIGN.md S19).
+    pub fn golden_codes(&self) -> Vec<u8> {
+        self.xbar.read_codes()
+    }
+
+    /// Verify-and-rewrite this macro's array against a golden snapshot
+    /// (DESIGN.md S19): forwards to [`Crossbar::scrub_to`], charging
+    /// SOT write energy and wear through `device::write`.
+    pub fn scrub_against(
+        &mut self,
+        golden: &[u8],
+        wp: &crate::device::SotWriteParams,
+        rng: &mut Rng,
+    ) -> crate::device::ScrubOutcome {
+        self.xbar.scrub_to(golden, wp, rng)
+    }
+
     /// Sensing gain α of this macro's OSGs (Eq. 2).
     pub fn alpha(&self) -> f64 {
         self.cfg.alpha()
@@ -1417,6 +1435,45 @@ mod tests {
         noisy.program(&codes);
         let r = noisy.mvm_batch(std::slice::from_ref(&dense_x));
         assert_eq!(r.engine_used(), EngineUsed::General);
+    }
+
+    #[test]
+    fn auto_survives_live_fault_injection() {
+        use crate::device::faults::{FaultPlan, FaultState};
+        use crate::device::RetentionParams;
+        // A healthy Auto macro picks Quantized...
+        let (mut m, _) = macro_with_codes(97);
+        let golden = m.golden_codes();
+        let dense_x = vec![180u32; 128];
+        let r = m.mvm_batch(std::slice::from_ref(&dense_x));
+        assert_eq!(r.engine_used(), EngineUsed::Quantized);
+
+        // ...retention drift alone moves codes, not levels: Quantized
+        // stays eligible (wrong answers faithfully computed)...
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 5);
+        let mut fs = FaultState::new(plan, 0);
+        let flips = fs.advance(&mut m.xbar, plan.retention.tau_ret_ns());
+        assert!(flips > 0);
+        let r = m.mvm_batch(std::slice::from_ref(&dense_x));
+        assert_eq!(r.engine_used(), EngineUsed::Quantized);
+
+        // ...but die-to-die variation breaks the level planes, and Auto
+        // must degrade to a fallback engine instead of panicking.
+        let mut harsh = FaultState::new(FaultPlan::harsh(5), 0);
+        harsh.deploy(&mut m.xbar);
+        assert!(!m.xbar.uniform_levels());
+        let r = m.mvm_batch(std::slice::from_ref(&dense_x));
+        assert_ne!(r.engine_used(), EngineUsed::Quantized);
+
+        // Scrubbing restores the codes; the d2d variation is permanent,
+        // so the fallback persists — and still computes.
+        let mut rng = Rng::new(6);
+        let out =
+            m.scrub_against(&golden, &crate::device::SotWriteParams::default(), &mut rng);
+        assert!(out.mismatched > 0);
+        assert_eq!(m.golden_codes(), golden);
+        let r = m.mvm_batch(std::slice::from_ref(&dense_x));
+        assert_ne!(r.engine_used(), EngineUsed::Quantized);
     }
 
     #[test]

@@ -50,6 +50,8 @@ experiments (paper artifacts → results/):
                     spike-packet NoC share, hops, modeled throughput)
   stream            EX3 temporal streaming sweep (accuracy/energy/occupancy
                     vs T ∈ {1,2,4,8,16} on the binary-spike path)
+  reliability       EX4 fault-injection reliability sweep (accuracy + energy
+                    per decision vs simulated uptime, with/without scrubbing)
 
 operations:
   mvm        run one 128×128 macro MVM   [--seed N] [--backend sim|pjrt]
@@ -130,6 +132,14 @@ fn main() -> Result<()> {
             println!(
                 "{}",
                 repro::stream::render(&repro::stream::run(&cfg, seed))
+            );
+        }
+        "reliability" => {
+            println!(
+                "{}",
+                repro::reliability::render(&repro::reliability::run(
+                    &cfg, seed
+                ))
             );
         }
         "mvm" => cmd_mvm(&args, &cfg, seed)?,
@@ -335,6 +345,7 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         spec,
         StreamServerConfig {
             workers: args.get_usize("workers", 2),
+            ..StreamServerConfig::default()
         },
     )?;
 

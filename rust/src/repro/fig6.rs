@@ -23,9 +23,10 @@ use super::report::{self, Table};
 #[derive(Debug, Clone)]
 pub struct Fig6a {
     pub mean_energy: EnergyBreakdown,
-    /// shares: [array, smu, osg, control, noc] — noc is always 0 for a
-    /// single macro (the fabric charges it, DESIGN.md S15).
-    pub shares: [f64; 5],
+    /// shares: [array, smu, osg, control, noc, write] — noc and write
+    /// are always 0 for a single macro op (the fabric charges NoC,
+    /// DESIGN.md S15; the reliability runtime charges writes, S19).
+    pub shares: [f64; 6],
     pub tops_per_watt: f64,
     pub mvms: usize,
 }

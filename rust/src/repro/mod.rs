@@ -15,6 +15,7 @@
 //! | EX1 | [`scaling`] | extension: array-size scaling |
 //! | EX2 | [`fabric`] | extension: multi-macro fabric scaling (S15) |
 //! | EX3 | [`stream`] | extension: temporal streaming sweep (S18) |
+//! | EX4 | [`reliability`] | extension: fault-injection reliability (S19) |
 //!
 //! E9 (end-to-end SNN) lives in `examples/snn_inference.rs`.
 
@@ -24,6 +25,7 @@ pub mod fig3;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod reliability;
 pub mod report;
 pub mod scaling;
 pub mod stream;

@@ -20,17 +20,29 @@
 //! (`record_activity` with macro row slots across all stages), and
 //! MACs. Session replies carry the running readout membranes, so a
 //! client can take the argmax at any timestep (anytime inference).
+//!
+//! Reliability (DESIGN.md S19): when the config carries a
+//! [`FaultPlan`], each worker owns a per-shard fault state alongside
+//! its model and a golden code snapshot taken at deployment. Simulated
+//! retention drift ([`StreamServer::drift`]) and verify-and-rewrite
+//! scrubs ([`StreamServer::scrub_now`], or a background
+//! [`Scrubber`] via [`StreamServer::start_scrubber`]) travel through
+//! the same per-worker FIFOs as frames, so scrub work interleaves with
+//! serving at session granularity — it can never race a frame on the
+//! worker's model, which is what makes the scrub-vs-serve bit-identity
+//! assertion in `rust/tests/stream_e2e.rs` possible.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::{FabricConfig, LevelMap, MacroConfig, StreamConfig};
-use crate::coordinator::Metrics;
+use crate::coordinator::{Metrics, ScrubPolicy, Scrubber};
+use crate::device::{FaultPlan, FaultState, ScrubOutcome, SotWriteParams};
 use crate::snn::dataset::Dataset;
 use crate::snn::mlp::Mlp;
 
@@ -84,18 +96,47 @@ enum StreamJob {
         session: u64,
         reply: mpsc::Sender<StreamReply>,
     },
+    /// Advance the worker's simulated clock: retention flips land on
+    /// its arrays. Replies with the number of cells changed.
+    Drift {
+        dt_ns: f64,
+        reply: mpsc::Sender<u64>,
+    },
+    /// Verify-and-rewrite every shard against the worker's golden
+    /// snapshot. The reply sender may already be gone (background
+    /// scrubber ticks fire and forget).
+    Scrub {
+        reply: mpsc::Sender<ScrubOutcome>,
+    },
 }
 
 /// Stream server configuration.
 #[derive(Debug, Clone)]
 pub struct StreamServerConfig {
     pub workers: usize,
+    /// Fault-injection plan (DESIGN.md S19). `None` serves a pristine
+    /// fabric; drift/scrub jobs are then no-ops.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for StreamServerConfig {
     fn default() -> Self {
-        StreamServerConfig { workers: 2 }
+        StreamServerConfig {
+            workers: 2,
+            faults: None,
+        }
     }
+}
+
+/// One worker's reliability state: the golden snapshot it scrubs
+/// toward, per-shard fault RNG streams, and the write/scrub knobs.
+struct ReliabilityCtx {
+    golden: Vec<Vec<Vec<u8>>>,
+    states: Vec<Vec<FaultState>>,
+    wp: SotWriteParams,
+    policy: ScrubPolicy,
+    /// Deployed shard macros (scrub busy-time = macros × tile time).
+    n_macros: u64,
 }
 
 struct SessionState {
@@ -127,12 +168,36 @@ impl StreamServer {
         let mut txs = Vec::with_capacity(scfg.workers);
         let mut handles = Vec::with_capacity(scfg.workers);
         let mut in_dim = 0;
-        for _ in 0..scfg.workers {
-            let mlp = spec.build()?;
+        for w in 0..scfg.workers {
+            let mut mlp = spec.build()?;
             in_dim = mlp.in_dim();
+            let rel = scfg.faults.map(|plan| {
+                // Golden = intended codes, captured before any fault
+                // touches the arrays: scrub restores toward *this*.
+                let golden = mlp.snapshot_codes();
+                // Distinct per-worker seed: each replica is its own
+                // die and drifts independently.
+                let wplan = FaultPlan {
+                    seed: plan.seed.wrapping_add(1 + w as u64),
+                    ..plan
+                };
+                let mut states = mlp.fault_states(wplan);
+                mlp.deploy_faults(&mut states);
+                let n_macros =
+                    golden.iter().map(|s| s.len() as u64).sum::<u64>();
+                ReliabilityCtx {
+                    golden,
+                    states,
+                    wp: SotWriteParams::default(),
+                    policy: ScrubPolicy::standard(),
+                    n_macros,
+                }
+            });
             let (tx, rx) = mpsc::channel::<StreamJob>();
             let m = metrics.clone();
-            handles.push(std::thread::spawn(move || worker_loop(mlp, rx, m)));
+            handles.push(std::thread::spawn(move || {
+                worker_loop(mlp, rx, m, rel)
+            }));
             txs.push(tx);
         }
         Ok(StreamServer {
@@ -208,6 +273,62 @@ impl StreamServer {
         rrx.recv().expect("reply")
     }
 
+    /// Advance every worker's simulated clock by `dt_ns` (retention
+    /// drift lands in place, interleaved with any in-flight frames).
+    /// Returns the total cells flipped across all workers; 0 when the
+    /// server runs without a fault plan.
+    pub fn drift(&self, dt_ns: f64) -> u64 {
+        let rxs: Vec<_> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(StreamJob::Drift { dt_ns, reply: rtx })
+                    .expect("workers alive");
+                rrx
+            })
+            .collect();
+        rxs.into_iter().map(|rx| rx.recv().expect("reply")).sum()
+    }
+
+    /// Scrub every worker's fabric against its golden snapshot and
+    /// wait for completion (the synchronous path; the background
+    /// [`Scrubber`] uses the same job type, fire-and-forget).
+    pub fn scrub_now(&self) -> ScrubOutcome {
+        let rxs: Vec<_> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(StreamJob::Scrub { reply: rtx })
+                    .expect("workers alive");
+                rrx
+            })
+            .collect();
+        let mut out = ScrubOutcome::default();
+        for rx in rxs {
+            out.absorb(&rx.recv().expect("reply"));
+        }
+        out
+    }
+
+    /// Start a background scrubber ticking every `period` of wall
+    /// time. Each tick enqueues one scrub job per worker; the jobs
+    /// drain through the same FIFOs as frames, so they interleave with
+    /// serving instead of racing it. Call [`Scrubber::stop`] before
+    /// [`shutdown`](StreamServer::shutdown).
+    pub fn start_scrubber(&self, period: Duration) -> Scrubber {
+        let txs = self.txs.clone();
+        Scrubber::start(period, move |_round| {
+            for tx in &txs {
+                let (rtx, _rrx) = mpsc::channel();
+                // Tolerate shutdown racing a tick: a closed channel
+                // just means there is nothing left to scrub.
+                let _ = tx.send(StreamJob::Scrub { reply: rtx });
+            }
+        })
+    }
+
     /// Stop accepting work and join the workers.
     pub fn shutdown(mut self) {
         self.txs.clear(); // closes every channel; workers drain & exit
@@ -221,6 +342,7 @@ fn worker_loop(
     mut mlp: SpikingMlp,
     rx: mpsc::Receiver<StreamJob>,
     metrics: Arc<Metrics>,
+    mut rel: Option<ReliabilityCtx>,
 ) {
     let mut sessions: HashMap<u64, SessionState> = HashMap::new();
     while let Ok(job) = rx.recv() {
@@ -277,6 +399,33 @@ fn worker_loop(
                 };
                 let _ = reply.send(out);
             }
+            StreamJob::Drift { dt_ns, reply } => {
+                let flips = match rel.as_mut() {
+                    Some(ctx) => mlp.drift(&mut ctx.states, dt_ns),
+                    None => 0,
+                };
+                metrics.record_fault_injection(flips, dt_ns);
+                let _ = reply.send(flips);
+            }
+            StreamJob::Scrub { reply } => {
+                let out = match rel.as_mut() {
+                    Some(ctx) => {
+                        let o =
+                            mlp.scrub(&mut ctx.states, &ctx.golden, &ctx.wp);
+                        let busy = ctx.policy.scrub_duration_ns
+                            * ctx.n_macros as f64;
+                        metrics.record_scrub(
+                            o.mismatched as u64,
+                            o.repaired as u64,
+                            o.energy_fj,
+                            busy,
+                        );
+                        o
+                    }
+                    None => ScrubOutcome::default(),
+                };
+                let _ = reply.send(out); // background ticks don't wait
+            }
         }
     }
 }
@@ -305,7 +454,10 @@ mod tests {
         let data = Dataset::generate(6, 77);
         let server = StreamServer::start(
             sp,
-            StreamServerConfig { workers: 2 },
+            StreamServerConfig {
+                workers: 2,
+                ..StreamServerConfig::default()
+            },
         )
         .unwrap();
 
@@ -357,6 +509,65 @@ mod tests {
                 .unwrap();
         let id = server.open_session();
         let _ = server.submit_frame(id, vec![5, 3]);
+    }
+
+    #[test]
+    fn faultless_server_treats_drift_and_scrub_as_noops() {
+        let server =
+            StreamServer::start(spec(71), StreamServerConfig::default())
+                .unwrap();
+        assert_eq!(server.drift(1e9), 0);
+        assert_eq!(server.scrub_now(), ScrubOutcome::default());
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.flips_injected, 0);
+        assert_eq!(snap.flips_repaired, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn drift_then_scrub_restores_serving_bitwise() {
+        use crate::device::RetentionParams;
+        let sp = spec(73);
+        let mut serial = sp.build().unwrap();
+        let enc = FrameEncoder::new(TemporalCode::Rate, 4, 255);
+        let data = Dataset::generate(4, 79);
+        let frames = enc.encode_frames(&data.features_u8(0));
+        let want = serial.run(&frames);
+
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 81);
+        let server = StreamServer::start(
+            sp,
+            StreamServerConfig {
+                workers: 2,
+                faults: Some(plan),
+            },
+        )
+        .unwrap();
+        let flips = server.drift(plan.retention.tau_ret_ns());
+        assert!(flips > 0, "stress drift at t=τ must flip cells");
+        let out = server.scrub_now();
+        assert_eq!(out.repaired, flips as usize, "full repair");
+        assert!(out.energy_fj > 0.0);
+
+        // Post-scrub, every worker replica serves the pristine answer.
+        for _ in 0..2 {
+            let id = server.open_session();
+            for f in &frames {
+                server.frame(id, f.clone());
+            }
+            let got = server.finish(id);
+            assert_eq!(got.out_v, want.out_v);
+            assert_eq!(got.label, want.label);
+        }
+
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.flips_injected, flips);
+        assert_eq!(snap.flips_detected, flips);
+        assert_eq!(snap.flips_repaired, flips);
+        assert_eq!(snap.scrubs, 2, "one scrub per worker");
+        assert!(snap.scrub_energy_fj > 0.0);
+        assert!(snap.scrub_duty_cycle() > 0.0);
+        server.shutdown();
     }
 
     #[test]

@@ -27,6 +27,8 @@ use anyhow::Result;
 use crate::baselines::DiscreteLif;
 use crate::config::{FabricConfig, LevelMap, MacroConfig, StreamConfig};
 use crate::coordinator::TiledMatrix;
+use crate::device::faults::{FaultPlan, FaultState, ScrubOutcome};
+use crate::device::SotWriteParams;
 use crate::energy::EnergyBreakdown;
 use crate::fabric::{FabricChip, LayerResult, LayerStage};
 use crate::snn::collect_activations;
@@ -416,6 +418,140 @@ impl SpikingMlp {
             stats,
         }
     }
+
+    // --- reliability runtime (DESIGN.md S19) -------------------------
+
+    /// Golden code snapshot of every deployed shard:
+    /// `codes[stage][shard]` is that macro's row-major code matrix —
+    /// the scrubber's reference copy. Take it right after deployment,
+    /// before any fault plan touches the arrays.
+    pub fn snapshot_codes(&self) -> Vec<Vec<Vec<u8>>> {
+        self.stages
+            .iter()
+            .map(|s| {
+                s.stage
+                    .macros()
+                    .iter()
+                    .map(|m| m.golden_codes())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// One [`FaultState`] per deployed shard macro (stage-major), each
+    /// with a deterministic per-macro RNG stream forked from the plan's
+    /// seed — two models built from the same spec and plan see
+    /// identical fault sequences.
+    pub fn fault_states(&self, plan: FaultPlan) -> Vec<Vec<FaultState>> {
+        let mut idx = 0u64;
+        self.stages
+            .iter()
+            .map(|s| {
+                s.stage
+                    .macros()
+                    .iter()
+                    .map(|_| {
+                        idx += 1;
+                        FaultState::new(plan, idx)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Apply deploy-time faults (stuck cells, die-to-die variation) to
+    /// every shard. Returns the total number of stuck cells pinned.
+    pub fn deploy_faults(&mut self, states: &mut [Vec<FaultState>]) -> u64 {
+        let mut stuck = 0u64;
+        for (s, row) in self.stages.iter_mut().zip(states.iter_mut()) {
+            for (m, fs) in s.stage.macros_mut().iter_mut().zip(row.iter_mut()) {
+                stuck += fs.deploy(&mut m.xbar) as u64;
+            }
+        }
+        stuck
+    }
+
+    /// Advance the simulated clock by `dt_ns` on every shard: retention
+    /// flips land in place. Returns the total cells changed.
+    pub fn drift(&mut self, states: &mut [Vec<FaultState>], dt_ns: f64) -> u64 {
+        let mut flips = 0u64;
+        for (s, row) in self.stages.iter_mut().zip(states.iter_mut()) {
+            for (m, fs) in s.stage.macros_mut().iter_mut().zip(row.iter_mut()) {
+                flips += fs.advance(&mut m.xbar, dt_ns) as u64;
+            }
+        }
+        flips
+    }
+
+    /// Verify-and-rewrite every shard against the golden snapshot,
+    /// charging SOT write energy and wear. Because drift moves states
+    /// and never R_P, a completed scrub of a drift-only plan restores
+    /// the deployment bit-for-bit (asserted in
+    /// `rust/tests/reliability_diff.rs`).
+    pub fn scrub(
+        &mut self,
+        states: &mut [Vec<FaultState>],
+        golden: &[Vec<Vec<u8>>],
+        wp: &SotWriteParams,
+    ) -> ScrubOutcome {
+        let mut out = ScrubOutcome::default();
+        for ((s, row), gold) in
+            self.stages.iter_mut().zip(states.iter_mut()).zip(golden)
+        {
+            for ((m, fs), g) in s
+                .stage
+                .macros_mut()
+                .iter_mut()
+                .zip(row.iter_mut())
+                .zip(gold)
+            {
+                out.absorb(&fs.scrub(&mut m.xbar, g, wp));
+            }
+        }
+        out
+    }
+
+    /// Online recalibration (DESIGN.md S19): stream `frame_sets`
+    /// through the deployed — possibly drifted — fabric under the
+    /// *current* thresholds, record every hidden stage's per-step
+    /// drive, then jointly reset each hidden λ (its LIF threshold and
+    /// the downstream stage's per-spike unit) to the `theta_pct`
+    /// percentile of what the arrays actually produce, exactly as
+    /// `from_float` did against float activations at deploy time.
+    /// Weights and codes are untouched; membranes are reset. Returns
+    /// the new per-hidden-stage λ values.
+    pub fn recalibrate(
+        &mut self,
+        frame_sets: &[Vec<Vec<u32>>],
+        theta_pct: f64,
+    ) -> Vec<f64> {
+        let ns = self.stages.len();
+        let mut drives: Vec<Vec<f32>> = vec![Vec::new(); ns - 1];
+        for frames in frame_sets {
+            self.reset();
+            for f in frames {
+                let mut cur: Vec<u32> = Vec::new();
+                for (s, stage) in self.stages.iter_mut().enumerate() {
+                    let input: &[u32] = if s == 0 { f } else { &cur };
+                    let (next, _r) = stage.step(input);
+                    if s < ns - 1 {
+                        drives[s].extend(stage.cur.iter().map(|&v| v as f32));
+                    }
+                    cur = next;
+                }
+            }
+        }
+        let lambdas: Vec<f64> = drives
+            .iter()
+            .map(|d| ActQuant::calibrate(d, theta_pct).a_max() as f64)
+            .collect();
+        for (l, &lam) in lambdas.iter().enumerate() {
+            self.stages[l].lif.v_th = lam;
+            self.stages[l + 1].in_unit = lam;
+        }
+        self.reset();
+        lambdas
+    }
 }
 
 /// Shared test fixture (also used by `stream::exec` tests): an
@@ -522,6 +658,88 @@ mod tests {
             mlp.swap_state(&mut session);
         }
         assert_eq!(session.last().unwrap(), &want.out_v);
+    }
+
+    #[test]
+    fn fault_states_cover_every_shard_and_snapshot_matches() {
+        use crate::device::faults::FaultPlan;
+        let (mlp, _) = tiny_mlp(29);
+        let golden = mlp.snapshot_codes();
+        // 2 + 1 + 1 shard macros on the 2×2 mesh.
+        assert_eq!(golden.iter().map(|s| s.len()).sum::<usize>(), 4);
+        assert!(golden
+            .iter()
+            .flatten()
+            .all(|codes| codes.len() == 128 * 128));
+        let states = mlp.fault_states(FaultPlan::none(1));
+        assert_eq!(
+            states.iter().map(|s| s.len()).collect::<Vec<_>>(),
+            golden.iter().map(|s| s.len()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn drift_scrub_roundtrip_restores_the_run_bitwise() {
+        use crate::device::faults::FaultPlan;
+        use crate::device::{RetentionParams, SotWriteParams};
+        let (mut mlp, data) = tiny_mlp(31);
+        let enc = FrameEncoder::new(TemporalCode::Rate, 4, 255);
+        let frames = enc.encode_frames(&data.features_u8(0));
+        let golden = mlp.snapshot_codes();
+        let want = mlp.run(&frames);
+
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 37);
+        let mut states = mlp.fault_states(plan);
+        let flips = mlp.drift(&mut states, plan.retention.tau_ret_ns());
+        assert!(flips > 0, "stress drift at t=τ must flip cells");
+
+        let out =
+            mlp.scrub(&mut states, &golden, &SotWriteParams::default());
+        assert_eq!(out.checked, 4 * 128 * 128);
+        assert_eq!(out.mismatched, flips as usize);
+        assert_eq!(out.repaired, flips as usize);
+        assert!(out.energy_fj > 0.0);
+        assert_eq!(mlp.snapshot_codes(), golden);
+        let got = mlp.run(&frames);
+        assert_eq!(got.out_v, want.out_v, "scrubbed run must match pristine");
+        assert_eq!(got.trains, want.trains);
+        assert_eq!(got.stats.energy, want.stats.energy);
+    }
+
+    #[test]
+    fn recalibration_is_deterministic_and_resets_thresholds() {
+        use crate::device::faults::FaultPlan;
+        use crate::device::RetentionParams;
+        let mk = || tiny_mlp(41).0;
+        let (_, data) = tiny_mlp(41);
+        let enc = FrameEncoder::new(TemporalCode::Rate, 4, 255);
+        let frame_sets: Vec<Vec<Vec<u32>>> = (0..4)
+            .map(|i| enc.encode_frames(&data.features_u8(i)))
+            .collect();
+
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 43);
+        let drift = |mlp: &mut SpikingMlp| {
+            let mut st = mlp.fault_states(plan);
+            mlp.drift(&mut st, plan.retention.tau_ret_ns())
+        };
+        let (mut a, mut b) = (mk(), mk());
+        assert_eq!(drift(&mut a), drift(&mut b), "same plan, same flips");
+        let la = a.recalibrate(&frame_sets, 99.7);
+        let lb = b.recalibrate(&frame_sets, 99.7);
+        assert_eq!(la, lb, "recalibration must be deterministic");
+        assert_eq!(la.len(), 2);
+        assert!(la.iter().all(|&l| l.is_finite() && l > 0.0));
+        // The new λ lands in both the stage threshold and the
+        // downstream per-spike unit.
+        assert_eq!(a.stages[0].lif.v_th, la[0]);
+        assert_eq!(a.stages[1].in_unit, la[0]);
+        assert_eq!(a.stages[1].lif.v_th, la[1]);
+        assert_eq!(a.stages[2].in_unit, la[1]);
+        // And the recalibrated models still agree bitwise on a run.
+        let ra = a.run(&frame_sets[0]);
+        let rb = b.run(&frame_sets[0]);
+        assert_eq!(ra.out_v, rb.out_v);
+        assert!(ra.label < 10);
     }
 
     #[test]

@@ -7,6 +7,10 @@
 
 use crate::config::MacroConfig;
 use crate::device::cell::Cell3T2J;
+use crate::device::faults::ScrubOutcome;
+use crate::device::mtj::MtjState;
+use crate::device::retention::{corrupt_codes, RetentionParams};
+use crate::device::write::{write_verify, SotWriteParams, WritePulse};
 use crate::util::rng::Rng;
 
 /// Programmed crossbar array.
@@ -200,6 +204,129 @@ impl Crossbar {
         (0..self.rows).map(|r| self.g_us(r, col)).collect()
     }
 
+    /// Flip a cell's junction states to read as `code` without issuing
+    /// write pulses: fault injection is physics acting on the free
+    /// layers, not a programming operation, so no wear is charged.
+    fn set_code_silent(&mut self, i: usize, code: u8) {
+        debug_assert!(code < 4);
+        let c = &mut self.cells[i];
+        c.j1.state = MtjState::from_bit(code & 1 == 0);
+        c.j2.state = MtjState::from_bit(code & 2 == 0);
+    }
+
+    /// Retention drift over an idle window (DESIGN.md S19): junction
+    /// states flip in place with the Arrhenius relaxation probability
+    /// and the caches rebuild. R_P/TMR are untouched — a drifted array
+    /// keeps `uniform_levels()` — and no wear accrues. Returns the
+    /// number of cells whose code changed.
+    pub fn corrupt_retention(
+        &mut self,
+        idle_ns: f64,
+        params: &RetentionParams,
+        rng: &mut Rng,
+    ) -> usize {
+        let mut codes = self.codes_cache.clone();
+        let changed = corrupt_codes(&mut codes, idle_ns, params, rng);
+        if changed > 0 {
+            for i in 0..codes.len() {
+                if codes[i] != self.codes_cache[i] {
+                    self.set_code_silent(i, codes[i]);
+                }
+            }
+            self.rebuild_cache();
+        }
+        changed
+    }
+
+    /// Pin cells at fixed codes (stuck-at faults): each `(index, code)`
+    /// entry is forced silently. Returns how many cells actually
+    /// changed (already-pinned cells are free).
+    pub fn force_codes(&mut self, pins: &[(usize, u8)]) -> usize {
+        let mut changed = 0;
+        for &(i, code) in pins {
+            if self.codes_cache[i] != code {
+                self.set_code_silent(i, code);
+                changed += 1;
+            }
+        }
+        if changed > 0 {
+            self.rebuild_cache();
+        }
+        changed
+    }
+
+    /// Freeze additional die-to-die variation into the live array:
+    /// every junction's R_P is scaled by an independent (1 + N(0, σ))
+    /// factor (floored at 0.5, matching `with_variation`). After this
+    /// the array is no longer `uniform_levels()` (in all but measure-
+    /// zero draws), which disqualifies the quantized engine.
+    pub fn inject_gain_variation(&mut self, sigma: f64, rng: &mut Rng) {
+        if sigma <= 0.0 {
+            return;
+        }
+        for c in self.cells.iter_mut() {
+            c.j1.r_p_mohm *= (1.0 + rng.normal_ms(0.0, sigma)).max(0.5);
+            c.j2.r_p_mohm *= (1.0 + rng.normal_ms(0.0, sigma)).max(0.5);
+        }
+        self.rebuild_cache();
+    }
+
+    /// Verify-and-rewrite the array against a golden code snapshot:
+    /// each mismatched junction gets verified SOT pulses at 1.5·I_c0
+    /// overdrive (deterministic switching), charging I²·R·t energy and
+    /// wear through `device::write`. Because drift never moves R_P, a
+    /// completed scrub restores the pristine array bit-for-bit.
+    pub fn scrub_to(
+        &mut self,
+        golden: &[u8],
+        wp: &SotWriteParams,
+        rng: &mut Rng,
+    ) -> ScrubOutcome {
+        assert_eq!(golden.len(), self.rows * self.cols, "code matrix shape");
+        let mut out = ScrubOutcome {
+            checked: golden.len(),
+            ..ScrubOutcome::default()
+        };
+        let amp = 1.5 * wp.i_c0_ua;
+        let mut touched = false;
+        for (i, &want) in golden.iter().enumerate() {
+            if self.codes_cache[i] == want {
+                continue;
+            }
+            out.mismatched += 1;
+            touched = true;
+            let cell = &mut self.cells[i];
+            for (bit_clear, j) in
+                [(want & 1 == 0, &mut cell.j1), (want & 2 == 0, &mut cell.j2)]
+            {
+                let target = MtjState::from_bit(bit_clear);
+                if j.state == target {
+                    continue;
+                }
+                let sign = if target == MtjState::AntiParallel {
+                    1.0
+                } else {
+                    -1.0
+                };
+                let pulse = WritePulse {
+                    i_ua: sign * amp,
+                    t_ns: 2.0,
+                };
+                let (_, tries, energy) = write_verify(j, wp, &pulse, rng, 8);
+                out.junction_pulses += tries as u64;
+                self.write_pulses += tries as u64;
+                out.energy_fj += energy;
+            }
+            if cell.code() == want {
+                out.repaired += 1;
+            }
+        }
+        if touched {
+            self.rebuild_cache();
+        }
+        out
+    }
+
     /// Exact digital MVM oracle on the nominal conductances:
     /// y[c] = Σ_r x[r]·G[r,c] (x in LSBs, result in LSB·µS).
     pub fn ideal_mvm(&self, x: &[u32]) -> Vec<f64> {
@@ -350,5 +477,85 @@ mod tests {
     fn program_rejects_wrong_shape() {
         let mut xb = Crossbar::new(&small_cfg(2, 2));
         xb.program_codes(&[0, 1, 2]);
+    }
+
+    #[test]
+    fn retention_corruption_carries_no_wear_and_keeps_levels() {
+        use crate::device::retention::RetentionParams;
+        let c = small_cfg(8, 8);
+        let mut xb = Crossbar::new(&c);
+        let golden: Vec<u8> = (0..64).map(|i| (i % 4) as u8).collect();
+        xb.program_codes(&golden);
+        let pulses_before = xb.write_pulses;
+        let j_writes_before = xb.cell(0, 0).j1.writes;
+        let ret = RetentionParams::stress();
+        let mut rng = Rng::new(99);
+        let flipped = xb.corrupt_retention(ret.tau_ret_ns(), &ret, &mut rng);
+        assert!(flipped > 0, "t = τ at the stress corner must flip cells");
+        assert_ne!(xb.read_codes(), golden);
+        // Drift is physics, not programming: zero wear, codes cache
+        // coherent with junction states, levels still uniform.
+        assert_eq!(xb.write_pulses, pulses_before);
+        assert_eq!(xb.cell(0, 0).j1.writes, j_writes_before);
+        assert_eq!(xb.codes(), xb.read_codes().as_slice());
+        assert!(xb.uniform_levels());
+    }
+
+    #[test]
+    fn scrub_restores_pristine_array_bitwise() {
+        use crate::device::retention::RetentionParams;
+        use crate::device::write::SotWriteParams;
+        let c = small_cfg(8, 8);
+        let mut pristine = Crossbar::new(&c);
+        let golden: Vec<u8> = (0..64).map(|i| ((i * 7) % 4) as u8).collect();
+        pristine.program_codes(&golden);
+        let mut xb = pristine.clone();
+        let ret = RetentionParams::stress();
+        let mut rng = Rng::new(5);
+        let flipped = xb.corrupt_retention(ret.tau_ret_ns(), &ret, &mut rng);
+        assert!(flipped > 0);
+        let wp = SotWriteParams::default();
+        let out = xb.scrub_to(&golden, &wp, &mut rng);
+        assert_eq!(out.checked, 64);
+        assert_eq!(out.mismatched, flipped);
+        assert_eq!(out.repaired, flipped, "overdrive scrub is deterministic");
+        assert!(out.junction_pulses > 0);
+        assert!(out.energy_fj > 0.0, "scrub writes must cost energy");
+        // Bit-identical to the never-drifted array: codes, conductances,
+        // level uniformity (drift never moved R_P).
+        assert_eq!(xb.read_codes(), golden);
+        assert_eq!(xb.conductances(), pristine.conductances());
+        assert!(xb.uniform_levels());
+        // Wear landed: the scrubbed array has more write pulses.
+        assert_eq!(
+            xb.write_pulses,
+            pristine.write_pulses + out.junction_pulses
+        );
+    }
+
+    #[test]
+    fn forced_codes_pin_without_wear() {
+        let c = small_cfg(4, 4);
+        let mut xb = Crossbar::new(&c);
+        xb.program_codes(&[1u8; 16]);
+        let pulses = xb.write_pulses;
+        let changed = xb.force_codes(&[(0, 0), (5, 3), (7, 1)]);
+        assert_eq!(changed, 2, "cell 7 already holds code 1");
+        assert_eq!(xb.codes()[0], 0);
+        assert_eq!(xb.codes()[5], 3);
+        assert_eq!(xb.write_pulses, pulses);
+    }
+
+    #[test]
+    fn injected_gain_variation_breaks_uniform_levels() {
+        let c = small_cfg(8, 8);
+        let mut xb = Crossbar::new(&c);
+        xb.program_codes(&[2u8; 64]);
+        assert!(xb.uniform_levels());
+        let mut rng = Rng::new(3);
+        xb.inject_gain_variation(0.05, &mut rng);
+        assert!(!xb.uniform_levels());
+        // Codes are untouched — only the analog levels moved.
+        assert_eq!(xb.read_codes(), [2u8; 64]);
     }
 }

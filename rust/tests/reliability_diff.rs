@@ -1,0 +1,165 @@
+//! Differential engine tests under injected faults (DESIGN.md S19).
+//!
+//! The fault runtime mutates live crossbars; these tests pin the
+//! engine-level contracts that keep serving correct while it does:
+//!
+//! * Dense and EventList stay *bitwise* interchangeable on the same
+//!   corrupted array — faults change the answer, never the engines'
+//!   agreement;
+//! * `MvmEngine::Auto` degrades away from the Quantized level-plane
+//!   engine the moment die-to-die variation breaks the uniform-levels
+//!   gate, falling back to a general engine instead of panicking, and
+//!   the fallback matches forced Dense bitwise;
+//! * a completed scrub of a drift-only array restores the pristine
+//!   deployment bit-for-bit — codes, conductances, and MVM outputs —
+//!   while paying real write energy and wear.
+
+use spikemram::config::{MacroConfig, MvmEngine};
+use spikemram::device::{FaultPlan, FaultState, RetentionParams, SotWriteParams};
+use spikemram::macro_model::{CimMacro, EngineUsed};
+use spikemram::util::rng::Rng;
+
+fn programmed(seed: u64, engine: MvmEngine) -> CimMacro {
+    let cfg = MacroConfig {
+        engine,
+        ..MacroConfig::default()
+    };
+    let mut m = CimMacro::new(cfg);
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..128 * 128).map(|_| rng.below(4) as u8).collect();
+    m.program(&codes);
+    m
+}
+
+/// Drive the identical harsh fault sequence (d2d variation + stuck
+/// cells at deploy, then one retention drift round) into a macro.
+fn corrupt(m: &mut CimMacro, plan: FaultPlan) -> usize {
+    let mut fs = FaultState::new(plan, 0);
+    fs.deploy(&mut m.xbar);
+    fs.advance(&mut m.xbar, plan.retention.tau_ret_ns() / 10.0)
+}
+
+#[test]
+fn dense_and_event_list_agree_bitwise_on_a_corrupted_array() {
+    let plan = FaultPlan::harsh(91);
+    let mut dense = programmed(90, MvmEngine::Dense);
+    let mut evlist = programmed(90, MvmEngine::EventList);
+    let fa = corrupt(&mut dense, plan);
+    let fb = corrupt(&mut evlist, plan);
+    assert_eq!(fa, fb, "same plan + index → identical fault sequence");
+    assert!(fa > 0, "the stress corner must actually corrupt");
+    assert_eq!(dense.xbar.read_codes(), evlist.xbar.read_codes());
+    assert_eq!(dense.xbar.conductances(), evlist.xbar.conductances());
+
+    let mut rng = Rng::new(92);
+    for density in [0.02, 0.3, 1.0] {
+        // Multi-bit inputs: the full 8-bit input range, not just
+        // binary spikes.
+        let x: Vec<u32> = (0..128)
+            .map(|_| {
+                if rng.f64() < density {
+                    1 + rng.below(255) as u32
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let a = dense.mvm_batch(std::slice::from_ref(&x));
+        let b = evlist.mvm_batch(std::slice::from_ref(&x));
+        assert_eq!(a.engine_used(), EngineUsed::Dense);
+        assert_eq!(b.engine_used(), EngineUsed::EventList);
+        let (ra, rb) = (a.result(0), b.result(0));
+        assert_eq!(ra.y_mac, rb.y_mac, "density {density}");
+        assert_eq!(ra.t_out_ns, rb.t_out_ns);
+        assert_eq!(ra.v_charge, rb.v_charge);
+        assert_eq!(ra.energy, rb.energy);
+    }
+}
+
+#[test]
+fn auto_degrades_from_quantized_under_d2d_and_matches_dense() {
+    let mut auto = programmed(93, MvmEngine::Auto);
+    let mut dense = programmed(93, MvmEngine::Dense);
+    let dense_x: Vec<u32> = (0..128).map(|r| 1 + (r as u32 * 7) % 255).collect();
+
+    // Healthy array: Auto picks the quantized level-plane engine.
+    let r = auto.mvm_batch(std::slice::from_ref(&dense_x));
+    assert_eq!(r.engine_used(), EngineUsed::Quantized);
+
+    // Identical harsh faults on both macros: d2d scaling moves the
+    // conductances off their level targets.
+    let plan = FaultPlan::harsh(94);
+    corrupt(&mut auto, plan);
+    corrupt(&mut dense, plan);
+    assert!(!auto.xbar.uniform_levels(), "d2d must break the gate");
+
+    // Auto must fall back — never panic — and the fallback is one of
+    // the exact engines, so it matches forced Dense bitwise.
+    let ra = auto.mvm_batch(std::slice::from_ref(&dense_x));
+    assert_ne!(ra.engine_used(), EngineUsed::Quantized);
+    let rd = dense.mvm_batch(std::slice::from_ref(&dense_x));
+    let (a, d) = (ra.result(0), rd.result(0));
+    assert_eq!(a.y_mac, d.y_mac);
+    assert_eq!(a.t_out_ns, d.t_out_ns);
+    assert_eq!(a.energy, d.energy);
+
+    // Sparse traffic under the same faults: Auto's event-list pick is
+    // exercised too, still bitwise-equal.
+    let mut sparse_x = vec![0u32; 128];
+    sparse_x[17] = 200;
+    sparse_x[90] = 3;
+    let ra = auto.mvm_batch(std::slice::from_ref(&sparse_x));
+    assert_eq!(ra.engine_used(), EngineUsed::EventList);
+    let rd = dense.mvm_batch(std::slice::from_ref(&sparse_x));
+    assert_eq!(ra.result(0).y_mac, rd.result(0).y_mac);
+}
+
+#[test]
+fn full_scrub_restores_bitwise_identity_with_the_pristine_baseline() {
+    let mut pristine = programmed(95, MvmEngine::Auto);
+    let mut aged = programmed(95, MvmEngine::Auto);
+    let golden = aged.golden_codes();
+    assert_eq!(golden, pristine.golden_codes());
+
+    // Drift only: states move, R_P never does.
+    let ret = RetentionParams::stress();
+    let plan = FaultPlan::drift_only(ret, 96);
+    let mut fs = FaultState::new(plan, 0);
+    let flips = fs.advance(&mut aged.xbar, ret.tau_ret_ns());
+    assert!(flips > 0);
+    assert_ne!(aged.xbar.read_codes(), golden);
+
+    let wear_before = aged.xbar.write_pulses;
+    let out = fs.scrub(
+        &mut aged.xbar,
+        &golden,
+        &SotWriteParams::default(),
+    );
+    assert_eq!(out.checked, 128 * 128);
+    assert_eq!(out.mismatched, flips);
+    assert_eq!(out.repaired, flips, "overdriven verify-write is total");
+    assert!(out.energy_fj > 0.0, "scrub writes cost real energy");
+    assert!(out.junction_pulses as usize >= flips, "wear is charged");
+    assert_eq!(
+        aged.xbar.write_pulses,
+        wear_before + out.junction_pulses,
+        "scrub pulses land on the array's wear counter"
+    );
+
+    // Bit-identity: codes, conductances, and the computed answers.
+    assert_eq!(aged.xbar.read_codes(), golden);
+    assert_eq!(aged.xbar.conductances(), pristine.xbar.conductances());
+    let mut rng = Rng::new(97);
+    for _ in 0..4 {
+        let x: Vec<u32> = (0..128).map(|_| rng.below(256) as u32).collect();
+        let a = aged.mvm_batch(std::slice::from_ref(&x));
+        let p = pristine.mvm_batch(std::slice::from_ref(&x));
+        assert_eq!(a.engine_used(), p.engine_used());
+        assert_eq!(a.engine_used(), EngineUsed::Quantized, "gate restored");
+        let (ra, rp) = (a.result(0), p.result(0));
+        assert_eq!(ra.y_mac, rp.y_mac);
+        assert_eq!(ra.t_out_ns, rp.t_out_ns);
+        assert_eq!(ra.v_charge, rp.v_charge);
+        assert_eq!(ra.energy, rp.energy);
+    }
+}

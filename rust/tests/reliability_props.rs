@@ -1,0 +1,165 @@
+//! Property tests for the reliability runtime's model layer
+//! (DESIGN.md S19): the retention law, its scrub-interval inverse, the
+//! scrub policy's derived rates, and the determinism contract of the
+//! corruption sampler. These are the algebraic guarantees every higher
+//! layer (fault runtime, scrubber, EX4) silently leans on.
+
+use spikemram::coordinator::ScrubPolicy;
+use spikemram::device::retention::corrupt_codes;
+use spikemram::device::RetentionParams;
+use spikemram::util::rng::Rng;
+
+/// Technology corners swept by every property below: from the EX4
+/// stress corner up to the 10-year embedded-MRAM target.
+fn corners() -> Vec<RetentionParams> {
+    let mut out = vec![
+        RetentionParams::stress(),
+        RetentionParams::weak(),
+        RetentionParams::standard(),
+    ];
+    for delta in [5.0, 10.0, 22.0, 48.0] {
+        for tau0_ns in [0.5, 1.0, 2.0] {
+            out.push(RetentionParams { delta, tau0_ns });
+        }
+    }
+    out
+}
+
+/// Geometric time grid spanning ~15 decades around a corner's τ.
+fn time_grid(tau_ns: f64) -> Vec<f64> {
+    (-8..=7).map(|e| tau_ns * 10f64.powi(e)).collect()
+}
+
+#[test]
+fn flip_probability_is_bounded_and_monotone_in_time() {
+    for ret in corners() {
+        assert_eq!(ret.flip_probability(0.0), 0.0);
+        assert_eq!(ret.flip_probability(-1.0), 0.0, "no time travel");
+        let mut prev = 0.0;
+        for t in time_grid(ret.tau_ret_ns()) {
+            let p = ret.flip_probability(t);
+            assert!(
+                (0.0..=0.5).contains(&p),
+                "Δ={} t={t}: p={p} outside [0, ½]",
+                ret.delta
+            );
+            assert!(
+                p >= prev,
+                "Δ={} t={t}: p={p} < prev {prev} (not monotone)",
+                ret.delta
+            );
+            prev = p;
+        }
+        // Saturation: far past τ the two wells are equally likely.
+        assert!((ret.flip_probability(1e4 * ret.tau_ret_ns()) - 0.5).abs() < 1e-12);
+        assert!(ret.flip_probability(f64::MAX) <= 0.5);
+    }
+}
+
+#[test]
+fn scrub_interval_is_the_exact_inverse_of_flip_probability() {
+    for ret in corners() {
+        let mut prev_t = 0.0;
+        for p_target in [1e-12, 1e-9, 1e-6, 1e-3, 0.1, 0.4, 0.499] {
+            let t = ret.scrub_interval_ns(p_target);
+            assert!(t > 0.0 && t.is_finite(), "Δ={}: t={t}", ret.delta);
+            // Inverse-consistency: flipping for exactly the interval
+            // lands back on the target.
+            let p = ret.flip_probability(t);
+            assert!(
+                (p - p_target).abs() / p_target < 1e-6,
+                "Δ={}: round-trip {p} vs {p_target}",
+                ret.delta
+            );
+            // Looser targets buy strictly longer intervals.
+            assert!(t > prev_t, "Δ={}: interval not monotone", ret.delta);
+            prev_t = t;
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "p_target must be in (0, 0.5)")]
+fn scrub_interval_rejects_unreachable_targets() {
+    // ½ is the thermal-equilibrium asymptote — no finite interval
+    // reaches it.
+    RetentionParams::weak().scrub_interval_ns(0.5);
+}
+
+#[test]
+#[should_panic(expected = "p_target must be in (0, 0.5)")]
+fn scrub_interval_rejects_zero_target() {
+    RetentionParams::weak().scrub_interval_ns(0.0);
+}
+
+#[test]
+fn scrub_policy_rates_are_well_formed_across_a_seeded_sweep() {
+    let mut rng = Rng::new(0x5eed);
+    for ret in corners() {
+        for _ in 0..16 {
+            let pol = ScrubPolicy {
+                p_target: 10f64.powf(-12.0 + 11.0 * rng.f64()),
+                scrub_duration_ns: 1e3 + 1e6 * rng.f64(),
+                scrub_energy_fj: 1e3 + 1e7 * rng.f64(),
+            };
+            let duty = pol.duty_cycle(&ret);
+            assert!(
+                duty > 0.0 && duty <= 1.0,
+                "Δ={} duty={duty}",
+                ret.delta
+            );
+            assert!(pol.average_power_uw(&ret) >= 0.0);
+            // Efficiency tax ≥ 0 for any busy macro, ∞ for an idle one.
+            let tax = pol.efficiency_tax(&ret, 1e6 * rng.f64(), 1e5);
+            assert!(tax >= 0.0, "Δ={} tax={tax}", ret.delta);
+            assert!(pol.efficiency_tax(&ret, 0.0, 1e5).is_infinite());
+        }
+    }
+}
+
+#[test]
+fn corrupt_codes_is_deterministic_for_a_fixed_seed() {
+    let ret = RetentionParams::stress();
+    let t = ret.tau_ret_ns();
+    let fresh: Vec<u8> = (0..4096).map(|i| (i % 4) as u8).collect();
+
+    let mut a = fresh.clone();
+    let mut b = fresh.clone();
+    let na = corrupt_codes(&mut a, t, &ret, &mut Rng::new(777));
+    let nb = corrupt_codes(&mut b, t, &ret, &mut Rng::new(777));
+    assert!(na > 0, "stress corner at t=τ must corrupt");
+    assert_eq!(na, nb);
+    assert_eq!(a, b, "same seed → identical corruption pattern");
+
+    // A different seed scatters differently (overwhelmingly likely at
+    // ~68 % per-cell corruption over 4096 cells).
+    let mut c = fresh.clone();
+    corrupt_codes(&mut c, t, &ret, &mut Rng::new(778));
+    assert_ne!(a, c, "independent seed → independent pattern");
+
+    // Draw-count contract: exactly two draws per cell whenever p > 0,
+    // so downstream consumers can fork RNG streams around the sampler
+    // without desync.
+    let mut rng = Rng::new(99);
+    let mut codes = vec![0u8; 100];
+    corrupt_codes(&mut codes, t, &ret, &mut rng);
+    let mut reference = Rng::new(99);
+    for _ in 0..200 {
+        reference.f64();
+    }
+    assert_eq!(rng.f64(), reference.f64(), "two draws per cell, no more");
+}
+
+#[test]
+fn corrupt_codes_is_a_strict_noop_at_zero_probability() {
+    let fresh: Vec<u8> = (0..512).map(|i| (i % 4) as u8).collect();
+    let ret = RetentionParams::standard();
+    for t in [0.0, -5.0] {
+        let mut codes = fresh.clone();
+        let mut rng = Rng::new(5);
+        assert_eq!(corrupt_codes(&mut codes, t, &ret, &mut rng), 0);
+        assert_eq!(codes, fresh);
+        // p = 0 consumes no randomness at all.
+        assert_eq!(rng.f64(), Rng::new(5).f64());
+    }
+}

@@ -7,8 +7,8 @@
 
 use spikemram::config::MacroConfig;
 use spikemram::repro::{
-    ablations, fabric, fig3, fig5, fig6, fig7, report, scaling, stream,
-    table1, table2,
+    ablations, fabric, fig3, fig5, fig6, fig7, reliability, report, scaling,
+    stream, table1, table2,
 };
 
 fn results_to_tmp() {
@@ -105,6 +105,24 @@ fn stream_sweep_runs_tiny() {
     assert_eq!(pts.len(), 2);
     assert!(pts[0].energy_pj <= pts[1].energy_pj);
     assert!(stream::render(&pts).contains("EX3"));
+}
+
+#[test]
+fn reliability_sweep_runs_tiny() {
+    results_to_tmp();
+    let pts = reliability::run_points(
+        &MacroConfig::default(),
+        &[0.0],
+        7,
+        60,
+        10,
+        2,
+        4,
+    );
+    assert_eq!(pts.len(), 1);
+    assert_eq!(pts[0].flips, 0, "no drift at uptime 0");
+    assert_eq!(pts[0].acc_unscrubbed, pts[0].acc_scrubbed);
+    assert!(reliability::render(&pts).contains("EX4"));
 }
 
 #[test]

@@ -136,7 +136,10 @@ fn stream_server_sessions_bitwise_equal_serial_runs() {
     let mut serial = spec.build().unwrap();
     let server = StreamServer::start(
         spec,
-        StreamServerConfig { workers: 2 },
+        StreamServerConfig {
+            workers: 2,
+            ..StreamServerConfig::default()
+        },
     )
     .unwrap();
     let data = Dataset::generate(4, 33);
@@ -160,6 +163,79 @@ fn stream_server_sessions_bitwise_equal_serial_runs() {
     assert_eq!(snap.requests, 24);
     assert!(snap.energy_fj > 0.0);
     assert!(snap.input_density() > 0.0 && snap.input_density() < 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn background_scrubber_interleaves_with_serving_without_races() {
+    // S19 acceptance bar: a background scrubber sharing the worker
+    // FIFOs with live sticky sessions must (a) never deadlock on the
+    // shared pool, (b) repair at least as many cells as drift flipped
+    // once quiesced, and (c) leave every session's outputs bitwise
+    // equal to a serialized scrub-then-serve reference — here the
+    // pristine serial model, since a completed drift-only scrub
+    // restores the deployment bit-for-bit.
+    use spikemram::device::{FaultPlan, RetentionParams};
+    use std::time::Duration;
+
+    let spec = StreamSpec {
+        model: Mlp::new(51),
+        calib: Dataset::generate(24, 52),
+        mcfg: MacroConfig::default(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig::default(),
+    };
+    let mut serial = spec.build().unwrap();
+    let plan = FaultPlan::drift_only(RetentionParams::stress(), 53);
+    let server = StreamServer::start(
+        spec,
+        StreamServerConfig {
+            workers: 2,
+            faults: Some(plan),
+        },
+    )
+    .unwrap();
+
+    // Inject one round of drift, then repair it synchronously so the
+    // arrays are bit-pristine before traffic starts.
+    let flips = server.drift(plan.retention.tau_ret_ns());
+    assert!(flips > 0, "stress corner must flip cells at t=τ");
+    let repaired = server.scrub_now();
+    assert_eq!(repaired.repaired as u64, flips, "full repair");
+
+    // Background scrubber ticking fast: every tick enqueues scrub jobs
+    // into the same FIFOs the frames flow through, so scrubs and
+    // frames genuinely interleave at the workers while we stream.
+    let scrubber = server.start_scrubber(Duration::from_millis(1));
+
+    let data = Dataset::generate(4, 54);
+    let enc = FrameEncoder::new(TemporalCode::Rate, 6, 255);
+    let frames: Vec<Vec<Vec<u32>>> = (0..4)
+        .map(|i| enc.encode_frames(&data.features_u8(i)))
+        .collect();
+    let ids: Vec<u64> = (0..4).map(|_| server.open_session()).collect();
+    for t in 0..6 {
+        for (s, &id) in ids.iter().enumerate() {
+            server.frame(id, frames[s][t].clone());
+        }
+    }
+    for (s, &id) in ids.iter().enumerate() {
+        let want = serial.run(&frames[s]);
+        let got = server.finish(id);
+        assert_eq!(got.out_v, want.out_v, "session {s} membranes");
+        assert_eq!(got.label, want.label);
+    }
+
+    // Quiesce: stop() returns only after the tick loop has exited.
+    scrubber.stop();
+    server.scrub_now(); // drain-barrier: all queued scrubs are done
+    let snap = server.metrics.snapshot();
+    assert!(snap.flips_repaired >= snap.flips_injected, "{snap:?}");
+    assert_eq!(snap.flips_injected, flips);
+    assert!(snap.scrubs >= 3, "sync + per-tick scrubs, got {}", snap.scrubs);
+    assert!(snap.scrub_energy_fj > 0.0, "scrub writes charged");
+    assert!(snap.scrub_duty_cycle() > 0.0);
     server.shutdown();
 }
 
