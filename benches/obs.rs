@@ -1,0 +1,88 @@
+//! Bench: tracing overhead (DESIGN.md S20) — the overhead contract.
+//!
+//! The macro MVM hot path runs at B ∈ {1, 64} with tracing disabled and
+//! with every kind enabled. Disabled tracing costs one relaxed atomic
+//! load per record site and must stay within ~1% of the PR-6 hotpath
+//! medians; enabled tracing buffers one ring event per span and must
+//! stay within ~10% at stream densities (EXPERIMENTS.md §Perf records
+//! the band; ci.sh smoke-runs this in fast mode → `BENCH_obs.json`).
+//!
+//! ```bash
+//! cargo bench --bench obs            # full run
+//! cargo bench --bench obs -- --test  # CI smoke (fast mode)
+//! ```
+
+use spikemram::benchlib::{black_box, Harness};
+use spikemram::config::{MacroConfig, TraceConfig};
+use spikemram::macro_model::{CimMacro, MvmBatch};
+use spikemram::obs;
+use spikemram::util::rng::Rng;
+
+fn main() {
+    if std::env::args().any(|a| a == "--test") {
+        std::env::set_var("SPIKEMRAM_BENCH_FAST", "1");
+    }
+    let mut h = Harness::new("obs");
+    let cfg = MacroConfig::default();
+    let mut rng = Rng::new(7);
+    let codes: Vec<u8> = (0..cfg.rows * cfg.cols)
+        .map(|_| rng.below(4) as u8)
+        .collect();
+    let mut m = CimMacro::new(cfg.clone());
+    m.program(&codes);
+    // Stream-density inputs (~25% active rows): the regime the enabled
+    // band is specified at.
+    let xs: Vec<Vec<u32>> = (0..64)
+        .map(|_| {
+            (0..cfg.rows)
+                .map(|_| {
+                    if rng.f64() < 0.25 {
+                        1 + rng.below(255) as u32
+                    } else {
+                        0
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let mut ledger = MvmBatch::default();
+
+    let mut off_per_op = [0.0f64; 2];
+    for (mode, tcfg) in
+        [("off", TraceConfig::off()), ("on", TraceConfig::all())]
+    {
+        obs::install(&tcfg);
+        for (bi, batch) in [1usize, 64].into_iter().enumerate() {
+            let r = h.bench_function_n(
+                &format!("mvm_batch{batch}_trace_{mode}"),
+                batch as u64,
+                |b| {
+                    b.iter(|| {
+                        m.mvm_batch_into(black_box(&xs[..batch]), &mut ledger);
+                        ledger.y_mac(batch - 1)[0]
+                    })
+                },
+            );
+            if mode == "off" {
+                off_per_op[bi] = r.per_op_median_ns();
+            } else {
+                h.note(&format!(
+                    "B={batch}: enabled/disabled per-op ratio {:.3}",
+                    r.per_op_median_ns() / off_per_op[bi]
+                ));
+            }
+        }
+        if mode == "on" {
+            // Empty the rings so the enabled rows measure steady-state
+            // recording, not drop-oldest churn of a saturated ring.
+            let rep = obs::drain();
+            h.note(&format!(
+                "drained {} events ({} dropped) after enabled rows",
+                rep.events.len(),
+                rep.dropped
+            ));
+        }
+    }
+    obs::install(&TraceConfig::off());
+    h.finish();
+}

@@ -55,6 +55,22 @@ echo "==> stream bench: smoke run in --test mode (S18 timestep sweep)"
 cargo bench --bench stream --no-run
 SPIKEMRAM_BENCH_FAST=1 cargo bench --bench stream -- --test
 
+echo "==> obs bench: smoke run in --test mode (S20 tracing overhead)"
+# Writes BENCH_obs.json: macro MVM at B ∈ {1, 64} with tracing off/on —
+# the record behind the §Perf tracing-overhead band in EXPERIMENTS.md.
+cargo bench --bench obs --no-run
+SPIKEMRAM_BENCH_FAST=1 cargo bench --bench obs -- --test
+ls -l BENCH_obs.json
+
+echo "==> trace CLI smoke (S20): Perfetto export must land and parse"
+# `spikemram trace` serves a short synthetic stream workload with every
+# kind enabled and writes results/trace_<seed>.json. The exporter
+# round-trips the exact bytes through util::json::parse before writing
+# (a hard error otherwise), so existence == parseability here; the
+# parse is additionally asserted by rust/tests/obs_trace.rs in tier-1.
+cargo run --release --quiet -- trace --seed 7 --sessions 2 --steps 2
+ls -l results/trace_7.json
+
 echo "==> EX4 reliability smoke sweep (S19 fault-injection runtime)"
 # A small uptime sweep through the release binary: drift, recalibrate,
 # scrub. Hard-fails if the CSV artifact does not land.

@@ -246,6 +246,49 @@ impl Default for StreamConfig {
     }
 }
 
+/// Tracing & telemetry knobs (DESIGN.md S20) for the `obs` recorder.
+/// `kinds` is a bitmask over `obs::TraceKind` (bit = discriminant);
+/// the default is **off**: every instrumented site then pays exactly
+/// one relaxed atomic load (the overhead contract asserted by
+/// `benches/obs.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Per-thread ring capacity in events; a full ring drops its
+    /// oldest event (counted), never blocks the recording thread.
+    pub capacity: usize,
+    /// Enabled `obs::TraceKind` bitmask; 0 disables all recording.
+    pub kinds: u32,
+}
+
+impl TraceConfig {
+    /// Tracing disabled (the default).
+    pub fn off() -> TraceConfig {
+        TraceConfig {
+            capacity: 65_536,
+            kinds: 0,
+        }
+    }
+
+    /// Every span and counter kind enabled.
+    pub fn all() -> TraceConfig {
+        TraceConfig {
+            capacity: 65_536,
+            kinds: u32::MAX,
+        }
+    }
+
+    /// Is any kind enabled at a nonzero capacity?
+    pub fn enabled(&self) -> bool {
+        self.kinds != 0 && self.capacity > 0
+    }
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig::off()
+    }
+}
+
 /// Chip-level fabric configuration (DESIGN.md S15): a mesh of macro
 /// tiles joined by an event-driven X-Y NoC carrying spike packets.
 ///

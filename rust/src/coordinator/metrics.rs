@@ -1,4 +1,4 @@
-//! Serving metrics (DESIGN.md S11): throughput counters + latency
+//! Serving metrics (DESIGN.md S11, S20): throughput counters + latency
 //! histogram, shared by the server threads behind a mutex (coarse-grained
 //! is fine — the hot path is the macro computation, not metric updates).
 //!
@@ -6,11 +6,23 @@
 //! under a single lock acquisition — instead of locking around ad-hoc
 //! getter reads. The fabric backend (DESIGN.md S15) additionally feeds
 //! NoC hop/packet counters and the tile-utilization gauge.
+//!
+//! S20 additions: the snapshot is machine-readable
+//! ([`MetricsSnapshot::to_json`]) and the text [`Metrics::summary`] is
+//! *rebuilt from that JSON* ([`MetricsSnapshot::summary_from_json`]), so
+//! the two can never disagree; [`Metrics::absorb_trace`] folds a drained
+//! trace into per-stage span-duration gauges; and
+//! [`Metrics::snapshot_since`] gives a windowed delta view whose rates
+//! are computed over the window, not since construction (the long-idle
+//! server fix).
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::util::stats::Histogram;
+use crate::obs::{TraceKind, TraceReport};
+use crate::util::json::{self, Json};
+use crate::util::stats::{HistStats, Histogram};
 
 /// Aggregated serving metrics.
 pub struct Metrics {
@@ -42,6 +54,23 @@ struct Inner {
     scrub_energy_fj: f64,
     scrub_busy_ns: f64,
     sim_time_ns: f64,
+    // --- observability (S20) ---
+    /// Per-span-kind duration histograms (µs), fed by `absorb_trace`.
+    span_durs: BTreeMap<&'static str, Histogram>,
+    /// Pool channel depth high-water mark (gauge).
+    pool_queue_hw: u64,
+    trace_events: u64,
+    trace_dropped: u64,
+}
+
+/// p50/p95 duration digest of one span kind (from absorbed traces).
+#[derive(Debug, Clone, Default)]
+pub struct SpanStat {
+    /// `obs::TraceKind::name()` of the instrumented site.
+    pub name: String,
+    pub count: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
 }
 
 /// One consistent view of every serving counter.
@@ -51,16 +80,23 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// MAC operations executed (2 OPs each).
     pub macs: u64,
+    /// Observation window: time since construction for
+    /// [`Metrics::snapshot`], the delta window for
+    /// [`MetricsSnapshot::delta_since`].
     pub uptime_s: f64,
-    /// Requests per second since startup.
+    /// Requests per second over the window.
     pub rps: f64,
-    /// MACs per second since startup.
+    /// MACs per second over the window.
     pub macs_per_s: f64,
     pub latency_mean_us: f64,
     pub latency_p50_us: f64,
     pub latency_p95_us: f64,
     pub latency_p99_us: f64,
     pub mean_batch: f64,
+    /// Full latency distribution digest (cumulative).
+    pub latency: HistStats,
+    /// Full batch-size distribution digest (cumulative).
+    pub batch: HistStats,
     /// Input rows that carried a spike pair, across all served requests
     /// (DESIGN.md S17: the event-driven occupancy of the traffic).
     pub active_rows: u64,
@@ -94,6 +130,15 @@ pub struct MetricsSnapshot {
     pub scrub_busy_ns: f64,
     /// Simulated uptime advanced by drift injection (ns).
     pub sim_time_ns: f64,
+    /// Per-stage span duration digests from absorbed traces (S20),
+    /// sorted by kind name; empty when no trace was absorbed.
+    pub spans: Vec<SpanStat>,
+    /// Worker-pool channel depth high-water mark (gauge, S20).
+    pub pool_queue_depth_hw: u64,
+    /// Trace events absorbed via [`Metrics::absorb_trace`].
+    pub trace_events: u64,
+    /// Trace events dropped by full rings (drop-oldest policy).
+    pub trace_dropped: u64,
 }
 
 impl MetricsSnapshot {
@@ -136,6 +181,259 @@ impl MetricsSnapshot {
             (self.scrub_busy_ns / self.sim_time_ns).min(1.0)
         }
     }
+
+    /// Windowed delta view (DESIGN.md S20, the long-idle-server fix):
+    /// monotonic counters are differenced against `prev` and the rates
+    /// (`rps`, `macs_per_s`) are computed over the window
+    /// `self.uptime_s − prev.uptime_s`, so an hour of idle before the
+    /// window can no longer dilute them. Distribution digests
+    /// (`latency`, `batch`, `spans`, quantile fields) and gauges
+    /// (`tiles_*`, `pool_queue_depth_hw`) remain cumulative — bucket
+    /// counts are not invertible per window.
+    pub fn delta_since(&self, prev: &MetricsSnapshot) -> MetricsSnapshot {
+        let window = (self.uptime_s - prev.uptime_s).max(1e-9);
+        let requests = self.requests.saturating_sub(prev.requests);
+        let macs = self.macs.saturating_sub(prev.macs);
+        MetricsSnapshot {
+            requests,
+            batches: self.batches.saturating_sub(prev.batches),
+            macs,
+            uptime_s: window,
+            rps: requests as f64 / window,
+            macs_per_s: macs as f64 / window,
+            active_rows: self.active_rows.saturating_sub(prev.active_rows),
+            row_slots: self.row_slots.saturating_sub(prev.row_slots),
+            energy_fj: (self.energy_fj - prev.energy_fj).max(0.0),
+            noc_packets: self.noc_packets.saturating_sub(prev.noc_packets),
+            noc_hops: self.noc_hops.saturating_sub(prev.noc_hops),
+            flips_injected: self
+                .flips_injected
+                .saturating_sub(prev.flips_injected),
+            flips_detected: self
+                .flips_detected
+                .saturating_sub(prev.flips_detected),
+            flips_repaired: self
+                .flips_repaired
+                .saturating_sub(prev.flips_repaired),
+            scrubs: self.scrubs.saturating_sub(prev.scrubs),
+            scrub_energy_fj: (self.scrub_energy_fj - prev.scrub_energy_fj)
+                .max(0.0),
+            scrub_busy_ns: (self.scrub_busy_ns - prev.scrub_busy_ns)
+                .max(0.0),
+            sim_time_ns: (self.sim_time_ns - prev.sim_time_ns).max(0.0),
+            trace_events: self.trace_events.saturating_sub(prev.trace_events),
+            trace_dropped: self
+                .trace_dropped
+                .saturating_sub(prev.trace_dropped),
+            // Cumulative distributions and gauges: latest view.
+            latency_mean_us: self.latency_mean_us,
+            latency_p50_us: self.latency_p50_us,
+            latency_p95_us: self.latency_p95_us,
+            latency_p99_us: self.latency_p99_us,
+            mean_batch: self.mean_batch,
+            latency: self.latency,
+            batch: self.batch,
+            spans: self.spans.clone(),
+            tiles_used: self.tiles_used,
+            tiles_total: self.tiles_total,
+            pool_queue_depth_hw: self.pool_queue_depth_hw,
+        }
+    }
+
+    /// The machine-readable form (DESIGN.md S20) — the single source
+    /// the text summary is rebuilt from. Derived ratios are included
+    /// so consumers never recompute them.
+    pub fn to_json(&self) -> Json {
+        let span_objs: Vec<(&str, Json)> = self
+            .spans
+            .iter()
+            .map(|s| {
+                (
+                    s.name.as_str(),
+                    json::obj(vec![
+                        ("count", Json::Num(s.count as f64)),
+                        ("p50_us", Json::Num(s.p50_us)),
+                        ("p95_us", Json::Num(s.p95_us)),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("macs", Json::Num(self.macs as f64)),
+            ("uptime_s", Json::Num(self.uptime_s)),
+            ("rps", Json::Num(self.rps)),
+            ("macs_per_s", Json::Num(self.macs_per_s)),
+            ("latency_us", self.latency.to_json()),
+            ("batch_size", self.batch.to_json()),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("active_rows", Json::Num(self.active_rows as f64)),
+            ("row_slots", Json::Num(self.row_slots as f64)),
+            ("input_density", Json::Num(self.input_density())),
+            ("energy_fj", Json::Num(self.energy_fj)),
+            (
+                "energy_pj_per_request",
+                Json::Num(
+                    self.energy_fj / 1e3 / self.requests.max(1) as f64,
+                ),
+            ),
+            (
+                "noc",
+                json::obj(vec![
+                    ("packets", Json::Num(self.noc_packets as f64)),
+                    ("hops", Json::Num(self.noc_hops as f64)),
+                    ("tiles_used", Json::Num(self.tiles_used as f64)),
+                    ("tiles_total", Json::Num(self.tiles_total as f64)),
+                    (
+                        "tile_utilization",
+                        Json::Num(self.tile_utilization()),
+                    ),
+                    ("hops_per_packet", Json::Num(self.hops_per_packet())),
+                ]),
+            ),
+            (
+                "reliability",
+                json::obj(vec![
+                    (
+                        "flips_injected",
+                        Json::Num(self.flips_injected as f64),
+                    ),
+                    (
+                        "flips_detected",
+                        Json::Num(self.flips_detected as f64),
+                    ),
+                    (
+                        "flips_repaired",
+                        Json::Num(self.flips_repaired as f64),
+                    ),
+                    ("scrubs", Json::Num(self.scrubs as f64)),
+                    ("scrub_energy_fj", Json::Num(self.scrub_energy_fj)),
+                    ("scrub_busy_ns", Json::Num(self.scrub_busy_ns)),
+                    ("sim_time_ns", Json::Num(self.sim_time_ns)),
+                    (
+                        "scrub_duty_cycle",
+                        Json::Num(self.scrub_duty_cycle()),
+                    ),
+                ]),
+            ),
+            (
+                "pool_queue_depth_hw",
+                Json::Num(self.pool_queue_depth_hw as f64),
+            ),
+            (
+                "trace",
+                json::obj(vec![
+                    ("events", Json::Num(self.trace_events as f64)),
+                    ("dropped", Json::Num(self.trace_dropped as f64)),
+                ]),
+            ),
+            ("spans", json::obj(span_objs)),
+        ])
+    }
+
+    /// The text summary, computed from the JSON alone — every number
+    /// printed is read back out of a [`to_json`](Self::to_json) value,
+    /// which is what makes the two forms inseparable.
+    pub fn summary_from_json(j: &Json) -> String {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let nest = |o: &str, k: &str| {
+            j.get(o)
+                .and_then(|x| x.get(k))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0)
+        };
+        let lat = j
+            .get("latency_us")
+            .map(HistStats::from_json)
+            .unwrap_or_default();
+        let bat = j
+            .get("batch_size")
+            .map(HistStats::from_json)
+            .unwrap_or_default();
+        let mut out = format!(
+            "requests={} batches={} macs={} rps={:.1} mac/s={:.3e}\n\
+             latency_us: {}\n\
+             batch_size: {}",
+            f("requests") as u64,
+            f("batches") as u64,
+            f("macs") as u64,
+            f("rps"),
+            f("macs_per_s"),
+            lat.summary_line(),
+            bat.summary_line()
+        );
+        if f("row_slots") > 0.0 {
+            out.push_str(&format!(
+                "\nactivity: active_rows={} / {} slots ({:.1} % dense)",
+                f("active_rows") as u64,
+                f("row_slots") as u64,
+                f("input_density") * 100.0
+            ));
+        }
+        if f("energy_fj") > 0.0 {
+            out.push_str(&format!(
+                "\nenergy: {:.1} pJ modeled ({:.2} pJ/request)",
+                f("energy_fj") / 1e3,
+                f("energy_pj_per_request")
+            ));
+        }
+        if nest("noc", "tiles_total") > 0.0 || nest("noc", "packets") > 0.0 {
+            out.push_str(&format!(
+                "\nnoc: packets={} hops={} tiles={}/{} ({:.0} % utilized)",
+                nest("noc", "packets") as u64,
+                nest("noc", "hops") as u64,
+                nest("noc", "tiles_used") as u64,
+                nest("noc", "tiles_total") as u64,
+                nest("noc", "tile_utilization") * 100.0
+            ));
+        }
+        if nest("reliability", "flips_injected") > 0.0
+            || nest("reliability", "scrubs") > 0.0
+        {
+            out.push_str(&format!(
+                "\nreliability: flips injected={} detected={} repaired={} \
+                 scrubs={} duty={:.1} % scrub_energy={:.1} pJ",
+                nest("reliability", "flips_injected") as u64,
+                nest("reliability", "flips_detected") as u64,
+                nest("reliability", "flips_repaired") as u64,
+                nest("reliability", "scrubs") as u64,
+                nest("reliability", "scrub_duty_cycle") * 100.0,
+                nest("reliability", "scrub_energy_fj") / 1e3
+            ));
+        }
+        if nest("trace", "events") > 0.0
+            || nest("trace", "dropped") > 0.0
+            || f("pool_queue_depth_hw") > 0.0
+        {
+            out.push_str(&format!(
+                "\ntrace: events={} dropped={} pool_queue_hw={}",
+                nest("trace", "events") as u64,
+                nest("trace", "dropped") as u64,
+                f("pool_queue_depth_hw") as u64
+            ));
+        }
+        if let Some(spans) = j.get("spans").and_then(Json::as_obj) {
+            for (name, v) in spans {
+                let sf = |k: &str| {
+                    v.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+                };
+                out.push_str(&format!(
+                    "\nspan {name}: n={} p50={:.1} us p95={:.1} us",
+                    sf("count") as u64,
+                    sf("p50_us"),
+                    sf("p95_us")
+                ));
+            }
+        }
+        out
+    }
+
+    /// Text form of this snapshot (via the JSON, see
+    /// [`summary_from_json`](Self::summary_from_json)).
+    pub fn summary_text(&self) -> String {
+        Self::summary_from_json(&self.to_json())
+    }
 }
 
 impl Default for Metrics {
@@ -151,13 +449,11 @@ impl Metrics {
                 requests: 0,
                 batches: 0,
                 macs: 0,
-                latency_us: Histogram::new(vec![
-                    10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1_000.0, 2_000.0,
-                    5_000.0, 10_000.0, 50_000.0, 200_000.0,
-                ]),
-                batch_sizes: Histogram::new(vec![
-                    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
-                ]),
+                // Log-spaced serving buckets (S20 satellite): same
+                // endpoints the hand-written tables had — 10 µs … 200 ms
+                // latency, batch 1 … 64 (exactly the powers of two).
+                latency_us: Histogram::log_spaced(10.0, 200_000.0, 12),
+                batch_sizes: Histogram::log_spaced(1.0, 64.0, 7),
                 active_rows: 0,
                 row_slots: 0,
                 energy_fj: 0.0,
@@ -172,6 +468,10 @@ impl Metrics {
                 scrub_energy_fj: 0.0,
                 scrub_busy_ns: 0.0,
                 sim_time_ns: 0.0,
+                span_durs: BTreeMap::new(),
+                pool_queue_hw: 0,
+                trace_events: 0,
+                trace_dropped: 0,
             }),
             started: Instant::now(),
         }
@@ -226,6 +526,36 @@ impl Metrics {
         g.tiles_total = total;
     }
 
+    /// Raise the pool queue-depth high-water gauge (S20; callers feed
+    /// it `util::pool::queue_high_water()`).
+    pub fn record_pool_queue_depth(&self, depth: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.pool_queue_hw = g.pool_queue_hw.max(depth);
+    }
+
+    /// Fold a drained trace into the gauges (S20): per-kind span
+    /// duration histograms (µs) behind the p50/p95 [`SpanStat`]s, the
+    /// queue-depth high-water from counter samples, and the
+    /// event/drop totals. Purely additive — call once per drain.
+    pub fn absorb_trace(&self, report: &TraceReport) {
+        let mut g = self.inner.lock().unwrap();
+        g.trace_events += report.events.len() as u64;
+        g.trace_dropped += report.dropped;
+        for e in &report.events {
+            if e.kind.is_counter() {
+                if e.kind == TraceKind::QueueDepth {
+                    g.pool_queue_hw =
+                        g.pool_queue_hw.max(e.payload[0] as u64);
+                }
+                continue;
+            }
+            g.span_durs
+                .entry(e.kind.name())
+                .or_insert_with(|| Histogram::log_spaced(0.01, 1e7, 16))
+                .record(e.dur_ns as f64 / 1e3);
+        }
+    }
+
     /// Account one drift-injection round (S19): `flips` cells changed
     /// while the simulated clock advanced by `dt_ns`.
     pub fn record_fault_injection(&self, flips: u64, dt_ns: f64) {
@@ -258,6 +588,7 @@ impl Metrics {
     /// of every rate/quantile, shared by `snapshot()` and `summary()`.
     fn snapshot_of(&self, g: &Inner) -> MetricsSnapshot {
         let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        let lat = g.latency_us.stats();
         MetricsSnapshot {
             requests: g.requests,
             batches: g.batches,
@@ -265,11 +596,13 @@ impl Metrics {
             uptime_s: secs,
             rps: g.requests as f64 / secs,
             macs_per_s: g.macs as f64 / secs,
-            latency_mean_us: g.latency_us.mean(),
-            latency_p50_us: g.latency_us.quantile(0.50),
-            latency_p95_us: g.latency_us.quantile(0.95),
-            latency_p99_us: g.latency_us.quantile(0.99),
+            latency_mean_us: lat.mean,
+            latency_p50_us: lat.p50,
+            latency_p95_us: lat.p95,
+            latency_p99_us: lat.p99,
             mean_batch: g.batch_sizes.mean(),
+            latency: lat,
+            batch: g.batch_sizes.stats(),
             active_rows: g.active_rows,
             row_slots: g.row_slots,
             energy_fj: g.energy_fj,
@@ -284,6 +617,19 @@ impl Metrics {
             scrub_energy_fj: g.scrub_energy_fj,
             scrub_busy_ns: g.scrub_busy_ns,
             sim_time_ns: g.sim_time_ns,
+            spans: g
+                .span_durs
+                .iter()
+                .map(|(name, h)| SpanStat {
+                    name: (*name).to_string(),
+                    count: h.count(),
+                    p50_us: h.quantile(0.50),
+                    p95_us: h.quantile(0.95),
+                })
+                .collect(),
+            pool_queue_depth_hw: g.pool_queue_hw,
+            trace_events: g.trace_events,
+            trace_dropped: g.trace_dropped,
         }
     }
 
@@ -291,6 +637,14 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         self.snapshot_of(&g)
+    }
+
+    /// Windowed snapshot since a previous one (S20 satellite): the
+    /// returned rates cover only `now − prev`, so periodic reports
+    /// from long-running servers stay meaningful. Take `prev` with
+    /// [`snapshot`](Self::snapshot).
+    pub fn snapshot_since(&self, prev: &MetricsSnapshot) -> MetricsSnapshot {
+        self.snapshot().delta_since(prev)
     }
 
     /// Convenience: request count (one lock, via snapshot).
@@ -303,59 +657,10 @@ impl Metrics {
         self.snapshot().rps
     }
 
+    /// Human summary — rebuilt from [`MetricsSnapshot::to_json`] (S20
+    /// satellite), so the text and the JSON artifact always agree.
     pub fn summary(&self) -> String {
-        let g = self.inner.lock().unwrap();
-        let s = self.snapshot_of(&g); // same guard: one consistent view
-        let mut out = format!(
-            "requests={} batches={} macs={} rps={:.1} mac/s={:.3e}\n\
-             latency_us: {}\n\
-             batch_size: {}",
-            s.requests,
-            s.batches,
-            s.macs,
-            s.rps,
-            s.macs_per_s,
-            g.latency_us.summary(),
-            g.batch_sizes.summary()
-        );
-        if s.row_slots > 0 {
-            out.push_str(&format!(
-                "\nactivity: active_rows={} / {} slots ({:.1} % dense)",
-                s.active_rows,
-                s.row_slots,
-                s.input_density() * 100.0
-            ));
-        }
-        if s.energy_fj > 0.0 {
-            out.push_str(&format!(
-                "\nenergy: {:.1} pJ modeled ({:.2} pJ/request)",
-                s.energy_fj / 1e3,
-                s.energy_fj / 1e3 / s.requests.max(1) as f64
-            ));
-        }
-        if s.tiles_total > 0 || s.noc_packets > 0 {
-            out.push_str(&format!(
-                "\nnoc: packets={} hops={} tiles={}/{} ({:.0} % utilized)",
-                s.noc_packets,
-                s.noc_hops,
-                s.tiles_used,
-                s.tiles_total,
-                s.tile_utilization() * 100.0
-            ));
-        }
-        if s.flips_injected > 0 || s.scrubs > 0 {
-            out.push_str(&format!(
-                "\nreliability: flips injected={} detected={} repaired={} \
-                 scrubs={} duty={:.1} % scrub_energy={:.1} pJ",
-                s.flips_injected,
-                s.flips_detected,
-                s.flips_repaired,
-                s.scrubs,
-                s.scrub_duty_cycle() * 100.0,
-                s.scrub_energy_fj / 1e3
-            ));
-        }
-        out
+        self.snapshot().summary_text()
     }
 }
 
@@ -402,6 +707,10 @@ mod tests {
         assert!((s.mean_batch - 3.0).abs() < 1e-12);
         assert_eq!(s.noc_packets, 0);
         assert_eq!(s.tile_utilization(), 0.0);
+        // The embedded digests agree with the flat quantile fields.
+        assert_eq!(s.latency.p50, s.latency_p50_us);
+        assert_eq!(s.latency.n, 3);
+        assert_eq!(s.batch.n, 1);
     }
 
     #[test]
@@ -491,5 +800,128 @@ mod tests {
         assert!((s.tile_utilization() - 0.75).abs() < 1e-12);
         assert!((s.hops_per_packet() - 3.0).abs() < 1e-12);
         assert!(m.summary().contains("noc: packets=15 hops=45 tiles=3/4"));
+    }
+
+    #[test]
+    fn summary_is_the_json_rendered() {
+        // The satellite contract: summary() IS summary_from_json(
+        // to_json()), and the JSON itself survives a text round-trip
+        // through the vendored parser with the integral counters
+        // intact.
+        let m = Metrics::new();
+        m.record_request(42.0);
+        m.record_batch(4, 1000);
+        m.record_activity(10, 100);
+        m.record_energy(3000.0);
+        m.record_noc(7, 21);
+        m.set_tile_usage(2, 4);
+        let s = m.snapshot();
+        assert_eq!(
+            m.summary(),
+            MetricsSnapshot::summary_from_json(&s.to_json())
+        );
+        let back =
+            json::parse(&s.to_json().to_string()).expect("round trip");
+        assert_eq!(back.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(back.get("macs").and_then(Json::as_f64), Some(1000.0));
+        assert_eq!(
+            back.get("noc")
+                .and_then(|n| n.get("packets"))
+                .and_then(Json::as_f64),
+            Some(7.0)
+        );
+        assert_eq!(
+            back.get("latency_us").and_then(|l| l.get("n")).and_then(
+                Json::as_f64
+            ),
+            Some(1.0)
+        );
+        // Derived ratios ship in the JSON.
+        assert_eq!(
+            back.get("input_density").and_then(Json::as_f64),
+            Some(0.1)
+        );
+    }
+
+    #[test]
+    fn snapshot_since_windows_the_rates() {
+        let m = Metrics::new();
+        m.record_request(10.0);
+        m.record_batch(1, 100);
+        let prev = m.snapshot();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        for _ in 0..3 {
+            m.record_request(10.0);
+        }
+        m.record_batch(3, 900);
+        let win = m.snapshot_since(&prev);
+        assert_eq!(win.requests, 3);
+        assert_eq!(win.batches, 1);
+        assert_eq!(win.macs, 900);
+        assert!(win.uptime_s > 0.0);
+        assert!(
+            (win.rps - 3.0 / win.uptime_s).abs() < 1e-9,
+            "windowed rps {} over {}",
+            win.rps,
+            win.uptime_s
+        );
+        // The cumulative snapshot still sees everything.
+        assert_eq!(m.snapshot().requests, 4);
+        // Idle window: zero deltas, rates fall to zero.
+        let prev2 = m.snapshot();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let idle = m.snapshot_since(&prev2);
+        assert_eq!(idle.requests, 0);
+        assert_eq!(idle.rps, 0.0);
+    }
+
+    #[test]
+    fn absorb_trace_folds_span_gauges() {
+        use crate::obs::{TraceEvent, TraceKind, TraceReport};
+        let m = Metrics::new();
+        let report = TraceReport {
+            events: vec![
+                TraceEvent {
+                    ts_ns: 10,
+                    dur_ns: 5_000,
+                    kind: TraceKind::MacroMvm,
+                    stage: 0,
+                    worker: 0,
+                    payload: [16.0, 1.0],
+                },
+                TraceEvent {
+                    ts_ns: 20,
+                    dur_ns: 7_000,
+                    kind: TraceKind::MacroMvm,
+                    stage: 0,
+                    worker: 1,
+                    payload: [8.0, 2.0],
+                },
+                TraceEvent {
+                    ts_ns: 30,
+                    dur_ns: 0,
+                    kind: TraceKind::QueueDepth,
+                    stage: 0,
+                    worker: 0,
+                    payload: [9.0, 0.0],
+                },
+            ],
+            dropped: 2,
+            threads: vec!["main".into()],
+        };
+        m.absorb_trace(&report);
+        m.record_pool_queue_depth(4); // lower than the counter sample
+        let s = m.snapshot();
+        assert_eq!(s.trace_events, 3);
+        assert_eq!(s.trace_dropped, 2);
+        assert_eq!(s.pool_queue_depth_hw, 9);
+        assert_eq!(s.spans.len(), 1);
+        assert_eq!(s.spans[0].name, "macro.mvm");
+        assert_eq!(s.spans[0].count, 2);
+        assert!(s.spans[0].p50_us > 0.0);
+        assert!(s.spans[0].p95_us >= s.spans[0].p50_us);
+        let txt = m.summary();
+        assert!(txt.contains("trace: events=3 dropped=2"), "{txt}");
+        assert!(txt.contains("span macro.mvm: n=2"), "{txt}");
     }
 }

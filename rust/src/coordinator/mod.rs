@@ -12,7 +12,7 @@ pub mod server;
 pub mod tiler;
 
 pub use batcher::{Batch, Batcher, CloseReason, Request};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, SpanStat};
 pub use pipeline::{pipeline_makespan_ns, serial_makespan_ns, ThreadedPipeline};
 pub use scheduler::{Policy, ScheduleReport, Scheduler, TileOp};
 pub use scrub::{ScrubPolicy, Scrubber};

@@ -12,6 +12,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::device::retention::RetentionParams;
+use crate::obs::{self, TraceKind};
 use crate::util::pool;
 
 /// Scrub policy for one macro.
@@ -98,7 +99,13 @@ impl Scrubber {
         pool::spawn(move || {
             let mut round = 0u64;
             while !stop2.load(Ordering::Acquire) {
-                tick(round);
+                {
+                    // S20 span (stage 1 = scheduler tick; the serve-side
+                    // scrub *execution* records stage 0).
+                    let mut sp = obs::Span::begin(TraceKind::ScrubPass, 1);
+                    sp.note(round as f64, 0.0);
+                    tick(round);
+                }
                 round += 1;
                 let mut slept = Duration::ZERO;
                 while slept < period && !stop2.load(Ordering::Acquire) {

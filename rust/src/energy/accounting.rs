@@ -69,6 +69,51 @@ impl EnergyBreakdown {
             write_fj: self.write_fj * f,
         }
     }
+
+    /// Category names, in the [`shares`](Self::shares) index order.
+    pub const CATEGORIES: [&'static str; 6] =
+        ["array", "smu", "osg", "control", "noc", "write"];
+
+    /// `(name, fJ)` per category, in [`CATEGORIES`](Self::CATEGORIES)
+    /// order.
+    pub fn named(&self) -> [(&'static str, f64); 6] {
+        [
+            ("array", self.array_fj),
+            ("smu", self.smu_fj),
+            ("osg", self.osg_fj),
+            ("control", self.control_fj),
+            ("noc", self.noc_fj),
+            ("write", self.write_fj),
+        ]
+    }
+
+    /// One category's share of the total by name (DESIGN.md S20) — the
+    /// readable replacement for positional `shares()[i]` lookups.
+    /// Panics on an unknown name so typos fail loudly.
+    pub fn share(&self, name: &str) -> f64 {
+        let i = Self::CATEGORIES
+            .iter()
+            .position(|c| *c == name)
+            .unwrap_or_else(|| panic!("unknown energy category {name:?}"));
+        self.shares()[i]
+    }
+
+    /// Machine-readable ledger with *named* categories (DESIGN.md
+    /// S20): per-category fJ and share, plus the total — consumers
+    /// read `"osg"` instead of `shares()[2]`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{self, Json};
+        let shares = self.shares();
+        let mut fields: Vec<(&str, Json)> = Vec::with_capacity(8);
+        let mut share_fields: Vec<(&str, Json)> = Vec::with_capacity(6);
+        for (i, (name, fj)) in self.named().into_iter().enumerate() {
+            fields.push((name, Json::Num(fj)));
+            share_fields.push((name, Json::Num(shares[i])));
+        }
+        fields.push(("total_fj", Json::Num(self.total_fj())));
+        fields.push(("shares", json::obj(share_fields)));
+        json::obj(fields)
+    }
 }
 
 /// TOPS/W for `ops` operations costing `energy_fj` femtojoules.
@@ -139,6 +184,42 @@ mod tests {
         assert!((s[0] - 0.25).abs() < 1e-12);
         assert!((s[5] - 0.75).abs() < 1e-12);
         assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn named_json_matches_positional_shares() {
+        use crate::util::json::{self, Json};
+        let e = EnergyBreakdown {
+            array_fj: 1.0,
+            smu_fj: 2.0,
+            osg_fj: 4.0,
+            control_fj: 1.0,
+            noc_fj: 1.0,
+            write_fj: 1.0,
+        };
+        // The named API and the positional array agree category by
+        // category…
+        for (i, name) in EnergyBreakdown::CATEGORIES.iter().enumerate() {
+            assert_eq!(e.share(name), e.shares()[i], "{name}");
+            assert_eq!(e.named()[i].0, *name);
+        }
+        // …and the JSON round-trips through the vendored parser with
+        // every category readable by name.
+        let back = json::parse(&e.to_json().to_string()).expect("parse");
+        assert_eq!(back.get("total_fj").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(back.get("osg").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(
+            back.get("shares")
+                .and_then(|s| s.get("osg"))
+                .and_then(Json::as_f64),
+            Some(0.4)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown energy category")]
+    fn share_rejects_unknown_category() {
+        EnergyBreakdown::default().share("adc");
     }
 
     #[test]

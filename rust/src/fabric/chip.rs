@@ -30,6 +30,7 @@ use crate::energy::EnergyBreakdown;
 use crate::macro_model::{
     mvm_events_parallel, mvm_tiled_batch_strided, CimMacro, TiledBatchItem,
 };
+use crate::obs::{self, TraceKind};
 
 use super::noc::{SpikePacket, TileCoord};
 use super::placement::{place, Placement};
@@ -177,6 +178,9 @@ impl LayerStage {
     /// path ([`run_events`](Self::run_events)) prices its traffic with
     /// exactly the per-packet model the value path uses.
     fn route_flags(&self, slice_active: &[bool]) -> RoutedPhases {
+        // S20 span: one vector's 4 routed NoC phases; payload records
+        // the packets and hops this routing priced.
+        let mut span = obs::Span::begin(TraceKind::NocRoute, 0);
         let ct = self.tiled.col_tiles;
         let head = self.locs[0];
         let mut tally = FabricStats::default();
@@ -251,6 +255,7 @@ impl LayerStage {
             }
         }
 
+        span.note(tally.packets as f64, tally.hops as f64);
         RoutedPhases {
             lat_pre,
             t_gather,
@@ -543,8 +548,15 @@ impl FabricChip {
         layer: usize,
         xs: &[Vec<u32>],
     ) -> Vec<LayerResult> {
+        // S20 span (stage = layer index); payload: batch items and the
+        // summed macro row activations they lit.
+        let mut span = obs::Span::begin(TraceKind::LayerForward, layer as u16);
         let rs = self.stages[layer].run_batch(xs);
         self.absorb_layer(layer, &rs, xs.len());
+        span.note(
+            xs.len() as f64,
+            rs.iter().map(|r| r.active_rows).sum::<u64>() as f64,
+        );
         rs
     }
 
@@ -557,8 +569,10 @@ impl FabricChip {
         layer: usize,
         events: &[u32],
     ) -> LayerResult {
+        let mut span = obs::Span::begin(TraceKind::LayerForward, layer as u16);
         let r = self.stages[layer].run_events(events);
         self.absorb_layer(layer, std::slice::from_ref(&r), 1);
+        span.note(1.0, r.active_rows as f64);
         r
     }
 
@@ -571,8 +585,13 @@ impl FabricChip {
         xs: &[u32],
         in_dim: usize,
     ) -> Vec<LayerResult> {
+        let mut span = obs::Span::begin(TraceKind::LayerForward, layer as u16);
         let rs = self.stages[layer].run_batch_strided(xs, in_dim);
         self.absorb_layer(layer, &rs, rs.len());
+        span.note(
+            rs.len() as f64,
+            rs.iter().map(|r| r.active_rows).sum::<u64>() as f64,
+        );
         rs
     }
 

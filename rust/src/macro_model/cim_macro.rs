@@ -17,6 +17,7 @@ use crate::coding::DualSpikeCodec;
 use crate::config::{MacroConfig, MvmEngine};
 use crate::energy::{mvm_energy, ActivityView, EnergyBreakdown, EnergyParams};
 use crate::event::{EventKind, EventQueue, FlagTree};
+use crate::obs::{self, TraceKind};
 use crate::util::rng::Rng;
 use crate::xbar::Crossbar;
 
@@ -604,6 +605,9 @@ impl CimMacro {
     /// loop), compare phase, and energy accounting, all into the
     /// ledger.
     fn run_batch(&mut self, batch: usize, out: &mut MvmBatch) {
+        // S20 span: the whole charge+compare batch; payload records the
+        // total active rows and which engine resolved (EngineUsed order).
+        let mut span = obs::Span::begin(TraceKind::MacroMvm, 0);
         let rows = self.cfg.rows;
         let cols = self.cfg.cols;
         let droop_mode = !self.cfg.nonideal.clamp_current_mirror;
@@ -655,6 +659,15 @@ impl CimMacro {
             }
         };
         out.engine = resolved;
+        span.note(
+            total_active as f64,
+            match resolved {
+                EngineUsed::General => 0.0,
+                EngineUsed::Dense => 1.0,
+                EngineUsed::EventList => 2.0,
+                EngineUsed::Quantized => 3.0,
+            },
+        );
 
         match resolved {
             EngineUsed::Dense => {

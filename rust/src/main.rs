@@ -20,13 +20,15 @@
 
 use anyhow::{bail, Context, Result};
 
-use spikemram::config::{FabricConfig, LevelMap, MacroConfig};
-use spikemram::coordinator::{BackendKind, MacroServer, ServerConfig};
+use spikemram::config::{FabricConfig, LevelMap, MacroConfig, TraceConfig};
+use spikemram::coordinator::{BackendKind, MacroServer, Metrics, ServerConfig};
 use spikemram::macro_model::CimMacro;
+use spikemram::obs;
 use spikemram::repro;
 use spikemram::runtime::{Manifest, Runtime, Value};
 use spikemram::snn;
 use spikemram::util::cli::Args;
+use spikemram::util::pool;
 use spikemram::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -60,8 +62,13 @@ operations:
   serve      spin up the batching server  [--requests N] [--workers N]
              [--batch N] [--backend sim|pjrt|fabric|stream]
              [--artifacts DIR] [--grid G] [--k K] [--n N]
+             [--trace-out PATH] [--metrics-json PATH]
              (fabric: K×N weights, G×G mesh)
              (stream: [--sessions S] [--steps T] per-session LIF state)
+  trace      serve a short synthetic stream workload with full tracing
+             on and write a Perfetto/Chrome trace_event JSON
+             (default results/trace_<seed>.json)  [--sessions S]
+             [--steps T] [--workers N] [--trace-out PATH]
   selfcheck  verify PJRT artifacts match the behavioral simulator
 
 common options: --seed N   --artifacts DIR (default: artifacts)
@@ -145,6 +152,7 @@ fn main() -> Result<()> {
         "mvm" => cmd_mvm(&args, &cfg, seed)?,
         "snn" => cmd_snn(&args, &cfg, seed)?,
         "serve" => cmd_serve(&args, &cfg, seed)?,
+        "trace" => cmd_trace(&args, &cfg, seed)?,
         "selfcheck" => cmd_selfcheck(&args, &cfg, seed)?,
         other => {
             eprint!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -246,10 +254,43 @@ fn cmd_snn(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Post-run observability drain (DESIGN.md S20), shared by `serve` and
+/// `trace`: fold the pool queue high-water mark into `metrics`, then —
+/// when requested — drain the trace rings into a Perfetto JSON
+/// (`--trace-out`) and write/print the machine-readable metrics
+/// snapshot (`--metrics-json`).
+fn finish_observability(
+    metrics: &Metrics,
+    trace_out: Option<&str>,
+    metrics_json: Option<&str>,
+) -> Result<()> {
+    metrics.record_pool_queue_depth(pool::queue_high_water() as u64);
+    if let Some(path) = trace_out {
+        let report = obs::drain();
+        metrics.absorb_trace(&report);
+        let p = obs::write_chrome_trace(std::path::Path::new(path), &report)?;
+        println!(
+            "trace: {} events ({} dropped) → {}",
+            report.events.len(),
+            report.dropped,
+            p.display()
+        );
+    }
+    if let Some(path) = metrics_json {
+        let j = metrics.snapshot().to_json().to_string();
+        std::fs::write(path, &j).with_context(|| format!("write {path}"))?;
+        println!("metrics json → {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
     let n = args.get_usize("requests", 256);
     if args.get_str("backend", "sim") == "stream" {
         return cmd_serve_stream(args, cfg, seed);
+    }
+    if args.get("trace-out").is_some() {
+        obs::install(&TraceConfig::all());
     }
     let backend = match args.get_str("backend", "sim").as_str() {
         "sim" => BackendKind::Sim,
@@ -298,6 +339,11 @@ fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         dt.as_secs_f64() * 1e3,
         n as f64 / dt.as_secs_f64()
     );
+    finish_observability(
+        &server.metrics,
+        args.get("trace-out"),
+        args.get("metrics-json"),
+    )?;
     println!("{}", server.metrics.summary());
     let snap = server.metrics.snapshot();
     if snap.tiles_total > 0 {
@@ -323,6 +369,9 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         TemporalCode,
     };
 
+    if args.get("trace-out").is_some() {
+        obs::install(&TraceConfig::all());
+    }
     let sessions = args.get_usize("sessions", 8);
     let t_steps = args.get_usize("steps", 8);
     let n_train = args.get_usize("train", 200);
@@ -359,9 +408,26 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
     let frames: Vec<Vec<Vec<u32>>> = (0..sessions)
         .map(|i| enc.encode_frames(&test.features_u8(i)))
         .collect();
+    // Periodic report on a *windowed* basis (DESIGN.md S20):
+    // `snapshot_since` differences against the previous snapshot, so
+    // the printed rates cover this window — not the meaningless
+    // average since construction (which includes training/idle time).
+    let mut prev = server.metrics.snapshot();
     for t in 0..t_steps {
         for (s, &id) in ids.iter().enumerate() {
             let _ = server.frame(id, frames[s][t].clone());
+        }
+        if (t + 1) % 4 == 0 || t + 1 == t_steps {
+            let w = server.metrics.snapshot_since(&prev);
+            println!(
+                "  [t={}] window: {} frames, {:.0} frames/s, \
+                 {:.2e} mac/s",
+                t + 1,
+                w.requests,
+                w.rps,
+                w.macs_per_s
+            );
+            prev = server.metrics.snapshot();
         }
     }
     let mut correct = 0usize;
@@ -379,6 +445,11 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         (sessions * t_steps) as f64 / dt.as_secs_f64(),
         correct
     );
+    finish_observability(
+        &server.metrics,
+        args.get("trace-out"),
+        args.get("metrics-json"),
+    )?;
     println!("{}", server.metrics.summary());
     let snap = server.metrics.snapshot();
     println!(
@@ -387,6 +458,71 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         snap.input_density() * 100.0
     );
     server.shutdown();
+    Ok(())
+}
+
+/// `spikemram trace` (DESIGN.md S20): serve a short synthetic stream
+/// workload with every trace kind enabled and write the Perfetto
+/// `trace_event` JSON to `results/trace_<seed>.json` (override with
+/// `--trace-out`). Deploys an *untrained* model — the trace needs
+/// representative work through every instrumented site, not accuracy —
+/// so it runs in seconds (the ci.sh smoke target).
+fn cmd_trace(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
+    use spikemram::config::StreamConfig;
+    use spikemram::stream::{
+        FrameEncoder, StreamServer, StreamServerConfig, StreamSpec,
+        TemporalCode,
+    };
+
+    obs::install(&TraceConfig::all());
+    let sessions = args.get_usize("sessions", 4);
+    let t_steps = args.get_usize("steps", 4);
+    let calib = snn::Dataset::generate(sessions.max(32), seed);
+    let spec = StreamSpec {
+        model: snn::Mlp::new(seed),
+        calib: calib.clone(),
+        mcfg: cfg.clone(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig {
+            t_steps,
+            ..StreamConfig::default()
+        },
+    };
+    let server = StreamServer::start(
+        spec,
+        StreamServerConfig {
+            workers: args.get_usize("workers", 2),
+            ..StreamServerConfig::default()
+        },
+    )?;
+    let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);
+    let ids: Vec<u64> =
+        (0..sessions).map(|_| server.open_session()).collect();
+    let frames: Vec<Vec<Vec<u32>>> = (0..sessions)
+        .map(|i| enc.encode_frames(&calib.features_u8(i)))
+        .collect();
+    for t in 0..t_steps {
+        for (s, &id) in ids.iter().enumerate() {
+            let _ = server.frame(id, frames[s][t].clone());
+        }
+    }
+    for &id in &ids {
+        let _ = server.finish(id);
+    }
+    let default_out = repro::report::results_dir()
+        .join(format!("trace_{seed}.json"))
+        .to_string_lossy()
+        .into_owned();
+    let trace_out = args.get_str("trace-out", &default_out);
+    finish_observability(
+        &server.metrics,
+        Some(&trace_out),
+        args.get("metrics-json"),
+    )?;
+    println!("{}", server.metrics.summary());
+    server.shutdown();
+    obs::install(&TraceConfig::off());
     Ok(())
 }
 

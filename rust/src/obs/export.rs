@@ -1,0 +1,197 @@
+//! Chrome/Perfetto `trace_event` exporter (DESIGN.md S20): turns a
+//! drained [`TraceReport`] into the JSON object format
+//! (`{"traceEvents": [...]}`) that `chrome://tracing` and
+//! <https://ui.perfetto.dev> load directly. Written with the vendored
+//! [`util::json`](crate::util::json) writer and round-trip-validated
+//! with its parser before it ever lands on disk.
+//!
+//! Mapping: pid 1 = the chip, tid = recording worker (named via
+//! `thread_name` metadata), span kinds become complete (`ph:"X"`)
+//! events with `ts`/`dur` in µs, counter kinds become `ph:"C"` series.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{TraceEvent, TraceReport};
+use crate::util::json::{self, Json};
+
+/// Perfetto process id for the (single) simulated chip.
+const PID: f64 = 1.0;
+
+/// Build the full Chrome `trace_event` JSON object for a report.
+pub fn chrome_trace(report: &TraceReport) -> Json {
+    let mut evs: Vec<Json> =
+        Vec::with_capacity(report.events.len() + report.threads.len() + 1);
+    evs.push(json::obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str("process_name".into())),
+        ("pid", Json::Num(PID)),
+        (
+            "args",
+            json::obj(vec![("name", Json::Str("spikemram-chip".into()))]),
+        ),
+    ]));
+    for (tid, name) in report.threads.iter().enumerate() {
+        evs.push(json::obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(PID)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", json::obj(vec![("name", Json::Str(name.clone()))])),
+        ]));
+    }
+    evs.extend(report.events.iter().map(event_json));
+    json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+        (
+            "otherData",
+            json::obj(vec![
+                ("producer", Json::Str("spikemram obs".into())),
+                ("dropped", Json::Num(report.dropped as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn event_json(e: &TraceEvent) -> Json {
+    let ts_us = e.ts_ns as f64 / 1e3;
+    if e.kind.is_counter() {
+        return json::obj(vec![
+            ("ph", Json::Str("C".into())),
+            ("name", Json::Str(e.kind.name().into())),
+            ("pid", Json::Num(PID)),
+            ("tid", Json::Num(f64::from(e.worker))),
+            ("ts", Json::Num(ts_us)),
+            (
+                "args",
+                json::obj(vec![("value", Json::Num(e.payload[0]))]),
+            ),
+        ]);
+    }
+    let (p0, p1) = e.kind.payload_names();
+    json::obj(vec![
+        ("ph", Json::Str("X".into())),
+        ("name", Json::Str(e.kind.name().into())),
+        ("cat", Json::Str(e.kind.name().into())),
+        ("pid", Json::Num(PID)),
+        ("tid", Json::Num(f64::from(e.worker))),
+        ("ts", Json::Num(ts_us)),
+        ("dur", Json::Num(e.dur_ns as f64 / 1e3)),
+        (
+            "args",
+            json::obj(vec![
+                ("stage", Json::Num(f64::from(e.stage))),
+                (p0, Json::Num(e.payload[0])),
+                (p1, Json::Num(e.payload[1])),
+            ]),
+        ),
+    ])
+}
+
+/// Serialize `report` to `path` (parent directories created), gated by
+/// a parse round-trip of the exact bytes written — a trace that the
+/// vendored reader cannot load back is a hard error, never a silent
+/// artifact (ci.sh smoke + ISSUE 7 acceptance bar).
+pub fn write_chrome_trace(
+    path: &Path,
+    report: &TraceReport,
+) -> Result<PathBuf> {
+    let text = chrome_trace(report).to_string();
+    json::parse(&text)
+        .map_err(|e| anyhow!("trace JSON failed round-trip parse: {e}"))?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("create {}", dir.display()))?;
+        }
+    }
+    fs::write(path, &text)
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceKind;
+
+    fn sample_report() -> TraceReport {
+        TraceReport {
+            events: vec![
+                TraceEvent {
+                    ts_ns: 1_000,
+                    dur_ns: 2_500,
+                    kind: TraceKind::MacroMvm,
+                    stage: 0,
+                    worker: 0,
+                    payload: [17.0, 2.0],
+                },
+                TraceEvent {
+                    ts_ns: 4_000,
+                    dur_ns: 0,
+                    kind: TraceKind::QueueDepth,
+                    stage: 0,
+                    worker: 1,
+                    payload: [3.0, 0.0],
+                },
+            ],
+            dropped: 5,
+            threads: vec!["main".into(), "spikemram-pool-0".into()],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_vendored_parser() {
+        let j = chrome_trace(&sample_report());
+        let back = json::parse(&j.to_string()).expect("round trip");
+        let evs = back
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        // 1 process_name + 2 thread_name + 2 events.
+        assert_eq!(evs.len(), 5);
+        let span = &evs[3];
+        assert_eq!(
+            span.get("ph").and_then(Json::as_str),
+            Some("X"),
+            "{span:?}"
+        );
+        assert_eq!(
+            span.get("name").and_then(Json::as_str),
+            Some("macro.mvm")
+        );
+        assert_eq!(span.get("ts").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(span.get("dur").and_then(Json::as_f64), Some(2.5));
+        let args = span.get("args").expect("args");
+        assert_eq!(
+            args.get("active_rows").and_then(Json::as_f64),
+            Some(17.0)
+        );
+        assert_eq!(args.get("engine").and_then(Json::as_f64), Some(2.0));
+        let ctr = &evs[4];
+        assert_eq!(ctr.get("ph").and_then(Json::as_str), Some("C"));
+        assert_eq!(
+            ctr.get("args").and_then(|a| a.get("value")).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(
+            back.get("otherData")
+                .and_then(|o| o.get("dropped"))
+                .and_then(Json::as_f64),
+            Some(5.0)
+        );
+    }
+
+    #[test]
+    fn write_chrome_trace_lands_parseable_file() {
+        let dir = std::env::temp_dir().join("spikemram_obs_export_test");
+        let path = dir.join("trace_unit.json");
+        let p = write_chrome_trace(&path, &sample_report()).expect("write");
+        let text = std::fs::read_to_string(&p).expect("read back");
+        json::parse(&text).expect("file parses");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,522 @@
+//! Unified tracing & telemetry (DESIGN.md S20): per-stage spans recorded
+//! into per-worker ring buffers, drained into Chrome/Perfetto
+//! `trace_event` JSON by [`export`].
+//!
+//! Design contract (the "overhead contract", DESIGN.md §S20):
+//!
+//! * **Never block serving.** Each thread records into its own
+//!   fixed-capacity ring behind its own `Mutex` — the lock is only ever
+//!   contended by the exporter's brief drain, never by another worker.
+//!   A full ring drops its *oldest* event and bumps a cumulative
+//!   `dropped` counter; recording never waits for a consumer.
+//! * **Near-zero cost when off.** Every record site first checks one
+//!   relaxed atomic load of the enabled-kind bitmask
+//!   ([`enabled`]); a disabled [`Span`] takes no timestamp, holds no
+//!   payload, and its `Drop` is a no-op. The `benches/obs.rs` smoke
+//!   target asserts the band (EXPERIMENTS.md §Perf).
+//! * **Purely observational.** Tracing reads timestamps and counters
+//!   only — it never touches RNG streams or results, so the bit-identity
+//!   contracts of DESIGN.md S16–S18 hold with tracing on or off.
+//!
+//! Span taxonomy: one [`TraceKind`] per instrumented site — pool job
+//! execute + queue-wait ([`util::pool`](crate::util::pool)), macro MVM
+//! engine dispatch ([`CimMacro`](crate::macro_model::CimMacro)), NoC
+//! route + 5-phase layer forward
+//! ([`FabricChip`](crate::fabric::FabricChip)), per-stage stream frame
+//! processing ([`stream`](crate::stream)), stream-server frame jobs,
+//! and [`Scrubber`](crate::coordinator::Scrubber) passes — plus counter
+//! kinds for pool queue depth, row occupancy, and modeled energy.
+//!
+//! Enable via [`install`] with a [`TraceConfig`]; drain with [`drain`];
+//! export with [`write_chrome_trace`].
+
+mod export;
+
+pub use export::{chrome_trace, write_chrome_trace};
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::config::TraceConfig;
+
+/// One instrumented site (span kinds) or telemetry series (counter
+/// kinds). The discriminant is the bit position in
+/// [`TraceConfig::kinds`].
+#[repr(u32)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceKind {
+    /// One pool job body (`util::pool` scope ticket or detached spawn).
+    PoolExec = 0,
+    /// Channel residency of a pool task: send → first poll.
+    PoolWait = 1,
+    /// One `CimMacro` batch through the resolved engine.
+    MacroMvm = 2,
+    /// One `route_flags` NoC pricing pass (ingress→egress phases).
+    NocRoute = 3,
+    /// One `FabricChip` layer forward (any entry point).
+    LayerForward = 4,
+    /// One spiking stage's timestep (`SpikingStage::step`).
+    StreamStage = 5,
+    /// One stream-server frame job (dequeue → reply).
+    ServeFrame = 6,
+    /// One scrub pass (background tick or in-worker scrub job).
+    ScrubPass = 7,
+    /// Counter: pool channel depth after each enqueue.
+    QueueDepth = 8,
+    /// Counter: per-frame active-row occupancy (0..=1).
+    Occupancy = 9,
+    /// Counter: per-frame modeled energy (fJ).
+    EnergyFj = 10,
+}
+
+/// Number of [`TraceKind`] variants (bitmask width).
+pub const KIND_COUNT: usize = 11;
+
+impl TraceKind {
+    /// Every kind, in discriminant order.
+    pub const ALL: [TraceKind; KIND_COUNT] = [
+        TraceKind::PoolExec,
+        TraceKind::PoolWait,
+        TraceKind::MacroMvm,
+        TraceKind::NocRoute,
+        TraceKind::LayerForward,
+        TraceKind::StreamStage,
+        TraceKind::ServeFrame,
+        TraceKind::ScrubPass,
+        TraceKind::QueueDepth,
+        TraceKind::Occupancy,
+        TraceKind::EnergyFj,
+    ];
+
+    /// This kind's bit in [`TraceConfig::kinds`].
+    #[inline]
+    pub fn bit(self) -> u32 {
+        1 << (self as u32)
+    }
+
+    /// Dotted site name (Perfetto event/counter name and `cat`).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::PoolExec => "pool.exec",
+            TraceKind::PoolWait => "pool.wait",
+            TraceKind::MacroMvm => "macro.mvm",
+            TraceKind::NocRoute => "noc.route",
+            TraceKind::LayerForward => "fabric.layer",
+            TraceKind::StreamStage => "stream.stage",
+            TraceKind::ServeFrame => "serve.frame",
+            TraceKind::ScrubPass => "scrub.pass",
+            TraceKind::QueueDepth => "pool.queue_depth",
+            TraceKind::Occupancy => "serve.occupancy",
+            TraceKind::EnergyFj => "serve.energy_fj",
+        }
+    }
+
+    /// Counter kinds export as Perfetto `ph:"C"` series; the rest are
+    /// complete (`ph:"X"`) spans.
+    pub fn is_counter(self) -> bool {
+        matches!(
+            self,
+            TraceKind::QueueDepth | TraceKind::Occupancy | TraceKind::EnergyFj
+        )
+    }
+
+    /// Names for the two payload slots (Perfetto `args` keys).
+    pub fn payload_names(self) -> (&'static str, &'static str) {
+        match self {
+            TraceKind::PoolExec => ("job", "jobs"),
+            TraceKind::PoolWait => ("wait_us", "p1"),
+            TraceKind::MacroMvm => ("active_rows", "engine"),
+            TraceKind::NocRoute => ("packets", "hops"),
+            TraceKind::LayerForward => ("items", "active_rows"),
+            TraceKind::StreamStage => ("events_in", "spikes_out"),
+            TraceKind::ServeFrame => ("queue_wait_us", "active_rows"),
+            TraceKind::ScrubPass => ("round", "repaired"),
+            _ => ("value", "p1"),
+        }
+    }
+}
+
+/// One recorded trace event. `ts_ns` is relative to the process trace
+/// epoch (first [`install`]); `worker` is the recording thread's
+/// registration index (the Perfetto `tid`); `stage` disambiguates
+/// multi-instance sites (layer index, scrub source); `payload` carries
+/// two site-specific numbers named by
+/// [`TraceKind::payload_names`].
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub kind: TraceKind,
+    pub stage: u16,
+    pub worker: u32,
+    pub payload: [f64; 2],
+}
+
+/// Default per-thread ring capacity (events).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+struct Ring {
+    events: VecDeque<TraceEvent>,
+    capacity: usize,
+    /// Cumulative drop-oldest count since the last drain.
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Ring {
+        Ring {
+            events: VecDeque::with_capacity(capacity.min(1024)),
+            capacity,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.capacity == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() >= self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+struct RegEntry {
+    /// Recording thread's name at registration (Perfetto thread_name).
+    name: String,
+    ring: Arc<Mutex<Ring>>,
+}
+
+/// Enabled-kind bitmask — the ONE load every record site pays when
+/// tracing is off.
+static KINDS: AtomicU32 = AtomicU32::new(0);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+static REGISTRY: Mutex<Vec<RegEntry>> = Mutex::new(Vec::new());
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct LocalRing {
+    worker: u32,
+    ring: Arc<Mutex<Ring>>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalRing>> = const { RefCell::new(None) };
+}
+
+fn register_thread() -> LocalRing {
+    let name = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| "unnamed".to_string());
+    let ring =
+        Arc::new(Mutex::new(Ring::new(CAPACITY.load(Ordering::Relaxed))));
+    let mut reg = REGISTRY.lock().expect("obs registry");
+    let worker = reg.len() as u32;
+    reg.push(RegEntry {
+        name,
+        ring: Arc::clone(&ring),
+    });
+    LocalRing { worker, ring }
+}
+
+/// Record into the calling thread's ring (registering it on first use).
+/// Lock order: only the thread's own ring — never the registry — so a
+/// concurrent [`drain`] (registry → ring) cannot deadlock with writers.
+fn local_push(mut ev: TraceEvent) {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let local = slot.get_or_insert_with(register_thread);
+        ev.worker = local.worker;
+        local.ring.lock().expect("obs ring").push(ev);
+    });
+}
+
+/// Install a trace configuration process-wide: sets the enabled-kind
+/// mask and ring capacity, pins the trace epoch, and re-fits
+/// already-registered rings to the new capacity (trimming oldest
+/// first). Call before serving; [`TraceConfig::off`] disables all
+/// recording again.
+pub fn install(cfg: &TraceConfig) {
+    CAPACITY.store(cfg.capacity, Ordering::Relaxed);
+    KINDS.store(cfg.kinds, Ordering::Relaxed);
+    let _ = epoch();
+    for e in REGISTRY.lock().expect("obs registry").iter() {
+        let mut r = e.ring.lock().expect("obs ring");
+        r.capacity = cfg.capacity;
+        while r.events.len() > r.capacity {
+            r.events.pop_front();
+            r.dropped += 1;
+        }
+    }
+}
+
+/// Is this kind currently recorded? One relaxed atomic load.
+#[inline]
+pub fn enabled(kind: TraceKind) -> bool {
+    KINDS.load(Ordering::Relaxed) & kind.bit() != 0
+}
+
+/// RAII span guard: construction takes the timestamp, `Drop` records
+/// the complete event. When the kind is disabled the guard is inert
+/// (no timestamp, no-op `Drop`).
+pub struct Span {
+    kind: TraceKind,
+    stage: u16,
+    start: Option<Instant>,
+    payload: [f64; 2],
+}
+
+impl Span {
+    #[inline]
+    pub fn begin(kind: TraceKind, stage: u16) -> Span {
+        let start = enabled(kind).then(Instant::now);
+        Span {
+            kind,
+            stage,
+            start,
+            payload: [0.0; 2],
+        }
+    }
+
+    /// Attach the two payload numbers (see
+    /// [`TraceKind::payload_names`]). No-op when inert.
+    #[inline]
+    pub fn note(&mut self, a: f64, b: f64) {
+        if self.start.is_some() {
+            self.payload = [a, b];
+        }
+    }
+
+    /// Is this span actually recording?
+    pub fn active(&self) -> bool {
+        self.start.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(t0) = self.start else { return };
+        let dur_ns = t0.elapsed().as_nanos() as u64;
+        let ts_ns = t0.saturating_duration_since(epoch()).as_nanos() as u64;
+        local_push(TraceEvent {
+            ts_ns,
+            dur_ns,
+            kind: self.kind,
+            stage: self.stage,
+            worker: 0,
+            payload: self.payload,
+        });
+    }
+}
+
+/// Record a counter sample (`payload[0] = value`).
+pub fn counter(kind: TraceKind, stage: u16, value: f64) {
+    if !enabled(kind) {
+        return;
+    }
+    local_push(TraceEvent {
+        ts_ns: Instant::now()
+            .saturating_duration_since(epoch())
+            .as_nanos() as u64,
+        dur_ns: 0,
+        kind,
+        stage,
+        worker: 0,
+        payload: [value, 0.0],
+    });
+}
+
+/// Record a wait interval that *started* at `since` and ends now —
+/// used for pool queue-wait where the enqueue and the dequeue happen
+/// on different threads (the event lands in the dequeuing thread's
+/// ring). `payload[0]` is the wait in µs.
+pub fn wait_since(kind: TraceKind, stage: u16, since: Instant) {
+    if !enabled(kind) {
+        return;
+    }
+    let dur_ns = since.elapsed().as_nanos() as u64;
+    let ts_ns = since.saturating_duration_since(epoch()).as_nanos() as u64;
+    local_push(TraceEvent {
+        ts_ns,
+        dur_ns,
+        kind,
+        stage,
+        worker: 0,
+        payload: [dur_ns as f64 / 1e3, 0.0],
+    });
+}
+
+/// Everything [`drain`] pulled out of the rings: events merged and
+/// sorted by timestamp, the cumulative drop count since the previous
+/// drain, and the per-worker thread names (indexed by
+/// [`TraceEvent::worker`]).
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    pub events: Vec<TraceEvent>,
+    pub dropped: u64,
+    pub threads: Vec<String>,
+}
+
+impl TraceReport {
+    /// Events of one kind.
+    pub fn count(&self, kind: TraceKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Distinct *span* kinds present (counter kinds excluded), in
+    /// discriminant order — the acceptance bar counts these.
+    pub fn span_kinds(&self) -> Vec<TraceKind> {
+        TraceKind::ALL
+            .iter()
+            .copied()
+            .filter(|k| !k.is_counter() && self.count(*k) > 0)
+            .collect()
+    }
+
+    /// Any counter samples present?
+    pub fn has_counters(&self) -> bool {
+        self.events.iter().any(|e| e.kind.is_counter())
+    }
+}
+
+/// Drain every registered ring: moves the buffered events out (rings
+/// keep recording), resets the drop counters, and returns the merged
+/// timeline. Holds the registry lock for the duration and each ring
+/// lock briefly; writers only ever take their own ring lock, so this
+/// cannot deadlock with the worker pool (asserted by
+/// `rust/tests/obs_trace.rs`).
+pub fn drain() -> TraceReport {
+    let reg = REGISTRY.lock().expect("obs registry");
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    let mut threads = Vec::with_capacity(reg.len());
+    for e in reg.iter() {
+        threads.push(e.name.clone());
+        let mut r = e.ring.lock().expect("obs ring");
+        dropped += std::mem::take(&mut r.dropped);
+        events.extend(r.events.drain(..));
+    }
+    drop(reg);
+    events.sort_by(|a, b| {
+        a.ts_ns.cmp(&b.ts_ns).then(a.worker.cmp(&b.worker))
+    });
+    TraceReport {
+        events,
+        dropped,
+        threads,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// obs state is process-global; serialize the unit tests that
+    /// mutate it (other suites never drain, so they are unaffected
+    /// beyond a little recording overhead while these run).
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Stage markers keep these assertions immune to events other
+    /// concurrently-running lib tests may record while tracing is on.
+    const MARK: u16 = 7_771;
+
+    fn count_marked(r: &TraceReport, kind: TraceKind, stage: u16) -> usize {
+        r.events
+            .iter()
+            .filter(|e| e.kind == kind && e.stage == stage)
+            .count()
+    }
+
+    #[test]
+    fn disabled_span_is_inert_and_records_nothing() {
+        let _g = lock();
+        install(&TraceConfig::off());
+        let mut sp = Span::begin(TraceKind::MacroMvm, MARK);
+        assert!(!sp.active());
+        sp.note(1.0, 2.0);
+        drop(sp);
+        counter(TraceKind::EnergyFj, MARK, 9.0);
+        let r = drain();
+        assert_eq!(count_marked(&r, TraceKind::MacroMvm, MARK), 0);
+        assert_eq!(count_marked(&r, TraceKind::EnergyFj, MARK), 0);
+    }
+
+    #[test]
+    fn span_records_payload_and_monotonic_timestamps() {
+        let _g = lock();
+        install(&TraceConfig::all());
+        {
+            let mut sp = Span::begin(TraceKind::NocRoute, MARK + 1);
+            assert!(sp.active());
+            sp.note(3.0, 45.0);
+        }
+        counter(TraceKind::QueueDepth, MARK + 1, 2.0);
+        let r = drain();
+        let spans: Vec<&TraceEvent> = r
+            .events
+            .iter()
+            .filter(|e| {
+                e.kind == TraceKind::NocRoute && e.stage == MARK + 1
+            })
+            .collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].payload, [3.0, 45.0]);
+        assert_eq!(count_marked(&r, TraceKind::QueueDepth, MARK + 1), 1);
+        assert!(r.events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+        install(&TraceConfig::off());
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts_drops() {
+        let _g = lock();
+        install(&TraceConfig {
+            capacity: 4,
+            ..TraceConfig::all()
+        });
+        for i in 0..100 {
+            counter(TraceKind::Occupancy, MARK + 2, i as f64);
+        }
+        let r = drain();
+        let mine: Vec<f64> = r
+            .events
+            .iter()
+            .filter(|e| {
+                e.kind == TraceKind::Occupancy && e.stage == MARK + 2
+            })
+            .map(|e| e.payload[0])
+            .collect();
+        // This thread's ring kept only the newest `capacity` events.
+        assert!(mine.len() <= 4, "kept {}", mine.len());
+        assert!(mine.contains(&99.0), "newest survives: {mine:?}");
+        assert!(r.dropped >= 96, "dropped {}", r.dropped);
+        // A drain empties the rings: the marked events are gone.
+        let again = drain();
+        assert_eq!(count_marked(&again, TraceKind::Occupancy, MARK + 2), 0);
+        install(&TraceConfig::off());
+    }
+
+    #[test]
+    fn kind_bits_are_distinct_and_all_is_complete() {
+        let mut mask = 0u32;
+        for k in TraceKind::ALL {
+            assert_eq!(mask & k.bit(), 0, "{k:?} bit collides");
+            mask |= k.bit();
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(mask.count_ones() as usize, KIND_COUNT);
+        assert_eq!(TraceConfig::all().kinds & mask, mask);
+    }
+}

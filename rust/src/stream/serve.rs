@@ -43,6 +43,7 @@ use anyhow::Result;
 use crate::config::{FabricConfig, LevelMap, MacroConfig, StreamConfig};
 use crate::coordinator::{Metrics, ScrubPolicy, Scrubber};
 use crate::device::{FaultPlan, FaultState, ScrubOutcome, SotWriteParams};
+use crate::obs::{self, TraceKind};
 use crate::snn::dataset::Dataset;
 use crate::snn::mlp::Mlp;
 
@@ -195,9 +196,12 @@ impl StreamServer {
             });
             let (tx, rx) = mpsc::channel::<StreamJob>();
             let m = metrics.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(mlp, rx, m, rel)
-            }));
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("spikemram-stream-{w}"))
+                    .spawn(move || worker_loop(mlp, rx, m, rel))
+                    .expect("spawn stream worker"),
+            );
             txs.push(tx);
         }
         Ok(StreamServer {
@@ -353,6 +357,14 @@ fn worker_loop(
                 submitted,
                 reply,
             } => {
+                // S20 span: dequeue → reply, payload = channel wait
+                // (µs) + this frame's macro row activations.
+                let mut span = obs::Span::begin(TraceKind::ServeFrame, 0);
+                let queue_wait_us = if span.active() {
+                    submitted.elapsed().as_secs_f64() * 1e6
+                } else {
+                    0.0
+                };
                 let sess = sessions.entry(session).or_insert_with(|| {
                     SessionState {
                         state: mlp.fresh_state(),
@@ -375,6 +387,22 @@ fn worker_loop(
                 metrics.record_noc(step.noc_packets, step.noc_hops);
                 metrics
                     .record_request(submitted.elapsed().as_secs_f64() * 1e6);
+                span.note(queue_wait_us, step.active_rows as f64);
+                // Per-frame telemetry series (each gated on its own
+                // kind inside `counter`).
+                if span.active() {
+                    let occ = if step.row_slots == 0 {
+                        0.0
+                    } else {
+                        step.active_rows as f64 / step.row_slots as f64
+                    };
+                    obs::counter(TraceKind::Occupancy, 0, occ);
+                    obs::counter(
+                        TraceKind::EnergyFj,
+                        0,
+                        step.energy.total_fj(),
+                    );
+                }
                 let _ = reply.send(out); // receiver may have gone away
             }
             StreamJob::Finish { session, reply } => {
@@ -408,6 +436,9 @@ fn worker_loop(
                 let _ = reply.send(flips);
             }
             StreamJob::Scrub { reply } => {
+                // S20 span (stage 0 = in-worker scrub execution; the
+                // background tick records stage 1).
+                let mut span = obs::Span::begin(TraceKind::ScrubPass, 0);
                 let out = match rel.as_mut() {
                     Some(ctx) => {
                         let o =
@@ -424,6 +455,7 @@ fn worker_loop(
                     }
                     None => ScrubOutcome::default(),
                 };
+                span.note(0.0, out.repaired as f64);
                 let _ = reply.send(out); // background ticks don't wait
             }
         }

@@ -31,6 +31,7 @@ use crate::device::faults::{FaultPlan, FaultState, ScrubOutcome};
 use crate::device::SotWriteParams;
 use crate::energy::EnergyBreakdown;
 use crate::fabric::{FabricChip, LayerResult, LayerStage};
+use crate::obs::{self, TraceKind};
 use crate::snn::collect_activations;
 use crate::snn::dataset::Dataset;
 use crate::snn::mlp::Mlp;
@@ -52,6 +53,8 @@ fn argmax64(xs: &[f64]) -> usize {
 /// constants that turn a binary-spike MAC into membrane drive.
 pub(crate) struct SpikingStage {
     pub(crate) stage: LayerStage,
+    /// Stage index in the deployed network (the S20 span `stage` tag).
+    idx: u16,
     /// Weight scale s of the quantized layer.
     scale: f64,
     /// Conductance offset G_mid (signed-weight scheme).
@@ -79,6 +82,8 @@ impl SpikingStage {
     /// macro-level result). The output list of a readout stage is
     /// always empty; read its membranes instead.
     pub(crate) fn step(&mut self, events: &[u32]) -> (Vec<u32>, LayerResult) {
+        // S20 span: one stage-timestep; payload = spikes in / spikes out.
+        let mut span = obs::Span::begin(TraceKind::StreamStage, self.idx);
         let r = self.stage.run_events(events);
         let mac = self.stage.tiled.accumulate(&r.partials);
         let n_active = events.len() as f64;
@@ -97,6 +102,7 @@ impl SpikingStage {
         } else {
             self.lif.step(&self.cur, &mut out);
         }
+        span.note(events.len() as f64, out.len() as f64);
         (out, r)
     }
 
@@ -267,6 +273,7 @@ impl SpikingMlp {
             .map(|(l, (stage, q))| {
                 let readout = l + 1 == n_stages;
                 SpikingStage {
+                    idx: l as u16,
                     macs_per_step: (q.in_dim * q.out_dim) as u64,
                     slots_per_step: (stage.tiled.row_tiles
                         * stage.tiled.col_tiles

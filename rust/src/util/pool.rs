@@ -25,11 +25,21 @@
 //! Panic policy: a panicking job is caught on the worker, carried back,
 //! and re-raised on the calling thread (matching `thread::scope`);
 //! workers themselves never die, because they are shared state.
+//!
+//! Observability (DESIGN.md S20): every enqueue bumps a channel-depth
+//! counter whose high-water mark [`queue_high_water`] exposes, each
+//! claimed job runs under an `obs` `PoolExec` span, and — when the
+//! `PoolWait` kind is enabled — tasks carry their enqueue timestamp so
+//! the dequeuing worker records the queue-wait interval. All of it is
+//! behind `obs::enabled` checks (one relaxed load when tracing is off).
 
 use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs::{self, TraceKind};
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -39,6 +49,27 @@ struct Pool {
 }
 
 static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// Tasks currently sitting in the pool channel (sent, not yet picked
+/// up by a worker).
+static QUEUE_DEPTH: AtomicUsize = AtomicUsize::new(0);
+/// High-water mark of `QUEUE_DEPTH` since process start.
+static QUEUE_HW: AtomicUsize = AtomicUsize::new(0);
+
+/// Deepest the pool channel has ever been (S20 gauge; feed it to
+/// `Metrics::record_pool_queue_depth`).
+pub fn queue_high_water() -> usize {
+    QUEUE_HW.load(Ordering::Relaxed)
+}
+
+/// The one enqueue path: counts depth + high-water, samples the
+/// queue-depth counter kind, then sends.
+fn send_task(p: &Pool, t: Task) {
+    let depth = QUEUE_DEPTH.fetch_add(1, Ordering::Relaxed) + 1;
+    QUEUE_HW.fetch_max(depth, Ordering::Relaxed);
+    obs::counter(TraceKind::QueueDepth, 0, depth as f64);
+    p.tx.send(t).expect("pool alive");
+}
 
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
@@ -61,6 +92,7 @@ fn pool() -> &'static Pool {
                     };
                     match task {
                         Ok(t) => {
+                            QUEUE_DEPTH.fetch_sub(1, Ordering::Relaxed);
                             if catch_unwind(AssertUnwindSafe(t)).is_err() {
                                 // Scoped jobs catch their own panics and
                                 // re-raise on the caller; anything that
@@ -86,7 +118,21 @@ pub fn workers() -> usize {
 
 /// Fire-and-forget a task onto the shared pool.
 pub fn spawn(task: impl FnOnce() + Send + 'static) {
-    pool().tx.send(Box::new(task)).expect("pool alive");
+    let p = pool();
+    if obs::enabled(TraceKind::PoolWait) {
+        // Carry the enqueue time so the dequeuing worker can record how
+        // long the task sat in the channel (stage 1 = detached spawn).
+        let queued = Instant::now();
+        send_task(
+            p,
+            Box::new(move || {
+                obs::wait_since(TraceKind::PoolWait, 1, queued);
+                task()
+            }),
+        );
+    } else {
+        send_task(p, Box::new(task));
+    }
 }
 
 /// Shared state of one `scope_map` call. Job `i` is claimed exactly
@@ -135,7 +181,14 @@ fn run_one<T, R, F: Fn(T) -> R>(s: &Scope<T, R, F>) -> bool {
     // takes it after done == n, which requires this call to have
     // finished); concurrent claimants share it immutably.
     let f = unsafe { (*s.f.get()).as_ref() }.expect("f alive while claiming");
-    match catch_unwind(AssertUnwindSafe(|| f(job))) {
+    let outcome = {
+        // Span covers exactly the job body (payload: job index, scope
+        // size); recorded on Drop, even when the job panics.
+        let mut sp = obs::Span::begin(TraceKind::PoolExec, 0);
+        sp.note(i as f64, s.jobs.len() as f64);
+        catch_unwind(AssertUnwindSafe(|| f(job)))
+    };
+    match outcome {
         Ok(r) => unsafe { *s.results[i].get() = Some(r) },
         Err(p) => *s.panic.lock().unwrap() = Some(p),
     }
@@ -174,10 +227,17 @@ pub fn scope_map<T: Send, R: Send, F: Fn(T) -> R + Sync>(
     // One self-scheduling ticket per job the caller cannot take itself,
     // capped at the worker count (each ticket loops until the scope is
     // dry, so more would be pure queue traffic).
+    // `Instant` is Copy + 'static, so carrying the enqueue time through
+    // the transmute below changes nothing about the borrow argument.
+    let queued = obs::enabled(TraceKind::PoolWait).then(Instant::now);
     for _ in 0..(n - 1).min(p.workers) {
         let s = scope.clone();
-        let ticket: Box<dyn FnOnce() + Send + '_> =
-            Box::new(move || while run_one(&s) {});
+        let ticket: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            if let Some(q) = queued {
+                obs::wait_since(TraceKind::PoolWait, 0, q);
+            }
+            while run_one(&s) {}
+        });
         // SAFETY: the ticket borrows non-'static job/result/closure
         // data only through `Scope`, whose slots it touches only for
         // claim indices < n. Every such access happens before the
@@ -191,7 +251,7 @@ pub fn scope_map<T: Send, R: Send, F: Fn(T) -> R + Sync>(
                 Box<dyn FnOnce() + Send + 'static>,
             >(ticket)
         };
-        p.tx.send(ticket).expect("pool alive");
+        send_task(p, ticket);
     }
     // The caller claims jobs too: guaranteed progress even if every
     // worker is busy or parked inside another scope.
@@ -296,6 +356,14 @@ mod tests {
         assert!(r.is_err(), "panic must reach the caller");
         // The pool survives: a fresh scope still works.
         assert_eq!(scope_map(vec![1, 2, 3], |i| i * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn queue_high_water_rises_after_fanout() {
+        // A 64-job scope sends min(63, workers) >= 1 tickets through
+        // send_task, so the high-water mark must be nonzero afterwards.
+        let _ = scope_map((0..64usize).collect::<Vec<_>>(), |i| i);
+        assert!(queue_high_water() >= 1);
     }
 
     #[test]

@@ -93,6 +93,10 @@ pub struct Histogram {
     sum: f64,
     min: f64,
     max: f64,
+    /// Records below the first edge (they land in bucket 0, which
+    /// silently floors quantiles at `bounds[0]` — surfaced so readers
+    /// can tell).
+    underflow: u64,
 }
 
 impl Histogram {
@@ -107,7 +111,31 @@ impl Histogram {
             sum: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
+            underflow: 0,
         }
+    }
+
+    /// `n` logarithmically spaced upper edges from `lo` to `hi`
+    /// inclusive (both pinned exactly) — the shared constructor behind
+    /// the serving latency/batch histograms, replacing hand-listed
+    /// bucket tables.
+    pub fn log_spaced(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo, "log_spaced needs 0 < lo < hi");
+        assert!(n >= 2, "log_spaced needs >= 2 edges");
+        let (llo, lhi) = (lo.ln(), hi.ln());
+        let bounds: Vec<f64> = (0..n)
+            .map(|i| {
+                if i == 0 {
+                    lo
+                } else if i == n - 1 {
+                    hi
+                } else {
+                    let t = i as f64 / (n - 1) as f64;
+                    (llo + t * (lhi - llo)).exp()
+                }
+            })
+            .collect();
+        Histogram::new(bounds)
     }
 
     pub fn record(&mut self, x: f64) {
@@ -121,6 +149,20 @@ impl Histogram {
         self.sum += x;
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        if self.bounds.first().is_some_and(|&b| x < b) {
+            self.underflow += 1;
+        }
+    }
+
+    /// Records above the last edge (bucket quantiles report `max` for
+    /// them).
+    pub fn overflow_count(&self) -> u64 {
+        *self.counts.last().expect("overflow bucket")
+    }
+
+    /// Records below the first edge.
+    pub fn underflow_count(&self) -> u64 {
+        self.underflow
     }
 
     pub fn count(&self) -> u64 {
@@ -155,17 +197,116 @@ impl Histogram {
         self.max
     }
 
+    /// Scalar digest of the distribution — the single source both the
+    /// text [`summary`](Self::summary) and the JSON telemetry
+    /// (`MetricsSnapshot::to_json`) are built from, so they can never
+    /// disagree.
+    pub fn stats(&self) -> HistStats {
+        HistStats {
+            n: self.total,
+            mean: self.mean(),
+            min: self.min,
+            max: self.max,
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            overflow: self.overflow_count(),
+            underflow: self.underflow,
+        }
+    }
+
     pub fn summary(&self) -> String {
+        self.stats().summary_line()
+    }
+}
+
+/// Scalar digest of a [`Histogram`] (DESIGN.md S20): one struct both
+/// the human summary line and the machine-readable JSON render from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistStats {
+    pub n: u64,
+    pub mean: f64,
+    /// Exact observed min (`+inf` when empty, like a fresh histogram).
+    pub min: f64,
+    /// Exact observed max (`-inf` when empty).
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Records above the last bucket edge.
+    pub overflow: u64,
+    /// Records below the first bucket edge.
+    pub underflow: u64,
+}
+
+impl Default for HistStats {
+    fn default() -> Self {
+        HistStats {
+            n: 0,
+            mean: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            p50: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+            overflow: 0,
+            underflow: 0,
+        }
+    }
+}
+
+impl HistStats {
+    /// The canonical one-line text form (used verbatim inside
+    /// `Metrics::summary`).
+    pub fn summary_line(&self) -> String {
         format!(
-            "n={} mean={:.3} min={:.3} p50={:.3} p95={:.3} p99={:.3} max={:.3}",
-            self.total,
-            self.mean(),
+            "n={} mean={:.3} min={:.3} p50={:.3} p95={:.3} p99={:.3} \
+             max={:.3} of={} uf={}",
+            self.n,
+            self.mean,
             self.min,
-            self.quantile(0.50),
-            self.quantile(0.95),
-            self.quantile(0.99),
-            self.max
+            self.p50,
+            self.p95,
+            self.p99,
+            self.max,
+            self.overflow,
+            self.underflow
         )
+    }
+
+    /// Machine-readable form. Note the vendored writer serializes
+    /// non-finite numbers (empty-histogram min/max) as `null`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{self, Json};
+        json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("p50", Json::Num(self.p50)),
+            ("p95", Json::Num(self.p95)),
+            ("p99", Json::Num(self.p99)),
+            ("overflow", Json::Num(self.overflow as f64)),
+            ("underflow", Json::Num(self.underflow as f64)),
+        ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json); `null`/missing min and
+    /// max fall back to the empty-histogram sentinels.
+    pub fn from_json(j: &crate::util::json::Json) -> HistStats {
+        use crate::util::json::Json;
+        let f = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        HistStats {
+            n: f("n", 0.0) as u64,
+            mean: f("mean", 0.0),
+            min: f("min", f64::INFINITY),
+            max: f("max", f64::NEG_INFINITY),
+            p50: f("p50", 0.0),
+            p95: f("p95", 0.0),
+            p99: f("p99", 0.0),
+            overflow: f("overflow", 0.0) as u64,
+            underflow: f("underflow", 0.0) as u64,
+        }
     }
 }
 
@@ -224,5 +365,57 @@ mod tests {
         assert_eq!(h.quantile(0.99), 20.0);
         assert!(h.mean() > 0.0);
         assert!(h.summary().contains("n=7"));
+    }
+
+    #[test]
+    fn histogram_surfaces_overflow_and_underflow() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0, 8.0]);
+        for x in [0.5, 0.9, 1.5, 3.0, 3.5, 7.0, 20.0] {
+            h.record(x);
+        }
+        assert_eq!(h.overflow_count(), 1); // 20.0
+        assert_eq!(h.underflow_count(), 2); // 0.5, 0.9
+        let s = h.summary();
+        assert!(s.contains("of=1"), "{s}");
+        assert!(s.contains("uf=2"), "{s}");
+    }
+
+    #[test]
+    fn log_spaced_pins_endpoints_and_ascends() {
+        let h = Histogram::log_spaced(10.0, 200_000.0, 12);
+        assert_eq!(h.bounds.len(), 12);
+        assert_eq!(h.bounds[0], 10.0);
+        assert_eq!(h.bounds[11], 200_000.0);
+        assert!(h.bounds.windows(2).all(|w| w[0] < w[1]));
+        // Log spacing: near-constant ratio between adjacent edges.
+        let r0 = h.bounds[1] / h.bounds[0];
+        let r1 = h.bounds[10] / h.bounds[9];
+        assert!((r0 / r1 - 1.0).abs() < 1e-6, "{r0} vs {r1}");
+
+        // The batch-size flavor lands on the familiar powers of two.
+        let b = Histogram::log_spaced(1.0, 64.0, 7);
+        for (i, want) in [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+            .iter()
+            .enumerate()
+        {
+            assert!((b.bounds[i] - want).abs() < 1e-9, "{:?}", b.bounds);
+        }
+    }
+
+    #[test]
+    fn hist_stats_json_round_trip_and_summary_match() {
+        let mut h = Histogram::log_spaced(1.0, 1000.0, 7);
+        for x in [2.0, 30.0, 400.0, 5000.0] {
+            h.record(x);
+        }
+        let s = h.stats();
+        assert_eq!(s.summary_line(), h.summary());
+        let back = HistStats::from_json(&s.to_json());
+        assert_eq!(back, s);
+        // Empty histograms keep their sentinels through JSON built
+        // in-memory (serialized text would null the infinities).
+        let empty = Histogram::new(vec![1.0]).stats();
+        let back = HistStats::from_json(&empty.to_json());
+        assert_eq!(back.summary_line(), empty.summary_line());
     }
 }

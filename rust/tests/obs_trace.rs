@@ -1,0 +1,182 @@
+//! Concurrent observability + end-to-end trace export (DESIGN.md S20).
+//!
+//! Two acceptance bars:
+//!
+//! * **Concurrency**: N threads hammering `record_request` /
+//!   `record_activity` / spans while another thread continuously drains
+//!   snapshots and trace exports — the counter totals must equal the
+//!   sum of per-thread contributions, and the exporter must never
+//!   deadlock with the worker pool (drain takes registry → ring;
+//!   writers only ever take their own ring).
+//! * **End-to-end**: a short stream-server workload with every kind
+//!   enabled yields a Perfetto `trace_event` JSON containing spans from
+//!   ≥ 4 distinct stages (pool job, macro MVM, NoC route, stream stage)
+//!   plus counter events, validated by a `util::json::parse` round
+//!   trip of the exact bytes written.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use spikemram::config::{
+    FabricConfig, LevelMap, MacroConfig, StreamConfig, TraceConfig,
+};
+use spikemram::coordinator::Metrics;
+use spikemram::obs::{self, TraceKind};
+use spikemram::snn::{Dataset, Mlp};
+use spikemram::stream::{
+    FrameEncoder, StreamServer, StreamServerConfig, StreamSpec, TemporalCode,
+};
+use spikemram::util::json::{self, Json};
+use spikemram::util::pool;
+
+/// obs state (kind mask, rings) is process-global; serialize the tests
+/// that install/drain it.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[test]
+fn concurrent_hammer_preserves_totals_and_never_deadlocks() {
+    let _g = lock();
+    obs::install(&TraceConfig::all());
+    let metrics = Arc::new(Metrics::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    const THREADS: usize = 4;
+    const ITERS: usize = 2_000;
+    std::thread::scope(|s| {
+        // Drainer: snapshots, ring drains, and chrome serialization in
+        // a tight loop, concurrent with every writer.
+        {
+            let m = Arc::clone(&metrics);
+            let stop = Arc::clone(&stop);
+            s.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let _ = m.snapshot().to_json().to_string();
+                    let report = obs::drain();
+                    let _ = obs::chrome_trace(&report).to_string();
+                    m.absorb_trace(&report);
+                }
+            });
+        }
+        // Pool churn: keeps scope tickets (and their spans) flowing
+        // through the shared worker pool under the drains — the
+        // deadlock-freedom half of the bar.
+        {
+            let stop = Arc::clone(&stop);
+            s.spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let v = pool::scope_map(
+                        (0..32usize).collect::<Vec<_>>(),
+                        |i| i * 2,
+                    );
+                    assert_eq!(v[31], 62);
+                }
+            });
+        }
+        let mut writers = Vec::new();
+        for t in 0..THREADS {
+            let m = Arc::clone(&metrics);
+            writers.push(s.spawn(move || {
+                for i in 0..ITERS {
+                    m.record_request(10.0 + (i % 7) as f64);
+                    m.record_batch(1, 100);
+                    m.record_activity(8, 16);
+                    let mut sp =
+                        obs::Span::begin(TraceKind::MacroMvm, t as u16);
+                    sp.note(i as f64, 1.0);
+                }
+            }));
+        }
+        for w in writers {
+            w.join().expect("writer");
+        }
+        stop.store(true, Ordering::Release);
+    });
+    obs::install(&TraceConfig::off());
+    let n = (THREADS * ITERS) as u64;
+    let snap = metrics.snapshot();
+    assert_eq!(snap.requests, n, "every record_request landed");
+    assert_eq!(snap.batches, n);
+    assert_eq!(snap.macs, n * 100);
+    assert_eq!(snap.active_rows, n * 8);
+    assert_eq!(snap.row_slots, n * 16);
+    // Whatever the drainer didn't absorb is still in the rings.
+    metrics.absorb_trace(&obs::drain());
+}
+
+#[test]
+fn stream_trace_exports_perfetto_json_with_all_stage_kinds() {
+    let _g = lock();
+    obs::install(&TraceConfig::all());
+    let spec = StreamSpec {
+        model: Mlp::new(5),
+        calib: Dataset::generate(32, 5),
+        mcfg: MacroConfig::default(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig::default(),
+    };
+    let server = StreamServer::start(
+        spec,
+        StreamServerConfig {
+            workers: 2,
+            ..StreamServerConfig::default()
+        },
+    )
+    .expect("deploy");
+    let enc = FrameEncoder::new(TemporalCode::Rate, 3, 255);
+    let data = Dataset::generate(4, 9);
+    for i in 0..4 {
+        let id = server.open_session();
+        for f in enc.encode_frames(&data.features_u8(i)) {
+            server.frame(id, f);
+        }
+        server.finish(id);
+    }
+    obs::install(&TraceConfig::off());
+    let report = obs::drain();
+
+    // The acceptance bar: ≥ 4 distinct span stages, counters present.
+    let kinds = report.span_kinds();
+    for want in [
+        TraceKind::PoolExec,
+        TraceKind::MacroMvm,
+        TraceKind::NocRoute,
+        TraceKind::StreamStage,
+        TraceKind::ServeFrame,
+    ] {
+        assert!(kinds.contains(&want), "missing {want:?} in {kinds:?}");
+    }
+    assert!(kinds.len() >= 4, "{kinds:?}");
+    assert!(report.has_counters(), "occupancy/energy counters expected");
+
+    // Export and round-trip the exact bytes through the vendored
+    // parser.
+    let dir = std::env::temp_dir().join("spikemram_obs_trace_test");
+    let path = dir.join("trace_e2e.json");
+    let p = obs::write_chrome_trace(&path, &report).expect("export");
+    let text = std::fs::read_to_string(&p).expect("read back");
+    let back = json::parse(&text).expect("round trip");
+    let evs = back
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents");
+    assert!(evs.len() > report.threads.len(), "more than metadata");
+    let ph = |e: &Json| e.get("ph").and_then(Json::as_str).map(str::to_string);
+    assert!(evs.iter().any(|e| ph(e).as_deref() == Some("X")), "spans");
+    assert!(evs.iter().any(|e| ph(e).as_deref() == Some("C")), "counters");
+    assert!(evs.iter().any(|e| ph(e).as_deref() == Some("M")), "metadata");
+
+    // Folding the report into Metrics surfaces per-span gauges.
+    server.metrics.absorb_trace(&report);
+    let snap = server.metrics.snapshot();
+    assert!(snap.trace_events > 0);
+    assert!(
+        snap.spans.iter().any(|s| s.name == "macro.mvm" && s.count > 0),
+        "{:?}",
+        snap.spans
+    );
+    let _ = std::fs::remove_file(&p);
+    server.shutdown();
+}
