@@ -77,6 +77,19 @@ echo "==> EX4 reliability smoke sweep (S19 fault-injection runtime)"
 cargo run --release --quiet -- reliability --seed 7
 ls -l results/ex4_reliability.csv
 
+echo "==> EX5 overload smoke sweep (S21 serving control plane)"
+# A small paced open-loop sweep through the release binary: calibrate
+# capacity, offer 0.5x..8x, show the shed-rate knee with bounded p99.
+# Hard-fails if the CSV or the machine-readable record does not land.
+cargo run --release --quiet -- overload --seed 7 --frames 96
+ls -l results/ex5_overload.csv BENCH_overload.json
+
+echo "==> S21 chaos soak (panic isolation, restart, accounting closure)"
+# Re-runs the supervision chaos tests under the release-profile lib on
+# top of their tier-1 (dev-profile) run: injected panics, bitwise
+# session recovery, no frame both shed and served.
+cargo test --release --test supervisor_chaos -q
+
 echo "==> lint: cargo fmt --check && cargo clippy -D warnings (hard gate)"
 # --all-targets covers the fabric/ module (lib), its bench, example,
 # and integration test with warnings fatal.

@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::coordinator::supervisor::ShedReason;
 use crate::obs::{TraceKind, TraceReport};
 use crate::util::json::{self, Json};
 use crate::util::stats::{HistStats, Histogram};
@@ -61,6 +62,21 @@ struct Inner {
     pool_queue_hw: u64,
     trace_events: u64,
     trace_dropped: u64,
+    // --- supervision control plane (S21) ---
+    worker_panics: u64,
+    restarts: u64,
+    sheds_queue: u64,
+    sheds_deadline: u64,
+    sheds_drain: u64,
+    sheds_restart: u64,
+    scrubs_skipped: u64,
+    /// Workers degraded after exhausting restart budgets (gauge, set).
+    degraded_workers: u64,
+    /// Detached pool tasks that panicked (gauge; callers fold in the
+    /// cumulative `util::pool::panics()` via max).
+    pool_panics: u64,
+    /// Last stored windowed report (periodic worker reports, S21).
+    window: Option<MetricsSnapshot>,
 }
 
 /// p50/p95 duration digest of one span kind (from absorbed traces).
@@ -139,6 +155,26 @@ pub struct MetricsSnapshot {
     pub trace_events: u64,
     /// Trace events dropped by full rings (drop-oldest policy).
     pub trace_dropped: u64,
+    /// Worker panics caught mid-frame (S21; each is either retried on a
+    /// restarted worker or accounted as a shed — never silently lost).
+    pub worker_panics: u64,
+    /// Worker replicas rebuilt after a caught panic.
+    pub restarts: u64,
+    /// Frames refused at admission (queue at capacity / draining).
+    pub sheds_queue: u64,
+    /// Frames dropped at dequeue with an expired deadline.
+    pub sheds_deadline: u64,
+    /// Frames dropped because the drain deadline passed first.
+    pub sheds_drain: u64,
+    /// Frames dropped by degraded (budget-exhausted) workers.
+    pub sheds_restart: u64,
+    /// Scrub ticks skipped while ingress queues were deep (S21
+    /// idle-stealing scrub scheduling).
+    pub scrubs_skipped: u64,
+    /// Workers currently degraded (gauge).
+    pub degraded_workers: u64,
+    /// Detached pool tasks that panicked since process start (gauge).
+    pub pool_panics: u64,
 }
 
 impl MetricsSnapshot {
@@ -168,6 +204,25 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.noc_hops as f64 / self.noc_packets as f64
+        }
+    }
+
+    /// Every frame shed anywhere in the pipeline (admission + dequeue).
+    pub fn sheds_total(&self) -> u64 {
+        self.sheds_queue
+            + self.sheds_deadline
+            + self.sheds_drain
+            + self.sheds_restart
+    }
+
+    /// Fraction of submitted frames shed (served = `requests`; a frame
+    /// is exactly one of served / shed, asserted by the chaos soak).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.requests + self.sheds_total();
+        if offered == 0 {
+            0.0
+        } else {
+            self.sheds_total() as f64 / offered as f64
         }
     }
 
@@ -225,7 +280,24 @@ impl MetricsSnapshot {
             trace_dropped: self
                 .trace_dropped
                 .saturating_sub(prev.trace_dropped),
+            worker_panics: self
+                .worker_panics
+                .saturating_sub(prev.worker_panics),
+            restarts: self.restarts.saturating_sub(prev.restarts),
+            sheds_queue: self.sheds_queue.saturating_sub(prev.sheds_queue),
+            sheds_deadline: self
+                .sheds_deadline
+                .saturating_sub(prev.sheds_deadline),
+            sheds_drain: self.sheds_drain.saturating_sub(prev.sheds_drain),
+            sheds_restart: self
+                .sheds_restart
+                .saturating_sub(prev.sheds_restart),
+            scrubs_skipped: self
+                .scrubs_skipped
+                .saturating_sub(prev.scrubs_skipped),
             // Cumulative distributions and gauges: latest view.
+            degraded_workers: self.degraded_workers,
+            pool_panics: self.pool_panics,
             latency_mean_us: self.latency_mean_us,
             latency_p50_us: self.latency_p50_us,
             latency_p95_us: self.latency_p95_us,
@@ -318,6 +390,37 @@ impl MetricsSnapshot {
                 ]),
             ),
             (
+                "supervision",
+                json::obj(vec![
+                    (
+                        "worker_panics",
+                        Json::Num(self.worker_panics as f64),
+                    ),
+                    ("restarts", Json::Num(self.restarts as f64)),
+                    ("sheds_queue", Json::Num(self.sheds_queue as f64)),
+                    (
+                        "sheds_deadline",
+                        Json::Num(self.sheds_deadline as f64),
+                    ),
+                    ("sheds_drain", Json::Num(self.sheds_drain as f64)),
+                    (
+                        "sheds_restart",
+                        Json::Num(self.sheds_restart as f64),
+                    ),
+                    ("sheds_total", Json::Num(self.sheds_total() as f64)),
+                    ("shed_rate", Json::Num(self.shed_rate())),
+                    (
+                        "scrubs_skipped",
+                        Json::Num(self.scrubs_skipped as f64),
+                    ),
+                    (
+                        "degraded_workers",
+                        Json::Num(self.degraded_workers as f64),
+                    ),
+                    ("pool_panics", Json::Num(self.pool_panics as f64)),
+                ]),
+            ),
+            (
                 "pool_queue_depth_hw",
                 Json::Num(self.pool_queue_depth_hw as f64),
             ),
@@ -402,6 +505,29 @@ impl MetricsSnapshot {
                 nest("reliability", "scrub_energy_fj") / 1e3
             ));
         }
+        if nest("supervision", "worker_panics") > 0.0
+            || nest("supervision", "restarts") > 0.0
+            || nest("supervision", "sheds_total") > 0.0
+            || nest("supervision", "scrubs_skipped") > 0.0
+            || nest("supervision", "degraded_workers") > 0.0
+            || nest("supervision", "pool_panics") > 0.0
+        {
+            out.push_str(&format!(
+                "\nsupervision: panics={} restarts={} sheds \
+                 queue={} deadline={} drain={} budget={} \
+                 (rate {:.1} %) scrub_skips={} degraded={} pool_panics={}",
+                nest("supervision", "worker_panics") as u64,
+                nest("supervision", "restarts") as u64,
+                nest("supervision", "sheds_queue") as u64,
+                nest("supervision", "sheds_deadline") as u64,
+                nest("supervision", "sheds_drain") as u64,
+                nest("supervision", "sheds_restart") as u64,
+                nest("supervision", "shed_rate") * 100.0,
+                nest("supervision", "scrubs_skipped") as u64,
+                nest("supervision", "degraded_workers") as u64,
+                nest("supervision", "pool_panics") as u64
+            ));
+        }
         if nest("trace", "events") > 0.0
             || nest("trace", "dropped") > 0.0
             || f("pool_queue_depth_hw") > 0.0
@@ -472,6 +598,16 @@ impl Metrics {
                 pool_queue_hw: 0,
                 trace_events: 0,
                 trace_dropped: 0,
+                worker_panics: 0,
+                restarts: 0,
+                sheds_queue: 0,
+                sheds_deadline: 0,
+                sheds_drain: 0,
+                sheds_restart: 0,
+                scrubs_skipped: 0,
+                degraded_workers: 0,
+                pool_panics: 0,
+                window: None,
             }),
             started: Instant::now(),
         }
@@ -584,6 +720,61 @@ impl Metrics {
         g.energy_fj += energy_fj;
     }
 
+    /// Account one caught worker panic (S21 supervision).
+    pub fn record_worker_panic(&self) {
+        self.inner.lock().unwrap().worker_panics += 1;
+    }
+
+    /// Account one worker replica rebuild after a caught panic.
+    pub fn record_restart(&self) {
+        self.inner.lock().unwrap().restarts += 1;
+    }
+
+    /// Account one frame refused at admission (queue cap / draining).
+    pub fn record_shed_queue(&self) {
+        self.inner.lock().unwrap().sheds_queue += 1;
+    }
+
+    /// Account one queued frame dropped at dequeue (S21 shed taxonomy).
+    pub fn record_shed(&self, reason: ShedReason) {
+        let mut g = self.inner.lock().unwrap();
+        match reason {
+            ShedReason::DeadlineExpired => g.sheds_deadline += 1,
+            ShedReason::Draining => g.sheds_drain += 1,
+            ShedReason::RestartBudget => g.sheds_restart += 1,
+        }
+    }
+
+    /// Account one scrub tick skipped for deep ingress queues (S21
+    /// idle-stealing scrub scheduling).
+    pub fn record_scrub_skip(&self) {
+        self.inner.lock().unwrap().scrubs_skipped += 1;
+    }
+
+    /// Set the degraded-worker gauge (the supervisor owns the count).
+    pub fn set_degraded_workers(&self, n: u64) {
+        self.inner.lock().unwrap().degraded_workers = n;
+    }
+
+    /// Fold the cumulative detached-pool-panic count (gauge, max —
+    /// `util::pool::panics()` is process-global and monotonic).
+    pub fn record_pool_panics(&self, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.pool_panics = g.pool_panics.max(n);
+    }
+
+    /// Store a windowed report (S21: workers publish periodic
+    /// `snapshot_since` deltas from their idle ticks so an operator —
+    /// or a test — can read the last window without a live request).
+    pub fn store_window(&self, w: MetricsSnapshot) {
+        self.inner.lock().unwrap().window = Some(w);
+    }
+
+    /// The last stored windowed report, if any worker published one.
+    pub fn last_window(&self) -> Option<MetricsSnapshot> {
+        self.inner.lock().unwrap().window.clone()
+    }
+
     /// Derive the snapshot from an already-held guard — the one source
     /// of every rate/quantile, shared by `snapshot()` and `summary()`.
     fn snapshot_of(&self, g: &Inner) -> MetricsSnapshot {
@@ -630,6 +821,15 @@ impl Metrics {
             pool_queue_depth_hw: g.pool_queue_hw,
             trace_events: g.trace_events,
             trace_dropped: g.trace_dropped,
+            worker_panics: g.worker_panics,
+            restarts: g.restarts,
+            sheds_queue: g.sheds_queue,
+            sheds_deadline: g.sheds_deadline,
+            sheds_drain: g.sheds_drain,
+            sheds_restart: g.sheds_restart,
+            scrubs_skipped: g.scrubs_skipped,
+            degraded_workers: g.degraded_workers,
+            pool_panics: g.pool_panics,
         }
     }
 
@@ -873,6 +1073,89 @@ mod tests {
         let idle = m.snapshot_since(&prev2);
         assert_eq!(idle.requests, 0);
         assert_eq!(idle.rps, 0.0);
+    }
+
+    #[test]
+    fn supervision_counters_accumulate_and_show() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("supervision:"), "silent when zero");
+        m.record_worker_panic();
+        m.record_restart();
+        m.record_shed_queue();
+        m.record_shed(ShedReason::DeadlineExpired);
+        m.record_shed(ShedReason::DeadlineExpired);
+        m.record_shed(ShedReason::Draining);
+        m.record_shed(ShedReason::RestartBudget);
+        m.record_scrub_skip();
+        m.set_degraded_workers(1);
+        m.record_pool_panics(3);
+        m.record_pool_panics(2); // gauge folds by max, never regresses
+        m.record_request(10.0); // one served frame
+        let s = m.snapshot();
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.restarts, 1);
+        assert_eq!(s.sheds_queue, 1);
+        assert_eq!(s.sheds_deadline, 2);
+        assert_eq!(s.sheds_drain, 1);
+        assert_eq!(s.sheds_restart, 1);
+        assert_eq!(s.sheds_total(), 5);
+        assert!((s.shed_rate() - 5.0 / 6.0).abs() < 1e-12);
+        assert_eq!(s.scrubs_skipped, 1);
+        assert_eq!(s.degraded_workers, 1);
+        assert_eq!(s.pool_panics, 3);
+        let txt = m.summary();
+        assert!(
+            txt.contains(
+                "supervision: panics=1 restarts=1 sheds queue=1 \
+                 deadline=2 drain=1 budget=1"
+            ),
+            "{txt}"
+        );
+        // The JSON carries the same numbers (summary is built from it).
+        let j = s.to_json();
+        let nest = |k: &str| {
+            j.get("supervision")
+                .and_then(|o| o.get(k))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(nest("sheds_total"), 5.0);
+        assert_eq!(nest("degraded_workers"), 1.0);
+        assert_eq!(nest("pool_panics"), 3.0);
+    }
+
+    #[test]
+    fn supervision_counters_window_like_counters() {
+        let m = Metrics::new();
+        m.record_shed(ShedReason::Draining);
+        m.record_worker_panic();
+        m.set_degraded_workers(1);
+        let prev = m.snapshot();
+        m.record_shed(ShedReason::Draining);
+        m.record_shed_queue();
+        m.record_restart();
+        let w = m.snapshot_since(&prev);
+        assert_eq!(w.sheds_drain, 1, "windowed, not cumulative");
+        assert_eq!(w.sheds_queue, 1);
+        assert_eq!(w.restarts, 1);
+        assert_eq!(w.worker_panics, 0);
+        // Gauges stay latest-view.
+        assert_eq!(w.degraded_workers, 1);
+    }
+
+    #[test]
+    fn windowed_reports_store_and_read_back() {
+        let m = Metrics::new();
+        assert!(m.last_window().is_none());
+        m.record_request(5.0);
+        let prev = MetricsSnapshot::default();
+        m.store_window(m.snapshot_since(&prev));
+        let w = m.last_window().expect("stored");
+        assert_eq!(w.requests, 1);
+        // Overwrite keeps only the latest window.
+        m.record_request(5.0);
+        m.store_window(m.snapshot_since(&prev));
+        assert_eq!(m.last_window().unwrap().requests, 2);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod pipeline;
 pub mod scheduler;
 pub mod scrub;
 pub mod server;
+pub mod supervisor;
 pub mod tiler;
 
 pub use batcher::{Batch, Batcher, CloseReason, Request};
@@ -17,4 +18,8 @@ pub use pipeline::{pipeline_makespan_ns, serial_makespan_ns, ThreadedPipeline};
 pub use scheduler::{Policy, ScheduleReport, Scheduler, TileOp};
 pub use scrub::{ScrubPolicy, Scrubber};
 pub use server::{BackendKind, MacroServer, Router, ServerConfig};
+pub use supervisor::{
+    Admission, ChaosPlan, RestartPolicy, ShedReason, StatusMsg, Supervisor,
+    Verdict,
+};
 pub use tiler::TiledMatrix;

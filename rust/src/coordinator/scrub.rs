@@ -24,6 +24,11 @@ pub struct ScrubPolicy {
     pub scrub_duration_ns: f64,
     /// Energy per full-tile scrub (fJ).
     pub scrub_energy_fj: f64,
+    /// Idle-stealing gate (DESIGN.md S21): skip a scrub tick while the
+    /// total ingress queue depth exceeds this many frames. Retention is
+    /// a milliseconds-to-days phenomenon, so deferring one tick under
+    /// load is free; serving latency under overload is not.
+    pub queue_depth_threshold: usize,
 }
 
 impl ScrubPolicy {
@@ -34,7 +39,17 @@ impl ScrubPolicy {
             p_target: 1e-9,
             scrub_duration_ns: 100_000.0, // 0.1 ms per tile
             scrub_energy_fj: 2.0e6,       // ~2 µJ: sparse rewrites
+            queue_depth_threshold: 4,
         }
+    }
+
+    /// Idle-stealing decision: `true` when a scrub tick should be
+    /// deferred because `queue_depth` frames are waiting for service.
+    /// The skip must be *counted* by the caller
+    /// (`Metrics::record_scrub_skip`) so `scrub_duty_cycle()` — which is
+    /// derived from scrubs actually executed — stays correct.
+    pub fn should_skip(&self, queue_depth: usize) -> bool {
+        queue_depth > self.queue_depth_threshold
     }
 
     /// Scrub interval for the given device corner (ns).
@@ -187,6 +202,20 @@ mod tests {
         };
         assert!(tight.interval_ns(&ret) < loose.interval_ns(&ret));
         assert!(tight.duty_cycle(&ret) > loose.duty_cycle(&ret));
+    }
+
+    #[test]
+    fn queue_depth_gate_skips_only_above_threshold() {
+        let pol = ScrubPolicy::standard();
+        assert!(!pol.should_skip(0));
+        assert!(!pol.should_skip(pol.queue_depth_threshold));
+        assert!(pol.should_skip(pol.queue_depth_threshold + 1));
+        let eager = ScrubPolicy {
+            queue_depth_threshold: 0,
+            ..ScrubPolicy::standard()
+        };
+        assert!(!eager.should_skip(0));
+        assert!(eager.should_skip(1));
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! Serving supervision control plane (DESIGN.md S21): worker lifecycle
+//! policy for the stream server — restart budgets with exponential
+//! backoff, explicit admission-control outcomes, deterministic chaos
+//! injection for the soak tests, and the supervisor control loop that
+//! workers report panics to over a status channel.
+//!
+//! The split follows the async-control-plane / blocking-compute-plane
+//! idiom (SNIPPETS.md snippet 1): compute workers never make lifecycle
+//! decisions themselves. A worker that catches a panic mid-frame sends
+//! one [`StatusMsg`] carrying a one-shot reply channel and *blocks* on
+//! the [`Verdict`] — restart (after a policy-chosen backoff) or degrade
+//! (stop serving frames, keep draining session state). All policy state
+//! (per-worker attempt counts, the degraded set) lives in the single
+//! supervisor thread, so there is no shared-mutable lifecycle state and
+//! no new lock-order edge (DESIGN.md §S21 lock order).
+//!
+//! Everything here is serving-substrate: [`StreamServer`]
+//! (`stream::serve`) owns the wiring, this module owns the decisions.
+//!
+//! [`StreamServer`]: crate::stream::StreamServer
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::Metrics;
+use crate::util::rng::Rng;
+
+/// Restart budget + backoff policy for one serving backend.
+#[derive(Debug, Clone, Copy)]
+pub struct RestartPolicy {
+    /// Restarts allowed *per worker* before it degrades permanently.
+    pub max_restarts: u32,
+    /// Backoff before the first restart; doubles per attempt.
+    pub backoff: Duration,
+    /// Cap on the exponential backoff.
+    pub backoff_max: Duration,
+}
+
+impl RestartPolicy {
+    /// Defaults tuned for a simulated backend: short backoffs (the
+    /// "die swap" is a rebuild, not a reboot), a small budget.
+    pub fn standard() -> Self {
+        RestartPolicy {
+            max_restarts: 3,
+            backoff: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(50),
+        }
+    }
+
+    /// Backoff before restart attempt `attempt` (1-based):
+    /// `backoff · 2^(attempt−1)`, capped at `backoff_max`.
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(20);
+        self.backoff
+            .saturating_mul(1u32 << shift)
+            .min(self.backoff_max)
+    }
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+/// Admission-control outcome of an enqueue attempt: the request is in
+/// the queue, or it was shed with a load-derived retry hint. Callers
+/// must handle `Shed` — an overloaded server refuses work instead of
+/// queueing without bound.
+#[derive(Debug)]
+pub enum Admission<T> {
+    /// Enqueued; `T` is the reply handle.
+    Accepted(T),
+    /// Refused (queue at capacity, or admissions stopped for drain).
+    Shed {
+        /// Rough time until a slot frees up: queue depth × the
+        /// server's EWMA per-frame service time.
+        retry_after: Duration,
+    },
+}
+
+impl<T> Admission<T> {
+    /// The reply handle, if admitted.
+    pub fn accepted(self) -> Option<T> {
+        match self {
+            Admission::Accepted(t) => Some(t),
+            Admission::Shed { .. } => None,
+        }
+    }
+
+    /// Was the request shed?
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Admission::Shed { .. })
+    }
+
+    /// Unwrap, panicking on `Shed` — for callers (tests, the legacy
+    /// blocking API) that sized the queue so shedding cannot happen.
+    pub fn expect_accepted(self) -> T {
+        match self {
+            Admission::Accepted(t) => t,
+            Admission::Shed { retry_after } => panic!(
+                "admission shed (retry_after {retry_after:?}) — \
+                 queue capacity too small for this workload"
+            ),
+        }
+    }
+}
+
+/// Why a queued frame was shed at dequeue instead of served. (Queue-cap
+/// sheds never reach a worker — the caller gets [`Admission::Shed`] at
+/// submit time.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The frame's deadline had already expired when the worker
+    /// dequeued it: stale work is dropped, not computed.
+    DeadlineExpired,
+    /// The server's drain deadline passed with the frame still queued.
+    Draining,
+    /// The worker exhausted its restart budget and is degraded — it
+    /// only drains session state, it no longer computes frames.
+    RestartBudget,
+}
+
+/// Deterministic fault injection for the chaos tests: makes a worker
+/// panic mid-frame. Two modes:
+///
+/// * `every` ≥ 2 — fire on every `every`-th frame *attempt* a worker
+///   makes (deterministic; a retry increments the attempt counter, so
+///   a retried frame can never re-fire and the soak converges);
+/// * otherwise — fire i.i.d. with probability `rate` per attempt from
+///   a per-worker seeded stream (the 1 %-of-frames soak).
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosPlan {
+    /// Per-attempt panic probability (used when `every == 0`).
+    pub rate: f64,
+    /// Deterministic mode: fire on attempts `every, 2·every, …`.
+    pub every: u64,
+    /// Seed for the per-worker draw streams (rate mode).
+    pub seed: u64,
+}
+
+impl ChaosPlan {
+    /// Deterministic mode; `n >= 2` so a retried frame cannot re-fire.
+    pub fn every(n: u64) -> ChaosPlan {
+        assert!(n >= 2, "every-mode needs n >= 2 so retries converge");
+        ChaosPlan {
+            rate: 0.0,
+            every: n,
+            seed: 0,
+        }
+    }
+
+    /// Probabilistic mode: each attempt fires with `rate`.
+    pub fn rate(rate: f64, seed: u64) -> ChaosPlan {
+        assert!((0.0..=1.0).contains(&rate), "rate in [0, 1]");
+        ChaosPlan {
+            rate,
+            every: 0,
+            seed,
+        }
+    }
+
+    /// The draw stream for worker `w` (rate mode; unused in every-mode).
+    pub fn rng_for(&self, worker: usize) -> Rng {
+        Rng::new(
+            self.seed ^ (worker as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        )
+    }
+
+    /// Does frame attempt `count` (1-based, per worker) fire?
+    pub fn fires(&self, count: u64, rng: &mut Rng) -> bool {
+        if self.every > 0 {
+            count % self.every == 0
+        } else {
+            self.rate > 0.0 && rng.f64() < self.rate
+        }
+    }
+}
+
+/// Worker → supervisor: "I caught a panic serving a frame". The
+/// one-shot verdict channel rides in the message, so the supervisor
+/// needs no per-worker reply plumbing.
+pub struct StatusMsg {
+    pub worker: usize,
+    pub reply: mpsc::Sender<Verdict>,
+}
+
+/// Supervisor → worker decision after a panic report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Rebuild the replica and continue; sleep `backoff` first.
+    Restart { attempt: u32, backoff: Duration },
+    /// Budget exhausted: degrade — stop computing frames, keep
+    /// draining session state (Finish still works).
+    Degrade,
+}
+
+/// The supervisor control loop: one thread owning all lifecycle state.
+/// Exits when every worker's status sender is dropped (server
+/// shutdown), which is when [`Supervisor::join`] returns.
+pub struct Supervisor {
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Start the loop for `workers` replicas. Returns the supervisor
+    /// handle and the status sender to clone into each worker.
+    pub fn start(
+        workers: usize,
+        policy: RestartPolicy,
+        metrics: Arc<Metrics>,
+    ) -> (Supervisor, mpsc::Sender<StatusMsg>) {
+        let (tx, rx) = mpsc::channel::<StatusMsg>();
+        let handle = std::thread::Builder::new()
+            .name("spikemram-supervisor".to_string())
+            .spawn(move || {
+                let mut attempts = vec![0u32; workers];
+                let mut degraded = vec![false; workers];
+                while let Ok(StatusMsg { worker, reply }) = rx.recv() {
+                    let verdict = if worker < workers
+                        && attempts[worker] < policy.max_restarts
+                    {
+                        attempts[worker] += 1;
+                        Verdict::Restart {
+                            attempt: attempts[worker],
+                            backoff: policy.backoff_for(attempts[worker]),
+                        }
+                    } else {
+                        if worker < workers && !degraded[worker] {
+                            degraded[worker] = true;
+                            let n = degraded.iter().filter(|&&d| d).count();
+                            metrics.set_degraded_workers(n as u64);
+                        }
+                        Verdict::Degrade
+                    };
+                    // A worker that died between send and verdict just
+                    // leaves a closed reply channel — not our problem.
+                    let _ = reply.send(verdict);
+                }
+            })
+            .expect("spawn supervisor");
+        (
+            Supervisor {
+                handle: Some(handle),
+            },
+            tx,
+        )
+    }
+
+    /// Wait for the loop to exit (all status senders dropped first, or
+    /// this blocks forever).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        // Detach rather than join: the loop exits on its own once the
+        // last status sender drops, and Drop must never deadlock.
+        let _ = self.handle.take();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RestartPolicy {
+            max_restarts: 10,
+            backoff: Duration::from_millis(2),
+            backoff_max: Duration::from_millis(10),
+        };
+        assert_eq!(p.backoff_for(1), Duration::from_millis(2));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(4));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(8));
+        assert_eq!(p.backoff_for(4), Duration::from_millis(10), "capped");
+        assert_eq!(p.backoff_for(40), Duration::from_millis(10));
+        // attempt 0 behaves like attempt 1 (no underflow).
+        assert_eq!(p.backoff_for(0), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn admission_accessors() {
+        let a: Admission<u32> = Admission::Accepted(7);
+        assert!(!a.is_shed());
+        assert_eq!(a.accepted(), Some(7));
+        let s: Admission<u32> = Admission::Shed {
+            retry_after: Duration::from_millis(3),
+        };
+        assert!(s.is_shed());
+        assert!(s.accepted().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "admission shed")]
+    fn expect_accepted_panics_on_shed() {
+        let s: Admission<u32> = Admission::Shed {
+            retry_after: Duration::from_millis(1),
+        };
+        let _ = s.expect_accepted();
+    }
+
+    #[test]
+    fn chaos_every_mode_is_deterministic_and_retry_safe() {
+        let plan = ChaosPlan::every(5);
+        let mut rng = plan.rng_for(0);
+        let fired: Vec<u64> = (1..=20)
+            .filter(|&c| plan.fires(c, &mut rng))
+            .collect();
+        assert_eq!(fired, vec![5, 10, 15, 20]);
+        // The attempt after a firing one never fires (retry safety).
+        for &c in &fired {
+            assert!(!plan.fires(c + 1, &mut rng));
+        }
+    }
+
+    #[test]
+    fn chaos_rate_mode_fires_at_roughly_the_rate() {
+        let plan = ChaosPlan::rate(0.25, 99);
+        let mut rng = plan.rng_for(1);
+        let n = 4000;
+        let fired = (1..=n).filter(|&c| plan.fires(c, &mut rng)).count();
+        let frac = fired as f64 / n as f64;
+        assert!((0.15..0.35).contains(&frac), "fired {frac}");
+        // rate 0 never fires.
+        let never = ChaosPlan::rate(0.0, 1);
+        let mut r2 = never.rng_for(0);
+        assert!((1..=100).all(|c| !never.fires(c, &mut r2)));
+    }
+
+    #[test]
+    #[should_panic(expected = "retries converge")]
+    fn chaos_every_rejects_one() {
+        let _ = ChaosPlan::every(1);
+    }
+
+    #[test]
+    fn supervisor_grants_budget_then_degrades() {
+        let metrics = Arc::new(Metrics::new());
+        let policy = RestartPolicy {
+            max_restarts: 2,
+            backoff: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(4),
+        };
+        let (sup, tx) = Supervisor::start(2, policy, metrics.clone());
+        let ask = |w: usize| -> Verdict {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(StatusMsg {
+                worker: w,
+                reply: rtx,
+            })
+            .unwrap();
+            rrx.recv().unwrap()
+        };
+        assert_eq!(
+            ask(0),
+            Verdict::Restart {
+                attempt: 1,
+                backoff: Duration::from_millis(1)
+            }
+        );
+        assert_eq!(
+            ask(0),
+            Verdict::Restart {
+                attempt: 2,
+                backoff: Duration::from_millis(2)
+            }
+        );
+        assert_eq!(ask(0), Verdict::Degrade);
+        assert_eq!(metrics.snapshot().degraded_workers, 1);
+        // Worker 1 has its own budget.
+        assert!(matches!(ask(1), Verdict::Restart { attempt: 1, .. }));
+        // Degrading again does not double-count.
+        assert_eq!(ask(0), Verdict::Degrade);
+        assert_eq!(metrics.snapshot().degraded_workers, 1);
+        drop(tx);
+        sup.join();
+    }
+}

@@ -24,6 +24,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use crate::energy::EnergyBreakdown;
 use crate::util::pool;
@@ -261,17 +262,29 @@ impl FabricPipeline {
             (0..n_stages).map(|_| None).collect();
         let mut chunks_left = n_chunks;
         let mut tallies_left = n_stages;
+        // Watchdog (DESIGN.md S21): a generous recv_timeout instead of
+        // a blocking recv, so a lost stage (bug, wedged pool) surfaces
+        // as a diagnosable panic instead of hanging the caller forever.
+        const WATCHDOG: Duration = Duration::from_secs(60);
         while chunks_left > 0 || tallies_left > 0 {
-            match out_rx.recv().expect("pipeline ctx alive") {
-                OutMsg::Chunk(id, items) => {
+            match out_rx.recv_timeout(WATCHDOG) {
+                Ok(OutMsg::Chunk(id, items)) => {
                     out[id] = Some(items);
                     chunks_left -= 1;
                 }
-                OutMsg::Tally(s, t) => {
+                Ok(OutMsg::Tally(s, t)) => {
                     tallies[s] = Some(t);
                     tallies_left -= 1;
                 }
-                OutMsg::Panic(p) => std::panic::resume_unwind(p),
+                Ok(OutMsg::Panic(p)) => std::panic::resume_unwind(p),
+                Err(mpsc::RecvTimeoutError::Timeout) => panic!(
+                    "pipeline collector starved for {WATCHDOG:?} \
+                     ({chunks_left} chunks, {tallies_left} tallies \
+                     outstanding) — a stage died without reporting"
+                ),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    unreachable!("pipeline ctx alive")
+                }
             }
         }
         // Absorb per-stage tallies in stage order (deterministic f64

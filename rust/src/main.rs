@@ -54,6 +54,9 @@ experiments (paper artifacts → results/):
                     vs T ∈ {1,2,4,8,16} on the binary-spike path)
   reliability       EX4 fault-injection reliability sweep (accuracy + energy
                     per decision vs simulated uptime, with/without scrubbing)
+  overload          EX5 overload & admission-control sweep (shed rate and
+                    bounded p99 vs offered load on the S21 control plane)
+                    [--frames N per point]
 
 operations:
   mvm        run one 128×128 macro MVM   [--seed N] [--backend sim|pjrt]
@@ -64,7 +67,9 @@ operations:
              [--artifacts DIR] [--grid G] [--k K] [--n N]
              [--trace-out PATH] [--metrics-json PATH]
              (fabric: K×N weights, G×G mesh)
-             (stream: [--sessions S] [--steps T] per-session LIF state)
+             (stream: [--sessions S] [--steps T] per-session LIF state;
+              admission control [--queue-cap N] [--deadline-ms MS]
+              [--max-restarts N])
   trace      serve a short synthetic stream workload with full tracing
              on and write a Perfetto/Chrome trace_event JSON
              (default results/trace_<seed>.json)  [--sessions S]
@@ -148,6 +153,13 @@ fn main() -> Result<()> {
                     &cfg, seed
                 ))
             );
+        }
+        "overload" => {
+            let frames = args.get_usize("frames", 400);
+            let sweep = repro::overload::run(seed, frames);
+            println!("{}", repro::overload::render(&sweep));
+            let p = repro::overload::write_bench_record(&sweep);
+            println!("bench record: {}", p.display());
         }
         "mvm" => cmd_mvm(&args, &cfg, seed)?,
         "snn" => cmd_snn(&args, &cfg, seed)?,
@@ -265,6 +277,7 @@ fn finish_observability(
     metrics_json: Option<&str>,
 ) -> Result<()> {
     metrics.record_pool_queue_depth(pool::queue_high_water() as u64);
+    metrics.record_pool_panics(pool::panics());
     if let Some(path) = trace_out {
         let report = obs::drain();
         metrics.absorb_trace(&report);
@@ -390,13 +403,23 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
             ..StreamConfig::default()
         },
     };
-    let server = StreamServer::start(
-        spec,
-        StreamServerConfig {
-            workers: args.get_usize("workers", 2),
-            ..StreamServerConfig::default()
-        },
-    )?;
+    // S21 admission-control knobs. Defaults match
+    // `StreamServerConfig::default()`: a 1024-deep queue, no deadline,
+    // the standard restart budget.
+    let mut scfg = StreamServerConfig {
+        workers: args.get_usize("workers", 2),
+        queue_cap: args.get_usize("queue-cap", 1024),
+        ..StreamServerConfig::default()
+    };
+    if let Some(ms) = args.get("deadline-ms") {
+        let ms: f64 = ms.parse().context("--deadline-ms expects a number")?;
+        scfg.deadline = Some(std::time::Duration::from_secs_f64(ms / 1e3));
+    }
+    if let Some(n) = args.get("max-restarts") {
+        scfg.restart.max_restarts =
+            n.parse().context("--max-restarts expects an integer")?;
+    }
+    let server = StreamServer::start(spec, scfg)?;
 
     let test = snn::Dataset::generate(sessions, seed ^ 0xabcd);
     let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);

@@ -70,10 +70,14 @@ pub enum TraceKind {
     Occupancy = 9,
     /// Counter: per-frame modeled energy (fJ).
     EnergyFj = 10,
+    /// One stream-worker restart (backoff sleep → rebuild → redeploy).
+    WorkerRestart = 11,
+    /// Counter: admission-control shed (queue full at enqueue).
+    AdmissionShed = 12,
 }
 
 /// Number of [`TraceKind`] variants (bitmask width).
-pub const KIND_COUNT: usize = 11;
+pub const KIND_COUNT: usize = 13;
 
 impl TraceKind {
     /// Every kind, in discriminant order.
@@ -89,6 +93,8 @@ impl TraceKind {
         TraceKind::QueueDepth,
         TraceKind::Occupancy,
         TraceKind::EnergyFj,
+        TraceKind::WorkerRestart,
+        TraceKind::AdmissionShed,
     ];
 
     /// This kind's bit in [`TraceConfig::kinds`].
@@ -111,6 +117,8 @@ impl TraceKind {
             TraceKind::QueueDepth => "pool.queue_depth",
             TraceKind::Occupancy => "serve.occupancy",
             TraceKind::EnergyFj => "serve.energy_fj",
+            TraceKind::WorkerRestart => "serve.restart",
+            TraceKind::AdmissionShed => "serve.shed",
         }
     }
 
@@ -119,7 +127,10 @@ impl TraceKind {
     pub fn is_counter(self) -> bool {
         matches!(
             self,
-            TraceKind::QueueDepth | TraceKind::Occupancy | TraceKind::EnergyFj
+            TraceKind::QueueDepth
+                | TraceKind::Occupancy
+                | TraceKind::EnergyFj
+                | TraceKind::AdmissionShed
         )
     }
 
@@ -134,6 +145,8 @@ impl TraceKind {
             TraceKind::StreamStage => ("events_in", "spikes_out"),
             TraceKind::ServeFrame => ("queue_wait_us", "active_rows"),
             TraceKind::ScrubPass => ("round", "repaired"),
+            TraceKind::WorkerRestart => ("attempt", "backoff_ms"),
+            TraceKind::AdmissionShed => ("queue_depth", "p1"),
             _ => ("value", "p1"),
         }
     }

@@ -16,6 +16,7 @@
 //! | EX2 | [`fabric`] | extension: multi-macro fabric scaling (S15) |
 //! | EX3 | [`stream`] | extension: temporal streaming sweep (S18) |
 //! | EX4 | [`reliability`] | extension: fault-injection reliability (S19) |
+//! | EX5 | [`overload`] | extension: overload & admission control (S21) |
 //!
 //! E9 (end-to-end SNN) lives in `examples/snn_inference.rs`.
 
@@ -25,6 +26,7 @@ pub mod fig3;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod overload;
 pub mod reliability;
 pub mod report;
 pub mod scaling;

@@ -33,6 +33,9 @@ pub mod snn;
 pub mod source;
 
 pub use encode::{FrameEncoder, TemporalCode};
-pub use serve::{StreamReply, StreamServer, StreamServerConfig, StreamSpec};
+pub use serve::{
+    DrainReport, FrameOutcome, StreamReply, StreamServer, StreamServerConfig,
+    StreamSpec,
+};
 pub use snn::{FrameStep, SpikingMlp, StreamRun, StreamStats};
 pub use source::{collect_frames, EncodedStream, EventStream, PoissonStream};

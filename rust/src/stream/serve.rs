@@ -1,4 +1,5 @@
-//! Streaming session server (DESIGN.md S18): `serve --backend stream`.
+//! Streaming session server (DESIGN.md S18, supervised since S21):
+//! `serve --backend stream`.
 //!
 //! Serving a temporal SNN differs from the one-shot `MacroServer` in
 //! one essential way: a request is not a vector, it is a *session* — an
@@ -31,21 +32,50 @@
 //! serving at session granularity — it can never race a frame on the
 //! worker's model, which is what makes the scrub-vs-serve bit-identity
 //! assertion in `rust/tests/stream_e2e.rs` possible.
+//!
+//! Supervision & overload control (DESIGN.md S21): the server is a
+//! *supervised* control plane over the blocking compute plane:
+//!
+//! * **Admission** — [`StreamServer::try_submit_frame`] claims a slot
+//!   in the session's per-worker bounded queue and returns
+//!   [`Admission::Shed`] (with a `retry_after` hint from the measured
+//!   service-time EWMA) when the queue is full, instead of growing an
+//!   unbounded backlog. Per-frame deadlines are checked at *dequeue*:
+//!   a stale frame is dropped-not-computed and its client gets
+//!   [`FrameOutcome::Shed`].
+//! * **Panic isolation** — each frame attempt runs under
+//!   `catch_unwind`. A panicking worker restores the session's
+//!   pre-frame membrane snapshot, reports to the [`Supervisor`], and —
+//!   while the restart budget lasts — rebuilds its replica from the
+//!   spec (fresh die + fault-state reseed, golden codes recaptured)
+//!   after an exponential backoff, then retries the frame once. Past
+//!   the budget the worker *degrades*: it sheds frames
+//!   ([`ShedReason::RestartBudget`]) but still drains session state.
+//! * **Graceful drain** — [`StreamServer::shutdown_within`] stops
+//!   admissions, lets queued frames finish until the deadline, sheds
+//!   the rest ([`ShedReason::Draining`]), quiesces the scrubber, and
+//!   returns a [`DrainReport`]. Every admitted frame gets exactly one
+//!   outcome — served or shed, never silently lost.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::{FabricConfig, LevelMap, MacroConfig, StreamConfig};
-use crate::coordinator::{Metrics, ScrubPolicy, Scrubber};
+use crate::coordinator::{
+    Admission, ChaosPlan, Metrics, RestartPolicy, ScrubPolicy, Scrubber,
+    ShedReason, StatusMsg, Supervisor, Verdict,
+};
 use crate::device::{FaultPlan, FaultState, ScrubOutcome, SotWriteParams};
 use crate::obs::{self, TraceKind};
 use crate::snn::dataset::Dataset;
 use crate::snn::mlp::Mlp;
+use crate::util::rng::Rng;
 
 use super::snn::SpikingMlp;
 
@@ -86,12 +116,65 @@ pub struct StreamReply {
     pub label: usize,
 }
 
+/// What became of one *admitted* frame. Exactly one of these arrives on
+/// the receiver returned by [`StreamServer::try_submit_frame`].
+#[derive(Debug, Clone)]
+pub enum FrameOutcome {
+    /// The frame was computed; the session advanced one timestep.
+    Served(StreamReply),
+    /// The frame was dropped-not-computed; the session did NOT advance.
+    Shed { session: u64, reason: ShedReason },
+}
+
+impl FrameOutcome {
+    /// The reply, if served.
+    pub fn served(self) -> Option<StreamReply> {
+        match self {
+            FrameOutcome::Served(r) => Some(r),
+            FrameOutcome::Shed { .. } => None,
+        }
+    }
+
+    /// Was the frame shed after admission?
+    pub fn is_shed(&self) -> bool {
+        matches!(self, FrameOutcome::Shed { .. })
+    }
+
+    /// Unwrap the served reply; panics if the frame was shed. For
+    /// callers (tests, sweeps below capacity) that treat shedding as a
+    /// bug rather than a load condition.
+    pub fn expect_served(self) -> StreamReply {
+        match self {
+            FrameOutcome::Served(r) => r,
+            FrameOutcome::Shed { session, reason } => panic!(
+                "frame for session {session} was shed ({reason:?}) — \
+                 handle FrameOutcome::Shed when serving near capacity"
+            ),
+        }
+    }
+}
+
+/// What a graceful drain accomplished (see
+/// [`StreamServer::shutdown_within`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DrainReport {
+    /// Wall time the full shutdown took (drain + join), ms.
+    pub drain_ms: f64,
+    /// Frames shed while draining (drain + deadline sheds).
+    pub shed: u64,
+    /// True when every admitted frame was served (nothing shed).
+    pub clean: bool,
+}
+
 enum StreamJob {
     Frame {
         session: u64,
         events: Vec<u32>,
         submitted: Instant,
-        reply: mpsc::Sender<StreamReply>,
+        /// Latest instant at which computing this frame is still
+        /// useful; checked at dequeue (dropped-not-computed).
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<FrameOutcome>,
     },
     Finish {
         session: u64,
@@ -118,6 +201,27 @@ pub struct StreamServerConfig {
     /// Fault-injection plan (DESIGN.md S19). `None` serves a pristine
     /// fabric; drift/scrub jobs are then no-ops.
     pub faults: Option<FaultPlan>,
+    /// Per-worker ingress queue capacity (frames). Admission beyond it
+    /// returns [`Admission::Shed`].
+    pub queue_cap: usize,
+    /// Per-frame service deadline, measured from admission. `None`
+    /// serves every admitted frame regardless of queueing delay.
+    pub deadline: Option<Duration>,
+    /// Restart budget and backoff for panicking workers.
+    pub restart: RestartPolicy,
+    /// Deterministic fault injection for the chaos tests: make workers
+    /// panic mid-frame. `None` in production.
+    pub chaos: Option<ChaosPlan>,
+    /// Worker `recv_timeout` tick: bounds how stale the windowed
+    /// metrics report and the drain-deadline check can get when a
+    /// session goes quiet.
+    pub idle_tick: Duration,
+    /// When set, worker 0 publishes a windowed [`Metrics`] delta
+    /// (readable via [`Metrics::last_window`]) roughly this often.
+    pub report_period: Option<Duration>,
+    /// Scrub knobs, including the queue-depth threshold that gates
+    /// background scrub ticks (idle stealing).
+    pub scrub: ScrubPolicy,
 }
 
 impl Default for StreamServerConfig {
@@ -125,6 +229,13 @@ impl Default for StreamServerConfig {
         StreamServerConfig {
             workers: 2,
             faults: None,
+            queue_cap: 1024,
+            deadline: None,
+            restart: RestartPolicy::standard(),
+            chaos: None,
+            idle_tick: Duration::from_millis(50),
+            report_period: None,
+            scrub: ScrubPolicy::standard(),
         }
     }
 }
@@ -147,6 +258,72 @@ struct SessionState {
     t: usize,
 }
 
+/// Control-plane state shared between the caller-side admission path
+/// and the worker loops.
+struct ServeShared {
+    /// Admitted-but-not-yet-dequeued frames, per worker. Incremented
+    /// at admission, decremented at dequeue — the queue-depth counter
+    /// that drives load shedding and the scrub gate.
+    depth: Vec<AtomicUsize>,
+    /// Cleared when a drain begins: new frames are refused upfront.
+    accepting: AtomicBool,
+    /// Wall deadline of an in-progress drain; frames dequeued after it
+    /// are shed ([`ShedReason::Draining`]).
+    drain_deadline: Mutex<Option<Instant>>,
+    /// EWMA of per-frame service time (f64 nanoseconds, stored as
+    /// bits) — the basis of the `retry_after` hint.
+    svc_ns: AtomicU64,
+}
+
+impl ServeShared {
+    fn total_depth(&self) -> usize {
+        self.depth.iter().map(|d| d.load(Ordering::Acquire)).sum()
+    }
+
+    /// Fold one measured frame-service time into the EWMA.
+    fn note_service(&self, ns: f64) {
+        let prev = f64::from_bits(self.svc_ns.load(Ordering::Relaxed));
+        let next = if prev == 0.0 { ns } else { prev * 0.9 + ns * 0.1 };
+        self.svc_ns.store(next.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Deploy one worker replica: fresh die from the spec, then (when a
+/// fault plan is active) golden snapshot + per-worker reseeded fault
+/// states. Worker *re*starts go through this same path — never through
+/// re-deploying faults onto the old die, whose gain variation is
+/// already applied (it would compound).
+fn deploy_worker(
+    spec: &StreamSpec,
+    faults: Option<FaultPlan>,
+    policy: ScrubPolicy,
+    w: usize,
+) -> Result<(SpikingMlp, Option<ReliabilityCtx>)> {
+    let mut mlp = spec.build()?;
+    let rel = faults.map(|plan| {
+        // Golden = intended codes, captured before any fault
+        // touches the arrays: scrub restores toward *this*.
+        let golden = mlp.snapshot_codes();
+        // Distinct per-worker seed: each replica is its own
+        // die and drifts independently.
+        let wplan = FaultPlan {
+            seed: plan.seed.wrapping_add(1 + w as u64),
+            ..plan
+        };
+        let mut states = mlp.fault_states(wplan);
+        mlp.deploy_faults(&mut states);
+        let n_macros = golden.iter().map(|s| s.len() as u64).sum::<u64>();
+        ReliabilityCtx {
+            golden,
+            states,
+            wp: SotWriteParams::default(),
+            policy,
+            n_macros,
+        }
+    });
+    Ok((mlp, rel))
+}
+
 /// A running streaming-SNN service.
 pub struct StreamServer {
     txs: Vec<mpsc::Sender<StreamJob>>,
@@ -154,6 +331,12 @@ pub struct StreamServer {
     handles: Vec<JoinHandle<()>>,
     next_session: AtomicU64,
     in_dim: usize,
+    shared: Arc<ServeShared>,
+    supervisor: Option<Supervisor>,
+    scrubber: Mutex<Option<Scrubber>>,
+    queue_cap: usize,
+    deadline: Option<Duration>,
+    scrub_policy: ScrubPolicy,
 }
 
 impl StreamServer {
@@ -166,50 +349,62 @@ impl StreamServer {
     ) -> Result<StreamServer> {
         assert!(scfg.workers >= 1, "at least one worker");
         let metrics = Arc::new(Metrics::new());
+        let shared = Arc::new(ServeShared {
+            depth: (0..scfg.workers).map(|_| AtomicUsize::new(0)).collect(),
+            accepting: AtomicBool::new(true),
+            drain_deadline: Mutex::new(None),
+            svc_ns: AtomicU64::new(0),
+        });
+        let (supervisor, status) =
+            Supervisor::start(scfg.workers, scfg.restart, metrics.clone());
         let mut txs = Vec::with_capacity(scfg.workers);
         let mut handles = Vec::with_capacity(scfg.workers);
         let mut in_dim = 0;
         for w in 0..scfg.workers {
-            let mut mlp = spec.build()?;
+            let (mlp, rel) = deploy_worker(&spec, scfg.faults, scfg.scrub, w)?;
             in_dim = mlp.in_dim();
-            let rel = scfg.faults.map(|plan| {
-                // Golden = intended codes, captured before any fault
-                // touches the arrays: scrub restores toward *this*.
-                let golden = mlp.snapshot_codes();
-                // Distinct per-worker seed: each replica is its own
-                // die and drifts independently.
-                let wplan = FaultPlan {
-                    seed: plan.seed.wrapping_add(1 + w as u64),
-                    ..plan
-                };
-                let mut states = mlp.fault_states(wplan);
-                mlp.deploy_faults(&mut states);
-                let n_macros =
-                    golden.iter().map(|s| s.len() as u64).sum::<u64>();
-                ReliabilityCtx {
-                    golden,
-                    states,
-                    wp: SotWriteParams::default(),
-                    policy: ScrubPolicy::standard(),
-                    n_macros,
-                }
-            });
             let (tx, rx) = mpsc::channel::<StreamJob>();
-            let m = metrics.clone();
+            let wk = Worker {
+                w,
+                mlp,
+                rel,
+                sessions: HashMap::new(),
+                degraded: false,
+                attempts_seen: 0,
+                chaos: scfg.chaos,
+                chaos_rng: scfg.chaos.map(|c| c.rng_for(w)),
+                spec: spec.clone(),
+                faults: scfg.faults,
+                scrub_policy: scfg.scrub,
+                shared: shared.clone(),
+                metrics: metrics.clone(),
+                status: status.clone(),
+            };
+            let (idle_tick, report_period) =
+                (scfg.idle_tick, scfg.report_period);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("spikemram-stream-{w}"))
-                    .spawn(move || worker_loop(mlp, rx, m, rel))
+                    .spawn(move || {
+                        worker_loop(wk, rx, idle_tick, report_period)
+                    })
                     .expect("spawn stream worker"),
             );
             txs.push(tx);
         }
+        drop(status); // workers hold the only status senders now
         Ok(StreamServer {
             txs,
             metrics,
             handles,
             next_session: AtomicU64::new(0),
             in_dim,
+            shared,
+            supervisor: Some(supervisor),
+            scrubber: Mutex::new(None),
+            queue_cap: scfg.queue_cap,
+            deadline: scfg.deadline,
+            scrub_policy: scfg.scrub,
         })
     }
 
@@ -220,21 +415,39 @@ impl StreamServer {
         self.next_session.fetch_add(1, Ordering::Relaxed)
     }
 
-    fn tx_for(&self, session: u64) -> &mpsc::Sender<StreamJob> {
-        &self.txs[(session as usize) % self.txs.len()]
+    fn worker_for(&self, session: u64) -> usize {
+        (session as usize) % self.txs.len()
     }
 
-    /// Submit one timestep frame (sorted active-row event list).
+    /// `retry_after` hint when shedding: roughly how long until
+    /// `queued` frames have drained at the measured service rate
+    /// (1 ms before any frame has been measured).
+    fn retry_after(&self, queued: usize) -> Duration {
+        let svc = f64::from_bits(self.shared.svc_ns.load(Ordering::Relaxed));
+        if svc > 0.0 {
+            Duration::from_nanos((svc * queued as f64).max(1_000.0) as u64)
+        } else {
+            Duration::from_millis(1)
+        }
+    }
+
+    /// Submit one timestep frame (sorted active-row event list) under
+    /// admission control.
     ///
     /// The frame is validated here, on the *caller's* thread — a
     /// malformed list must fail the offending caller, not panic a
     /// shared worker and take every session pinned to it down with
-    /// opaque disconnect errors.
-    pub fn submit_frame(
+    /// opaque disconnect errors. Validation happens before admission:
+    /// a malformed frame is a caller bug, not an overload signal.
+    ///
+    /// On [`Admission::Accepted`] the receiver yields exactly one
+    /// [`FrameOutcome`]; on [`Admission::Shed`] nothing was enqueued
+    /// and the session did not advance.
+    pub fn try_submit_frame(
         &self,
         session: u64,
         events: Vec<u32>,
-    ) -> mpsc::Receiver<StreamReply> {
+    ) -> Admission<mpsc::Receiver<FrameOutcome>> {
         let mut prev: i64 = -1;
         for &r in &events {
             assert!(
@@ -248,27 +461,63 @@ impl StreamServer {
             );
             prev = i64::from(r);
         }
+        let w = self.worker_for(session);
+        if !self.shared.accepting.load(Ordering::Acquire) {
+            self.metrics.record_shed(ShedReason::Draining);
+            return Admission::Shed {
+                retry_after: self.retry_after(1),
+            };
+        }
+        // Optimistic slot claim, undone on overflow; the worker
+        // decrements at dequeue.
+        let depth = self.shared.depth[w].fetch_add(1, Ordering::AcqRel);
+        if depth >= self.queue_cap {
+            self.shared.depth[w].fetch_sub(1, Ordering::AcqRel);
+            self.metrics.record_shed_queue();
+            obs::counter(TraceKind::AdmissionShed, w as u16, depth as f64);
+            return Admission::Shed {
+                retry_after: self.retry_after(depth + 1),
+            };
+        }
+        let deadline = self.deadline.map(|d| Instant::now() + d);
         let (rtx, rrx) = mpsc::channel();
-        self.tx_for(session)
+        self.txs[w]
             .send(StreamJob::Frame {
                 session,
                 events,
                 submitted: Instant::now(),
+                deadline,
                 reply: rtx,
             })
             .expect("workers alive");
-        rrx
+        Admission::Accepted(rrx)
     }
 
-    /// Submit and wait.
+    /// Submit one frame, treating admission shedding as a caller bug
+    /// (panics on [`Admission::Shed`] — use
+    /// [`try_submit_frame`](Self::try_submit_frame) near capacity).
+    pub fn submit_frame(
+        &self,
+        session: u64,
+        events: Vec<u32>,
+    ) -> mpsc::Receiver<FrameOutcome> {
+        self.try_submit_frame(session, events).expect_accepted()
+    }
+
+    /// Submit and wait; panics if the frame is shed at admission or
+    /// after dequeue.
     pub fn frame(&self, session: u64, events: Vec<u32>) -> StreamReply {
-        self.submit_frame(session, events).recv().expect("reply")
+        self.submit_frame(session, events)
+            .recv()
+            .expect("reply")
+            .expect_served()
     }
 
     /// Close a session: returns its final reply and drops its state.
+    /// Works on degraded workers too (drain-only mode).
     pub fn finish(&self, session: u64) -> StreamReply {
         let (rtx, rrx) = mpsc::channel();
-        self.tx_for(session)
+        self.txs[self.worker_for(session)]
             .send(StreamJob::Finish {
                 session,
                 reply: rtx,
@@ -316,76 +565,343 @@ impl StreamServer {
         out
     }
 
-    /// Start a background scrubber ticking every `period` of wall
-    /// time. Each tick enqueues one scrub job per worker; the jobs
-    /// drain through the same FIFOs as frames, so they interleave with
-    /// serving instead of racing it. Call [`Scrubber::stop`] before
-    /// [`shutdown`](StreamServer::shutdown).
-    pub fn start_scrubber(&self, period: Duration) -> Scrubber {
+    /// Start the background scrubber ticking every `period` of wall
+    /// time, owned by the server ([`shutdown`](Self::shutdown)
+    /// quiesces it). Each tick enqueues one scrub job per worker —
+    /// unless ingress queues are deeper than the policy's
+    /// `queue_depth_threshold`, in which case the tick is *skipped*
+    /// (idle stealing: scrub work yields to queued frames) and
+    /// counted via `Metrics::record_scrub_skip`.
+    pub fn start_scrubber(&self, period: Duration) {
         let txs = self.txs.clone();
-        Scrubber::start(period, move |_round| {
+        let shared = self.shared.clone();
+        let metrics = self.metrics.clone();
+        let policy = self.scrub_policy;
+        let s = Scrubber::start(period, move |_round| {
+            if policy.should_skip(shared.total_depth()) {
+                metrics.record_scrub_skip();
+                return;
+            }
             for tx in &txs {
                 let (rtx, _rrx) = mpsc::channel();
                 // Tolerate shutdown racing a tick: a closed channel
                 // just means there is nothing left to scrub.
                 let _ = tx.send(StreamJob::Scrub { reply: rtx });
             }
-        })
+        });
+        if let Some(old) = self.scrubber.lock().expect("scrubber").replace(s)
+        {
+            old.stop();
+        }
     }
 
-    /// Stop accepting work and join the workers.
-    pub fn shutdown(mut self) {
-        self.txs.clear(); // closes every channel; workers drain & exit
+    /// Quiesce the background scrubber (no-op when none is running).
+    /// Returns only after any in-flight tick has completed.
+    pub fn stop_scrubber(&self) {
+        if let Some(s) = self.scrubber.lock().expect("scrubber").take() {
+            s.stop();
+        }
+    }
+
+    /// Graceful drain: stop admissions immediately, let queued frames
+    /// finish until `deadline` of wall time has passed, shed whatever
+    /// remains ([`ShedReason::Draining`] — every admitted frame still
+    /// gets its outcome), quiesce the scrubber and supervisor, and
+    /// join the workers.
+    pub fn shutdown_within(mut self, deadline: Duration) -> DrainReport {
+        let t0 = Instant::now();
+        let before = self.metrics.snapshot();
+        self.shared.accepting.store(false, Ordering::Release);
+        *self.shared.drain_deadline.lock().expect("drain deadline") =
+            Some(t0 + deadline);
+        self.stop_scrubber();
+        while self.shared.total_depth() > 0 && t0.elapsed() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Closing the channels ends the worker loops once the queues
+        // are drained; frames dequeued past the drain deadline are
+        // shed, not computed.
+        self.txs.clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        // Workers held the only status senders; the supervisor loop
+        // has therefore exited and this join cannot block.
+        if let Some(s) = self.supervisor.take() {
+            s.join();
+        }
+        let after = self.metrics.snapshot();
+        let shed = (after.sheds_drain - before.sheds_drain)
+            + (after.sheds_deadline - before.sheds_deadline);
+        DrainReport {
+            drain_ms: t0.elapsed().as_secs_f64() * 1e3,
+            shed,
+            clean: shed == 0,
+        }
+    }
+
+    /// Drain with a generous deadline (the old hard-stop API; existing
+    /// callers may ignore the report).
+    pub fn shutdown(self) -> DrainReport {
+        self.shutdown_within(Duration::from_secs(60))
+    }
+}
+
+/// One worker's whole world: its replica, sessions, chaos state, and
+/// the handles it needs to rebuild itself.
+struct Worker {
+    w: usize,
+    mlp: SpikingMlp,
+    rel: Option<ReliabilityCtx>,
+    sessions: HashMap<u64, SessionState>,
+    /// Restart budget exhausted: shed frames, keep draining state.
+    degraded: bool,
+    /// Frame *attempts* (retries included) — the chaos clock.
+    attempts_seen: u64,
+    chaos: Option<ChaosPlan>,
+    chaos_rng: Option<Rng>,
+    spec: StreamSpec,
+    faults: Option<FaultPlan>,
+    scrub_policy: ScrubPolicy,
+    shared: Arc<ServeShared>,
+    metrics: Arc<Metrics>,
+    status: mpsc::Sender<StatusMsg>,
+}
+
+fn worker_loop(
+    mut wk: Worker,
+    rx: mpsc::Receiver<StreamJob>,
+    idle_tick: Duration,
+    report_period: Option<Duration>,
+) {
+    let mut window_prev = wk.metrics.snapshot();
+    let mut window_at = Instant::now();
+    loop {
+        match rx.recv_timeout(idle_tick) {
+            Ok(job) => wk.handle(job),
+            // The idle tick exists so the periodic work below runs
+            // even when every session goes quiet.
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        if wk.w == 0 {
+            if let Some(period) = report_period {
+                if window_at.elapsed() >= period {
+                    let cur = wk.metrics.snapshot();
+                    wk.metrics.store_window(cur.delta_since(&window_prev));
+                    window_prev = cur;
+                    window_at = Instant::now();
+                }
+            }
         }
     }
 }
 
-fn worker_loop(
-    mut mlp: SpikingMlp,
-    rx: mpsc::Receiver<StreamJob>,
-    metrics: Arc<Metrics>,
-    mut rel: Option<ReliabilityCtx>,
-) {
-    let mut sessions: HashMap<u64, SessionState> = HashMap::new();
-    while let Ok(job) = rx.recv() {
+impl Worker {
+    fn handle(&mut self, job: StreamJob) {
         match job {
             StreamJob::Frame {
                 session,
                 events,
                 submitted,
+                deadline,
                 reply,
-            } => {
-                // S20 span: dequeue → reply, payload = channel wait
-                // (µs) + this frame's macro row activations.
-                let mut span = obs::Span::begin(TraceKind::ServeFrame, 0);
-                let queue_wait_us = if span.active() {
-                    submitted.elapsed().as_secs_f64() * 1e6
-                } else {
-                    0.0
+            } => self.handle_frame(session, events, submitted, deadline, reply),
+            StreamJob::Finish { session, reply } => {
+                self.handle_finish(session, reply)
+            }
+            StreamJob::Drift { dt_ns, reply } => {
+                let flips = match self.rel.as_mut() {
+                    Some(ctx) => self.mlp.drift(&mut ctx.states, dt_ns),
+                    None => 0,
                 };
-                let sess = sessions.entry(session).or_insert_with(|| {
-                    SessionState {
-                        state: mlp.fresh_state(),
-                        t: 0,
+                self.metrics.record_fault_injection(flips, dt_ns);
+                let _ = reply.send(flips);
+            }
+            StreamJob::Scrub { reply } => {
+                // S20 span (stage 0 = in-worker scrub execution; the
+                // background tick records stage 1).
+                let mut span = obs::Span::begin(TraceKind::ScrubPass, 0);
+                let out = match self.rel.as_mut() {
+                    Some(ctx) => {
+                        let o = self.mlp.scrub(
+                            &mut ctx.states,
+                            &ctx.golden,
+                            &ctx.wp,
+                        );
+                        let busy = ctx.policy.scrub_duration_ns
+                            * ctx.n_macros as f64;
+                        self.metrics.record_scrub(
+                            o.mismatched as u64,
+                            o.repaired as u64,
+                            o.energy_fj,
+                            busy,
+                        );
+                        o
                     }
-                });
-                mlp.swap_state(&mut sess.state);
-                let step = mlp.step_frame(&events);
+                    None => ScrubOutcome::default(),
+                };
+                span.note(0.0, out.repaired as f64);
+                let _ = reply.send(out); // background ticks don't wait
+            }
+        }
+    }
+
+    fn shed(
+        &self,
+        session: u64,
+        reason: ShedReason,
+        reply: &mpsc::Sender<FrameOutcome>,
+    ) {
+        self.metrics.record_shed(reason);
+        let _ = reply.send(FrameOutcome::Shed { session, reason });
+    }
+
+    fn handle_frame(
+        &mut self,
+        session: u64,
+        events: Vec<u32>,
+        submitted: Instant,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<FrameOutcome>,
+    ) {
+        self.shared.depth[self.w].fetch_sub(1, Ordering::AcqRel);
+        // Dropped-not-computed gates, checked at dequeue: a frame that
+        // cannot be useful anymore must not burn array energy.
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            self.shed(session, ShedReason::DeadlineExpired, &reply);
+            return;
+        }
+        let draining = self
+            .shared
+            .drain_deadline
+            .lock()
+            .expect("drain deadline")
+            .is_some_and(|d| Instant::now() >= d);
+        if draining {
+            self.shed(session, ShedReason::Draining, &reply);
+            return;
+        }
+        if self.degraded {
+            self.shed(session, ShedReason::RestartBudget, &reply);
+            return;
+        }
+
+        // S20 span: dequeue → reply, payload = channel wait (µs) +
+        // this frame's macro row activations.
+        let mut span = obs::Span::begin(TraceKind::ServeFrame, 0);
+        let queue_wait_us = if span.active() {
+            submitted.elapsed().as_secs_f64() * 1e6
+        } else {
+            0.0
+        };
+        // The session is taken OUT of the map for the duration: on a
+        // panic its membranes are stuck inside the poisoned model, so
+        // recovery re-seeds from this pre-frame snapshot.
+        let mut sess =
+            self.sessions.remove(&session).unwrap_or_else(|| SessionState {
+                state: self.mlp.fresh_state(),
+                t: 0,
+            });
+        let pre = sess.state.clone();
+        let mut tries = 0u32;
+        let mut t_attempt;
+        let served = loop {
+            tries += 1;
+            self.attempts_seen += 1;
+            let fire = match (self.chaos.as_ref(), self.chaos_rng.as_mut()) {
+                (Some(c), Some(rng)) => c.fires(self.attempts_seen, rng),
+                _ => false,
+            };
+            self.mlp.swap_state(&mut sess.state);
+            t_attempt = Instant::now();
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                if fire {
+                    panic!("chaos: injected worker fault");
+                }
+                self.mlp.step_frame(&events)
+            }));
+            match res {
+                Ok(step) => break Some(step),
+                Err(_) => {
+                    // Panic isolation (DESIGN.md S21): restore the
+                    // session from its pre-frame snapshot, report, and
+                    // follow the supervisor's verdict.
+                    sess.state = pre.clone();
+                    self.metrics.record_worker_panic();
+                    let (vtx, vrx) = mpsc::channel();
+                    let verdict = self
+                        .status
+                        .send(StatusMsg {
+                            worker: self.w,
+                            reply: vtx,
+                        })
+                        .ok()
+                        .and_then(|()| vrx.recv().ok());
+                    match verdict {
+                        Some(Verdict::Restart { attempt, backoff }) => {
+                            std::thread::sleep(backoff);
+                            match deploy_worker(
+                                &self.spec,
+                                self.faults,
+                                self.scrub_policy,
+                                self.w,
+                            ) {
+                                Ok((m, r)) => {
+                                    self.mlp = m;
+                                    self.rel = r;
+                                    self.metrics.record_restart();
+                                    let mut sp = obs::Span::begin(
+                                        TraceKind::WorkerRestart,
+                                        self.w as u16,
+                                    );
+                                    sp.note(
+                                        attempt as f64,
+                                        backoff.as_secs_f64() * 1e3,
+                                    );
+                                    if tries >= 2 {
+                                        // Already retried once: the
+                                        // replica is healthy again but
+                                        // this frame is shed, not
+                                        // looped on forever.
+                                        break None;
+                                    }
+                                    // retry the frame on the fresh
+                                    // replica
+                                }
+                                Err(_) => {
+                                    // Cannot rebuild: degrade in place.
+                                    self.degraded = true;
+                                    break None;
+                                }
+                            }
+                        }
+                        Some(Verdict::Degrade) | None => {
+                            self.degraded = true;
+                            break None;
+                        }
+                    }
+                }
+            }
+        };
+        match served {
+            Some(step) => {
                 sess.t += 1;
                 let out = StreamReply {
                     session,
                     t: sess.t,
-                    out_v: mlp.out_membranes().to_vec(),
-                    label: mlp.label(),
+                    out_v: self.mlp.out_membranes().to_vec(),
+                    label: self.mlp.label(),
                 };
-                mlp.swap_state(&mut sess.state);
-                metrics.record_batch(1, step.macs);
-                metrics.record_activity(step.active_rows, step.row_slots);
-                metrics.record_energy(step.energy.total_fj());
-                metrics.record_noc(step.noc_packets, step.noc_hops);
-                metrics
+                self.mlp.swap_state(&mut sess.state);
+                self.shared
+                    .note_service(t_attempt.elapsed().as_nanos() as f64);
+                self.metrics.record_batch(1, step.macs);
+                self.metrics
+                    .record_activity(step.active_rows, step.row_slots);
+                self.metrics.record_energy(step.energy.total_fj());
+                self.metrics.record_noc(step.noc_packets, step.noc_hops);
+                self.metrics
                     .record_request(submitted.elapsed().as_secs_f64() * 1e6);
                 span.note(queue_wait_us, step.active_rows as f64);
                 // Per-frame telemetry series (each gated on its own
@@ -403,62 +919,38 @@ fn worker_loop(
                         step.energy.total_fj(),
                     );
                 }
-                let _ = reply.send(out); // receiver may have gone away
+                let _ = reply.send(FrameOutcome::Served(out));
             }
-            StreamJob::Finish { session, reply } => {
-                let out = match sessions.remove(&session) {
-                    Some(mut sess) => {
-                        mlp.swap_state(&mut sess.state);
-                        let r = StreamReply {
-                            session,
-                            t: sess.t,
-                            out_v: mlp.out_membranes().to_vec(),
-                            label: mlp.label(),
-                        };
-                        mlp.swap_state(&mut sess.state);
-                        r
-                    }
-                    None => StreamReply {
-                        session,
-                        t: 0,
-                        out_v: vec![0.0; mlp.out_dim()],
-                        label: 0,
-                    },
-                };
-                let _ = reply.send(out);
-            }
-            StreamJob::Drift { dt_ns, reply } => {
-                let flips = match rel.as_mut() {
-                    Some(ctx) => mlp.drift(&mut ctx.states, dt_ns),
-                    None => 0,
-                };
-                metrics.record_fault_injection(flips, dt_ns);
-                let _ = reply.send(flips);
-            }
-            StreamJob::Scrub { reply } => {
-                // S20 span (stage 0 = in-worker scrub execution; the
-                // background tick records stage 1).
-                let mut span = obs::Span::begin(TraceKind::ScrubPass, 0);
-                let out = match rel.as_mut() {
-                    Some(ctx) => {
-                        let o =
-                            mlp.scrub(&mut ctx.states, &ctx.golden, &ctx.wp);
-                        let busy = ctx.policy.scrub_duration_ns
-                            * ctx.n_macros as f64;
-                        metrics.record_scrub(
-                            o.mismatched as u64,
-                            o.repaired as u64,
-                            o.energy_fj,
-                            busy,
-                        );
-                        o
-                    }
-                    None => ScrubOutcome::default(),
-                };
-                span.note(0.0, out.repaired as f64);
-                let _ = reply.send(out); // background ticks don't wait
+            None => {
+                // The session did not advance; the pre-frame snapshot
+                // is back in `sess`.
+                self.shed(session, ShedReason::RestartBudget, &reply);
             }
         }
+        self.sessions.insert(session, sess);
+    }
+
+    fn handle_finish(&mut self, session: u64, reply: mpsc::Sender<StreamReply>) {
+        let out = match self.sessions.remove(&session) {
+            Some(mut sess) => {
+                self.mlp.swap_state(&mut sess.state);
+                let r = StreamReply {
+                    session,
+                    t: sess.t,
+                    out_v: self.mlp.out_membranes().to_vec(),
+                    label: self.mlp.label(),
+                };
+                self.mlp.swap_state(&mut sess.state);
+                r
+            }
+            None => StreamReply {
+                session,
+                t: 0,
+                out_v: vec![0.0; self.mlp.out_dim()],
+                label: 0,
+            },
+        };
+        let _ = reply.send(out);
     }
 }
 
@@ -572,6 +1064,7 @@ mod tests {
             StreamServerConfig {
                 workers: 2,
                 faults: Some(plan),
+                ..StreamServerConfig::default()
             },
         )
         .unwrap();
@@ -612,5 +1105,190 @@ mod tests {
             .err()
             .expect("placement must fail");
         assert!(err.to_string().contains("exceed"), "{err}");
+    }
+
+    #[test]
+    fn admission_control_sheds_when_the_queue_is_full() {
+        // queue_cap 0: the bounded queue can hold nothing, so every
+        // submission is deterministically shed at admission.
+        let server = StreamServer::start(
+            spec(83),
+            StreamServerConfig {
+                workers: 1,
+                queue_cap: 0,
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let id = server.open_session();
+        for _ in 0..4 {
+            match server.try_submit_frame(id, vec![0, 3]) {
+                Admission::Shed { retry_after } => {
+                    assert!(retry_after > Duration::ZERO);
+                }
+                Admission::Accepted(_) => panic!("cap-0 queue accepted"),
+            }
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.sheds_queue, 4);
+        assert_eq!(snap.requests, 0, "nothing was computed");
+        assert_eq!(snap.sheds_total(), 4);
+        assert!((snap.shed_rate() - 1.0).abs() < 1e-12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadlines_drop_frames_without_computing() {
+        // A zero deadline has always expired by dequeue time: every
+        // admitted frame is shed DeadlineExpired and no array energy
+        // is spent.
+        let server = StreamServer::start(
+            spec(85),
+            StreamServerConfig {
+                workers: 1,
+                deadline: Some(Duration::ZERO),
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let id = server.open_session();
+        for _ in 0..3 {
+            let rx = server.submit_frame(id, vec![1, 2]);
+            match rx.recv().expect("outcome") {
+                FrameOutcome::Shed { session, reason } => {
+                    assert_eq!(session, id);
+                    assert_eq!(reason, ShedReason::DeadlineExpired);
+                }
+                FrameOutcome::Served(_) => {
+                    panic!("zero-deadline frame computed")
+                }
+            }
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.sheds_deadline, 3);
+        assert_eq!(snap.requests, 0, "dropped-not-computed");
+        assert_eq!(snap.batches, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn injected_panic_restarts_the_worker_and_stays_bitwise() {
+        let sp = spec(91);
+        let mut serial = sp.build().unwrap();
+        let enc = FrameEncoder::new(TemporalCode::Rate, 4, 255);
+        let data = Dataset::generate(4, 93);
+        let frames = enc.encode_frames(&data.features_u8(0));
+        let want = serial.run(&frames);
+
+        let server = StreamServer::start(
+            sp,
+            StreamServerConfig {
+                workers: 1,
+                chaos: Some(ChaosPlan::every(3)),
+                restart: RestartPolicy {
+                    max_restarts: 100,
+                    backoff: Duration::from_millis(1),
+                    backoff_max: Duration::from_millis(2),
+                },
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let id = server.open_session();
+        for f in &frames {
+            // every-mode retries converge: every frame is served.
+            server.frame(id, f.clone());
+        }
+        let got = server.finish(id);
+        assert_eq!(got.out_v, want.out_v, "recovered replica must be exact");
+        assert_eq!(got.label, want.label);
+        let snap = server.metrics.snapshot();
+        assert!(snap.worker_panics >= 1, "chaos must have fired");
+        assert_eq!(
+            snap.worker_panics, snap.restarts,
+            "every panic earned a restart within budget"
+        );
+        assert_eq!(snap.requests, frames.len() as u64);
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_ticks_publish_windowed_reports() {
+        let server = StreamServer::start(
+            spec(95),
+            StreamServerConfig {
+                workers: 1,
+                idle_tick: Duration::from_millis(2),
+                report_period: Some(Duration::from_millis(5)),
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let id = server.open_session();
+        server.frame(id, vec![0, 1]);
+        // No further traffic: only the recv_timeout idle tick can give
+        // the worker a chance to publish the window.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while server.metrics.last_window().is_none() {
+            assert!(Instant::now() < deadline, "window never published");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn drain_is_clean_when_queues_are_empty() {
+        let server = StreamServer::start(
+            spec(97),
+            StreamServerConfig {
+                workers: 2,
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let id = server.open_session();
+        for _ in 0..3 {
+            server.frame(id, vec![2, 5]);
+        }
+        let rep = server.shutdown_within(Duration::from_secs(5));
+        assert!(rep.clean, "no queued work, drain must be clean");
+        assert_eq!(rep.shed, 0);
+        assert!(rep.drain_ms >= 0.0);
+    }
+
+    #[test]
+    fn drain_accounts_every_admitted_frame() {
+        let server = StreamServer::start(
+            spec(99),
+            StreamServerConfig {
+                workers: 1,
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let id = server.open_session();
+        let rxs: Vec<_> = (0..16)
+            .map(|_| server.submit_frame(id, vec![0, 7]))
+            .collect();
+        // Zero-deadline drain: whatever is still queued is shed, but
+        // every admitted frame must still get exactly one outcome.
+        let rep = server.shutdown_within(Duration::ZERO);
+        let mut served = 0u64;
+        let mut shed = 0u64;
+        for rx in rxs {
+            match rx.recv().expect("every admitted frame answers") {
+                FrameOutcome::Served(_) => served += 1,
+                FrameOutcome::Shed { reason, .. } => {
+                    assert_eq!(reason, ShedReason::Draining);
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!(served + shed, 16, "no frame lost, none double-counted");
+        assert_eq!(rep.shed, shed, "drain report matches client view");
+        assert_eq!(rep.clean, shed == 0);
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, served);
+        assert_eq!(snap.sheds_drain, shed);
     }
 }

@@ -55,11 +55,22 @@ static POOL: OnceLock<Pool> = OnceLock::new();
 static QUEUE_DEPTH: AtomicUsize = AtomicUsize::new(0);
 /// High-water mark of `QUEUE_DEPTH` since process start.
 static QUEUE_HW: AtomicUsize = AtomicUsize::new(0);
+/// Detached tasks whose panic was caught on a pool worker (S21
+/// supervision satellite): the worker thread survives — panics here
+/// must never shrink the shared pool — and this counter makes the
+/// event observable instead of a lone stderr line.
+static POOL_PANICS: AtomicUsize = AtomicUsize::new(0);
 
 /// Deepest the pool channel has ever been (S20 gauge; feed it to
 /// `Metrics::record_pool_queue_depth`).
 pub fn queue_high_water() -> usize {
     QUEUE_HW.load(Ordering::Relaxed)
+}
+
+/// Detached `spawn` tasks that panicked since process start (S21
+/// gauge; feed it to `Metrics::record_pool_panics`).
+pub fn panics() -> u64 {
+    POOL_PANICS.load(Ordering::Relaxed) as u64
 }
 
 /// The one enqueue path: counts depth + high-water, samples the
@@ -97,6 +108,11 @@ fn pool() -> &'static Pool {
                                 // Scoped jobs catch their own panics and
                                 // re-raise on the caller; anything that
                                 // reaches here is a detached task's bug.
+                                // Count it (S21 pool_panics gauge) and
+                                // keep this worker alive — a panicking
+                                // spawn must never shrink the pool.
+                                POOL_PANICS
+                                    .fetch_add(1, Ordering::Relaxed);
                                 eprintln!(
                                     "spikemram pool: detached task panicked"
                                 );
@@ -373,6 +389,36 @@ mod tests {
         assert_eq!(
             rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
             42
+        );
+    }
+
+    #[test]
+    fn detached_panic_is_counted_and_the_pool_survives() {
+        // S21 regression: a panicking detached task must neither kill
+        // its worker nor vanish silently — the pool keeps serving and
+        // the pool_panics gauge moves.
+        let before = panics();
+        let (ptx, prx) = mpsc::channel();
+        spawn(move || {
+            ptx.send(()).unwrap();
+            panic!("detached task exploded (intentional)");
+        });
+        prx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        // Wait for the catch_unwind branch to account the panic.
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        while panics() <= before {
+            assert!(Instant::now() < deadline, "pool panic never counted");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // Every worker still serves: a full-width scope completes.
+        let n = workers().max(2);
+        let got = scope_map((0..n * 4).collect::<Vec<_>>(), |i| i + 1);
+        assert_eq!(got, (1..=n * 4).collect::<Vec<_>>());
+        let (tx, rx) = mpsc::channel();
+        spawn(move || tx.send(7).unwrap());
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            7
         );
     }
 }

@@ -101,6 +101,7 @@ fn scrub_policy_rates_are_well_formed_across_a_seeded_sweep() {
                 p_target: 10f64.powf(-12.0 + 11.0 * rng.f64()),
                 scrub_duration_ns: 1e3 + 1e6 * rng.f64(),
                 scrub_energy_fj: 1e3 + 1e7 * rng.f64(),
+                ..ScrubPolicy::standard()
             };
             let duty = pol.duty_cycle(&ret);
             assert!(

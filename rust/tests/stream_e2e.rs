@@ -193,6 +193,7 @@ fn background_scrubber_interleaves_with_serving_without_races() {
         StreamServerConfig {
             workers: 2,
             faults: Some(plan),
+            ..StreamServerConfig::default()
         },
     )
     .unwrap();
@@ -206,8 +207,9 @@ fn background_scrubber_interleaves_with_serving_without_races() {
 
     // Background scrubber ticking fast: every tick enqueues scrub jobs
     // into the same FIFOs the frames flow through, so scrubs and
-    // frames genuinely interleave at the workers while we stream.
-    let scrubber = server.start_scrubber(Duration::from_millis(1));
+    // frames genuinely interleave at the workers while we stream. The
+    // scrubber is owned by the server since S21.
+    server.start_scrubber(Duration::from_millis(1));
 
     let data = Dataset::generate(4, 54);
     let enc = FrameEncoder::new(TemporalCode::Rate, 6, 255);
@@ -227,8 +229,8 @@ fn background_scrubber_interleaves_with_serving_without_races() {
         assert_eq!(got.label, want.label);
     }
 
-    // Quiesce: stop() returns only after the tick loop has exited.
-    scrubber.stop();
+    // Quiesce: stop_scrubber() returns only after the tick loop exited.
+    server.stop_scrubber();
     server.scrub_now(); // drain-barrier: all queued scrubs are done
     let snap = server.metrics.snapshot();
     assert!(snap.flips_repaired >= snap.flips_injected, "{snap:?}");

@@ -1,0 +1,222 @@
+//! Supervised serving control plane (DESIGN.md S21) — chaos soak.
+//!
+//! Injects worker panics mid-frame through the deterministic
+//! [`ChaosPlan`] hook and pins the S21 acceptance bars end-to-end:
+//!
+//! * **Panic isolation + bitwise recovery** — with a generous restart
+//!   budget, every frame is eventually served and every session's
+//!   outputs are bitwise equal to the serial single-threaded reference:
+//!   session membranes survive the crash (pre-frame snapshot), and the
+//!   restarted worker resumes from a fresh pristine replica built from
+//!   the golden spec, never the poisoned die.
+//! * **Accounting closure under random chaos** — every admitted frame
+//!   resolves to exactly one outcome: served + shed == submitted, no
+//!   frame both shed and served, none silently lost; the server's own
+//!   metrics agree with the client-side tallies.
+//! * **Graceful degradation** — once the restart budget is exhausted
+//!   the worker degrades: later frames are shed with
+//!   [`ShedReason::RestartBudget`] (never a hang, never a crash of the
+//!   caller), sessions still drain through `finish`, and the degraded
+//!   gauge is raised.
+
+use std::time::Duration;
+
+use spikemram::config::{
+    FabricConfig, LevelMap, MacroConfig, StreamConfig,
+};
+use spikemram::coordinator::{ChaosPlan, RestartPolicy, ShedReason};
+use spikemram::snn::{Dataset, Mlp};
+use spikemram::stream::{
+    FrameEncoder, FrameOutcome, StreamServer, StreamServerConfig, StreamSpec,
+    TemporalCode,
+};
+
+fn spec(seed: u64) -> StreamSpec {
+    StreamSpec {
+        model: Mlp::new(seed),
+        calib: Dataset::generate(24, seed ^ 0x9),
+        mcfg: MacroConfig::default(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig::default(),
+    }
+}
+
+/// A cheap restart loop: the "die swap" is a rebuild, so keep the
+/// backoff at the floor and the budget effectively unlimited.
+fn generous() -> RestartPolicy {
+    RestartPolicy {
+        max_restarts: 100,
+        backoff: Duration::from_millis(1),
+        backoff_max: Duration::from_millis(2),
+    }
+}
+
+#[test]
+fn chaos_soak_untouched_sessions_stay_bitwise_identical() {
+    // 8 sticky sessions across 2 workers, deterministic panics every
+    // 7th frame attempt per worker. Sessions that never saw a panic
+    // AND sessions whose frames were retried across a restart must
+    // both land bitwise on the serial reference — the membrane
+    // snapshot plus golden-spec rebuild leaves no trace of the crash.
+    let sp = spec(61);
+    let mut serial = sp.build().expect("2x2 mesh holds the digit MLP");
+    let server = StreamServer::start(
+        sp,
+        StreamServerConfig {
+            workers: 2,
+            chaos: Some(ChaosPlan::every(7)),
+            restart: generous(),
+            ..StreamServerConfig::default()
+        },
+    )
+    .expect("server starts");
+
+    let data = Dataset::generate(8, 62);
+    let enc = FrameEncoder::new(TemporalCode::Rate, 6, 255);
+    let frames: Vec<Vec<Vec<u32>>> = (0..8)
+        .map(|i| enc.encode_frames(&data.features_u8(i)))
+        .collect();
+    let ids: Vec<u64> = (0..8).map(|_| server.open_session()).collect();
+    for t in 0..6 {
+        for (s, &id) in ids.iter().enumerate() {
+            // Within budget, every-mode retries converge: the frame is
+            // served (a shed here would panic the expect_served path).
+            server.frame(id, frames[s][t].clone());
+        }
+    }
+    for (s, &id) in ids.iter().enumerate() {
+        let want = serial.run(&frames[s]);
+        let got = server.finish(id);
+        assert_eq!(got.out_v, want.out_v, "session {s} membranes");
+        assert_eq!(got.label, want.label, "session {s} label");
+    }
+    let snap = server.metrics.snapshot();
+    assert!(snap.worker_panics >= 2, "chaos must have fired: {snap:?}");
+    assert_eq!(
+        snap.worker_panics, snap.restarts,
+        "every panic earned a restart within the generous budget"
+    );
+    assert_eq!(snap.requests, 48, "all 8x6 frames served");
+    assert_eq!(snap.sheds_total(), 0, "nothing shed within budget");
+    assert_eq!(snap.degraded_workers, 0);
+    let rep = server.shutdown();
+    assert!(rep.clean, "no in-flight frames at shutdown");
+}
+
+#[test]
+fn random_chaos_resolves_every_frame_exactly_once() {
+    // Probabilistic chaos (~5 % of attempts) with a modest budget:
+    // some frames are served after restarts, some are shed when a
+    // worker degrades. The invariant is accounting closure — exactly
+    // one outcome per submitted frame, client and server tallies agree.
+    let server = StreamServer::start(
+        spec(71),
+        StreamServerConfig {
+            workers: 2,
+            chaos: Some(ChaosPlan::rate(0.05, 72)),
+            restart: RestartPolicy {
+                max_restarts: 4,
+                ..generous()
+            },
+            ..StreamServerConfig::default()
+        },
+    )
+    .expect("server starts");
+
+    let data = Dataset::generate(8, 73);
+    let enc = FrameEncoder::new(TemporalCode::Rate, 25, 255);
+    let frames: Vec<Vec<Vec<u32>>> = (0..8)
+        .map(|i| enc.encode_frames(&data.features_u8(i)))
+        .collect();
+    let ids: Vec<u64> = (0..8).map(|_| server.open_session()).collect();
+
+    let mut submitted = 0u64;
+    let mut rxs = Vec::new();
+    for t in 0..25 {
+        for (s, &id) in ids.iter().enumerate() {
+            submitted += 1;
+            rxs.push(server.submit_frame(id, frames[s][t].clone()));
+        }
+    }
+    let (mut served, mut shed) = (0u64, 0u64);
+    for rx in rxs {
+        // Exactly one outcome per admitted frame; a second recv would
+        // block forever, a lost frame would fail the recv.
+        match rx.recv().expect("every admitted frame gets an outcome") {
+            FrameOutcome::Served(_) => served += 1,
+            FrameOutcome::Shed { reason, .. } => {
+                assert_eq!(
+                    reason,
+                    ShedReason::RestartBudget,
+                    "no deadline, no drain: only budget sheds possible"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(served + shed, submitted, "no frame lost or double-counted");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, served, "server served tally agrees");
+    assert_eq!(snap.sheds_restart, shed, "server shed tally agrees");
+    assert!(snap.worker_panics >= 1, "rate chaos fired: {snap:?}");
+    assert!(
+        snap.restarts <= snap.worker_panics,
+        "restarts only ever follow panics"
+    );
+    // Sessions always drain, even off degraded workers.
+    for &id in &ids {
+        let r = server.finish(id);
+        assert!(!r.out_v.is_empty());
+    }
+    server.shutdown();
+}
+
+#[test]
+fn exhausted_restart_budget_degrades_worker_not_process() {
+    // Panic every 2nd attempt with a budget of 1: the single worker
+    // serves, restarts once, then degrades. From then on frames are
+    // shed with RestartBudget — the caller never hangs, the process
+    // never dies, and the session still finishes.
+    let server = StreamServer::start(
+        spec(81),
+        StreamServerConfig {
+            workers: 1,
+            chaos: Some(ChaosPlan::every(2)),
+            restart: RestartPolicy {
+                max_restarts: 1,
+                ..generous()
+            },
+            ..StreamServerConfig::default()
+        },
+    )
+    .expect("server starts");
+    let id = server.open_session();
+    let (mut served, mut shed) = (0u64, 0u64);
+    for _ in 0..10 {
+        match server
+            .submit_frame(id, vec![0, 3, 5])
+            .recv()
+            .expect("outcome")
+        {
+            FrameOutcome::Served(_) => served += 1,
+            FrameOutcome::Shed { reason, session } => {
+                assert_eq!(reason, ShedReason::RestartBudget);
+                assert_eq!(session, id);
+                shed += 1;
+            }
+        }
+    }
+    assert!(served >= 1, "the worker served before degrading");
+    assert!(shed >= 1, "the exhausted budget must shed");
+    assert_eq!(served + shed, 10);
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.degraded_workers, 1, "degrade gauge raised: {snap:?}");
+    assert_eq!(snap.restarts, 1, "budget allowed exactly one restart");
+    assert!(snap.worker_panics >= 2, "panic before and after the restart");
+    assert_eq!(snap.sheds_restart, shed);
+    // Drain-only mode: the session's state is still reachable.
+    let r = server.finish(id);
+    assert!(!r.out_v.is_empty());
+    server.shutdown();
+}
