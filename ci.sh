@@ -84,6 +84,14 @@ echo "==> EX5 overload smoke sweep (S21 serving control plane)"
 cargo run --release --quiet -- overload --seed 7 --frames 96
 ls -l results/ex5_overload.csv BENCH_overload.json
 
+echo "==> EX6 endurance smoke sweep (S22 mission-clock runtime)"
+# A small three-arm mission sweep through the release binary: the mission
+# clock drives drift/scrub/recalibrate with no manual fault calls, plus
+# the wear-ceiling degrade demo. Hard-fails if the CSV or the
+# machine-readable record does not land.
+cargo run --release --quiet -- endurance --seed 7 --train 60 --test 10 --epochs 2
+ls -l results/ex6_endurance.csv BENCH_endurance.json
+
 echo "==> S21 chaos soak (panic isolation, restart, accounting closure)"
 # Re-runs the supervision chaos tests under the release-profile lib on
 # top of their tier-1 (dev-profile) run: injected panics, bitwise

@@ -55,6 +55,15 @@ struct Inner {
     scrub_energy_fj: f64,
     scrub_busy_ns: f64,
     sim_time_ns: f64,
+    // --- endurance runtime (S22) ---
+    recalibrations: u64,
+    /// Largest relative λ shift of the most recent recalibration
+    /// (gauge: the adaptive controller's evidence signal).
+    recal_lambda_shift: f64,
+    /// Per-worker die write-pulse ledger (gauge, indexed by worker).
+    wear_pulses: Vec<u64>,
+    /// Per-worker wear fraction of rated cycles (gauge, 0..=1).
+    wear_fraction: Vec<f64>,
     // --- observability (S20) ---
     /// Per-span-kind duration histograms (µs), fed by `absorb_trace`.
     span_durs: BTreeMap<&'static str, Histogram>,
@@ -146,6 +155,16 @@ pub struct MetricsSnapshot {
     pub scrub_busy_ns: f64,
     /// Simulated uptime advanced by drift injection (ns).
     pub sim_time_ns: f64,
+    /// Online λ recalibrations completed (S22 endurance runtime).
+    pub recalibrations: u64,
+    /// Largest relative λ shift of the most recent recalibration
+    /// (gauge; the adaptive scrub-vs-recalibrate evidence signal).
+    pub recal_lambda_shift: f64,
+    /// Per-worker die write-pulse ledger (gauge, indexed by worker;
+    /// survives worker restarts — same physical die).
+    pub wear_pulses: Vec<u64>,
+    /// Per-worker wear fraction of rated cycles (gauge, 0..=1).
+    pub wear_fraction: Vec<f64>,
     /// Per-stage span duration digests from absorbed traces (S20),
     /// sorted by kind name; empty when no trace was absorbed.
     pub spans: Vec<SpanStat>,
@@ -226,6 +245,12 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Worst per-worker wear fraction (0 before any worker published
+    /// its ledger) — the number the wear-budget SLO alarms on.
+    pub fn wear_max(&self) -> f64 {
+        self.wear_fraction.iter().copied().fold(0.0, f64::max)
+    }
+
     /// Fraction of simulated uptime spent scrubbing, clamped to [0, 1]
     /// (an aggressive wall-clock scrubber can overlap serving, so the
     /// raw ratio may exceed 1; 0 before any drift is injected).
@@ -276,6 +301,9 @@ impl MetricsSnapshot {
             scrub_busy_ns: (self.scrub_busy_ns - prev.scrub_busy_ns)
                 .max(0.0),
             sim_time_ns: (self.sim_time_ns - prev.sim_time_ns).max(0.0),
+            recalibrations: self
+                .recalibrations
+                .saturating_sub(prev.recalibrations),
             trace_events: self.trace_events.saturating_sub(prev.trace_events),
             trace_dropped: self
                 .trace_dropped
@@ -298,6 +326,9 @@ impl MetricsSnapshot {
             // Cumulative distributions and gauges: latest view.
             degraded_workers: self.degraded_workers,
             pool_panics: self.pool_panics,
+            recal_lambda_shift: self.recal_lambda_shift,
+            wear_pulses: self.wear_pulses.clone(),
+            wear_fraction: self.wear_fraction.clone(),
             latency_mean_us: self.latency_mean_us,
             latency_p50_us: self.latency_p50_us,
             latency_p95_us: self.latency_p95_us,
@@ -387,6 +418,39 @@ impl MetricsSnapshot {
                         "scrub_duty_cycle",
                         Json::Num(self.scrub_duty_cycle()),
                     ),
+                ]),
+            ),
+            (
+                "endurance",
+                json::obj(vec![
+                    (
+                        "recalibrations",
+                        Json::Num(self.recalibrations as f64),
+                    ),
+                    (
+                        "recal_lambda_shift",
+                        Json::Num(self.recal_lambda_shift),
+                    ),
+                    (
+                        "wear_pulses",
+                        Json::Arr(
+                            self.wear_pulses
+                                .iter()
+                                .map(|&p| Json::Num(p as f64))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "wear_fraction",
+                        Json::Arr(
+                            self.wear_fraction
+                                .iter()
+                                .copied()
+                                .map(Json::Num)
+                                .collect(),
+                        ),
+                    ),
+                    ("wear_max", Json::Num(self.wear_max())),
                 ]),
             ),
             (
@@ -505,6 +569,17 @@ impl MetricsSnapshot {
                 nest("reliability", "scrub_energy_fj") / 1e3
             ));
         }
+        if nest("endurance", "recalibrations") > 0.0
+            || nest("endurance", "wear_max") > 0.0
+        {
+            out.push_str(&format!(
+                "\nendurance: recals={} last_shift={:.2} % \
+                 wear_max={:.4} %",
+                nest("endurance", "recalibrations") as u64,
+                nest("endurance", "recal_lambda_shift") * 100.0,
+                nest("endurance", "wear_max") * 100.0
+            ));
+        }
         if nest("supervision", "worker_panics") > 0.0
             || nest("supervision", "restarts") > 0.0
             || nest("supervision", "sheds_total") > 0.0
@@ -594,6 +669,10 @@ impl Metrics {
                 scrub_energy_fj: 0.0,
                 scrub_busy_ns: 0.0,
                 sim_time_ns: 0.0,
+                recalibrations: 0,
+                recal_lambda_shift: 0.0,
+                wear_pulses: Vec::new(),
+                wear_fraction: Vec::new(),
                 span_durs: BTreeMap::new(),
                 pool_queue_hw: 0,
                 trace_events: 0,
@@ -720,6 +799,28 @@ impl Metrics {
         g.energy_fj += energy_fj;
     }
 
+    /// Account one online λ recalibration (S22 endurance runtime):
+    /// `shift` is the largest relative λ change it produced, kept as a
+    /// gauge — the adaptive controller's most recent evidence.
+    pub fn record_recalibration(&self, shift: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.recalibrations += 1;
+        g.recal_lambda_shift = shift;
+    }
+
+    /// Set one worker's wear-ledger gauges (S22): cumulative die write
+    /// pulses and the wear fraction of rated cycles. The vectors grow
+    /// on demand — workers publish independently.
+    pub fn set_worker_wear(&self, worker: usize, pulses: u64, wear: f64) {
+        let mut g = self.inner.lock().unwrap();
+        if g.wear_pulses.len() <= worker {
+            g.wear_pulses.resize(worker + 1, 0);
+            g.wear_fraction.resize(worker + 1, 0.0);
+        }
+        g.wear_pulses[worker] = pulses;
+        g.wear_fraction[worker] = wear;
+    }
+
     /// Account one caught worker panic (S21 supervision).
     pub fn record_worker_panic(&self) {
         self.inner.lock().unwrap().worker_panics += 1;
@@ -808,6 +909,10 @@ impl Metrics {
             scrub_energy_fj: g.scrub_energy_fj,
             scrub_busy_ns: g.scrub_busy_ns,
             sim_time_ns: g.sim_time_ns,
+            recalibrations: g.recalibrations,
+            recal_lambda_shift: g.recal_lambda_shift,
+            wear_pulses: g.wear_pulses.clone(),
+            wear_fraction: g.wear_fraction.clone(),
             spans: g
                 .span_durs
                 .iter()
@@ -1122,6 +1227,59 @@ mod tests {
         assert_eq!(nest("sheds_total"), 5.0);
         assert_eq!(nest("degraded_workers"), 1.0);
         assert_eq!(nest("pool_panics"), 3.0);
+    }
+
+    #[test]
+    fn endurance_gauges_accumulate_and_show() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("endurance:"), "silent when zero");
+        assert_eq!(m.snapshot().wear_max(), 0.0);
+        m.record_recalibration(0.12);
+        m.record_recalibration(0.03); // gauge keeps the latest shift
+        m.set_worker_wear(1, 500, 0.25); // out-of-order publish grows
+        m.set_worker_wear(0, 100, 0.05);
+        let s = m.snapshot();
+        assert_eq!(s.recalibrations, 2);
+        assert!((s.recal_lambda_shift - 0.03).abs() < 1e-12);
+        assert_eq!(s.wear_pulses, vec![100, 500]);
+        assert_eq!(s.wear_fraction, vec![0.05, 0.25]);
+        assert!((s.wear_max() - 0.25).abs() < 1e-12);
+        let txt = m.summary();
+        assert!(txt.contains("endurance: recals=2"), "{txt}");
+        // JSON carries the arrays and the derived max.
+        let j = s.to_json();
+        let e = j.get("endurance").expect("endurance section");
+        assert_eq!(
+            e.get("wear_max").and_then(Json::as_f64),
+            Some(0.25)
+        );
+        assert_eq!(
+            e.get("recalibrations").and_then(Json::as_f64),
+            Some(2.0)
+        );
+        // Round-trips through the vendored parser.
+        let back = json::parse(&j.to_string()).expect("round trip");
+        assert_eq!(
+            back.get("endurance")
+                .and_then(|x| x.get("wear_max"))
+                .and_then(Json::as_f64),
+            Some(0.25)
+        );
+    }
+
+    #[test]
+    fn endurance_counters_window_and_gauges_stay_latest() {
+        let m = Metrics::new();
+        m.record_recalibration(0.5);
+        m.set_worker_wear(0, 10, 0.01);
+        let prev = m.snapshot();
+        m.record_recalibration(0.2);
+        m.set_worker_wear(0, 20, 0.02);
+        let w = m.snapshot_since(&prev);
+        assert_eq!(w.recalibrations, 1, "windowed, not cumulative");
+        assert!((w.recal_lambda_shift - 0.2).abs() < 1e-12, "latest gauge");
+        assert_eq!(w.wear_pulses, vec![20], "wear ledger is latest-view");
+        assert_eq!(w.wear_fraction, vec![0.02]);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub use batcher::{Batch, Batcher, CloseReason, Request};
 pub use metrics::{Metrics, MetricsSnapshot, SpanStat};
 pub use pipeline::{pipeline_makespan_ns, serial_makespan_ns, ThreadedPipeline};
 pub use scheduler::{Policy, ScheduleReport, Scheduler, TileOp};
-pub use scrub::{ScrubPolicy, Scrubber};
+pub use scrub::{EndurancePolicy, MissionClock, ScrubPolicy, Scrubber};
 pub use server::{BackendKind, MacroServer, Router, ServerConfig};
 pub use supervisor::{
     Admission, ChaosPlan, RestartPolicy, ShedReason, StatusMsg, Supervisor,

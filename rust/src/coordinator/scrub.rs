@@ -7,11 +7,11 @@
 //! background [`Scrubber`] on the shared `util::pool` that steals idle
 //! array time between serving work.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::device::retention::RetentionParams;
+use crate::device::retention::{EnduranceParams, RetentionParams};
 use crate::obs::{self, TraceKind};
 use crate::util::pool;
 
@@ -81,6 +81,77 @@ impl ScrubPolicy {
             return f64::INFINITY;
         }
         self.average_power_uw(ret) / compute_uw
+    }
+}
+
+/// Wear-budget SLO (DESIGN.md S22): how aggressively a worker may keep
+/// scrubbing as its die consumes rated write cycles. Scrubbing repairs
+/// retention flips but *costs* endurance — every rewrite is a real SOT
+/// pulse — so the policy trades refresh frequency against die life:
+///
+/// * below `throttle_start` wear: scrub every tick (nominal schedule);
+/// * between `throttle_start` and `wear_ceiling`: the effective scrub
+///   interval stretches linearly up to `max_stretch` ticks — the die
+///   is rationed, accepting more residual flips to slow the burn;
+/// * at or past `wear_ceiling`: the worker must stop scrubbing and
+///   degrade through the S21 `Degraded` path — a worn-out die is an
+///   operational event, not something to silently keep burning.
+#[derive(Debug, Clone, Copy)]
+pub struct EndurancePolicy {
+    /// Rated write cycles of the die (per-junction rating applied to
+    /// the array's aggregate pulse counter).
+    pub endurance: EnduranceParams,
+    /// Wear fraction where scrub throttling begins.
+    pub throttle_start: f64,
+    /// Wear fraction where the worker degrades and scrubbing stops.
+    pub wear_ceiling: f64,
+    /// Scrub-interval stretch factor reached at the ceiling (ticks).
+    pub max_stretch: f64,
+}
+
+impl EndurancePolicy {
+    /// Defaults: start rationing at half the rated life, degrade at
+    /// 90 %, stretch the scrub interval up to 8× in between.
+    pub fn standard() -> Self {
+        EndurancePolicy {
+            endurance: EnduranceParams::default(),
+            throttle_start: 0.5,
+            wear_ceiling: 0.9,
+            max_stretch: 8.0,
+        }
+    }
+
+    /// Wear fraction for an aggregate pulse count (saturates at 1).
+    pub fn wear(&self, write_pulses: u64) -> f64 {
+        self.endurance.wear(write_pulses)
+    }
+
+    /// Scrub-interval stretch at `wear`: 1 below `throttle_start`,
+    /// linear up to `max_stretch` at the ceiling, `max_stretch` past it.
+    pub fn stretch(&self, wear: f64) -> f64 {
+        if wear <= self.throttle_start {
+            return 1.0;
+        }
+        let span = (self.wear_ceiling - self.throttle_start).max(1e-12);
+        let frac = ((wear - self.throttle_start) / span).min(1.0);
+        1.0 + frac * (self.max_stretch - 1.0)
+    }
+
+    /// Deterministic tick gate: with the interval stretched to
+    /// `stretch(wear)` ticks, scrub on rounds 0, s, 2s, … — derived
+    /// from the round counter, not wall time, so two arms with the
+    /// same wear trajectory make identical decisions.
+    pub fn scrub_this_round(&self, wear: f64, round: u64) -> bool {
+        if self.should_degrade(wear) {
+            return false;
+        }
+        let s = self.stretch(wear).round().max(1.0) as u64;
+        round % s == 0
+    }
+
+    /// Past the ceiling the worker must degrade instead of scrubbing.
+    pub fn should_degrade(&self, wear: f64) -> bool {
+        wear >= self.wear_ceiling
     }
 }
 
@@ -158,6 +229,99 @@ impl Scrubber {
         while !*finished {
             finished = cv.wait(finished).unwrap();
         }
+    }
+}
+
+/// Mission clock (DESIGN.md S22): the virtual-uptime source behind
+/// `serve --uptime-factor`. Wall time is compressed — every `period` of
+/// wall clock the mission advances by a *fixed* `sim_dt_ns` of
+/// simulated uptime and `tick(round, sim_dt_ns)` fires (typically
+/// broadcasting `Drift` jobs into the stream server's FIFOs, so days of
+/// operation happen with zero explicit `drift()` calls).
+///
+/// Unlike [`Scrubber`], the clock carries an explicit `horizon`: after
+/// exactly `horizon` ticks it stops itself, making the total simulated
+/// uptime `horizon × sim_dt_ns` — a deterministic quantity independent
+/// of wall-clock jitter, which is what lets the EX6 arms end at
+/// bit-comparable mission states. `horizon = 0` runs until
+/// [`stop`](MissionClock::stop).
+pub struct MissionClock {
+    stop: Arc<AtomicBool>,
+    done: Arc<(Mutex<bool>, Condvar)>,
+    ticks: Arc<AtomicU64>,
+    /// Fixed simulated uptime per tick (ns).
+    pub sim_dt_ns: f64,
+}
+
+impl MissionClock {
+    /// Start the mission. The first tick fires immediately; the sleep
+    /// is sliced so `stop()` never waits a full period.
+    pub fn start<F>(
+        period: Duration,
+        sim_dt_ns: f64,
+        horizon: u64,
+        mut tick: F,
+    ) -> MissionClock
+    where
+        F: FnMut(u64, f64) + Send + 'static,
+    {
+        assert!(sim_dt_ns > 0.0, "a mission must advance simulated time");
+        let stop = Arc::new(AtomicBool::new(false));
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        let ticks = Arc::new(AtomicU64::new(0));
+        let (stop2, done2, ticks2) = (stop.clone(), done.clone(), ticks.clone());
+        pool::spawn(move || {
+            let mut round = 0u64;
+            while !stop2.load(Ordering::Acquire) {
+                tick(round, sim_dt_ns);
+                round += 1;
+                ticks2.store(round, Ordering::Release);
+                if horizon > 0 && round >= horizon {
+                    break;
+                }
+                let mut slept = Duration::ZERO;
+                while slept < period && !stop2.load(Ordering::Acquire) {
+                    let slice = (period - slept).min(Duration::from_millis(1));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+            }
+            let (lock, cv) = &*done2;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        MissionClock {
+            stop,
+            done,
+            ticks,
+            sim_dt_ns,
+        }
+    }
+
+    /// Ticks completed so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Acquire)
+    }
+
+    /// Simulated uptime elapsed so far (ns).
+    pub fn sim_elapsed_ns(&self) -> f64 {
+        self.ticks() as f64 * self.sim_dt_ns
+    }
+
+    /// Block until the mission reaches its horizon (or is stopped).
+    pub fn wait_done(&self) {
+        let (lock, cv) = &*self.done;
+        let mut finished = lock.lock().unwrap();
+        while !*finished {
+            finished = cv.wait(finished).unwrap();
+        }
+    }
+
+    /// Signal the loop to exit and block until it has (quiesce). A
+    /// mission that already reached its horizon returns immediately.
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        self.wait_done();
     }
 }
 
@@ -257,6 +421,84 @@ mod tests {
         s.stop();
         let rounds = seen.lock().unwrap().clone();
         assert_eq!(rounds[..3], [0, 1, 2]);
+    }
+
+    #[test]
+    fn endurance_policy_stretches_then_degrades() {
+        let pol = EndurancePolicy {
+            endurance: EnduranceParams { rated_cycles: 1_000 },
+            throttle_start: 0.5,
+            wear_ceiling: 0.9,
+            max_stretch: 8.0,
+        };
+        // Below the throttle knee: nominal schedule, every round.
+        assert_eq!(pol.stretch(0.0), 1.0);
+        assert_eq!(pol.stretch(0.5), 1.0);
+        assert!((0..8).all(|r| pol.scrub_this_round(0.3, r)));
+        // Linear ramp: midway between knee and ceiling → midway stretch.
+        let mid = pol.stretch(0.7);
+        assert!((mid - 4.5).abs() < 1e-9, "stretch {mid}");
+        // Stretch is monotone in wear.
+        let mut prev = 0.0;
+        for w in [0.0, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+            let s = pol.stretch(w);
+            assert!(s >= prev && s <= pol.max_stretch);
+            prev = s;
+        }
+        // Throttled: the round gate fires exactly on multiples of the
+        // rounded stretch (comparison derived, not hard-coded, so an
+        // f64 ulp in the ramp cannot flap the test).
+        let s = pol.stretch(0.7).round().max(1.0) as u64;
+        assert!(s >= 4, "wear 0.7 must stretch the interval, got {s}");
+        let fired: Vec<u64> =
+            (0..20).filter(|&r| pol.scrub_this_round(0.7, r)).collect();
+        let want: Vec<u64> = (0..20).filter(|r| r % s == 0).collect();
+        assert_eq!(fired, want);
+        // Ceiling: degrade, never scrub.
+        assert!(pol.should_degrade(0.9));
+        assert!(!pol.should_degrade(0.89));
+        assert!((0..20).all(|r| !pol.scrub_this_round(0.95, r)));
+        // Wear plumbs through the endurance params (saturating).
+        assert_eq!(pol.wear(500), 0.5);
+        assert_eq!(pol.wear(2_000), 1.0);
+    }
+
+    #[test]
+    fn mission_clock_honors_its_horizon_exactly() {
+        let count = Arc::new(AtomicU64::new(0));
+        let sim = Arc::new(Mutex::new(0.0f64));
+        let (c, s) = (count.clone(), sim.clone());
+        let clock =
+            MissionClock::start(Duration::from_millis(1), 2.5e9, 5, move |_, dt| {
+                c.fetch_add(1, Ordering::SeqCst);
+                *s.lock().unwrap() += dt;
+            });
+        clock.wait_done();
+        // Exactly horizon ticks, exactly horizon × dt simulated uptime —
+        // wall jitter cannot change either.
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        assert_eq!(clock.ticks(), 5);
+        assert_eq!(clock.sim_elapsed_ns(), 5.0 * 2.5e9);
+        assert_eq!(*sim.lock().unwrap(), 5.0 * 2.5e9);
+        // Stopping a finished mission returns immediately.
+        clock.stop();
+    }
+
+    #[test]
+    fn unbounded_mission_clock_stops_on_demand() {
+        let count = Arc::new(AtomicU64::new(0));
+        let c = count.clone();
+        let clock =
+            MissionClock::start(Duration::from_millis(2), 1e9, 0, move |_, _| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        while count.load(Ordering::SeqCst) == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        clock.stop();
+        let after = count.load(Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(count.load(Ordering::SeqCst), after, "quiesced");
     }
 
     #[test]

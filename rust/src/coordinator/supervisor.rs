@@ -179,11 +179,17 @@ impl ChaosPlan {
     }
 }
 
-/// Worker → supervisor: "I caught a panic serving a frame". The
-/// one-shot verdict channel rides in the message, so the supervisor
+/// Worker → supervisor: "I caught a panic serving a frame" — or, with
+/// `wear_out` set, "my die crossed its wear ceiling" (DESIGN.md S22).
+/// The one-shot verdict channel rides in the message, so the supervisor
 /// needs no per-worker reply plumbing.
 pub struct StatusMsg {
     pub worker: usize,
+    /// Wear-SLO report: the die is spent, not the process. Restarting
+    /// cannot help (the physical array is the same), so the verdict is
+    /// an immediate [`Verdict::Degrade`] regardless of remaining
+    /// restart budget.
+    pub wear_out: bool,
     pub reply: mpsc::Sender<Verdict>,
 }
 
@@ -218,8 +224,14 @@ impl Supervisor {
             .spawn(move || {
                 let mut attempts = vec![0u32; workers];
                 let mut degraded = vec![false; workers];
-                while let Ok(StatusMsg { worker, reply }) = rx.recv() {
-                    let verdict = if worker < workers
+                while let Ok(StatusMsg {
+                    worker,
+                    wear_out,
+                    reply,
+                }) = rx.recv()
+                {
+                    let verdict = if !wear_out
+                        && worker < workers
                         && attempts[worker] < policy.max_restarts
                     {
                         attempts[worker] += 1;
@@ -354,6 +366,7 @@ mod tests {
             let (rtx, rrx) = mpsc::channel();
             tx.send(StatusMsg {
                 worker: w,
+                wear_out: false,
                 reply: rtx,
             })
             .unwrap();
@@ -380,6 +393,31 @@ mod tests {
         // Degrading again does not double-count.
         assert_eq!(ask(0), Verdict::Degrade);
         assert_eq!(metrics.snapshot().degraded_workers, 1);
+        drop(tx);
+        sup.join();
+    }
+
+    #[test]
+    fn wear_out_degrades_immediately_despite_restart_budget() {
+        let metrics = Arc::new(Metrics::new());
+        let (sup, tx) =
+            Supervisor::start(2, RestartPolicy::standard(), metrics.clone());
+        let ask = |w: usize, wear_out: bool| -> Verdict {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(StatusMsg {
+                worker: w,
+                wear_out,
+                reply: rtx,
+            })
+            .unwrap();
+            rrx.recv().unwrap()
+        };
+        // Fresh worker, full budget — but the die is spent: no restart
+        // can help, the verdict is Degrade on the first report.
+        assert_eq!(ask(0, true), Verdict::Degrade);
+        assert_eq!(metrics.snapshot().degraded_workers, 1);
+        // The other worker's panic path is unaffected.
+        assert!(matches!(ask(1, false), Verdict::Restart { attempt: 1, .. }));
         drop(tx);
         sup.join();
     }

@@ -18,6 +18,14 @@
 //!   junction's R_P at deploy. This is the class that moves
 //!   conductances off their level targets and forces `MvmEngine::Auto`
 //!   away from the quantized level-plane engine.
+//! * **Gain drift** (DESIGN.md S22) — a slow die-level multiplicative
+//!   random walk on the whole array's conductance gain (thermal /
+//!   read-disturb aging of the analog path). The stored codes stay
+//!   *correct*, so a verify-and-rewrite scrub is a bitwise no-op
+//!   against it; only per-layer λ recalibration
+//!   (`SpikingMlp::recalibrate`) restores accuracy. Die-level rather
+//!   than per-cell by design: a uniform gain factor is exactly what a
+//!   per-layer threshold reset corrects.
 //!
 //! Everything is deterministic under `FaultPlan::seed`: each macro gets
 //! a [`FaultState`] with two decoupled RNG streams — one for drift, one
@@ -41,6 +49,12 @@ pub struct FaultPlan {
     /// Extra die-to-die sigma on junction R_P frozen in at deploy
     /// (breaks `uniform_levels`, disqualifying the quantized engine).
     pub d2d_sigma: f64,
+    /// Gain-drift volatility (DESIGN.md S22): per-√hour sigma of the
+    /// die-level multiplicative conductance-gain random walk applied
+    /// by [`FaultState::advance`]. 0 disables the walk *and* its RNG
+    /// draws, so plans predating the gain mode keep bit-identical
+    /// drift streams.
+    pub gain_sigma: f64,
 }
 
 impl FaultPlan {
@@ -52,6 +66,7 @@ impl FaultPlan {
             retention: RetentionParams::standard(),
             stuck_frac: 0.0,
             d2d_sigma: 0.0,
+            gain_sigma: 0.0,
         }
     }
 
@@ -63,6 +78,38 @@ impl FaultPlan {
             retention,
             stuck_frac: 0.0,
             d2d_sigma: 0.0,
+            gain_sigma: 0.0,
+        }
+    }
+
+    /// Pure gain drift on a retention-frozen array (DESIGN.md S22):
+    /// codes never flip (Δ = 200 ⇒ flip probability exactly 0), only
+    /// the analog gain wanders. Scrub is provably a no-op here —
+    /// recalibration is the only corrective tool that works.
+    pub fn gain_only(gain_sigma: f64, seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            retention: RetentionParams::frozen(),
+            stuck_frac: 0.0,
+            d2d_sigma: 0.0,
+            gain_sigma,
+        }
+    }
+
+    /// Mission profile (EX6): retention drift at the given corner
+    /// *plus* gain wander — the regime where scrub and recalibration
+    /// each fix a fault class the other cannot.
+    pub fn mission(
+        retention: RetentionParams,
+        gain_sigma: f64,
+        seed: u64,
+    ) -> Self {
+        FaultPlan {
+            seed,
+            retention,
+            stuck_frac: 0.0,
+            d2d_sigma: 0.0,
+            gain_sigma,
         }
     }
 
@@ -74,6 +121,7 @@ impl FaultPlan {
             retention: RetentionParams::stress(),
             stuck_frac: 0.002,
             d2d_sigma: 0.03,
+            gain_sigma: 0.0,
         }
     }
 }
@@ -122,6 +170,9 @@ pub struct FaultState {
     pub now_ns: f64,
     /// Cells changed by drift so far (re-flips counted each time).
     pub flips_injected: u64,
+    /// Cumulative die-level gain factor applied so far (1.0 = nominal;
+    /// only moves when `plan.gain_sigma > 0`).
+    pub gain: f64,
 }
 
 impl FaultState {
@@ -138,6 +189,7 @@ impl FaultState {
             stuck: Vec::new(),
             now_ns: 0.0,
             flips_injected: 0,
+            gain: 1.0,
         }
     }
 
@@ -171,14 +223,30 @@ impl FaultState {
     }
 
     /// Advance the simulated clock by `dt_ns`: retention flips land on
-    /// `xbar` (no wear — Néel relaxation is not a write) and stuck
-    /// cells are re-pinned. Returns cells whose code changed.
+    /// `xbar` (no wear — Néel relaxation is not a write), stuck cells
+    /// are re-pinned, and — when the plan has a gain mode — the
+    /// die-level conductance gain takes one √dt-scaled random-walk
+    /// step. The walk draws from the drift stream only when
+    /// `gain_sigma > 0`, so gainless plans stay bit-identical to
+    /// pre-S22 runs. Returns cells whose code changed.
     pub fn advance(&mut self, xbar: &mut Crossbar, dt_ns: f64) -> usize {
         self.now_ns += dt_ns;
         let flipped =
             xbar.corrupt_retention(dt_ns, &self.plan.retention, &mut self.drift_rng);
         if !self.stuck.is_empty() {
             xbar.force_codes(&self.stuck);
+        }
+        if self.plan.gain_sigma > 0.0 && dt_ns > 0.0 {
+            // Brownian gain wander: step sigma scales with √(dt in
+            // hours), clamped so one pathological draw cannot zero or
+            // explode the array.
+            let hours = dt_ns / 3.6e12;
+            let step = self.plan.gain_sigma * hours.sqrt();
+            let factor =
+                (1.0 + self.drift_rng.normal_ms(0.0, step)).clamp(0.25, 4.0);
+            // Gain up ⇒ resistance down: scale_gain takes an R scale.
+            xbar.scale_gain(1.0 / factor);
+            self.gain *= factor;
         }
         self.flips_injected += flipped as u64;
         flipped
@@ -301,5 +369,76 @@ mod tests {
         }
         assert_eq!(fa.flips_injected, fb.flips_injected);
         assert_eq!(b.read_codes(), golden, "arm b ends fully scrubbed");
+    }
+
+    #[test]
+    fn gain_drift_moves_levels_not_codes() {
+        let cfg = small();
+        let mut xb = programmed(&cfg);
+        let golden = xb.read_codes();
+        let g_before = xb.conductances().to_vec();
+        let plan = FaultPlan::gain_only(0.05, 21);
+        let mut fs = FaultState::new(plan, 0);
+        // One simulated hour per tick: the frozen retention corner
+        // guarantees zero flips, only the gain walks.
+        for _ in 0..4 {
+            assert_eq!(fs.advance(&mut xb, 3.6e12), 0, "frozen corner");
+        }
+        assert_eq!(xb.read_codes(), golden, "codes untouched");
+        assert_ne!(fs.gain, 1.0, "the walk must have moved");
+        assert!(!xb.uniform_levels(), "analog levels left their targets");
+        let drift: f64 = xb
+            .conductances()
+            .iter()
+            .zip(&g_before)
+            .map(|(a, b)| (a / b - fs.gain).abs())
+            .fold(0.0, f64::max);
+        assert!(drift < 1e-9, "uniform die-level factor, off by {drift}");
+    }
+
+    #[test]
+    fn gain_drift_is_deterministic_and_gainless_plans_draw_nothing() {
+        let cfg = small();
+        let plan = FaultPlan::gain_only(0.08, 33);
+        let (mut a, mut b) = (programmed(&cfg), programmed(&cfg));
+        let mut fa = FaultState::new(plan, 2);
+        let mut fb = FaultState::new(plan, 2);
+        for _ in 0..3 {
+            fa.advance(&mut a, 1.8e12);
+            fb.advance(&mut b, 1.8e12);
+        }
+        assert_eq!(fa.gain, fb.gain, "same plan + index → same walk");
+        assert_eq!(a.conductances(), b.conductances());
+
+        // gain_sigma = 0 must not consume the drift stream: a stress
+        // drift run is bit-identical whether or not the field exists.
+        let p0 = FaultPlan::drift_only(RetentionParams::stress(), 17);
+        let (mut c, mut d) = (programmed(&cfg), programmed(&cfg));
+        let mut fc = FaultState::new(p0, 0);
+        let mut fd = FaultState::new(p0, 0);
+        let dt = p0.retention.tau_ret_ns() * 0.2;
+        assert_eq!(fc.advance(&mut c, dt), fd.advance(&mut d, dt));
+        assert_eq!(fc.gain, 1.0);
+        assert_eq!(c.codes(), d.codes());
+    }
+
+    #[test]
+    fn scrub_is_a_bitwise_noop_under_pure_gain_drift() {
+        let cfg = small();
+        let mut xb = programmed(&cfg);
+        let golden = xb.read_codes();
+        let wear_before = xb.write_pulses;
+        let plan = FaultPlan::gain_only(0.1, 55);
+        let mut fs = FaultState::new(plan, 0);
+        fs.advance(&mut xb, 7.2e12);
+        let out = fs.scrub(&mut xb, &golden, &SotWriteParams::default());
+        // The codes were never wrong: nothing to detect, nothing to
+        // rewrite, zero wear, zero energy — and the gain error is
+        // still there afterwards.
+        assert_eq!(out.mismatched, 0);
+        assert_eq!(out.junction_pulses, 0);
+        assert_eq!(out.energy_fj, 0.0);
+        assert_eq!(xb.write_pulses, wear_before);
+        assert!(!xb.uniform_levels(), "scrub cannot fix analog gain");
     }
 }

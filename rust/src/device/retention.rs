@@ -51,6 +51,20 @@ impl RetentionParams {
         }
     }
 
+    /// Retention so deep it is *exactly* zero in f64: Δ = 200 puts
+    /// 2t/τ below the underflow knee of `exp` for any uptime shorter
+    /// than the age of the universe, so `flip_probability` returns
+    /// 0.0 — not merely tiny — and `corrupt_codes` takes its strict
+    /// no-op branch (no draws). The gain-drift differential test
+    /// (DESIGN.md S22) leans on this corner to isolate analog gain
+    /// wander from retention flips with certainty, not probability.
+    pub fn frozen() -> Self {
+        RetentionParams {
+            delta: 200.0,
+            tau0_ns: 1.0,
+        }
+    }
+
     /// Mean retention time (ns).
     pub fn tau_ret_ns(&self) -> f64 {
         self.tau0_ns * self.delta.exp()
@@ -98,9 +112,12 @@ impl Default for EnduranceParams {
 }
 
 impl EnduranceParams {
-    /// Fraction of rated life consumed by `writes` cycles.
+    /// Fraction of rated life consumed by `writes` cycles, saturating
+    /// at 1.0 — a die past its rating is fully worn, not 110 % worn
+    /// (monotonicity + saturation pinned by
+    /// `rust/tests/reliability_props.rs`).
     pub fn wear(&self, writes: u64) -> f64 {
-        writes as f64 / self.rated_cycles as f64
+        (writes as f64 / self.rated_cycles as f64).min(1.0)
     }
 }
 
@@ -214,5 +231,23 @@ mod tests {
         let e = EnduranceParams::default();
         assert!(e.wear(1_000_000) < 1e-5);
         assert!((e.wear(e.rated_cycles) - 1.0).abs() < 1e-12);
+        // Saturation: past the rating the die is 100 % worn, not more.
+        assert_eq!(e.wear(e.rated_cycles * 3), 1.0);
+        assert_eq!(e.wear(u64::MAX), 1.0);
+    }
+
+    #[test]
+    fn frozen_corner_flip_probability_is_exactly_zero() {
+        let p = RetentionParams::frozen();
+        // A century of uptime: 2t/τ underflows exp to exactly 1.0,
+        // so the probability is exactly 0.0 — the certainty the
+        // gain-drift differential test requires.
+        let century_ns = 3.15e18;
+        assert_eq!(p.flip_probability(century_ns), 0.0);
+        // And corrupt_codes is a strict no-op (no RNG draws).
+        let mut rng = Rng::new(5);
+        let mut codes = vec![2u8; 256];
+        assert_eq!(corrupt_codes(&mut codes, century_ns, &p, &mut rng), 0);
+        assert_eq!(rng.f64(), Rng::new(5).f64());
     }
 }

@@ -57,6 +57,11 @@ experiments (paper artifacts → results/):
   overload          EX5 overload & admission-control sweep (shed rate and
                     bounded p99 vs offered load on the S21 control plane)
                     [--frames N per point]
+  endurance         EX6 mission-clock endurance sweep (accuracy, scrub
+                    energy, wear fraction vs days of simulated uptime
+                    across scrub-only/recal-only/adaptive arms, plus the
+                    wear-ceiling degrade demo)  [--train N] [--test N]
+                    [--epochs N]
 
 operations:
   mvm        run one 128×128 macro MVM   [--seed N] [--backend sim|pjrt]
@@ -69,7 +74,10 @@ operations:
              (fabric: K×N weights, G×G mesh)
              (stream: [--sessions S] [--steps T] per-session LIF state;
               admission control [--queue-cap N] [--deadline-ms MS]
-              [--max-restarts N])
+              [--max-restarts N];
+              mission clock [--hours H simulated] [--uptime-factor F
+              simulated ns per wall ns, default 1e9]
+              [--mission scrub|recal|adaptive] [--gain-sigma S])
   trace      serve a short synthetic stream workload with full tracing
              on and write a Perfetto/Chrome trace_event JSON
              (default results/trace_<seed>.json)  [--sessions S]
@@ -159,6 +167,21 @@ fn main() -> Result<()> {
             let sweep = repro::overload::run(seed, frames);
             println!("{}", repro::overload::render(&sweep));
             let p = repro::overload::write_bench_record(&sweep);
+            println!("bench record: {}", p.display());
+        }
+        "endurance" => {
+            let n_train = args.get_usize("train", 300);
+            let n_test = args.get_usize("test", 60);
+            let epochs = args.get_usize("epochs", 6);
+            let sweep = repro::endurance::run_points(
+                seed,
+                &[24.0, 48.0, 96.0],
+                n_train,
+                n_test,
+                epochs,
+            );
+            println!("{}", repro::endurance::render(&sweep));
+            let p = repro::endurance::write_bench_record(&sweep);
             println!("bench record: {}", p.display());
         }
         "mvm" => cmd_mvm(&args, &cfg, seed)?,
@@ -377,15 +400,18 @@ fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
 /// energy, and occupancy.
 fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
     use spikemram::config::StreamConfig;
+    use spikemram::device::faults::FaultPlan;
+    use spikemram::device::retention::RetentionParams;
     use spikemram::stream::{
-        FrameEncoder, StreamServer, StreamServerConfig, StreamSpec,
-        TemporalCode,
+        FrameEncoder, MissionConfig, MissionMode, StreamServer,
+        StreamServerConfig, StreamSpec, TemporalCode,
     };
 
     if args.get("trace-out").is_some() {
         obs::install(&TraceConfig::all());
     }
     let sessions = args.get_usize("sessions", 8);
+    let mission_hours = args.get_f64("hours", 0.0);
     let t_steps = args.get_usize("steps", 8);
     let n_train = args.get_usize("train", 200);
     println!("training the digit MLP ({n_train} examples)…");
@@ -419,7 +445,41 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         scfg.restart.max_restarts =
             n.parse().context("--max-restarts expects an integer")?;
     }
+    // S22 mission clock: --hours H lands H simulated hours of uptime on
+    // the workers while they serve — drift and maintenance flow through
+    // the same per-worker FIFOs as frames, no explicit drift() calls.
+    // Virtual uptime needs something to age, so the weak retention
+    // corner plus gain wander is deployed as the fault plan.
+    if mission_hours > 0.0 {
+        scfg.faults = Some(FaultPlan::mission(
+            RetentionParams::weak(),
+            args.get_f64("gain-sigma", 0.05),
+            seed ^ 0x5eed,
+        ));
+    }
     let server = StreamServer::start(spec, scfg)?;
+    if mission_hours > 0.0 {
+        let factor = args.get_f64("uptime-factor", 1e9);
+        let mode = match args.get_str("mission", "adaptive").as_str() {
+            "scrub" => MissionMode::ScrubOnly,
+            "recal" => MissionMode::RecalOnly,
+            "adaptive" => MissionMode::Adaptive,
+            other => bail!("--mission scrub|recal|adaptive, got {other:?}"),
+        };
+        let mcfg = MissionConfig::compressed(
+            factor,
+            mission_hours,
+            std::time::Duration::from_millis(5),
+            mode,
+        );
+        println!(
+            "mission clock: {mission_hours} h simulated at {factor:.0e}x \
+             compression → {} ticks of {:.1} h ({mode:?})",
+            mcfg.horizon,
+            mcfg.sim_dt_ns / 3.6e12,
+        );
+        server.start_mission(mcfg);
+    }
 
     let test = snn::Dataset::generate(sessions, seed ^ 0xabcd);
     let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);
@@ -433,8 +493,11 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         .collect();
     // Periodic report on a *windowed* basis (DESIGN.md S20):
     // `snapshot_since` differences against the previous snapshot, so
-    // the printed rates cover this window — not the meaningless
-    // average since construction (which includes training/idle time).
+    // every printed figure — rates, shed fraction, scrub duty cycle —
+    // covers this window, not the meaningless average since
+    // construction (which includes training/idle time). The duty cycle
+    // and shed rate are computed on the *delta* snapshot: lifetime
+    // counters would dilute a busy window with hours of earlier idle.
     let mut prev = server.metrics.snapshot();
     for t in 0..t_steps {
         for (s, &id) in ids.iter().enumerate() {
@@ -444,11 +507,15 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
             let w = server.metrics.snapshot_since(&prev);
             println!(
                 "  [t={}] window: {} frames, {:.0} frames/s, \
-                 {:.2e} mac/s",
+                 {:.2e} mac/s, shed {:.1} %, {} scrubs, \
+                 scrub duty {:.2} %",
                 t + 1,
                 w.requests,
                 w.rps,
-                w.macs_per_s
+                w.macs_per_s,
+                w.shed_rate() * 100.0,
+                w.scrubs,
+                w.scrub_duty_cycle() * 100.0
             );
             prev = server.metrics.snapshot();
         }
@@ -468,6 +535,23 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         (sessions * t_steps) as f64 / dt.as_secs_f64(),
         correct
     );
+    if mission_hours > 0.0 {
+        // Bounded missions stop at their horizon; wait so the final
+        // metrics include the whole simulated lifetime.
+        let sim_ns = server.mission_wait();
+        server.stop_mission();
+        let snap = server.metrics.snapshot();
+        println!(
+            "mission: {:.1} h simulated uptime, {} flips injected, \
+             {} repaired, {} scrubs, {} recals, wear max {:.4} %",
+            sim_ns / 3.6e12,
+            snap.flips_injected,
+            snap.flips_repaired,
+            snap.scrubs,
+            snap.recalibrations,
+            snap.wear_max() * 100.0
+        );
+    }
     finish_observability(
         &server.metrics,
         args.get("trace-out"),

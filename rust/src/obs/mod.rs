@@ -74,10 +74,14 @@ pub enum TraceKind {
     WorkerRestart = 11,
     /// Counter: admission-control shed (queue full at enqueue).
     AdmissionShed = 12,
+    /// Counter: per-worker die wear fraction of rated write cycles
+    /// (0..=1), published whenever a worker's wear ledger changes
+    /// (S22 endurance runtime).
+    WearFraction = 13,
 }
 
 /// Number of [`TraceKind`] variants (bitmask width).
-pub const KIND_COUNT: usize = 13;
+pub const KIND_COUNT: usize = 14;
 
 impl TraceKind {
     /// Every kind, in discriminant order.
@@ -95,6 +99,7 @@ impl TraceKind {
         TraceKind::EnergyFj,
         TraceKind::WorkerRestart,
         TraceKind::AdmissionShed,
+        TraceKind::WearFraction,
     ];
 
     /// This kind's bit in [`TraceConfig::kinds`].
@@ -119,6 +124,7 @@ impl TraceKind {
             TraceKind::EnergyFj => "serve.energy_fj",
             TraceKind::WorkerRestart => "serve.restart",
             TraceKind::AdmissionShed => "serve.shed",
+            TraceKind::WearFraction => "serve.wear",
         }
     }
 
@@ -131,6 +137,7 @@ impl TraceKind {
                 | TraceKind::Occupancy
                 | TraceKind::EnergyFj
                 | TraceKind::AdmissionShed
+                | TraceKind::WearFraction
         )
     }
 
@@ -147,6 +154,7 @@ impl TraceKind {
             TraceKind::ScrubPass => ("round", "repaired"),
             TraceKind::WorkerRestart => ("attempt", "backoff_ms"),
             TraceKind::AdmissionShed => ("queue_depth", "p1"),
+            TraceKind::WearFraction => ("wear", "p1"),
             _ => ("value", "p1"),
         }
     }

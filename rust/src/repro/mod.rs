@@ -17,10 +17,12 @@
 //! | EX3 | [`stream`] | extension: temporal streaming sweep (S18) |
 //! | EX4 | [`reliability`] | extension: fault-injection reliability (S19) |
 //! | EX5 | [`overload`] | extension: overload & admission control (S21) |
+//! | EX6 | [`endurance`] | extension: mission-clock endurance & wear SLO (S22) |
 //!
 //! E9 (end-to-end SNN) lives in `examples/snn_inference.rs`.
 
 pub mod ablations;
+pub mod endurance;
 pub mod fabric;
 pub mod fig3;
 pub mod fig5;

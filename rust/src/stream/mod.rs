@@ -34,8 +34,8 @@ pub mod source;
 
 pub use encode::{FrameEncoder, TemporalCode};
 pub use serve::{
-    DrainReport, FrameOutcome, StreamReply, StreamServer, StreamServerConfig,
-    StreamSpec,
+    DrainReport, FrameOutcome, MissionConfig, MissionMode, StreamReply,
+    StreamServer, StreamServerConfig, StreamSpec,
 };
 pub use snn::{FrameStep, SpikingMlp, StreamRun, StreamStats};
 pub use source::{collect_frames, EncodedStream, EventStream, PoissonStream};

@@ -56,6 +56,22 @@
 //!   the rest ([`ShedReason::Draining`]), quiesces the scrubber, and
 //!   returns a [`DrainReport`]. Every admitted frame gets exactly one
 //!   outcome — served or shed, never silently lost.
+//!
+//! Mission-clock endurance (DESIGN.md S22): a [`MissionClock`] started
+//! via [`StreamServer::start_mission`] compresses days of simulated
+//! uptime into seconds of wall time. Each tick broadcasts a `Drift`
+//! job (fixed `sim_dt_ns` of virtual uptime) through the same
+//! per-worker FIFOs as frames, then runs the configured maintenance
+//! arm ([`MissionMode`]): scrub on a wear-stretched schedule,
+//! recalibrate λ online ([`SpikingMlp::recalibrate`]), or choose
+//! between them adaptively from [`ScrubOutcome`] evidence. Write
+//! pulses are a *wear ledger*: every worker tracks its die's
+//! cumulative pulses (surviving restarts — the rebuilt replica
+//! reprograms the *same* physical die) against an
+//! [`EndurancePolicy`]; as the wear budget depletes, scrubbing is
+//! throttled, and past the configured ceiling the worker reports
+//! `wear_out` to the [`Supervisor`] and degrades through the S21 path
+//! instead of continuing to burn pulses.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -68,8 +84,9 @@ use anyhow::Result;
 
 use crate::config::{FabricConfig, LevelMap, MacroConfig, StreamConfig};
 use crate::coordinator::{
-    Admission, ChaosPlan, Metrics, RestartPolicy, ScrubPolicy, Scrubber,
-    ShedReason, StatusMsg, Supervisor, Verdict,
+    Admission, ChaosPlan, EndurancePolicy, Metrics, MissionClock,
+    RestartPolicy, ScrubPolicy, Scrubber, ShedReason, StatusMsg, Supervisor,
+    Verdict,
 };
 use crate::device::{FaultPlan, FaultState, ScrubOutcome, SotWriteParams};
 use crate::obs::{self, TraceKind};
@@ -77,6 +94,7 @@ use crate::snn::dataset::Dataset;
 use crate::snn::mlp::Mlp;
 use crate::util::rng::Rng;
 
+use super::encode::{FrameEncoder, TemporalCode};
 use super::snn::SpikingMlp;
 
 /// Everything needed to deploy one [`SpikingMlp`] per worker.
@@ -192,6 +210,16 @@ enum StreamJob {
     Scrub {
         reply: mpsc::Sender<ScrubOutcome>,
     },
+    /// Re-derive the per-layer normalization thresholds λ on the
+    /// worker's *drifted* replica (DESIGN.md S22): gain drift moves
+    /// every conductance multiplicatively, which scrub cannot see
+    /// (codes still match golden) — only re-running calibration
+    /// restores the operating point. Write-pulse free. Replies with
+    /// the largest relative λ shift, the adaptive controller's
+    /// evidence that gain is (still) wandering.
+    Recalibrate {
+        reply: mpsc::Sender<f64>,
+    },
 }
 
 /// Stream server configuration.
@@ -222,6 +250,10 @@ pub struct StreamServerConfig {
     /// Scrub knobs, including the queue-depth threshold that gates
     /// background scrub ticks (idle stealing).
     pub scrub: ScrubPolicy,
+    /// Wear-budget SLO (DESIGN.md S22): rated write cycles, scrub
+    /// throttling knee, and the degrade ceiling. The default rating
+    /// (1e12 cycles) keeps wear negligible for ordinary serving.
+    pub endurance: EndurancePolicy,
 }
 
 impl Default for StreamServerConfig {
@@ -236,6 +268,79 @@ impl Default for StreamServerConfig {
             idle_tick: Duration::from_millis(50),
             report_period: None,
             scrub: ScrubPolicy::standard(),
+            endurance: EndurancePolicy::standard(),
+        }
+    }
+}
+
+/// Maintenance arm the mission clock runs each tick (the three EX6
+/// endurance arms — DESIGN.md S22).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissionMode {
+    /// Scrub every tick (worker-side wear throttle still applies);
+    /// never recalibrate. Fixes retention flips, blind to gain drift.
+    ScrubOnly,
+    /// Recalibrate every tick; never scrub. Wear-free, tracks gain
+    /// drift, but retention flips accumulate unrepaired.
+    RecalOnly,
+    /// Scrub on the wear-stretched schedule, and recalibrate when the
+    /// evidence says scrubbing cannot help: the last scrub found
+    /// nothing to repair (pure gain-drift signature) or the previous
+    /// recalibration still moved some λ by at least
+    /// [`MissionConfig::shift_eps`] (gain still wandering).
+    Adaptive,
+}
+
+/// Mission-clock schedule: how much simulated uptime each wall-clock
+/// tick represents, for how many ticks, and which maintenance arm to
+/// run (DESIGN.md S22).
+#[derive(Debug, Clone, Copy)]
+pub struct MissionConfig {
+    /// Wall period between virtual-uptime ticks.
+    pub period: Duration,
+    /// Simulated uptime per tick, ns (wall period × compression
+    /// factor). Total simulated uptime is exactly
+    /// `horizon × sim_dt_ns`, independent of wall-clock jitter.
+    pub sim_dt_ns: f64,
+    /// Tick budget; 0 runs until [`StreamServer::stop_mission`].
+    pub horizon: u64,
+    /// Maintenance arm.
+    pub mode: MissionMode,
+    /// λ-shift hysteresis for [`MissionMode::Adaptive`]: keep
+    /// recalibrating while the last recalibration moved some λ by at
+    /// least this fraction.
+    pub shift_eps: f64,
+}
+
+/// Adaptive-arm probe interval: after this many ticks without a
+/// recalibration the hysteresis re-arms and one fires anyway. Bounds
+/// the λ staleness a quiet-then-wandering gain walk can accumulate to
+/// a few ticks, while pure retention drift still settles to ~1/4 the
+/// recalibration rate of [`MissionMode::RecalOnly`].
+const RECAL_PROBE_TICKS: u64 = 4;
+
+impl MissionConfig {
+    /// Compress `sim_hours` of uptime into wall time at `factor`
+    /// (simulated ns per wall ns): each `period` tick carries
+    /// `period × factor` of simulated uptime, and the horizon is
+    /// however many ticks cover `sim_hours`.
+    pub fn compressed(
+        factor: f64,
+        sim_hours: f64,
+        period: Duration,
+        mode: MissionMode,
+    ) -> Self {
+        assert!(factor > 0.0, "uptime compression factor must be positive");
+        assert!(sim_hours > 0.0, "simulated mission must have a duration");
+        let sim_dt_ns = period.as_nanos() as f64 * factor;
+        assert!(sim_dt_ns > 0.0, "tick period too short for the factor");
+        let horizon = ((sim_hours * 3.6e12) / sim_dt_ns).ceil().max(1.0);
+        MissionConfig {
+            period,
+            sim_dt_ns,
+            horizon: horizon as u64,
+            mode,
+            shift_eps: 0.01,
         }
     }
 }
@@ -334,6 +439,7 @@ pub struct StreamServer {
     shared: Arc<ServeShared>,
     supervisor: Option<Supervisor>,
     scrubber: Mutex<Option<Scrubber>>,
+    mission: Mutex<Option<MissionClock>>,
     queue_cap: usize,
     deadline: Option<Duration>,
     scrub_policy: ScrubPolicy,
@@ -376,6 +482,10 @@ impl StreamServer {
                 spec: spec.clone(),
                 faults: scfg.faults,
                 scrub_policy: scfg.scrub,
+                endurance: scfg.endurance,
+                wear_carry: 0,
+                scrub_round: 0,
+                calib_frames: None,
                 shared: shared.clone(),
                 metrics: metrics.clone(),
                 status: status.clone(),
@@ -402,6 +512,7 @@ impl StreamServer {
             shared,
             supervisor: Some(supervisor),
             scrubber: Mutex::new(None),
+            mission: Mutex::new(None),
             queue_cap: scfg.queue_cap,
             deadline: scfg.deadline,
             scrub_policy: scfg.scrub,
@@ -603,6 +714,150 @@ impl StreamServer {
         }
     }
 
+    /// Recalibrate every worker's λ thresholds against its own drifted
+    /// replica and wait (the synchronous path; the mission clock uses
+    /// the same job type). Returns the largest relative λ shift seen
+    /// across workers — 0.0 when nothing moved.
+    pub fn recalibrate_now(&self) -> f64 {
+        let rxs: Vec<_> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(StreamJob::Recalibrate { reply: rtx })
+                    .expect("workers alive");
+                rrx
+            })
+            .collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv().expect("reply"))
+            .fold(0.0, f64::max)
+    }
+
+    /// Start the mission clock (DESIGN.md S22): every `mcfg.period` of
+    /// wall time one tick of `mcfg.sim_dt_ns` simulated uptime lands —
+    /// a `Drift` job broadcast through the per-worker FIFOs (so drift
+    /// interleaves with serving exactly like frames do), followed by
+    /// the maintenance arm for `mcfg.mode`. Each tick completes
+    /// synchronously on the clock thread, so the end state after
+    /// `horizon` ticks is deterministic regardless of wall jitter.
+    /// A bounded mission (`horizon > 0`) stops itself; use
+    /// [`mission_wait`](Self::mission_wait) to block until it does.
+    pub fn start_mission(&self, mcfg: MissionConfig) {
+        let txs = self.txs.clone();
+        // The adaptive arm's hysteresis: ∞ forces a first-tick
+        // recalibration, which seeds the λ-shift evidence.
+        let mut last_shift = f64::INFINITY;
+        let mut ticks_since_recal = 0u64;
+        let clock = MissionClock::start(
+            mcfg.period,
+            mcfg.sim_dt_ns,
+            mcfg.horizon,
+            move |_round, dt_ns| {
+                // 1. Virtual uptime advances on every replica. Channel
+                // sends/recvs tolerate shutdown racing a tick.
+                let drifts: Vec<_> = txs
+                    .iter()
+                    .map(|tx| {
+                        let (rtx, rrx) = mpsc::channel();
+                        let _ =
+                            tx.send(StreamJob::Drift { dt_ns, reply: rtx });
+                        rrx
+                    })
+                    .collect();
+                for rx in drifts {
+                    let _ = rx.recv();
+                }
+                // 2. Maintenance arm.
+                let mut mismatched = 0u64;
+                if matches!(
+                    mcfg.mode,
+                    MissionMode::ScrubOnly | MissionMode::Adaptive
+                ) {
+                    let rxs: Vec<_> = txs
+                        .iter()
+                        .map(|tx| {
+                            let (rtx, rrx) = mpsc::channel();
+                            let _ =
+                                tx.send(StreamJob::Scrub { reply: rtx });
+                            rrx
+                        })
+                        .collect();
+                    for rx in rxs {
+                        if let Ok(o) = rx.recv() {
+                            mismatched += o.mismatched as u64;
+                        }
+                    }
+                }
+                let recal = match mcfg.mode {
+                    MissionMode::ScrubOnly => false,
+                    MissionMode::RecalOnly => true,
+                    // ScrubOutcome evidence: a scrub pass that found
+                    // nothing to repair proves the residual drift is
+                    // gain-type (codes all match golden, yet time
+                    // passed); and while the previous recalibration
+                    // still moved λ, gain is still wandering. The
+                    // periodic probe re-arms the hysteresis after a
+                    // quiet interval — a single sub-ε gain step must
+                    // not disable recalibration for the rest of the
+                    // mission while the walk keeps wandering.
+                    MissionMode::Adaptive => {
+                        mismatched == 0
+                            || last_shift >= mcfg.shift_eps
+                            || ticks_since_recal >= RECAL_PROBE_TICKS
+                    }
+                };
+                if recal {
+                    let rxs: Vec<_> = txs
+                        .iter()
+                        .map(|tx| {
+                            let (rtx, rrx) = mpsc::channel();
+                            let _ = tx
+                                .send(StreamJob::Recalibrate { reply: rtx });
+                            rrx
+                        })
+                        .collect();
+                    let mut shift = 0.0f64;
+                    for rx in rxs {
+                        if let Ok(s) = rx.recv() {
+                            shift = shift.max(s);
+                        }
+                    }
+                    last_shift = shift;
+                    ticks_since_recal = 0;
+                } else {
+                    ticks_since_recal += 1;
+                }
+            },
+        );
+        if let Some(old) = self.mission.lock().expect("mission").replace(clock)
+        {
+            old.stop();
+        }
+    }
+
+    /// Block until a bounded mission reaches its horizon (immediately
+    /// returns when no mission is running). Returns the simulated
+    /// uptime the mission has accumulated, ns.
+    pub fn mission_wait(&self) -> f64 {
+        let guard = self.mission.lock().expect("mission");
+        match guard.as_ref() {
+            Some(c) => {
+                c.wait_done();
+                c.sim_elapsed_ns()
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Stop the mission clock and quiesce its in-flight tick (no-op
+    /// when none is running).
+    pub fn stop_mission(&self) {
+        if let Some(c) = self.mission.lock().expect("mission").take() {
+            c.stop();
+        }
+    }
+
     /// Graceful drain: stop admissions immediately, let queued frames
     /// finish until `deadline` of wall time has passed, shed whatever
     /// remains ([`ShedReason::Draining`] — every admitted frame still
@@ -614,6 +869,7 @@ impl StreamServer {
         self.shared.accepting.store(false, Ordering::Release);
         *self.shared.drain_deadline.lock().expect("drain deadline") =
             Some(t0 + deadline);
+        self.stop_mission();
         self.stop_scrubber();
         while self.shared.total_depth() > 0 && t0.elapsed() < deadline {
             std::thread::sleep(Duration::from_millis(1));
@@ -663,6 +919,18 @@ struct Worker {
     spec: StreamSpec,
     faults: Option<FaultPlan>,
     scrub_policy: ScrubPolicy,
+    /// Wear-budget SLO knobs (DESIGN.md S22).
+    endurance: EndurancePolicy,
+    /// Write pulses accumulated by *previous* replicas on this die.
+    /// A restart rebuilds the model but reprograms the same physical
+    /// array, so the ledger carries across — wear never resets.
+    wear_carry: u64,
+    /// Scrub requests seen (fired or throttled) — the phase of the
+    /// wear-stretched scrub schedule.
+    scrub_round: u64,
+    /// Encoded calibration frame sets, built lazily on the first
+    /// `Recalibrate` job (sized like EX4's recalibration arm).
+    calib_frames: Option<Vec<Vec<Vec<u32>>>>,
     shared: Arc<ServeShared>,
     metrics: Arc<Metrics>,
     status: mpsc::Sender<StatusMsg>,
@@ -676,6 +944,8 @@ fn worker_loop(
 ) {
     let mut window_prev = wk.metrics.snapshot();
     let mut window_at = Instant::now();
+    // Initial programming pulses are already on the wear ledger.
+    wk.publish_wear();
     loop {
         match rx.recv_timeout(idle_tick) {
             Ok(job) => wk.handle(job),
@@ -718,33 +988,123 @@ impl Worker {
                 self.metrics.record_fault_injection(flips, dt_ns);
                 let _ = reply.send(flips);
             }
-            StreamJob::Scrub { reply } => {
-                // S20 span (stage 0 = in-worker scrub execution; the
-                // background tick records stage 1).
-                let mut span = obs::Span::begin(TraceKind::ScrubPass, 0);
-                let out = match self.rel.as_mut() {
-                    Some(ctx) => {
-                        let o = self.mlp.scrub(
-                            &mut ctx.states,
-                            &ctx.golden,
-                            &ctx.wp,
-                        );
-                        let busy = ctx.policy.scrub_duration_ns
-                            * ctx.n_macros as f64;
-                        self.metrics.record_scrub(
-                            o.mismatched as u64,
-                            o.repaired as u64,
-                            o.energy_fj,
-                            busy,
-                        );
-                        o
-                    }
-                    None => ScrubOutcome::default(),
-                };
-                span.note(0.0, out.repaired as f64);
-                let _ = reply.send(out); // background ticks don't wait
-            }
+            StreamJob::Scrub { reply } => self.handle_scrub(reply),
+            StreamJob::Recalibrate { reply } => self.handle_recalibrate(reply),
         }
+    }
+
+    /// The die's cumulative write-pulse ledger: every pulse issued by
+    /// this replica plus everything carried over from replicas the
+    /// supervisor has since rebuilt (same physical array).
+    fn die_pulses(&self) -> u64 {
+        self.wear_carry + self.mlp.write_pulses()
+    }
+
+    /// Publish the wear ledger to [`Metrics`] and the S20 trace ring.
+    fn publish_wear(&self) {
+        let pulses = self.die_pulses();
+        let wear = self.endurance.wear(pulses);
+        self.metrics.set_worker_wear(self.w, pulses, wear);
+        obs::counter(TraceKind::WearFraction, self.w as u16, wear);
+    }
+
+    /// One scrub request under the wear-budget SLO (DESIGN.md S22):
+    /// past the ceiling the worker degrades instead of scrubbing; in
+    /// the throttle band only every `stretch`-th round fires.
+    fn handle_scrub(&mut self, reply: mpsc::Sender<ScrubOutcome>) {
+        let round = self.scrub_round;
+        self.scrub_round += 1;
+        if self.rel.is_none() {
+            let _ = reply.send(ScrubOutcome::default());
+            return;
+        }
+        let wear = self.endurance.wear(self.die_pulses());
+        if self.endurance.should_degrade(wear) {
+            // The die is spent: restarting cannot help (same physical
+            // array), so report wear_out and take the S21 Degrade
+            // path — shed frames, keep draining session state, and
+            // stop burning write pulses.
+            if !self.degraded {
+                let (vtx, vrx) = mpsc::channel();
+                if self
+                    .status
+                    .send(StatusMsg {
+                        worker: self.w,
+                        wear_out: true,
+                        reply: vtx,
+                    })
+                    .is_ok()
+                {
+                    let _ = vrx.recv();
+                }
+                self.degraded = true;
+            }
+            self.publish_wear();
+            let _ = reply.send(ScrubOutcome::default());
+            return;
+        }
+        if !self.endurance.scrub_this_round(wear, round) {
+            // Budget throttle: the scrub interval stretches as the
+            // wear budget depletes; a skipped round costs no pulses.
+            self.metrics.record_scrub_skip();
+            self.publish_wear();
+            let _ = reply.send(ScrubOutcome::default());
+            return;
+        }
+        // S20 span (stage 0 = in-worker scrub execution; the
+        // background tick records stage 1).
+        let mut span = obs::Span::begin(TraceKind::ScrubPass, 0);
+        let out = {
+            let ctx = self.rel.as_mut().expect("fault plan checked above");
+            let o = self.mlp.scrub(&mut ctx.states, &ctx.golden, &ctx.wp);
+            let busy = ctx.policy.scrub_duration_ns * ctx.n_macros as f64;
+            self.metrics.record_scrub(
+                o.mismatched as u64,
+                o.repaired as u64,
+                o.energy_fj,
+                busy,
+            );
+            o
+        };
+        span.note(0.0, out.repaired as f64);
+        self.publish_wear();
+        let _ = reply.send(out); // background ticks don't wait
+    }
+
+    /// One online recalibration (DESIGN.md S22): stream the spec's
+    /// calibration set through the *drifted* replica, re-derive λ per
+    /// hidden layer, and reply with the largest relative λ shift. No
+    /// write pulses — λ lives in the digital periphery, not the array.
+    fn handle_recalibrate(&mut self, reply: mpsc::Sender<f64>) {
+        if self.calib_frames.is_none() {
+            let enc = FrameEncoder::new(
+                TemporalCode::Rate,
+                self.spec.stream.t_steps,
+                255,
+            );
+            let n = self.spec.calib.len().min(8);
+            self.calib_frames = Some(
+                (0..n)
+                    .map(|i| enc.encode_frames(&self.spec.calib.features_u8(i)))
+                    .collect(),
+            );
+        }
+        let old = self.mlp.lambdas();
+        let sets = self.calib_frames.as_ref().expect("built above");
+        let new = self.mlp.recalibrate(sets, self.spec.stream.theta_pct);
+        let shift = old
+            .iter()
+            .zip(&new)
+            .map(|(&o, &n)| {
+                if o.abs() > 1e-12 {
+                    ((n - o) / o).abs()
+                } else {
+                    0.0
+                }
+            })
+            .fold(0.0f64, f64::max);
+        self.metrics.record_recalibration(shift);
+        let _ = reply.send(shift);
     }
 
     fn shed(
@@ -834,6 +1194,7 @@ impl Worker {
                         .status
                         .send(StatusMsg {
                             worker: self.w,
+                            wear_out: false,
                             reply: vtx,
                         })
                         .ok()
@@ -848,8 +1209,16 @@ impl Worker {
                                 self.w,
                             ) {
                                 Ok((m, r)) => {
+                                    // Wear ledger (DESIGN.md S22): the
+                                    // rebuilt replica reprograms the
+                                    // SAME physical die, so the old
+                                    // replica's pulses carry over
+                                    // before the model is replaced.
+                                    self.wear_carry +=
+                                        self.mlp.write_pulses();
                                     self.mlp = m;
                                     self.rel = r;
+                                    self.publish_wear();
                                     self.metrics.record_restart();
                                     let mut sp = obs::Span::begin(
                                         TraceKind::WorkerRestart,
@@ -1233,6 +1602,155 @@ mod tests {
             assert!(Instant::now() < deadline, "window never published");
             std::thread::sleep(Duration::from_millis(2));
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn mission_clock_drives_drift_with_no_explicit_drift_calls() {
+        use crate::device::RetentionParams;
+        let plan = FaultPlan::drift_only(RetentionParams::stress(), 41);
+        let tau = plan.retention.tau_ret_ns();
+        let server = StreamServer::start(
+            spec(43),
+            StreamServerConfig {
+                workers: 1,
+                faults: Some(plan),
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        server.start_mission(MissionConfig {
+            period: Duration::from_millis(1),
+            sim_dt_ns: tau,
+            horizon: 4,
+            mode: MissionMode::ScrubOnly,
+            shift_eps: 0.01,
+        });
+        let sim_ns = server.mission_wait();
+        assert!(
+            (sim_ns - 4.0 * tau).abs() < 1e-3,
+            "uptime = horizon × dt exactly, got {sim_ns}"
+        );
+        let snap = server.metrics.snapshot();
+        assert!(
+            (snap.sim_time_ns - 4.0 * tau).abs() < 1e-3,
+            "every tick's drift landed on the worker"
+        );
+        assert!(snap.flips_injected > 0, "stress drift at t=τ must flip");
+        assert_eq!(snap.scrubs, 4, "scrub-only arm scrubs every tick");
+        assert_eq!(snap.flips_repaired, snap.flips_detected);
+        assert!(snap.wear_pulses.first().copied().unwrap_or(0) > 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn adaptive_mission_recalibrates_under_pure_gain_drift() {
+        // Frozen retention + strong gain walk: scrub passes find
+        // nothing (codes match golden), so the adaptive controller
+        // must escalate to recalibration on ScrubOutcome evidence.
+        let plan = FaultPlan::gain_only(0.5, 47);
+        let server = StreamServer::start(
+            spec(53),
+            StreamServerConfig {
+                workers: 1,
+                faults: Some(plan),
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        server.start_mission(MissionConfig {
+            period: Duration::from_millis(1),
+            sim_dt_ns: 3.6e12, // one simulated hour per tick
+            horizon: 3,
+            mode: MissionMode::Adaptive,
+            shift_eps: 0.01,
+        });
+        server.mission_wait();
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.flips_injected, 0, "frozen corner cannot flip");
+        assert_eq!(snap.flips_repaired, 0, "scrub is a no-op under gain");
+        assert!(snap.scrubs >= 1, "adaptive arm still probes via scrub");
+        assert!(
+            snap.recalibrations >= 1,
+            "zero-mismatch scrub evidence must trigger recalibration"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn wear_ledger_survives_a_worker_restart() {
+        let sp = spec(59);
+        let fresh_pulses = sp.build().unwrap().write_pulses();
+        assert!(fresh_pulses > 0, "deploy programs the arrays");
+        let server = StreamServer::start(
+            sp,
+            StreamServerConfig {
+                workers: 1,
+                chaos: Some(ChaosPlan::every(2)),
+                restart: RestartPolicy {
+                    max_restarts: 100,
+                    backoff: Duration::from_millis(1),
+                    backoff_max: Duration::from_millis(2),
+                },
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let id = server.open_session();
+        server.frame(id, vec![0, 1]); // attempt 1: clean
+        server.frame(id, vec![0, 1]); // attempt 2: panic → restart → retry
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.restarts, 1, "chaos every-2 earns one restart");
+        // The rebuilt replica reprogrammed the same die: the ledger
+        // holds the old replica's pulses PLUS the reprogramming.
+        assert_eq!(
+            snap.wear_pulses.first().copied(),
+            Some(2 * fresh_pulses),
+            "restart must not reset the die's accumulated write pulses"
+        );
+        assert!(snap.wear_fraction.first().copied().unwrap_or(0.0) > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn wear_ceiling_degrades_the_worker_instead_of_scrubbing() {
+        use crate::device::{EnduranceParams, RetentionParams};
+        let plan = FaultPlan::drift_only(RetentionParams::standard(), 7);
+        let server = StreamServer::start(
+            spec(89),
+            StreamServerConfig {
+                workers: 1,
+                faults: Some(plan),
+                // A 10-cycle rating: initial programming alone blows
+                // through the 0.9 ceiling.
+                endurance: EndurancePolicy {
+                    endurance: EnduranceParams { rated_cycles: 10 },
+                    ..EndurancePolicy::standard()
+                },
+                ..StreamServerConfig::default()
+            },
+        )
+        .unwrap();
+        let out = server.scrub_now();
+        assert_eq!(out, ScrubOutcome::default(), "no scrub past the ceiling");
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.scrubs, 0, "a spent die is never scrubbed");
+        assert_eq!(
+            snap.degraded_workers, 1,
+            "wear-out must degrade via the S21 supervisor path"
+        );
+        assert_eq!(snap.wear_fraction.first().copied(), Some(1.0));
+        // Degraded worker sheds frames but still drains state.
+        let id = server.open_session();
+        let rx = server.submit_frame(id, vec![0, 2]);
+        match rx.recv().expect("outcome") {
+            FrameOutcome::Shed { reason, .. } => {
+                assert_eq!(reason, ShedReason::RestartBudget)
+            }
+            FrameOutcome::Served(_) => panic!("degraded worker served"),
+        }
+        let fin = server.finish(id);
+        assert_eq!(fin.t, 0);
         server.shutdown();
     }
 

@@ -445,6 +445,27 @@ impl SpikingMlp {
             .collect()
     }
 
+    /// Total SOT write pulses issued across every deployed shard array
+    /// (DESIGN.md S22): programming at deploy plus every scrub rewrite
+    /// since — the die's endurance ledger, fed to
+    /// [`EnduranceParams::wear`](crate::device::EnduranceParams::wear).
+    pub fn write_pulses(&self) -> u64 {
+        self.stages
+            .iter()
+            .flat_map(|s| s.stage.macros())
+            .map(|m| m.xbar.write_pulses)
+            .sum()
+    }
+
+    /// Current per-layer normalization thresholds λ_l (hidden stages
+    /// only — the values [`recalibrate`](Self::recalibrate) re-derives).
+    /// The adaptive endurance controller compares successive snapshots
+    /// to decide whether gain drift is still moving the operating point.
+    pub fn lambdas(&self) -> Vec<f64> {
+        let ns = self.stages.len();
+        self.stages[..ns - 1].iter().map(|s| s.lif.v_th).collect()
+    }
+
     /// One [`FaultState`] per deployed shard macro (stage-major), each
     /// with a deterministic per-macro RNG stream forked from the plan's
     /// seed — two models built from the same spec and plan see

@@ -271,6 +271,24 @@ impl Crossbar {
         self.rebuild_cache();
     }
 
+    /// Scale every junction's R_P by one uniform factor (DESIGN.md
+    /// S22 gain drift): the die-level analog gain moves while the
+    /// stored codes stay exactly right, so a verify-and-rewrite scrub
+    /// finds nothing to fix — only per-layer recalibration compensates.
+    /// Breaks `uniform_levels()` for any `r_scale != 1`; no wear (the
+    /// free layers never switch).
+    pub fn scale_gain(&mut self, r_scale: f64) {
+        assert!(r_scale > 0.0, "resistance scale must be positive");
+        if r_scale == 1.0 {
+            return;
+        }
+        for c in self.cells.iter_mut() {
+            c.j1.r_p_mohm *= r_scale;
+            c.j2.r_p_mohm *= r_scale;
+        }
+        self.rebuild_cache();
+    }
+
     /// Verify-and-rewrite the array against a golden code snapshot:
     /// each mismatched junction gets verified SOT pulses at 1.5·I_c0
     /// overdrive (deterministic switching), charging I²·R·t energy and
@@ -544,6 +562,34 @@ mod tests {
         assert_eq!(xb.codes()[0], 0);
         assert_eq!(xb.codes()[5], 3);
         assert_eq!(xb.write_pulses, pulses);
+    }
+
+    #[test]
+    fn scale_gain_is_uniform_wearless_and_scrubproof() {
+        use crate::device::write::SotWriteParams;
+        let c = small_cfg(8, 8);
+        let mut xb = Crossbar::new(&c);
+        let golden: Vec<u8> = (0..64).map(|i| (i % 4) as u8).collect();
+        xb.program_codes(&golden);
+        let g_before = xb.conductances().to_vec();
+        let pulses = xb.write_pulses;
+        // R scaled up 25 % ⇒ conductance down by exactly 1/1.25.
+        xb.scale_gain(1.25);
+        assert_eq!(xb.read_codes(), golden, "codes never move");
+        assert_eq!(xb.write_pulses, pulses, "no wear");
+        assert!(!xb.uniform_levels());
+        for (g, g0) in xb.conductances().iter().zip(&g_before) {
+            assert!((g / g0 - 1.0 / 1.25).abs() < 1e-12);
+        }
+        // The codes are golden, so a scrub pass is a certain no-op.
+        let mut rng = Rng::new(1);
+        let out = xb.scrub_to(&golden, &SotWriteParams::default(), &mut rng);
+        assert_eq!(out.mismatched, 0);
+        assert_eq!(out.energy_fj, 0.0);
+        // Unity scale is an exact no-op (no cache churn either).
+        let g_now = xb.conductances().to_vec();
+        xb.scale_gain(1.0);
+        assert_eq!(xb.conductances(), g_now.as_slice());
     }
 
     #[test]

@@ -4,8 +4,8 @@
 //! corruption sampler. These are the algebraic guarantees every higher
 //! layer (fault runtime, scrubber, EX4) silently leans on.
 
-use spikemram::coordinator::ScrubPolicy;
-use spikemram::device::retention::corrupt_codes;
+use spikemram::coordinator::{EndurancePolicy, ScrubPolicy};
+use spikemram::device::retention::{corrupt_codes, EnduranceParams};
 use spikemram::device::RetentionParams;
 use spikemram::util::rng::Rng;
 
@@ -149,6 +149,81 @@ fn corrupt_codes_is_deterministic_for_a_fixed_seed() {
         reference.f64();
     }
     assert_eq!(rng.f64(), reference.f64(), "two draws per cell, no more");
+}
+
+#[test]
+fn wear_is_monotone_and_saturates_at_rated_cycles() {
+    let mut rng = Rng::new(0xead_beef);
+    for _ in 0..64 {
+        let rated = 1 + rng.below(1_000_000_000);
+        let e = EnduranceParams {
+            rated_cycles: rated,
+        };
+        // Monotone over a grid spanning fresh → far past rated life.
+        let mut prev = -1.0;
+        for mult in
+            [0.0, 1e-6, 1e-3, 0.1, 0.5, 0.999, 1.0, 1.5, 8.0, 1e3]
+        {
+            let w = e.wear((rated as f64 * mult) as u64);
+            assert!(
+                (0.0..=1.0).contains(&w),
+                "rated={rated} mult={mult}: wear={w} outside [0, 1]"
+            );
+            assert!(
+                w >= prev,
+                "rated={rated} mult={mult}: wear not monotone"
+            );
+            prev = w;
+        }
+        // Exact endpoints: a fresh die is unworn; at the rated count
+        // the budget is spent; past it the fraction saturates — it
+        // never reads past 100 % no matter how long a mission runs.
+        assert_eq!(e.wear(0), 0.0);
+        assert_eq!(e.wear(rated), 1.0);
+        assert_eq!(e.wear(rated.saturating_mul(1000)), 1.0);
+        assert_eq!(e.wear(u64::MAX), 1.0);
+    }
+}
+
+#[test]
+fn endurance_policy_stretch_is_monotone_between_its_anchors() {
+    let pol = EndurancePolicy::standard();
+    let mut prev = 0.0;
+    for i in 0..=1000 {
+        let wear = i as f64 / 1000.0;
+        let s = pol.stretch(wear);
+        assert!(
+            (1.0..=pol.max_stretch).contains(&s),
+            "wear={wear}: stretch={s} outside [1, max]"
+        );
+        assert!(s >= prev, "wear={wear}: stretch not monotone");
+        prev = s;
+    }
+    // Anchors: nominal schedule below the throttle knee, full stretch
+    // at (and past) the ceiling.
+    assert_eq!(pol.stretch(0.0), 1.0);
+    assert_eq!(pol.stretch(pol.throttle_start), 1.0);
+    assert_eq!(pol.stretch(pol.wear_ceiling), pol.max_stretch);
+    assert_eq!(pol.stretch(1.0), pol.max_stretch);
+
+    // The round gate: every round at nominal wear, never once the
+    // ceiling forces the degrade path instead.
+    for round in 0..32 {
+        assert!(pol.scrub_this_round(0.0, round));
+        assert!(!pol.scrub_this_round(pol.wear_ceiling, round));
+    }
+    // In the throttle band the gate fires exactly on multiples of the
+    // rounded stretch — deterministic, so identical wear trajectories
+    // make identical schedules.
+    let wear = 0.7;
+    let s = pol.stretch(wear).round().max(1.0) as u64;
+    assert!(s > 1, "0.7 wear must throttle under the standard policy");
+    for round in 0..64 {
+        assert_eq!(pol.scrub_this_round(wear, round), round % s == 0);
+    }
+    assert!(!pol.should_degrade(pol.wear_ceiling - 1e-9));
+    assert!(pol.should_degrade(pol.wear_ceiling));
+    assert!(pol.should_degrade(1.0));
 }
 
 #[test]
