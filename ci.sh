@@ -92,6 +92,35 @@ echo "==> EX6 endurance smoke sweep (S22 mission-clock runtime)"
 cargo run --release --quiet -- endurance --seed 7 --train 60 --test 10 --epochs 2
 ls -l results/ex6_endurance.csv BENCH_endurance.json
 
+echo "==> EX7 serving smoke sweep (S23 wire front end over loopback TCP)"
+# A small open-loop sweep through the release binary where every frame
+# crosses a real TCP socket: calibrate wire capacity, offer 0.5x..4x,
+# drain each point gracefully. Hard-fails if the CSV or the
+# machine-readable record does not land.
+cargo run --release --quiet -- serving --seed 7 --frames 24
+ls -l results/ex7_serving.csv BENCH_serving.json
+
+echo "==> S23 net smoke: serve --listen + loadgen against a live server"
+# Boot the stream backend on an ephemeral loopback port in the
+# background, wait for the bound address to land in the addr file,
+# drive a short closed-loop burst through `spikemram loadgen`, then
+# stop the server with a wire drain and reap it. `wait` propagates a
+# non-zero exit from the server process (set -e makes that fatal).
+NET_ADDR_FILE="$(mktemp)"
+rm -f "$NET_ADDR_FILE"
+cargo run --release --quiet -- serve --backend stream --seed 7 \
+    --listen 127.0.0.1:0 --listen-addr-file "$NET_ADDR_FILE" &
+NET_PID=$!
+for _ in $(seq 1 100); do
+    [ -s "$NET_ADDR_FILE" ] && break
+    sleep 0.1
+done
+[ -s "$NET_ADDR_FILE" ] || { echo "serve --listen never bound"; exit 1; }
+cargo run --release --quiet -- loadgen --connect "$(cat "$NET_ADDR_FILE")" \
+    --mode closed --connections 2 --frames 8 --drain
+wait "$NET_PID"
+rm -f "$NET_ADDR_FILE"
+
 echo "==> S21 chaos soak (panic isolation, restart, accounting closure)"
 # Re-runs the supervision chaos tests under the release-profile lib on
 # top of their tier-1 (dev-profile) run: injected panics, bitwise

@@ -1,0 +1,110 @@
+//! Wire front-end walkthrough (DESIGN.md S23): boot a streaming
+//! backend behind the TCP server on a loopback ephemeral port, then
+//! talk to it the way a remote client would — open a session, stream
+//! rate-coded event frames, read the evidence back frame by frame,
+//! query the server's metrics document, and drain it gracefully.
+//!
+//! ```bash
+//! cargo run --release --example net_client
+//! ```
+//!
+//! The same protocol works across machines: run `spikemram serve
+//! --backend stream --listen 0.0.0.0:7070` on the server side and
+//! point [`NetClient::connect`] (or `spikemram loadgen --connect`) at
+//! it.
+
+use anyhow::Result;
+
+use spikemram::config::{
+    FabricConfig, LevelMap, MacroConfig, StreamConfig,
+};
+use spikemram::net::{NetBackend, NetClient, NetServer, Response};
+use spikemram::snn::{Dataset, Mlp};
+use spikemram::stream::{
+    FrameEncoder, StreamServer, StreamServerConfig, StreamSpec, TemporalCode,
+};
+
+fn main() -> Result<()> {
+    // Server side: the digit MLP on a 2×2 mesh, a streaming session
+    // server over it, and the wire front end on an ephemeral port. In
+    // production these live in another process (`spikemram serve
+    // --listen`); in-process keeps the example self-contained.
+    let t_steps = 8;
+    let spec = StreamSpec {
+        model: Mlp::new(42 ^ 0x7),
+        calib: Dataset::generate(24, 42),
+        mcfg: MacroConfig::default(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig {
+            t_steps,
+            ..StreamConfig::default()
+        },
+    };
+    let backend = StreamServer::start(spec, StreamServerConfig::default())?;
+    let net = NetServer::start(NetBackend::Stream(backend), "127.0.0.1:0")?;
+    let addr = net.addr().to_string();
+    println!("serving on {addr}");
+
+    // Client side: plain blocking TCP, one frame per request.
+    let mut client = NetClient::connect(&addr)?;
+    let session = client.open_session()?;
+    println!("opened session {session}");
+
+    let digits = Dataset::generate(1, 4242);
+    let label = digits.examples[0].label;
+    let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);
+    let frames = enc.encode_frames(&digits.features_u8(0));
+    println!("\nstreaming digit {label} over {t_steps} timesteps:");
+    println!("{:>4} {:>8} {:>8}", "t", "events", "argmax");
+    for f in &frames {
+        match client.stream_frame(session, f.clone())? {
+            Response::Frame { t, label, .. } => {
+                println!("{t:>4} {:>8} {label:>8}", f.len());
+            }
+            Response::Shed {
+                reason,
+                retry_after_ms,
+            } => {
+                // Near capacity this is the expected backpressure
+                // signal; a real client would sleep and resubmit.
+                println!(
+                    "   shed ({reason}), retry after {retry_after_ms:.2} ms"
+                );
+            }
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+    let (t, out_v, predicted) = client.close_session(session)?;
+    let best = out_v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nafter {t} steps: predicted {predicted} (true {label}), \
+         top evidence {best:.3}"
+    );
+
+    // The server's whole metrics document travels over the same wire.
+    let snapshot = client.metrics()?;
+    let requests = snapshot
+        .get("requests")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    let wire_requests = snapshot
+        .get("net")
+        .and_then(|n| n.get("wire_requests"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    println!(
+        "server saw {requests} backend requests \
+         ({wire_requests} frames on the wire)"
+    );
+
+    // Graceful shutdown over the wire: live connections close on
+    // frame boundaries and the server reports whether the drain shed
+    // anything.
+    let (drain_ms, shed, clean) = client.drain(10_000.0)?;
+    println!(
+        "drained in {drain_ms:.1} ms (shed {shed}, clean {clean})"
+    );
+    net.wait();
+    Ok(())
+}

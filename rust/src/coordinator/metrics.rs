@@ -84,6 +84,11 @@ struct Inner {
     /// Detached pool tasks that panicked (gauge; callers fold in the
     /// cumulative `util::pool::panics()` via max).
     pool_panics: u64,
+    // --- network front end (S23) ---
+    wire_requests: u64,
+    wire_sheds: u64,
+    wire_disconnects: u64,
+    wire_malformed: u64,
     /// Last stored windowed report (periodic worker reports, S21).
     window: Option<MetricsSnapshot>,
 }
@@ -194,6 +199,18 @@ pub struct MetricsSnapshot {
     pub degraded_workers: u64,
     /// Detached pool tasks that panicked since process start (gauge).
     pub pool_panics: u64,
+    /// Requests decoded off the wire by the network front end (S23;
+    /// counts every well-formed frame, whatever the backend then said).
+    pub wire_requests: u64,
+    /// Shed responses written back over the wire (admission refusals
+    /// and dequeue drops, as seen by remote clients).
+    pub wire_sheds: u64,
+    /// Connections that ended without a `Drain`/orderly close — peer
+    /// hangup, I/O error, or a frame so damaged the stream desynced.
+    pub wire_disconnects: u64,
+    /// Frames rejected by the codec (bad length prefix, oversized,
+    /// invalid UTF-8, JSON parse failure, unknown request shape).
+    pub wire_malformed: u64,
 }
 
 impl MetricsSnapshot {
@@ -323,6 +340,16 @@ impl MetricsSnapshot {
             scrubs_skipped: self
                 .scrubs_skipped
                 .saturating_sub(prev.scrubs_skipped),
+            wire_requests: self
+                .wire_requests
+                .saturating_sub(prev.wire_requests),
+            wire_sheds: self.wire_sheds.saturating_sub(prev.wire_sheds),
+            wire_disconnects: self
+                .wire_disconnects
+                .saturating_sub(prev.wire_disconnects),
+            wire_malformed: self
+                .wire_malformed
+                .saturating_sub(prev.wire_malformed),
             // Cumulative distributions and gauges: latest view.
             degraded_workers: self.degraded_workers,
             pool_panics: self.pool_panics,
@@ -485,6 +512,24 @@ impl MetricsSnapshot {
                 ]),
             ),
             (
+                "net",
+                json::obj(vec![
+                    (
+                        "wire_requests",
+                        Json::Num(self.wire_requests as f64),
+                    ),
+                    ("wire_sheds", Json::Num(self.wire_sheds as f64)),
+                    (
+                        "wire_disconnects",
+                        Json::Num(self.wire_disconnects as f64),
+                    ),
+                    (
+                        "wire_malformed",
+                        Json::Num(self.wire_malformed as f64),
+                    ),
+                ]),
+            ),
+            (
                 "pool_queue_depth_hw",
                 Json::Num(self.pool_queue_depth_hw as f64),
             ),
@@ -603,6 +648,20 @@ impl MetricsSnapshot {
                 nest("supervision", "pool_panics") as u64
             ));
         }
+        if nest("net", "wire_requests") > 0.0
+            || nest("net", "wire_sheds") > 0.0
+            || nest("net", "wire_disconnects") > 0.0
+            || nest("net", "wire_malformed") > 0.0
+        {
+            out.push_str(&format!(
+                "\nnet: wire_requests={} sheds={} disconnects={} \
+                 malformed={}",
+                nest("net", "wire_requests") as u64,
+                nest("net", "wire_sheds") as u64,
+                nest("net", "wire_disconnects") as u64,
+                nest("net", "wire_malformed") as u64
+            ));
+        }
         if nest("trace", "events") > 0.0
             || nest("trace", "dropped") > 0.0
             || f("pool_queue_depth_hw") > 0.0
@@ -686,6 +745,10 @@ impl Metrics {
                 scrubs_skipped: 0,
                 degraded_workers: 0,
                 pool_panics: 0,
+                wire_requests: 0,
+                wire_sheds: 0,
+                wire_disconnects: 0,
+                wire_malformed: 0,
                 window: None,
             }),
             started: Instant::now(),
@@ -864,6 +927,27 @@ impl Metrics {
         g.pool_panics = g.pool_panics.max(n);
     }
 
+    /// Account one well-formed request decoded off the wire (S23).
+    pub fn record_wire_request(&self) {
+        self.inner.lock().unwrap().wire_requests += 1;
+    }
+
+    /// Account one shed response written back to a remote client.
+    pub fn record_wire_shed(&self) {
+        self.inner.lock().unwrap().wire_sheds += 1;
+    }
+
+    /// Account one connection torn down without an orderly close.
+    pub fn record_wire_disconnect(&self) {
+        self.inner.lock().unwrap().wire_disconnects += 1;
+    }
+
+    /// Account one frame the codec rejected (S23 shed taxonomy for
+    /// bytes: oversized prefix, bad UTF-8, parse failure, bad shape).
+    pub fn record_wire_malformed(&self) {
+        self.inner.lock().unwrap().wire_malformed += 1;
+    }
+
     /// Store a windowed report (S21: workers publish periodic
     /// `snapshot_since` deltas from their idle ticks so an operator —
     /// or a test — can read the last window without a live request).
@@ -935,6 +1019,10 @@ impl Metrics {
             scrubs_skipped: g.scrubs_skipped,
             degraded_workers: g.degraded_workers,
             pool_panics: g.pool_panics,
+            wire_requests: g.wire_requests,
+            wire_sheds: g.wire_sheds,
+            wire_disconnects: g.wire_disconnects,
+            wire_malformed: g.wire_malformed,
         }
     }
 
@@ -1314,6 +1402,50 @@ mod tests {
         m.record_request(5.0);
         m.store_window(m.snapshot_since(&prev));
         assert_eq!(m.last_window().unwrap().requests, 2);
+    }
+
+    #[test]
+    fn wire_counters_accumulate_window_and_show() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("net:"), "silent when zero");
+        m.record_wire_request();
+        m.record_wire_request();
+        m.record_wire_shed();
+        m.record_wire_disconnect();
+        m.record_wire_malformed();
+        let s = m.snapshot();
+        assert_eq!(s.wire_requests, 2);
+        assert_eq!(s.wire_sheds, 1);
+        assert_eq!(s.wire_disconnects, 1);
+        assert_eq!(s.wire_malformed, 1);
+        let txt = m.summary();
+        assert!(
+            txt.contains(
+                "net: wire_requests=2 sheds=1 disconnects=1 malformed=1"
+            ),
+            "{txt}"
+        );
+        // The JSON section carries the same numbers and round-trips.
+        let j = s.to_json();
+        let back = json::parse(&j.to_string()).expect("round trip");
+        let nest = |k: &str| {
+            back.get("net")
+                .and_then(|o| o.get(k))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(nest("wire_requests"), 2.0);
+        assert_eq!(nest("wire_sheds"), 1.0);
+        assert_eq!(nest("wire_disconnects"), 1.0);
+        assert_eq!(nest("wire_malformed"), 1.0);
+        // Windowed view differences like every other counter.
+        let prev = m.snapshot();
+        m.record_wire_request();
+        m.record_wire_malformed();
+        let w = m.snapshot_since(&prev);
+        assert_eq!(w.wire_requests, 1);
+        assert_eq!(w.wire_sheds, 0);
+        assert_eq!(w.wire_malformed, 1);
     }
 
     #[test]

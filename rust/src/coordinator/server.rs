@@ -139,6 +139,14 @@ impl MacroServer {
         })
     }
 
+    /// Input dimension the server was programmed for. The wire front
+    /// end (DESIGN.md S23) validates remote `Infer` vectors against it
+    /// before calling [`submit`](Self::submit), whose length assertion
+    /// is for in-process caller bugs.
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
     /// Submit one input vector; returns a receiver for the MAC result.
     pub fn submit(&self, x: Vec<u32>) -> mpsc::Receiver<Vec<f64>> {
         assert_eq!(x.len(), self.in_dim, "input length");

@@ -123,6 +123,31 @@ pub enum ShedReason {
     RestartBudget,
 }
 
+impl ShedReason {
+    /// Stable wire-protocol name (DESIGN.md S23). The network front
+    /// end sends these in shed responses; clients match on them, so
+    /// they are a compatibility surface — never rename.
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            ShedReason::DeadlineExpired => "deadline",
+            ShedReason::Draining => "draining",
+            ShedReason::RestartBudget => "restart_budget",
+        }
+    }
+
+    /// Inverse of [`wire_name`](Self::wire_name); `None` for unknown
+    /// names (e.g. the admission-level `"queue_full"`, which has no
+    /// dequeue-side variant by design).
+    pub fn from_wire_name(name: &str) -> Option<ShedReason> {
+        match name {
+            "deadline" => Some(ShedReason::DeadlineExpired),
+            "draining" => Some(ShedReason::Draining),
+            "restart_budget" => Some(ShedReason::RestartBudget),
+            _ => None,
+        }
+    }
+}
+
 /// Deterministic fault injection for the chaos tests: makes a worker
 /// panic mid-frame. Two modes:
 ///
@@ -296,6 +321,21 @@ mod tests {
         assert_eq!(p.backoff_for(40), Duration::from_millis(10));
         // attempt 0 behaves like attempt 1 (no underflow).
         assert_eq!(p.backoff_for(0), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn shed_reason_wire_names_round_trip() {
+        for r in [
+            ShedReason::DeadlineExpired,
+            ShedReason::Draining,
+            ShedReason::RestartBudget,
+        ] {
+            assert_eq!(ShedReason::from_wire_name(r.wire_name()), Some(r));
+        }
+        // Admission-level refusals use "queue_full" on the wire but
+        // have no dequeue-side variant to map back to.
+        assert_eq!(ShedReason::from_wire_name("queue_full"), None);
+        assert_eq!(ShedReason::from_wire_name("bogus"), None);
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod energy;
 pub mod event;
 pub mod fabric;
 pub mod macro_model;
+pub mod net;
 pub mod obs;
 pub mod repro;
 pub mod runtime;

@@ -23,6 +23,7 @@ use anyhow::{bail, Context, Result};
 use spikemram::config::{FabricConfig, LevelMap, MacroConfig, TraceConfig};
 use spikemram::coordinator::{BackendKind, MacroServer, Metrics, ServerConfig};
 use spikemram::macro_model::CimMacro;
+use spikemram::net::{NetBackend, NetServer};
 use spikemram::obs;
 use spikemram::repro;
 use spikemram::runtime::{Manifest, Runtime, Value};
@@ -62,6 +63,9 @@ experiments (paper artifacts → results/):
                     across scrub-only/recal-only/adaptive arms, plus the
                     wear-ceiling degrade demo)  [--train N] [--test N]
                     [--epochs N]
+  serving           EX7 network serving sweep over real TCP (p50/p95/p99,
+                    shed rate, energy/request vs offered load through the
+                    S23 wire front end)  [--frames N per connection]
 
 operations:
   mvm        run one 128×128 macro MVM   [--seed N] [--backend sim|pjrt]
@@ -78,6 +82,15 @@ operations:
               mission clock [--hours H simulated] [--uptime-factor F
               simulated ns per wall ns, default 1e9]
               [--mission scrub|recal|adaptive] [--gain-sigma S])
+             network mode: [--listen HOST:PORT] exposes the backend over
+             the S23 wire protocol instead of running the demo workload
+             (port 0 picks an ephemeral port; [--listen-addr-file PATH]
+             writes the bound address for scripts); stop it with a wire
+             `drain` request (e.g. `spikemram loadgen --drain`)
+  loadgen    closed-loop load harness against a live `serve --listen`
+             endpoint  [--connect HOST:PORT] [--mode closed|open]
+             [--connections N] [--frames N per connection] [--rps R]
+             [--churn N] [--deadline-ms MS] [--steps T] [--drain]
   trace      serve a short synthetic stream workload with full tracing
              on and write a Perfetto/Chrome trace_event JSON
              (default results/trace_<seed>.json)  [--sessions S]
@@ -184,9 +197,17 @@ fn main() -> Result<()> {
             let p = repro::endurance::write_bench_record(&sweep);
             println!("bench record: {}", p.display());
         }
+        "serving" => {
+            let frames = args.get_usize("frames", 48);
+            let sweep = repro::serving::run(seed, frames);
+            println!("{}", repro::serving::render(&sweep));
+            let p = repro::serving::write_bench_record(&sweep);
+            println!("bench record: {}", p.display());
+        }
         "mvm" => cmd_mvm(&args, &cfg, seed)?,
         "snn" => cmd_snn(&args, &cfg, seed)?,
         "serve" => cmd_serve(&args, &cfg, seed)?,
+        "loadgen" => cmd_loadgen(&args, seed)?,
         "trace" => cmd_trace(&args, &cfg, seed)?,
         "selfcheck" => cmd_selfcheck(&args, &cfg, seed)?,
         other => {
@@ -358,6 +379,13 @@ fn cmd_serve(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         _ => (cfg.rows, random_codes(cfg, &mut rng)),
     };
     let server = MacroServer::start(cfg.clone(), codes, scfg)?;
+    if let Some(listen) = args.get("listen") {
+        return serve_listen(
+            NetBackend::Macro(server),
+            listen,
+            args.get("listen-addr-file"),
+        );
+    }
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|_| {
@@ -480,6 +508,13 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         );
         server.start_mission(mcfg);
     }
+    if let Some(listen) = args.get("listen") {
+        return serve_listen(
+            NetBackend::Stream(server),
+            listen,
+            args.get("listen-addr-file"),
+        );
+    }
 
     let test = snn::Dataset::generate(sessions, seed ^ 0xabcd);
     let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);
@@ -565,6 +600,108 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
         snap.input_density() * 100.0
     );
     server.shutdown();
+    Ok(())
+}
+
+/// `serve --listen` (DESIGN.md S23): park the booted backend behind
+/// the wire front end until a remote `drain` request stops it. The
+/// bound address goes to stdout and — for scripts driving ephemeral
+/// ports — optionally to `--listen-addr-file`.
+fn serve_listen(
+    backend: NetBackend,
+    listen: &str,
+    addr_file: Option<&str>,
+) -> Result<()> {
+    let net = NetServer::start(backend, listen)?;
+    let addr = net.addr();
+    println!("listening on {addr} (stop with a wire `drain` request)");
+    if let Some(path) = addr_file {
+        std::fs::write(path, addr.to_string())
+            .with_context(|| format!("write {path}"))?;
+    }
+    let metrics = net.metrics();
+    net.wait();
+    println!("drained; all connections closed");
+    println!("{}", metrics.summary());
+    Ok(())
+}
+
+/// `spikemram loadgen` (DESIGN.md S23): drive a live `serve --listen`
+/// endpoint with the closed-loop load harness and print the client-side
+/// report. `--drain` gracefully stops the server afterwards (which lets
+/// a backgrounded `serve --listen` exit).
+fn cmd_loadgen(args: &Args, seed: u64) -> Result<()> {
+    use spikemram::net::{loadgen, LoadGenConfig, LoadMode, NetClient};
+    use spikemram::stream::{FrameEncoder, TemporalCode};
+
+    let connect = match args.get("connect") {
+        Some(a) => a.to_string(),
+        None => bail!(
+            "--connect HOST:PORT is required (boot a server with \
+             `spikemram serve --backend stream --listen 127.0.0.1:0`)"
+        ),
+    };
+    let mode = match args.get_str("mode", "closed").as_str() {
+        "closed" => LoadMode::Closed,
+        "open" => LoadMode::Open,
+        other => bail!("--mode closed|open, got {other:?}"),
+    };
+    let deadline = match args.get("deadline-ms") {
+        Some(ms) => {
+            let ms: f64 =
+                ms.parse().context("--deadline-ms expects a number")?;
+            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+        }
+        None => None,
+    };
+    // Rate-coded frames from the synthetic digit set — the same spike
+    // traffic the EX7 sweep offers.
+    let t_steps = args.get_usize("steps", 4);
+    let data = snn::Dataset::generate(8, seed ^ 0x11);
+    let enc = FrameEncoder::new(TemporalCode::Rate, t_steps, 255);
+    let pool: Vec<Vec<u32>> = (0..data.len())
+        .flat_map(|i| enc.encode_frames(&data.features_u8(i)))
+        .collect();
+    let lcfg = LoadGenConfig {
+        mode,
+        connections: args.get_usize("connections", 4),
+        frames: args.get_usize("frames", 64),
+        target_fps: args.get_f64("rps", 200.0),
+        churn_every: args.get_usize("churn", 0),
+        deadline,
+        events_pool: pool,
+    };
+    let rep = loadgen::run(&connect, &lcfg)?;
+    println!(
+        "loadgen {mode:?} against {connect}: {} offered over {} \
+         connections in {:.2} s",
+        rep.offered,
+        lcfg.connections,
+        rep.wall_s
+    );
+    println!(
+        "  served {} ({:.0} req/s), shed {} ({:.1} %), errors {}, \
+         late {}",
+        rep.served,
+        rep.achieved_rps,
+        rep.shed,
+        rep.shed_rate * 100.0,
+        rep.errors,
+        rep.late
+    );
+    println!(
+        "  latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms; \
+         energy {:.2} pJ/request",
+        rep.p50_ms, rep.p95_ms, rep.p99_ms, rep.energy_pj_per_req
+    );
+    if args.flag("drain") {
+        let mut ctl = NetClient::connect(&connect)?;
+        let (drain_ms, shed, clean) = ctl.drain(10_000.0)?;
+        println!(
+            "drained server in {drain_ms:.1} ms (shed {shed}, clean \
+             {clean})"
+        );
+    }
     Ok(())
 }
 

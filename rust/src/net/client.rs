@@ -1,0 +1,109 @@
+//! Minimal blocking client for the S23 wire protocol — used by the
+//! closed-loop load generator, the e2e tests, and `examples/net_client`.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::proto::{Request, Response};
+use super::wire::{read_frame, write_frame};
+
+/// One connection to a [`NetServer`](super::NetServer). All calls are
+/// synchronous: write one request frame, read one response frame.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream })
+    }
+
+    /// Bound how long [`call`](Self::call) may block on the response.
+    /// `None` waits forever.
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(timeout)
+            .context("set_read_timeout")?;
+        self.stream
+            .set_write_timeout(timeout)
+            .context("set_write_timeout")?;
+        Ok(())
+    }
+
+    /// One request/response round trip.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.to_json())
+            .context("write request frame")?;
+        let j = read_frame(&mut self.stream)
+            .map_err(|e| anyhow!("read response frame: {e}"))?;
+        Response::from_json(&j)
+            .map_err(|msg| anyhow!("bad response frame: {msg}"))
+    }
+
+    /// Dense one-shot inference (macro backends).
+    pub fn infer(&mut self, x: Vec<u32>) -> Result<Vec<f64>> {
+        match self.call(&Request::Infer { x })? {
+            Response::InferOk { y } => Ok(y),
+            other => bail!("unexpected response to infer: {other:?}"),
+        }
+    }
+
+    /// Open a streaming session; returns its id.
+    pub fn open_session(&mut self) -> Result<u64> {
+        match self.call(&Request::OpenSession)? {
+            Response::SessionOpen { session } => Ok(session),
+            other => bail!("unexpected response to open_session: {other:?}"),
+        }
+    }
+
+    /// Submit one event frame. Returns the full [`Response`] because
+    /// shedding is an expected outcome near capacity, not an error.
+    pub fn stream_frame(
+        &mut self,
+        session: u64,
+        events: Vec<u32>,
+    ) -> Result<Response> {
+        self.call(&Request::StreamFrame { session, events })
+    }
+
+    /// Close a session; returns `(t, out_v, label)` of the final reply.
+    pub fn close_session(
+        &mut self,
+        session: u64,
+    ) -> Result<(u64, Vec<f64>, u64)> {
+        match self.call(&Request::CloseSession { session })? {
+            Response::SessionClosed { t, out_v, label, .. } => {
+                Ok((t, out_v, label))
+            }
+            other => bail!("unexpected response to close_session: {other:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics snapshot document.
+    pub fn metrics(&mut self) -> Result<Json> {
+        match self.call(&Request::MetricsQuery)? {
+            Response::MetricsOk { snapshot } => Ok(snapshot),
+            other => bail!("unexpected response to metrics: {other:?}"),
+        }
+    }
+
+    /// Drain the server within `deadline_ms`; returns
+    /// `(drain_ms, shed, clean)`.
+    pub fn drain(&mut self, deadline_ms: f64) -> Result<(f64, u64, bool)> {
+        match self.call(&Request::Drain { deadline_ms })? {
+            Response::DrainOk {
+                drain_ms,
+                shed,
+                clean,
+            } => Ok((drain_ms, shed, clean)),
+            other => bail!("unexpected response to drain: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Closed-loop load generator for the S23 wire front end.
+//!
+//! Drives a live `spikemram serve --listen` endpoint over real TCP
+//! with N concurrent connections, each running one streaming session,
+//! and reports client-observed latency percentiles, shed rate, and
+//! server-side energy per request (from `metrics` snapshot deltas).
+//!
+//! Two drive modes:
+//!
+//! * **closed** — each connection keeps exactly one request in flight
+//!   (send, wait, repeat). Measures the server's native service
+//!   latency; offered load self-limits to capacity.
+//! * **open** — arrivals are paced toward `target_fps` on an
+//!   *absolute-due* schedule interleaved across connections (the k-th
+//!   global arrival is due at `k / target_fps`; connection `tid` takes
+//!   every `connections`-th slot), so a slow reply doesn't silently
+//!   shift the schedule and the connections don't fire in synchronized
+//!   bursts. Latency is measured from the due time, which charges
+//!   queueing delay to the server instead of hiding it
+//!   (coordinated-omission correction). Because each connection is
+//!   synchronous, in-flight load is capped at `connections` — overload
+//!   experiments need `connections` to exceed the server's total queue
+//!   slots.
+//!
+//! Session churn (`churn_every`) closes and reopens the session every
+//! N frames, exercising open/close paths and worker re-pinning under
+//! load.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::stats;
+
+use super::client::NetClient;
+use super::proto::Response;
+
+/// How offered load is generated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMode {
+    /// One request in flight per connection.
+    Closed,
+    /// Paced toward `target_fps`, independent of reply latency.
+    Open,
+}
+
+/// Load-generator knobs. `events_pool` is cycled per connection with a
+/// per-connection offset so concurrent sessions don't submit in
+/// lockstep.
+#[derive(Clone)]
+pub struct LoadGenConfig {
+    pub mode: LoadMode,
+    /// Concurrent TCP connections (one streaming session each).
+    pub connections: usize,
+    /// Frames each connection submits.
+    pub frames: usize,
+    /// Total offered frames/sec across all connections (open mode).
+    pub target_fps: f64,
+    /// Close + reopen the session every N frames (0 = never).
+    pub churn_every: usize,
+    /// Client-side deadline: replies slower than this count as late.
+    pub deadline: Option<Duration>,
+    /// Event frames to submit (cycled). Must be non-empty, and every
+    /// frame valid for the server's `in_dim`.
+    pub events_pool: Vec<Vec<u32>>,
+}
+
+/// Aggregated results of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered: u64,
+    pub served: u64,
+    pub shed: u64,
+    /// Protocol-level error responses (should be 0 in a healthy run).
+    pub errors: u64,
+    /// Served replies that missed the client-side deadline.
+    pub late: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub wall_s: f64,
+    /// Served frames per second of wall time.
+    pub achieved_rps: f64,
+    pub shed_rate: f64,
+    /// Server-side modeled energy per served request over the run
+    /// (pJ), from `metrics` snapshot deltas; 0 when the backend has no
+    /// energy model.
+    pub energy_pj_per_req: f64,
+}
+
+struct ThreadOut {
+    latencies_ms: Vec<f64>,
+    served: u64,
+    shed: u64,
+    errors: u64,
+    late: u64,
+}
+
+fn snap_f64(snapshot: &crate::util::json::Json, key: &str) -> f64 {
+    snapshot.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+}
+
+fn drive_one(
+    addr: &str,
+    cfg: &LoadGenConfig,
+    tid: usize,
+    t0: Instant,
+) -> Result<ThreadOut> {
+    let mut client =
+        NetClient::connect(addr).context("loadgen connect")?;
+    let mut session = client.open_session()?;
+    let mut out = ThreadOut {
+        latencies_ms: Vec::with_capacity(cfg.frames),
+        served: 0,
+        shed: 0,
+        errors: 0,
+        late: 0,
+    };
+    for i in 0..cfg.frames {
+        if cfg.churn_every > 0 && i > 0 && i % cfg.churn_every == 0 {
+            client.close_session(session)?;
+            session = client.open_session()?;
+        }
+        // Absolute-due pacing (open mode): the k-th *global* arrival
+        // is due at k / target_fps past the shared epoch, with the
+        // connections interleaved (k = i·conns + tid) so they don't
+        // fire in synchronized bursts. A slow reply can't stretch the
+        // schedule — a thread behind its due time submits immediately
+        // and the slip is charged to latency (coordinated-omission
+        // correction).
+        let start = if cfg.mode == LoadMode::Open && cfg.target_fps > 0.0 {
+            let k = (i * cfg.connections + tid) as f64;
+            let due = t0 + Duration::from_secs_f64(k / cfg.target_fps);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+                due
+            } else {
+                due
+            }
+        } else {
+            Instant::now()
+        };
+        let events =
+            cfg.events_pool[(i + tid) % cfg.events_pool.len()].clone();
+        match client.stream_frame(session, events)? {
+            Response::Frame { .. } => {
+                let lat = start.elapsed();
+                out.served += 1;
+                out.latencies_ms.push(lat.as_secs_f64() * 1e3);
+                if let Some(d) = cfg.deadline {
+                    if lat > d {
+                        out.late += 1;
+                    }
+                }
+            }
+            Response::Shed { .. } => out.shed += 1,
+            Response::Error { .. } => out.errors += 1,
+            other => {
+                return Err(anyhow!(
+                    "unexpected response to stream_frame: {other:?}"
+                ))
+            }
+        }
+    }
+    client.close_session(session)?;
+    Ok(out)
+}
+
+/// Run one load point against a live server. Opens
+/// `cfg.connections + 1` TCP connections: one per driver thread plus a
+/// control connection for before/after metrics snapshots.
+pub fn run(addr: &str, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    assert!(!cfg.events_pool.is_empty(), "events_pool must be non-empty");
+    assert!(cfg.connections > 0, "need at least one connection");
+    let mut control =
+        NetClient::connect(addr).context("loadgen control connect")?;
+    let snap0 = control.metrics()?;
+    let t0 = Instant::now();
+    let outs: Vec<Result<ThreadOut>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.connections)
+            .map(|tid| {
+                s.spawn(move || drive_one(addr, cfg, tid, t0))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen thread panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap1 = control.metrics()?;
+
+    let mut latencies = Vec::new();
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    let mut errors = 0u64;
+    let mut late = 0u64;
+    for out in outs {
+        let out = out?;
+        latencies.extend(out.latencies_ms);
+        served += out.served;
+        shed += out.shed;
+        errors += out.errors;
+        late += out.late;
+    }
+    let offered = (cfg.connections * cfg.frames) as u64;
+
+    let d_energy_fj =
+        snap_f64(&snap1, "energy_fj") - snap_f64(&snap0, "energy_fj");
+    let d_requests =
+        snap_f64(&snap1, "requests") - snap_f64(&snap0, "requests");
+    let energy_pj_per_req = if d_requests > 0.0 {
+        (d_energy_fj / 1e3 / d_requests).max(0.0)
+    } else {
+        0.0
+    };
+
+    let pct = |p: f64| {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            stats::percentile(&latencies, p)
+        }
+    };
+    Ok(LoadReport {
+        offered,
+        served,
+        shed,
+        errors,
+        late,
+        p50_ms: pct(50.0),
+        p95_ms: pct(95.0),
+        p99_ms: pct(99.0),
+        wall_s,
+        achieved_rps: if wall_s > 0.0 {
+            served as f64 / wall_s
+        } else {
+            0.0
+        },
+        shed_rate: if offered > 0 {
+            shed as f64 / offered as f64
+        } else {
+            0.0
+        },
+        energy_pj_per_req,
+    })
+}

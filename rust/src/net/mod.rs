@@ -1,0 +1,34 @@
+//! S23: network serving front end — a hermetic, std-only wire layer
+//! over the serving backends.
+//!
+//! Layering (bottom up):
+//!
+//! * [`wire`] — length-prefixed JSON framing with hard caps on frame
+//!   size and parse depth; the only layer that touches raw bytes.
+//! * [`proto`] — the typed request/response protocol, strictly
+//!   decoded (unknown types/fields are errors, not warnings).
+//! * [`server`] — blocking thread-per-connection [`NetServer`]
+//!   dispatching onto a [`NetBackend`] (macro one-shot inference or
+//!   streaming sessions), with graceful drain over live connections.
+//! * [`client`] — a minimal synchronous [`NetClient`].
+//! * [`loadgen`] — the closed-loop load harness behind `spikemram
+//!   loadgen` and the EX7 serving sweep.
+//!
+//! Everything rides on `std::net` blocking sockets plus the repo's
+//! threads-and-channels substrate — no async runtime, no external
+//! crates, per the hermetic-build rule (DESIGN.md S0).
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+pub mod wire;
+
+pub use client::NetClient;
+pub use loadgen::{LoadGenConfig, LoadMode, LoadReport};
+pub use proto::{Request, Response, SHED_QUEUE_FULL};
+pub use server::{NetBackend, NetServer};
+pub use wire::{
+    read_frame, write_frame, FrameReader, WireError, MAX_FRAME_BYTES,
+    MAX_FRAME_DEPTH,
+};

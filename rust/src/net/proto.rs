@@ -1,0 +1,516 @@
+//! Typed request/response protocol over the wire framing (DESIGN.md
+//! S23).
+//!
+//! Every frame body is a JSON object with a `"type"` discriminator.
+//! Decoding is *strict*: an unknown `"type"`, an unknown field, or a
+//! field of the wrong shape is an error — the server answers with
+//! [`Response::Error`] rather than guessing, so protocol drift between
+//! client and server versions surfaces immediately instead of as
+//! silently-ignored fields.
+//!
+//! Shed mapping (satellite of S21): every admission-control rejection
+//! crosses the wire as [`Response::Shed`] carrying the supervisor's
+//! [`ShedReason::wire_name`] string — or [`SHED_QUEUE_FULL`] for
+//! queue-full sheds, which are rejected at admission before a reason
+//! is ever attached — plus the EWMA `retry_after` hint in
+//! milliseconds, so a closed-loop client can back off by exactly the
+//! amount the server's service-time estimate suggests.
+//!
+//! [`ShedReason::wire_name`]: crate::coordinator::ShedReason::wire_name
+
+use crate::util::json::{self, Json};
+
+/// Wire name for queue-full sheds (no `ShedReason` exists for these:
+/// the frame is rejected at admission, before a worker ever sees it).
+pub const SHED_QUEUE_FULL: &str = "queue_full";
+
+/// A client-to-server request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// One-shot inference on the macro backend (`sim`/`pjrt`/`fabric`
+    /// serve modes): `x` is a dense spike-count vector of `in_dim`
+    /// entries.
+    Infer { x: Vec<u32> },
+    /// Open a streaming session on the stream backend.
+    OpenSession,
+    /// Submit one event frame (sorted, unique, `< in_dim` indices) to
+    /// an open session.
+    StreamFrame { session: u64, events: Vec<u32> },
+    /// Close a session and collect its final reply.
+    CloseSession { session: u64 },
+    /// Fetch the server's full metrics snapshot as JSON.
+    MetricsQuery,
+    /// Gracefully drain the backend within `deadline_ms`, then stop
+    /// accepting work. Live connections get the drain report.
+    Drain { deadline_ms: f64 },
+}
+
+/// A server-to-client response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Macro inference result: one accumulator per output column.
+    InferOk { y: Vec<f64> },
+    /// A streaming session is open under this id.
+    SessionOpen { session: u64 },
+    /// Per-frame streaming output at step `t`.
+    Frame {
+        session: u64,
+        t: u64,
+        out_v: Vec<f64>,
+        label: u64,
+    },
+    /// Final reply for a closed session.
+    SessionClosed {
+        session: u64,
+        t: u64,
+        out_v: Vec<f64>,
+        label: u64,
+    },
+    /// Metrics snapshot (the `MetricsSnapshot::to_json` document).
+    MetricsOk { snapshot: Json },
+    /// The request was admission-controlled away. `reason` is a
+    /// `ShedReason::wire_name` or [`SHED_QUEUE_FULL`]; `retry_after_ms`
+    /// is the server's EWMA backoff hint.
+    Shed { reason: String, retry_after_ms: f64 },
+    /// Drain completed: how long it took, how many queued items were
+    /// shed on the way down, and whether every worker joined cleanly.
+    DrainOk {
+        drain_ms: f64,
+        shed: u64,
+        clean: bool,
+    },
+    /// The request could not be decoded or is invalid for this
+    /// backend. The connection stays open.
+    Error { msg: String },
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn u64_num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn arr_u32(xs: &[u32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Reject objects carrying fields outside `allowed` — strict decoding
+/// so typos and version drift fail loudly.
+fn expect_keys(
+    o: &std::collections::BTreeMap<String, Json>,
+    allowed: &[&str],
+) -> Result<(), String> {
+    for k in o.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!("unknown field {k:?}"));
+        }
+    }
+    for k in allowed {
+        if !o.contains_key(*k) {
+            return Err(format!("missing field {k:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn get_f64(o: &std::collections::BTreeMap<String, Json>, k: &str) -> Result<f64, String> {
+    o.get(k)
+        .and_then(|v| v.as_f64())
+        .filter(|x| x.is_finite())
+        .ok_or_else(|| format!("field {k:?} must be a finite number"))
+}
+
+fn get_u64(o: &std::collections::BTreeMap<String, Json>, k: &str) -> Result<u64, String> {
+    let x = get_f64(o, k)?;
+    if x < 0.0 || x.fract() != 0.0 || x > u64::MAX as f64 {
+        return Err(format!("field {k:?} must be a non-negative integer"));
+    }
+    Ok(x as u64)
+}
+
+fn get_bool(o: &std::collections::BTreeMap<String, Json>, k: &str) -> Result<bool, String> {
+    match o.get(k) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(format!("field {k:?} must be a bool")),
+    }
+}
+
+fn get_str(o: &std::collections::BTreeMap<String, Json>, k: &str) -> Result<String, String> {
+    o.get(k)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("field {k:?} must be a string"))
+}
+
+fn get_u32_arr(
+    o: &std::collections::BTreeMap<String, Json>,
+    k: &str,
+) -> Result<Vec<u32>, String> {
+    let a = o
+        .get(k)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("field {k:?} must be an array"))?;
+    let mut out = Vec::with_capacity(a.len());
+    for (i, v) in a.iter().enumerate() {
+        let x = v
+            .as_f64()
+            .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+            .filter(|x| *x <= u32::MAX as f64)
+            .ok_or_else(|| format!("{k}[{i}] must be a u32"))?;
+        out.push(x as u32);
+    }
+    Ok(out)
+}
+
+fn get_f64_arr(
+    o: &std::collections::BTreeMap<String, Json>,
+    k: &str,
+) -> Result<Vec<f64>, String> {
+    let a = o
+        .get(k)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("field {k:?} must be an array"))?;
+    let mut out = Vec::with_capacity(a.len());
+    for (i, v) in a.iter().enumerate() {
+        out.push(
+            v.as_f64()
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| format!("{k}[{i}] must be a finite number"))?,
+        );
+    }
+    Ok(out)
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Infer { x } => json::obj(vec![
+                ("type", Json::Str("infer".into())),
+                ("x", arr_u32(x)),
+            ]),
+            Request::OpenSession => {
+                json::obj(vec![("type", Json::Str("open_session".into()))])
+            }
+            Request::StreamFrame { session, events } => json::obj(vec![
+                ("type", Json::Str("stream_frame".into())),
+                ("session", u64_num(*session)),
+                ("events", arr_u32(events)),
+            ]),
+            Request::CloseSession { session } => json::obj(vec![
+                ("type", Json::Str("close_session".into())),
+                ("session", u64_num(*session)),
+            ]),
+            Request::MetricsQuery => {
+                json::obj(vec![("type", Json::Str("metrics".into()))])
+            }
+            Request::Drain { deadline_ms } => json::obj(vec![
+                ("type", Json::Str("drain".into())),
+                ("deadline_ms", num(*deadline_ms)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let o = j.as_obj().ok_or("request frame must be a JSON object")?;
+        let ty = get_str(o, "type")?;
+        match ty.as_str() {
+            "infer" => {
+                expect_keys(o, &["type", "x"])?;
+                Ok(Request::Infer {
+                    x: get_u32_arr(o, "x")?,
+                })
+            }
+            "open_session" => {
+                expect_keys(o, &["type"])?;
+                Ok(Request::OpenSession)
+            }
+            "stream_frame" => {
+                expect_keys(o, &["type", "session", "events"])?;
+                Ok(Request::StreamFrame {
+                    session: get_u64(o, "session")?,
+                    events: get_u32_arr(o, "events")?,
+                })
+            }
+            "close_session" => {
+                expect_keys(o, &["type", "session"])?;
+                Ok(Request::CloseSession {
+                    session: get_u64(o, "session")?,
+                })
+            }
+            "metrics" => {
+                expect_keys(o, &["type"])?;
+                Ok(Request::MetricsQuery)
+            }
+            "drain" => {
+                expect_keys(o, &["type", "deadline_ms"])?;
+                let deadline_ms = get_f64(o, "deadline_ms")?;
+                if deadline_ms < 0.0 {
+                    return Err("field \"deadline_ms\" must be >= 0".into());
+                }
+                Ok(Request::Drain { deadline_ms })
+            }
+            other => Err(format!("unknown request type {other:?}")),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::InferOk { y } => json::obj(vec![
+                ("type", Json::Str("infer_ok".into())),
+                ("y", json::arr_f64(y)),
+            ]),
+            Response::SessionOpen { session } => json::obj(vec![
+                ("type", Json::Str("session_open".into())),
+                ("session", u64_num(*session)),
+            ]),
+            Response::Frame {
+                session,
+                t,
+                out_v,
+                label,
+            } => json::obj(vec![
+                ("type", Json::Str("frame".into())),
+                ("session", u64_num(*session)),
+                ("t", u64_num(*t)),
+                ("out_v", json::arr_f64(out_v)),
+                ("label", u64_num(*label)),
+            ]),
+            Response::SessionClosed {
+                session,
+                t,
+                out_v,
+                label,
+            } => json::obj(vec![
+                ("type", Json::Str("session_closed".into())),
+                ("session", u64_num(*session)),
+                ("t", u64_num(*t)),
+                ("out_v", json::arr_f64(out_v)),
+                ("label", u64_num(*label)),
+            ]),
+            Response::MetricsOk { snapshot } => json::obj(vec![
+                ("type", Json::Str("metrics_ok".into())),
+                ("snapshot", snapshot.clone()),
+            ]),
+            Response::Shed {
+                reason,
+                retry_after_ms,
+            } => json::obj(vec![
+                ("type", Json::Str("shed".into())),
+                ("reason", Json::Str(reason.clone())),
+                ("retry_after_ms", num(*retry_after_ms)),
+            ]),
+            Response::DrainOk {
+                drain_ms,
+                shed,
+                clean,
+            } => json::obj(vec![
+                ("type", Json::Str("drain_ok".into())),
+                ("drain_ms", num(*drain_ms)),
+                ("shed", u64_num(*shed)),
+                ("clean", Json::Bool(*clean)),
+            ]),
+            Response::Error { msg } => json::obj(vec![
+                ("type", Json::Str("error".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response, String> {
+        let o = j.as_obj().ok_or("response frame must be a JSON object")?;
+        let ty = get_str(o, "type")?;
+        match ty.as_str() {
+            "infer_ok" => {
+                expect_keys(o, &["type", "y"])?;
+                Ok(Response::InferOk {
+                    y: get_f64_arr(o, "y")?,
+                })
+            }
+            "session_open" => {
+                expect_keys(o, &["type", "session"])?;
+                Ok(Response::SessionOpen {
+                    session: get_u64(o, "session")?,
+                })
+            }
+            "frame" | "session_closed" => {
+                expect_keys(o, &["type", "session", "t", "out_v", "label"])?;
+                let session = get_u64(o, "session")?;
+                let t = get_u64(o, "t")?;
+                let out_v = get_f64_arr(o, "out_v")?;
+                let label = get_u64(o, "label")?;
+                if ty == "frame" {
+                    Ok(Response::Frame {
+                        session,
+                        t,
+                        out_v,
+                        label,
+                    })
+                } else {
+                    Ok(Response::SessionClosed {
+                        session,
+                        t,
+                        out_v,
+                        label,
+                    })
+                }
+            }
+            "metrics_ok" => {
+                expect_keys(o, &["type", "snapshot"])?;
+                Ok(Response::MetricsOk {
+                    snapshot: o.get("snapshot").cloned().unwrap(),
+                })
+            }
+            "shed" => {
+                expect_keys(o, &["type", "reason", "retry_after_ms"])?;
+                Ok(Response::Shed {
+                    reason: get_str(o, "reason")?,
+                    retry_after_ms: get_f64(o, "retry_after_ms")?,
+                })
+            }
+            "drain_ok" => {
+                expect_keys(o, &["type", "drain_ms", "shed", "clean"])?;
+                Ok(Response::DrainOk {
+                    drain_ms: get_f64(o, "drain_ms")?,
+                    shed: get_u64(o, "shed")?,
+                    clean: get_bool(o, "clean")?,
+                })
+            }
+            "error" => {
+                expect_keys(o, &["type", "msg"])?;
+                Ok(Response::Error {
+                    msg: get_str(o, "msg")?,
+                })
+            }
+            other => Err(format!("unknown response type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_req(r: Request) {
+        let j = r.to_json();
+        // Through the serializer and back, as it would cross the wire.
+        let j2 = json::parse(&j.to_string()).unwrap();
+        assert_eq!(Request::from_json(&j2).unwrap(), r);
+    }
+
+    fn rt_resp(r: Response) {
+        let j = r.to_json();
+        let j2 = json::parse(&j.to_string()).unwrap();
+        assert_eq!(Response::from_json(&j2).unwrap(), r);
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        rt_req(Request::Infer { x: vec![0, 3, 9, 250] });
+        rt_req(Request::OpenSession);
+        rt_req(Request::StreamFrame {
+            session: 7,
+            events: vec![1, 4, 63],
+        });
+        rt_req(Request::StreamFrame {
+            session: 0,
+            events: vec![],
+        });
+        rt_req(Request::CloseSession { session: 42 });
+        rt_req(Request::MetricsQuery);
+        rt_req(Request::Drain { deadline_ms: 1500.0 });
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        rt_resp(Response::InferOk { y: vec![0.5, -2.25] });
+        rt_resp(Response::SessionOpen { session: 3 });
+        rt_resp(Response::Frame {
+            session: 3,
+            t: 11,
+            out_v: vec![1.0, 0.0, -0.125],
+            label: 2,
+        });
+        rt_resp(Response::SessionClosed {
+            session: 3,
+            t: 12,
+            out_v: vec![0.75],
+            label: 0,
+        });
+        rt_resp(Response::MetricsOk {
+            snapshot: json::obj(vec![("served", Json::Num(5.0))]),
+        });
+        rt_resp(Response::Shed {
+            reason: SHED_QUEUE_FULL.into(),
+            retry_after_ms: 2.5,
+        });
+        rt_resp(Response::Shed {
+            reason: "draining".into(),
+            retry_after_ms: 0.0,
+        });
+        rt_resp(Response::DrainOk {
+            drain_ms: 12.5,
+            shed: 4,
+            clean: true,
+        });
+        rt_resp(Response::Error { msg: "nope".into() });
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let j = json::obj(vec![("type", Json::Str("fire_missiles".into()))]);
+        let err = Request::from_json(&j).unwrap_err();
+        assert!(err.contains("unknown request type"), "{err}");
+        let err = Response::from_json(&j).unwrap_err();
+        assert!(err.contains("unknown response type"), "{err}");
+    }
+
+    #[test]
+    fn unknown_and_missing_fields_rejected() {
+        // Extra field on an otherwise valid request.
+        let j = json::obj(vec![
+            ("type", Json::Str("open_session".into())),
+            ("surprise", Json::Num(1.0)),
+        ]);
+        let err = Request::from_json(&j).unwrap_err();
+        assert!(err.contains("unknown field"), "{err}");
+        // Missing required field.
+        let j = json::obj(vec![("type", Json::Str("close_session".into()))]);
+        let err = Request::from_json(&j).unwrap_err();
+        assert!(err.contains("missing field"), "{err}");
+        // Non-object frame.
+        assert!(Request::from_json(&Json::Num(1.0)).is_err());
+    }
+
+    #[test]
+    fn field_shapes_validated() {
+        // Fractional session id.
+        let j = json::obj(vec![
+            ("type", Json::Str("close_session".into())),
+            ("session", Json::Num(1.5)),
+        ]);
+        assert!(Request::from_json(&j).is_err());
+        // Negative event index.
+        let j = json::obj(vec![
+            ("type", Json::Str("stream_frame".into())),
+            ("session", Json::Num(1.0)),
+            ("events", Json::Arr(vec![Json::Num(-3.0)])),
+        ]);
+        assert!(Request::from_json(&j).is_err());
+        // Negative drain deadline.
+        let j = json::obj(vec![
+            ("type", Json::Str("drain".into())),
+            ("deadline_ms", Json::Num(-1.0)),
+        ]);
+        assert!(Request::from_json(&j).is_err());
+        // String where a number belongs.
+        let j = json::obj(vec![
+            ("type", Json::Str("infer".into())),
+            ("x", Json::Arr(vec![Json::Str("1".into())])),
+        ]);
+        assert!(Request::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,472 @@
+//! Blocking TCP front end over the serving backends (DESIGN.md S23).
+//!
+//! One accept thread plus one thread per connection — the same
+//! threads-and-channels substrate as the rest of the repo (no async
+//! runtime exists offline, and serving-side concurrency is already
+//! bounded by the backend's worker pool, so thread-per-connection is
+//! the honest model rather than a limitation).
+//!
+//! Lock discipline: the backend lives in a `Mutex<Option<NetBackend>>`.
+//! Handlers take the lock only long enough to *submit* (admission is
+//! cheap and lock-free inside the backend) and always release it
+//! before blocking on the reply receiver — connections do not
+//! serialize behind one slow inference. `Drain` `take()`s the backend
+//! out of the option, so every later request observes `None` and maps
+//! to a `draining` shed response, while the drain itself runs on the
+//! requesting connection's thread without holding the lock.
+//!
+//! Session affinity rides on the backend: `StreamServer` pins
+//! `session % workers`, so a session opened over the wire keeps its
+//! worker across frames no matter which connection carries them.
+//!
+//! Drain-over-wire contract: after the `drain_ok` response is written,
+//! the server stops reading, every live connection is closed on a
+//! frame boundary (peers see a clean EOF, never a truncated frame),
+//! and the accept loop exits. [`NetServer::wait`] then returns.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Admission, MacroServer, Metrics};
+use crate::stream::{DrainReport, FrameOutcome, StreamServer};
+
+use super::proto::{Request, Response, SHED_QUEUE_FULL};
+use super::wire::{write_frame, FrameReader, WireError};
+
+/// How often a connection thread wakes from a blocked read to check
+/// the stop flag (socket read timeout).
+const POLL_TICK: Duration = Duration::from_millis(25);
+
+/// A serving backend the wire front end can dispatch onto.
+pub enum NetBackend {
+    /// One-shot dense inference ([`Request::Infer`]); covers the
+    /// `sim`, `pjrt` and `fabric` serve modes.
+    Macro(MacroServer),
+    /// Event-driven streaming sessions
+    /// ([`Request::OpenSession`]/[`Request::StreamFrame`]).
+    Stream(StreamServer),
+}
+
+impl NetBackend {
+    fn metrics(&self) -> Arc<Metrics> {
+        match self {
+            NetBackend::Macro(s) => s.metrics.clone(),
+            NetBackend::Stream(s) => s.metrics.clone(),
+        }
+    }
+
+    /// Drain within `deadline`. `MacroServer::shutdown` has no
+    /// deadline knob (its queue is always fully drained) so it is
+    /// timed and reported as clean; `StreamServer` delegates to
+    /// `shutdown_within`.
+    fn drain(self, deadline: Duration) -> DrainReport {
+        match self {
+            NetBackend::Macro(s) => {
+                let t0 = Instant::now();
+                s.shutdown();
+                DrainReport {
+                    drain_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    shed: 0,
+                    clean: true,
+                }
+            }
+            NetBackend::Stream(s) => s.shutdown_within(deadline),
+        }
+    }
+}
+
+struct Shared {
+    backend: Mutex<Option<NetBackend>>,
+    metrics: Arc<Metrics>,
+    stop: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// The listening front end. Bind with [`start`](Self::start), then
+/// either [`wait`](Self::wait) for a wire-initiated drain or call
+/// [`shutdown_within`](Self::shutdown_within) programmatically.
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start accepting connections over `backend`.
+    pub fn start(backend: NetBackend, addr: &str) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("listener nonblocking")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let shared = Arc::new(Shared {
+            metrics: backend.metrics(),
+            backend: Mutex::new(Some(backend)),
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("spikemram-net-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .context("spawn accept thread")?
+        };
+        Ok(NetServer {
+            addr,
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves the port when bound to `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    fn join_threads(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until a wire `drain` request stops the server, then join
+    /// every connection thread. This is what `spikemram serve
+    /// --listen` parks on.
+    pub fn wait(mut self) {
+        self.join_threads();
+    }
+
+    /// Programmatic shutdown: drain the backend within `deadline`,
+    /// close all connections on frame boundaries, join all threads.
+    /// Reports zeros if a wire `drain` already took the backend.
+    pub fn shutdown_within(mut self, deadline: Duration) -> DrainReport {
+        let taken = self.shared.backend.lock().unwrap().take();
+        let rep = match taken {
+            Some(b) => b.drain(deadline),
+            None => DrainReport {
+                drain_ms: 0.0,
+                shed: 0,
+                clean: true,
+            },
+        };
+        self.shared.stop.store(true, Ordering::Release);
+        self.join_threads();
+        rep
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                let _ = sock.set_nodelay(true);
+                let _ = sock.set_read_timeout(Some(POLL_TICK));
+                let sh = Arc::clone(&shared);
+                let h = std::thread::Builder::new()
+                    .name("spikemram-net-conn".into())
+                    .spawn(move || handle_conn(sh, sock))
+                    .expect("spawn connection thread");
+                shared.conns.lock().unwrap().push(h);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept error (EMFILE, ECONNABORTED, ...):
+                // back off and keep serving the connections we have.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn handle_conn(shared: Arc<Shared>, mut sock: TcpStream) {
+    let metrics = shared.metrics.clone();
+    let mut reader = FrameReader::new();
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            // Drain finished elsewhere: close on the frame boundary so
+            // the peer sees an orderly EOF, not a truncated frame.
+            return;
+        }
+        let frame = match reader.poll(&mut sock) {
+            Ok(None) => continue, // read tick elapsed; re-check stop
+            Ok(Some(j)) => j,
+            Err(WireError::Closed) => return,
+            Err(WireError::Malformed(msg)) => {
+                // Frame boundary intact: answer and keep the line.
+                metrics.record_wire_malformed();
+                let resp = Response::Error { msg };
+                if write_frame(&mut sock, &resp.to_json()).is_err() {
+                    metrics.record_wire_disconnect();
+                    return;
+                }
+                continue;
+            }
+            Err(e @ WireError::TooLarge(_)) => {
+                // The stream is desynced past this prefix — tell the
+                // peer why, then hang up.
+                metrics.record_wire_malformed();
+                metrics.record_wire_disconnect();
+                let resp = Response::Error { msg: e.to_string() };
+                let _ = write_frame(&mut sock, &resp.to_json());
+                return;
+            }
+            Err(WireError::Truncated) | Err(WireError::Io(_)) => {
+                metrics.record_wire_disconnect();
+                return;
+            }
+        };
+        let req = match Request::from_json(&frame) {
+            Ok(r) => r,
+            Err(msg) => {
+                metrics.record_wire_malformed();
+                let resp = Response::Error { msg };
+                if write_frame(&mut sock, &resp.to_json()).is_err() {
+                    metrics.record_wire_disconnect();
+                    return;
+                }
+                continue;
+            }
+        };
+        metrics.record_wire_request();
+        let (resp, done) = dispatch(&shared, req);
+        if matches!(resp, Response::Shed { .. }) {
+            metrics.record_wire_shed();
+        }
+        if write_frame(&mut sock, &resp.to_json()).is_err() {
+            metrics.record_wire_disconnect();
+            return;
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+fn shed_draining() -> (Response, bool) {
+    (
+        Response::Shed {
+            reason: "draining".into(),
+            retry_after_ms: 0.0,
+        },
+        false,
+    )
+}
+
+fn wrong_backend(msg: &str) -> (Response, bool) {
+    (Response::Error { msg: msg.into() }, false)
+}
+
+/// Pre-flight the event list against the assertions
+/// `StreamServer::try_submit_frame` makes on the submitting thread —
+/// a hostile frame must fail its own connection with an error
+/// response, not panic a server thread.
+fn validate_events(events: &[u32], in_dim: usize) -> Result<(), String> {
+    let mut prev: i64 = -1;
+    for &r in events {
+        if (r as usize) >= in_dim {
+            return Err(format!(
+                "event row {r} out of range (in_dim {in_dim})"
+            ));
+        }
+        if i64::from(r) <= prev {
+            return Err(
+                "events must be sorted ascending without duplicates".into()
+            );
+        }
+        prev = i64::from(r);
+    }
+    Ok(())
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Handle one decoded request. Returns the response plus a `done`
+/// flag (true only after a drain completes on this connection).
+fn dispatch(shared: &Shared, req: Request) -> (Response, bool) {
+    match req {
+        Request::MetricsQuery => {
+            // Served even after drain: the metrics Arc outlives the
+            // backend, so post-drain accounting queries still work.
+            let snap = shared.metrics.snapshot();
+            (
+                Response::MetricsOk {
+                    snapshot: snap.to_json(),
+                },
+                false,
+            )
+        }
+        Request::Infer { x } => {
+            let guard = shared.backend.lock().unwrap();
+            let srv = match guard.as_ref() {
+                None => return shed_draining(),
+                Some(NetBackend::Stream(_)) => {
+                    return wrong_backend(
+                        "infer requires a macro backend; \
+                         this server streams (use stream_frame)",
+                    )
+                }
+                Some(NetBackend::Macro(s)) => s,
+            };
+            if x.len() != srv.in_dim() {
+                let msg = format!(
+                    "x has {} entries; backend in_dim is {}",
+                    x.len(),
+                    srv.in_dim()
+                );
+                return (Response::Error { msg }, false);
+            }
+            let rx = srv.submit(x);
+            drop(guard); // never block on recv while holding the lock
+            match rx.recv() {
+                Ok(y) => (Response::InferOk { y }, false),
+                Err(_) => (
+                    Response::Error {
+                        msg: "backend dropped the request".into(),
+                    },
+                    false,
+                ),
+            }
+        }
+        Request::OpenSession => {
+            let guard = shared.backend.lock().unwrap();
+            match guard.as_ref() {
+                None => shed_draining(),
+                Some(NetBackend::Macro(_)) => wrong_backend(
+                    "open_session requires a stream backend (use infer)",
+                ),
+                Some(NetBackend::Stream(s)) => (
+                    Response::SessionOpen {
+                        session: s.open_session(),
+                    },
+                    false,
+                ),
+            }
+        }
+        Request::StreamFrame { session, events } => {
+            let guard = shared.backend.lock().unwrap();
+            let srv = match guard.as_ref() {
+                None => return shed_draining(),
+                Some(NetBackend::Macro(_)) => {
+                    return wrong_backend(
+                        "stream_frame requires a stream backend (use infer)",
+                    )
+                }
+                Some(NetBackend::Stream(s)) => s,
+            };
+            if let Err(msg) = validate_events(&events, srv.in_dim()) {
+                shared.metrics.record_wire_malformed();
+                return (Response::Error { msg }, false);
+            }
+            let hint = srv.retry_hint();
+            match srv.try_submit_frame(session, events) {
+                Admission::Shed { retry_after } => (
+                    // With the backend still installed the server is
+                    // accepting, so an admission-side shed means the
+                    // session's queue is full.
+                    Response::Shed {
+                        reason: SHED_QUEUE_FULL.into(),
+                        retry_after_ms: ms(retry_after),
+                    },
+                    false,
+                ),
+                Admission::Accepted(rx) => {
+                    drop(guard); // reply waits happen outside the lock
+                    match rx.recv() {
+                        Ok(FrameOutcome::Served(r)) => (
+                            Response::Frame {
+                                session: r.session,
+                                t: r.t as u64,
+                                out_v: r.out_v,
+                                label: r.label as u64,
+                            },
+                            false,
+                        ),
+                        Ok(FrameOutcome::Shed { reason, .. }) => (
+                            Response::Shed {
+                                reason: reason.wire_name().into(),
+                                retry_after_ms: ms(hint),
+                            },
+                            false,
+                        ),
+                        Err(_) => (
+                            Response::Error {
+                                msg: "backend dropped the frame".into(),
+                            },
+                            false,
+                        ),
+                    }
+                }
+            }
+        }
+        Request::CloseSession { session } => {
+            let guard = shared.backend.lock().unwrap();
+            match guard.as_ref() {
+                None => shed_draining(),
+                Some(NetBackend::Macro(_)) => wrong_backend(
+                    "close_session requires a stream backend",
+                ),
+                Some(NetBackend::Stream(s)) => {
+                    let r = s.finish(session);
+                    (
+                        Response::SessionClosed {
+                            session: r.session,
+                            t: r.t as u64,
+                            out_v: r.out_v,
+                            label: r.label as u64,
+                        },
+                        false,
+                    )
+                }
+            }
+        }
+        Request::Drain { deadline_ms } => {
+            let taken = shared.backend.lock().unwrap().take();
+            match taken {
+                None => (
+                    Response::Error {
+                        msg: "already drained".into(),
+                    },
+                    false,
+                ),
+                Some(b) => {
+                    // The lock is already released: other connections
+                    // shed with `draining` while this one drains.
+                    let rep =
+                        b.drain(Duration::from_secs_f64(deadline_ms / 1e3));
+                    shared.stop.store(true, Ordering::Release);
+                    (
+                        Response::DrainOk {
+                            drain_ms: rep.drain_ms,
+                            shed: rep.shed,
+                            clean: rep.clean,
+                        },
+                        true,
+                    )
+                }
+            }
+        }
+    }
+}

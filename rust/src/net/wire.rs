@@ -1,0 +1,358 @@
+//! Length-prefixed JSON framing (DESIGN.md S23).
+//!
+//! One frame = a 4-byte big-endian `u32` length prefix followed by
+//! exactly that many bytes of UTF-8 JSON (via the vendored
+//! [`util::json`]). The codec treats every inbound byte as hostile:
+//! the length prefix is capped at [`MAX_FRAME_BYTES`] *before* any
+//! allocation, the body must be valid UTF-8, and the JSON parse runs
+//! under [`MAX_FRAME_DEPTH`] so `[[[[…` can't recurse the stack away
+//! (the `util::json` hardening this frame cap composes with).
+//!
+//! The error taxonomy encodes what a connection handler can do next:
+//!
+//! * [`WireError::Malformed`] — the *frame boundary was honored* (the
+//!   bad bytes were fully consumed), so the handler can answer with an
+//!   error response and keep the connection;
+//! * [`WireError::TooLarge`] / [`WireError::Truncated`] — the stream
+//!   itself can no longer be trusted (a bogus prefix, or EOF
+//!   mid-frame); the only clean move is to drop the connection;
+//! * [`WireError::Closed`] — orderly EOF on a frame boundary.
+//!
+//! [`util::json`]: crate::util::json
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::util::json::{self, Json};
+
+/// Largest frame body the codec will read or write (1 MiB). A remote
+/// peer claiming more gets [`WireError::TooLarge`] before a single
+/// body byte is allocated.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Maximum JSON nesting depth inside one frame — far above anything
+/// the protocol emits (requests nest 2 levels, metrics snapshots 3).
+pub const MAX_FRAME_DEPTH: usize = 16;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum WireError {
+    /// Orderly EOF between frames.
+    Closed,
+    /// EOF mid-frame: the peer vanished with bytes outstanding.
+    Truncated,
+    /// The length prefix exceeded [`MAX_FRAME_BYTES`] (nothing was
+    /// allocated; the stream is desynced from here on).
+    TooLarge(usize),
+    /// The framed body was rejected (bad UTF-8 or bad JSON). The frame
+    /// itself was fully consumed — the connection can survive.
+    Malformed(String),
+    /// Transport error from the underlying stream.
+    Io(io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Truncated => write!(f, "connection closed mid-frame"),
+            WireError::TooLarge(n) => write!(
+                f,
+                "frame of {n} bytes exceeds the {MAX_FRAME_BYTES}-byte cap"
+            ),
+            WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn is_wait(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Incremental frame reader that survives read timeouts: partial bytes
+/// stay buffered across [`poll`](Self::poll) calls, so a server
+/// connection thread can use short socket timeouts to observe
+/// stop/drain flags without ever desyncing the stream.
+#[derive(Default)]
+pub struct FrameReader {
+    hdr: [u8; 4],
+    hdr_got: usize,
+    body: Vec<u8>,
+    body_got: usize,
+    in_body: bool,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    fn reset(&mut self) {
+        self.hdr_got = 0;
+        self.body = Vec::new();
+        self.body_got = 0;
+        self.in_body = false;
+    }
+
+    /// Pump bytes from `r` toward one complete frame.
+    ///
+    /// * `Ok(Some(json))` — a full frame arrived and parsed;
+    /// * `Ok(None)` — the read timed out / would block; partial state
+    ///   is kept, call again;
+    /// * `Err(Malformed)` — the frame was fully consumed but its body
+    ///   was rejected; the reader has reset and the stream is still in
+    ///   sync (answer with an error response and keep reading);
+    /// * any other `Err` — the stream is closed or desynced.
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<Option<Json>, WireError> {
+        loop {
+            if !self.in_body {
+                match r.read(&mut self.hdr[self.hdr_got..]) {
+                    Ok(0) => {
+                        return Err(if self.hdr_got == 0 {
+                            WireError::Closed
+                        } else {
+                            WireError::Truncated
+                        })
+                    }
+                    Ok(n) => {
+                        self.hdr_got += n;
+                        if self.hdr_got == 4 {
+                            let len = u32::from_be_bytes(self.hdr) as usize;
+                            if len > MAX_FRAME_BYTES {
+                                return Err(WireError::TooLarge(len));
+                            }
+                            self.body = vec![0u8; len];
+                            self.body_got = 0;
+                            self.in_body = true;
+                        }
+                    }
+                    Err(e) if is_wait(&e) => return Ok(None),
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(WireError::Io(e)),
+                }
+                continue;
+            }
+            if self.body_got == self.body.len() {
+                let body = std::mem::take(&mut self.body);
+                self.reset();
+                let text = std::str::from_utf8(&body).map_err(|_| {
+                    WireError::Malformed("frame body is not valid UTF-8".into())
+                })?;
+                return json::parse_with_limits(
+                    text,
+                    MAX_FRAME_BYTES,
+                    MAX_FRAME_DEPTH,
+                )
+                .map(Some)
+                .map_err(WireError::Malformed);
+            }
+            let at = self.body_got;
+            match r.read(&mut self.body[at..]) {
+                Ok(0) => return Err(WireError::Truncated),
+                Ok(n) => self.body_got += n,
+                Err(e) if is_wait(&e) => return Ok(None),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+}
+
+/// Blocking read of one frame (client side — sockets without a read
+/// timeout; a spurious `WouldBlock` just retries).
+pub fn read_frame(r: &mut impl Read) -> Result<Json, WireError> {
+    let mut fr = FrameReader::new();
+    loop {
+        if let Some(j) = fr.poll(r)? {
+            return Ok(j);
+        }
+    }
+}
+
+/// Write one frame: big-endian `u32` length prefix + compact JSON.
+/// Panics if the serialized body exceeds [`MAX_FRAME_BYTES`] — a
+/// sender bug (responses are bounded by construction), not a remote
+/// input.
+pub fn write_frame(w: &mut impl Write, j: &Json) -> io::Result<()> {
+    let body = j.to_string();
+    assert!(
+        body.len() <= MAX_FRAME_BYTES,
+        "outbound frame of {} bytes exceeds the cap",
+        body.len()
+    );
+    w.write_all(&(body.len() as u32).to_be_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_bytes(j: &Json) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, j).unwrap();
+        buf
+    }
+
+    #[test]
+    fn round_trip_one_frame() {
+        let j = json::obj(vec![
+            ("type", Json::Str("infer".into())),
+            ("x", json::arr_f64(&[1.0, 2.0, 3.0])),
+        ]);
+        let bytes = frame_bytes(&j);
+        assert_eq!(bytes.len(), 4 + j.to_string().len());
+        assert_eq!(&bytes[..4], &(j.to_string().len() as u32).to_be_bytes());
+        let back = read_frame(&mut Cursor::new(bytes)).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn back_to_back_frames_stay_in_sync() {
+        let a = json::obj(vec![("type", Json::Str("open_session".into()))]);
+        let b = json::obj(vec![("type", Json::Str("metrics".into()))]);
+        let mut bytes = frame_bytes(&a);
+        bytes.extend(frame_bytes(&b));
+        let mut cur = Cursor::new(bytes);
+        assert_eq!(read_frame(&mut cur).unwrap(), a);
+        assert_eq!(read_frame(&mut cur).unwrap(), b);
+        assert!(matches!(read_frame(&mut cur), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut bytes = Vec::new();
+        bytes.extend(((MAX_FRAME_BYTES + 1) as u32).to_be_bytes());
+        bytes.extend([b'x'; 8]);
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(WireError::TooLarge(n)) => assert_eq!(n, MAX_FRAME_BYTES + 1),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_not_closed() {
+        // Header promises 100 bytes, only 3 arrive before EOF.
+        let mut bytes = Vec::new();
+        bytes.extend(100u32.to_be_bytes());
+        bytes.extend(b"abc");
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bytes)),
+            Err(WireError::Truncated)
+        ));
+        // EOF inside the header is truncation too.
+        let bytes = vec![0u8, 0];
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bytes)),
+            Err(WireError::Truncated)
+        ));
+        // EOF on the boundary is a clean close.
+        assert!(matches!(
+            read_frame(&mut Cursor::new(Vec::new())),
+            Err(WireError::Closed)
+        ));
+    }
+
+    #[test]
+    fn invalid_utf8_and_bad_json_are_malformed_and_recoverable() {
+        let mut reader = FrameReader::new();
+        // Frame 1: framed garbage bytes (invalid UTF-8).
+        let mut bytes = Vec::new();
+        bytes.extend(2u32.to_be_bytes());
+        bytes.extend([0xff, 0xfe]);
+        // Frame 2: framed non-JSON text.
+        bytes.extend(5u32.to_be_bytes());
+        bytes.extend(b"hello");
+        // Frame 3: a good frame — the reader must still be in sync.
+        let good = json::obj(vec![("ok", Json::Bool(true))]);
+        bytes.extend(frame_bytes(&good));
+        let mut cur = Cursor::new(bytes);
+        match reader.poll(&mut cur) {
+            Err(WireError::Malformed(m)) => assert!(m.contains("UTF-8"), "{m}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+        assert!(matches!(
+            reader.poll(&mut cur),
+            Err(WireError::Malformed(_))
+        ));
+        assert_eq!(reader.poll(&mut cur).unwrap(), Some(good));
+    }
+
+    #[test]
+    fn deep_nesting_inside_a_frame_is_malformed() {
+        let deep = "[".repeat(MAX_FRAME_DEPTH + 1)
+            + &"]".repeat(MAX_FRAME_DEPTH + 1);
+        let mut bytes = Vec::new();
+        bytes.extend((deep.len() as u32).to_be_bytes());
+        bytes.extend(deep.as_bytes());
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(WireError::Malformed(m)) => {
+                assert!(m.contains("nesting too deep"), "{m}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn byte_at_a_time_delivery_reassembles() {
+        // A reader that hands out one byte per call, interleaved with
+        // WouldBlock — the pathological TCP segmentation the
+        // FrameReader state machine exists for.
+        struct Trickle {
+            data: Vec<u8>,
+            at: usize,
+            starve: bool,
+        }
+        impl Read for Trickle {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                self.starve = !self.starve;
+                if self.starve {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WouldBlock,
+                        "starved",
+                    ));
+                }
+                if self.at >= self.data.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.data[self.at];
+                self.at += 1;
+                Ok(1)
+            }
+        }
+        let j = json::obj(vec![("n", Json::Num(42.0))]);
+        let mut src = Trickle {
+            data: frame_bytes(&j),
+            at: 0,
+            starve: false,
+        };
+        let mut reader = FrameReader::new();
+        let mut polls = 0usize;
+        let got = loop {
+            polls += 1;
+            assert!(polls < 1000, "reassembly must terminate");
+            match reader.poll(&mut src).unwrap() {
+                Some(v) => break v,
+                None => continue,
+            }
+        };
+        assert_eq!(got, j);
+    }
+
+    #[test]
+    fn empty_body_is_malformed_not_a_crash() {
+        let bytes = 0u32.to_be_bytes().to_vec();
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bytes)),
+            Err(WireError::Malformed(_))
+        ));
+    }
+}

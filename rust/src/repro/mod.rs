@@ -18,6 +18,7 @@
 //! | EX4 | [`reliability`] | extension: fault-injection reliability (S19) |
 //! | EX5 | [`overload`] | extension: overload & admission control (S21) |
 //! | EX6 | [`endurance`] | extension: mission-clock endurance & wear SLO (S22) |
+//! | EX7 | [`serving`] | extension: network serving over TCP (S23) |
 //!
 //! E9 (end-to-end SNN) lives in `examples/snn_inference.rs`.
 
@@ -32,6 +33,7 @@ pub mod overload;
 pub mod reliability;
 pub mod report;
 pub mod scaling;
+pub mod serving;
 pub mod stream;
 pub mod table1;
 pub mod table2;

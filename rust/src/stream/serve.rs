@@ -526,6 +526,24 @@ impl StreamServer {
         self.next_session.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Model input dimension — the exclusive upper bound on event-row
+    /// indices. The wire front end (DESIGN.md S23) validates remote
+    /// frames against it *before* submission, so a malformed frame
+    /// fails its own connection instead of tripping the in-process
+    /// caller-bug assertions in [`try_submit_frame`](Self::try_submit_frame).
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    /// Public form of the shed backoff hint: roughly one service time
+    /// at the measured EWMA rate (1 ms before any frame has been
+    /// measured). The wire front end attaches it to dequeue-side shed
+    /// responses, which — unlike [`Admission::Shed`] — don't carry
+    /// their own hint.
+    pub fn retry_hint(&self) -> Duration {
+        self.retry_after(1)
+    }
+
     fn worker_for(&self, session: u64) -> usize {
         (session as usize) % self.txs.len()
     }

@@ -170,11 +170,44 @@ pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
-/// Parse a JSON document. Returns Err with byte offset context on failure.
+/// Default nesting-depth ceiling for [`parse`]. Deep enough for every
+/// document this repo emits (BENCH records nest ~6 levels), shallow
+/// enough that a hostile `[[[[...` frame errors out instead of blowing
+/// the stack through `value()` recursion.
+pub const DEFAULT_MAX_DEPTH: usize = 64;
+
+/// Default input-length ceiling for [`parse`], in bytes. Matches the
+/// largest trusted document the repo reads (Perfetto traces run ~1 MiB);
+/// the wire layer applies its own, tighter frame cap before parsing.
+pub const DEFAULT_MAX_LEN: usize = 16 * 1024 * 1024;
+
+/// Parse a JSON document with the default untrusted-input limits
+/// ([`DEFAULT_MAX_DEPTH`], [`DEFAULT_MAX_LEN`]). Returns Err with byte
+/// offset context on failure.
 pub fn parse(src: &str) -> Result<Json, String> {
+    parse_with_limits(src, DEFAULT_MAX_LEN, DEFAULT_MAX_DEPTH)
+}
+
+/// Parse with explicit resource limits: inputs longer than `max_len`
+/// bytes or nesting deeper than `max_depth` containers return an error
+/// before any unbounded recursion or allocation happens. The wire front
+/// end (DESIGN.md S23) calls this with its frame caps.
+pub fn parse_with_limits(
+    src: &str,
+    max_len: usize,
+    max_depth: usize,
+) -> Result<Json, String> {
+    if src.len() > max_len {
+        return Err(format!(
+            "input too large: {} bytes > limit {max_len}",
+            src.len()
+        ));
+    }
     let mut p = Parser {
         b: src.as_bytes(),
         i: 0,
+        depth: 0,
+        max_depth,
     };
     p.ws();
     let v = p.value()?;
@@ -188,6 +221,8 @@ pub fn parse(src: &str) -> Result<Json, String> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -239,12 +274,28 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Bump the container-nesting depth (entering `{` or `[`); errors
+    /// once `max_depth` is exceeded so hostile inputs can't drive
+    /// `value()` recursion arbitrarily deep.
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            return Err(format!(
+                "nesting too deep at byte {}: {} levels > limit {}",
+                self.i, self.depth, self.max_depth
+            ));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, String> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -260,6 +311,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 other => {
@@ -275,10 +327,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, String> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut xs = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(xs));
         }
         loop {
@@ -289,6 +343,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(xs));
                 }
                 other => {
@@ -433,6 +488,35 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn depth_limit_rejects_hostile_nesting() {
+        // One past the ceiling fails; at the ceiling succeeds.
+        let deep = "[".repeat(DEFAULT_MAX_DEPTH + 1)
+            + &"]".repeat(DEFAULT_MAX_DEPTH + 1);
+        let err = parse(&deep).unwrap_err();
+        assert!(err.contains("nesting too deep"), "got: {err}");
+        let ok =
+            "[".repeat(DEFAULT_MAX_DEPTH) + &"]".repeat(DEFAULT_MAX_DEPTH);
+        assert!(parse(&ok).is_ok());
+        // Objects count against the same budget as arrays.
+        let objs = r#"{"a":"#.repeat(DEFAULT_MAX_DEPTH + 1)
+            + "null"
+            + &"}".repeat(DEFAULT_MAX_DEPTH + 1);
+        assert!(parse(&objs).unwrap_err().contains("nesting too deep"));
+        // Sibling containers do NOT accumulate: depth is nesting, not count.
+        let wide = format!("[{}]", vec!["[]"; 1000].join(","));
+        assert!(parse_with_limits(&wide, DEFAULT_MAX_LEN, 4).is_ok());
+    }
+
+    #[test]
+    fn length_limit_rejects_oversized_input() {
+        let big = format!("[{}]", vec!["0"; 100].join(","));
+        let err = parse_with_limits(&big, 16, DEFAULT_MAX_DEPTH).unwrap_err();
+        assert!(err.contains("input too large"), "got: {err}");
+        // Same document passes under a sufficient limit.
+        assert!(parse_with_limits(&big, big.len(), DEFAULT_MAX_DEPTH).is_ok());
     }
 
     #[test]

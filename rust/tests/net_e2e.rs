@@ -1,0 +1,497 @@
+//! Network front end (DESIGN.md S23) — cross-level acceptance over
+//! real loopback TCP.
+//!
+//! Pins the S23 bars end-to-end:
+//!
+//! * hostile bytes (bad JSON, bad UTF-8, unknown types/fields, bogus
+//!   length prefixes, mid-frame disconnects) get clean error
+//!   responses where the framing survives and clean disconnect
+//!   accounting where it cannot — the server never dies;
+//! * stream inference through the wire is *bitwise identical* to the
+//!   in-process [`StreamServer`] path on the same spec and frames;
+//! * queue-full sheds cross the wire with the `retry_after` backoff
+//!   hint, and a wire `drain` closes every live connection on a frame
+//!   boundary with a clean report.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use spikemram::config::{
+    FabricConfig, LevelMap, MacroConfig, StreamConfig,
+};
+use spikemram::net::{
+    read_frame, write_frame, NetBackend, NetClient, NetServer, Request,
+    Response, WireError, MAX_FRAME_BYTES, SHED_QUEUE_FULL,
+};
+use spikemram::snn::{Dataset, Mlp};
+use spikemram::stream::{
+    FrameEncoder, StreamServer, StreamServerConfig, StreamSpec, TemporalCode,
+};
+use spikemram::util::json::{self, Json};
+
+const T_STEPS: usize = 4;
+
+fn spec(seed: u64) -> StreamSpec {
+    StreamSpec {
+        model: Mlp::new(seed ^ 0x7),
+        calib: Dataset::generate(24, seed),
+        mcfg: MacroConfig::default(),
+        fabric: FabricConfig::square(2),
+        level_map: LevelMap::DeviceTrue,
+        stream: StreamConfig {
+            t_steps: T_STEPS,
+            ..StreamConfig::default()
+        },
+    }
+}
+
+fn frames(seed: u64) -> Vec<Vec<u32>> {
+    let data = Dataset::generate(2, seed ^ 0x11);
+    let enc = FrameEncoder::new(TemporalCode::Rate, T_STEPS, 255);
+    enc.encode_frames(&data.features_u8(0))
+}
+
+/// Boot a fresh stream backend behind a fresh wire server on loopback.
+fn boot(seed: u64, scfg: StreamServerConfig) -> (NetServer, String) {
+    let backend =
+        StreamServer::start(spec(seed), scfg).expect("stream backend");
+    let net = NetServer::start(NetBackend::Stream(backend), "127.0.0.1:0")
+        .expect("bind loopback");
+    let addr = net.addr().to_string();
+    (net, addr)
+}
+
+fn drain_and_join(net: NetServer, addr: &str) {
+    let mut ctl = NetClient::connect(addr).expect("drain connect");
+    let (_ms, _shed, clean) = ctl.drain(10_000.0).expect("drain");
+    assert!(clean, "drain with nothing in flight must be clean");
+    net.wait();
+}
+
+/// Wait (bounded) until `metric` of the server's snapshot reaches at
+/// least `want` — disconnect accounting is asynchronous to the client's
+/// view of the socket.
+fn await_counter(net: &NetServer, metric: &str, want: u64) -> u64 {
+    let m = net.metrics();
+    let t0 = Instant::now();
+    loop {
+        let snap = m.snapshot();
+        let got = match metric {
+            "wire_requests" => snap.wire_requests,
+            "wire_sheds" => snap.wire_sheds,
+            "wire_disconnects" => snap.wire_disconnects,
+            "wire_malformed" => snap.wire_malformed,
+            other => panic!("unknown counter {other}"),
+        };
+        if got >= want {
+            return got;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "{metric} stuck at {got}, want >= {want}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Write one raw frame (length prefix + body bytes, no JSON checks).
+fn write_raw(sock: &mut TcpStream, body: &[u8]) {
+    sock.write_all(&(body.len() as u32).to_be_bytes()).unwrap();
+    sock.write_all(body).unwrap();
+    sock.flush().unwrap();
+}
+
+fn read_response(sock: &mut TcpStream) -> Response {
+    let j = read_frame(sock).expect("response frame");
+    Response::from_json(&j).expect("decodable response")
+}
+
+#[test]
+fn hostile_frames_get_errors_and_the_connection_survives() {
+    let (net, addr) = boot(31, StreamServerConfig::default());
+    let mut sock = TcpStream::connect(&addr).expect("connect");
+
+    // 1. Framed non-JSON garbage → error response, connection lives.
+    write_raw(&mut sock, b"this is not json");
+    match read_response(&mut sock) {
+        Response::Error { msg } => {
+            assert!(!msg.is_empty(), "error carries a reason")
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // 2. Framed invalid UTF-8 → error response, connection lives.
+    write_raw(&mut sock, &[0xff, 0xfe, 0xfd]);
+    assert!(matches!(
+        read_response(&mut sock),
+        Response::Error { .. }
+    ));
+    // 3. Valid JSON, unknown request type.
+    write_raw(&mut sock, br#"{"type":"fire_missiles"}"#);
+    match read_response(&mut sock) {
+        Response::Error { msg } => {
+            assert!(msg.contains("unknown request type"), "{msg}")
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // 4. Known type with an unknown extra field — strict decoding.
+    write_raw(&mut sock, br#"{"type":"open_session","evil":1}"#);
+    match read_response(&mut sock) {
+        Response::Error { msg } => {
+            assert!(msg.contains("unknown field"), "{msg}")
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // 5. Nesting past the frame depth cap.
+    let deep = "[".repeat(64) + &"]".repeat(64);
+    write_raw(&mut sock, deep.as_bytes());
+    assert!(matches!(
+        read_response(&mut sock),
+        Response::Error { .. }
+    ));
+    // 6. Well-formed request with an out-of-range event row: rejected
+    //    with an error response, never a worker panic.
+    write_raw(
+        &mut sock,
+        br#"{"type":"stream_frame","session":0,"events":[99999]}"#,
+    );
+    match read_response(&mut sock) {
+        Response::Error { msg } => {
+            assert!(msg.contains("out of range"), "{msg}")
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // After all that abuse the same connection still serves real work.
+    write_frame(&mut sock, &Request::OpenSession.to_json()).unwrap();
+    let session = match read_response(&mut sock) {
+        Response::SessionOpen { session } => session,
+        other => panic!("expected session_open, got {other:?}"),
+    };
+    let fs = frames(31);
+    write_frame(
+        &mut sock,
+        &Request::StreamFrame {
+            session,
+            events: fs[0].clone(),
+        }
+        .to_json(),
+    )
+    .unwrap();
+    match read_response(&mut sock) {
+        Response::Frame { t, .. } => assert_eq!(t, 1),
+        other => panic!("expected frame, got {other:?}"),
+    }
+
+    // Malformed accounting: codec rejections (1, 2, 5), decode
+    // rejections (3, 4), and the pre-submit event validation (6).
+    assert!(await_counter(&net, "wire_malformed", 6) >= 6);
+    // Requests count only frames that decoded into a `Request`: the
+    // bad-events stream_frame (6), the open, and the good frame.
+    assert!(await_counter(&net, "wire_requests", 3) >= 3);
+
+    drop(sock);
+    drain_and_join(net, &addr);
+}
+
+#[test]
+fn oversized_prefix_hangs_up_but_the_server_survives() {
+    let (net, addr) = boot(33, StreamServerConfig::default());
+    let mut sock = TcpStream::connect(&addr).expect("connect");
+    sock.write_all(&((MAX_FRAME_BYTES as u32) + 1).to_be_bytes())
+        .unwrap();
+    sock.write_all(b"xxxx").unwrap();
+    sock.flush().unwrap();
+    // The server explains, then hangs up: one error response, then EOF.
+    match read_response(&mut sock) {
+        Response::Error { msg } => assert!(msg.contains("exceeds"), "{msg}"),
+        other => panic!("expected error, got {other:?}"),
+    }
+    match read_frame(&mut sock) {
+        Err(WireError::Closed) => {}
+        other => panic!("expected EOF after oversized prefix, got {other:?}"),
+    }
+    assert!(await_counter(&net, "wire_malformed", 1) >= 1);
+    assert!(await_counter(&net, "wire_disconnects", 1) >= 1);
+
+    // A fresh connection still works — the *server* survived.
+    let mut c = NetClient::connect(&addr).expect("reconnect");
+    let s = c.open_session().expect("open after abuse");
+    let fs = frames(33);
+    let resp = c.stream_frame(s, fs[0].clone()).expect("frame");
+    assert!(matches!(resp, Response::Frame { .. }));
+    drain_and_join(net, &addr);
+}
+
+#[test]
+fn midframe_disconnect_counts_as_wire_disconnect() {
+    let (net, addr) = boot(37, StreamServerConfig::default());
+    {
+        let mut sock = TcpStream::connect(&addr).expect("connect");
+        // Promise 100 bytes, deliver 3, vanish.
+        sock.write_all(&100u32.to_be_bytes()).unwrap();
+        sock.write_all(b"abc").unwrap();
+        sock.flush().unwrap();
+    } // dropped: RST/FIN mid-frame
+    assert!(await_counter(&net, "wire_disconnects", 1) >= 1);
+    // Orderly close on a frame boundary is NOT a disconnect.
+    let before = net.metrics().snapshot().wire_disconnects;
+    {
+        let _sock = TcpStream::connect(&addr).expect("connect");
+        std::thread::sleep(Duration::from_millis(80));
+    }
+    std::thread::sleep(Duration::from_millis(120));
+    assert_eq!(
+        net.metrics().snapshot().wire_disconnects,
+        before,
+        "clean EOF must not count as a disconnect"
+    );
+    drain_and_join(net, &addr);
+}
+
+#[test]
+fn wire_stream_inference_is_bit_identical_to_in_process() {
+    let seed = 41;
+    let fs = frames(seed);
+    assert_eq!(fs.len(), T_STEPS);
+
+    // In-process reference: one session through StreamServer directly.
+    let local = StreamServer::start(
+        spec(seed),
+        StreamServerConfig::default(),
+    )
+    .expect("local server");
+    let ls = local.open_session();
+    let mut local_replies = Vec::new();
+    for f in &fs {
+        local_replies.push(local.frame(ls, f.clone()));
+    }
+    let local_final = local.finish(ls);
+    let _ = local.shutdown();
+
+    // Wire path: same spec/seed, same frames, through TCP + JSON.
+    let (net, addr) = boot(seed, StreamServerConfig::default());
+    let mut c = NetClient::connect(&addr).expect("connect");
+    let ws = c.open_session().expect("open");
+    for (i, f) in fs.iter().enumerate() {
+        match c.stream_frame(ws, f.clone()).expect("frame") {
+            Response::Frame {
+                t, out_v, label, ..
+            } => {
+                let want = &local_replies[i];
+                assert_eq!(t as usize, want.t, "step {i}");
+                assert_eq!(label as usize, want.label, "step {i}");
+                // Bitwise: the JSON number round-trip must not perturb
+                // a single ULP of the membrane state.
+                assert_eq!(
+                    out_v.len(),
+                    want.out_v.len(),
+                    "step {i} out_v arity"
+                );
+                for (a, b) in out_v.iter().zip(&want.out_v) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "step {i}: wire {a:?} != local {b:?}"
+                    );
+                }
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+    let (t, out_v, label) = c.close_session(ws).expect("close");
+    assert_eq!(t as usize, local_final.t);
+    assert_eq!(label as usize, local_final.label);
+    for (a, b) in out_v.iter().zip(&local_final.out_v) {
+        assert_eq!(a.to_bits(), b.to_bits(), "final membranes");
+    }
+    drain_and_join(net, &addr);
+}
+
+#[test]
+fn queue_full_sheds_carry_retry_after_over_the_wire() {
+    // 1 worker with a 1-deep queue, hammered by 6 synchronous
+    // connections: most submissions find the slot taken and must come
+    // back as shed responses with a positive retry_after hint.
+    let (net, addr) = boot(
+        43,
+        StreamServerConfig {
+            workers: 1,
+            queue_cap: 1,
+            ..StreamServerConfig::default()
+        },
+    );
+    let fs = frames(43);
+    let shed_seen: Vec<(u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let addr = addr.clone();
+                let fs = fs.clone();
+                s.spawn(move || {
+                    let mut c =
+                        NetClient::connect(&addr).expect("connect");
+                    let sess = c.open_session().expect("open");
+                    let (mut served, mut shed) = (0u64, 0u64);
+                    for i in 0..40 {
+                        match c
+                            .stream_frame(sess, fs[i % fs.len()].clone())
+                            .expect("frame call")
+                        {
+                            Response::Frame { .. } => served += 1,
+                            Response::Shed {
+                                reason,
+                                retry_after_ms,
+                            } => {
+                                assert_eq!(reason, SHED_QUEUE_FULL);
+                                assert!(
+                                    retry_after_ms > 0.0,
+                                    "hint must be positive"
+                                );
+                                shed += 1;
+                            }
+                            other => panic!("unexpected {other:?}"),
+                        }
+                    }
+                    c.close_session(sess).expect("close");
+                    (served, shed)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let total_shed: u64 = shed_seen.iter().map(|&(_, s)| s).sum();
+    let total_served: u64 = shed_seen.iter().map(|&(s, _)| s).sum();
+    assert!(total_served > 0, "some frames must be served");
+    assert!(
+        total_shed > 0,
+        "6 hammering connections over a 1-deep queue must shed"
+    );
+    let snap = net.metrics().snapshot();
+    assert_eq!(snap.wire_sheds, total_shed, "wire shed accounting");
+    drain_and_join(net, &addr);
+}
+
+#[test]
+fn wire_drain_closes_live_connections_cleanly() {
+    let (net, addr) = boot(47, StreamServerConfig::default());
+    // A live raw connection with an open session, idle mid-stream —
+    // raw so the shutdown can be classified byte-exactly below.
+    let mut bystander = TcpStream::connect(&addr).expect("connect");
+    write_frame(&mut bystander, &Request::OpenSession.to_json()).unwrap();
+    let sess = match read_response(&mut bystander) {
+        Response::SessionOpen { session } => session,
+        other => panic!("expected session_open, got {other:?}"),
+    };
+    let fs = frames(47);
+    write_frame(
+        &mut bystander,
+        &Request::StreamFrame {
+            session: sess,
+            events: fs[0].clone(),
+        }
+        .to_json(),
+    )
+    .unwrap();
+    assert!(matches!(
+        read_response(&mut bystander),
+        Response::Frame { .. }
+    ));
+
+    // Another connection drains the server.
+    let mut ctl = NetClient::connect(&addr).expect("ctl connect");
+    let (_drain_ms, shed, clean) = ctl.drain(10_000.0).expect("drain");
+    assert_eq!(shed, 0, "nothing was in flight");
+    assert!(clean);
+
+    // The bystander now sees exactly one of two clean endings, and
+    // never a mid-frame truncation or a half-served reply:
+    //  * the handler noticed the stop flag first → orderly EOF on the
+    //    frame boundary (`WireError::Closed`);
+    //  * the handler read our request during the stop window → one
+    //    `shed`/`draining` response, then the orderly EOF.
+    let wrote = write_frame(
+        &mut bystander,
+        &Request::StreamFrame {
+            session: sess,
+            events: fs[1].clone(),
+        }
+        .to_json(),
+    );
+    if wrote.is_ok() {
+        match read_frame(&mut bystander) {
+            Err(WireError::Closed) => {}
+            Ok(j) => {
+                match Response::from_json(&j).expect("decodable") {
+                    Response::Shed { reason, .. } => {
+                        assert_eq!(reason, "draining")
+                    }
+                    other => panic!("half-served after drain: {other:?}"),
+                }
+                // ... and then the orderly EOF.
+                match read_frame(&mut bystander) {
+                    Err(WireError::Closed) => {}
+                    other => panic!("expected EOF after drain: {other:?}"),
+                }
+            }
+            Err(e) => panic!("unclean close after drain: {e}"),
+        }
+    }
+    // (wrote.is_err() means the socket was already closed — also clean.)
+    net.wait();
+}
+
+#[test]
+fn post_drain_connections_are_refused_or_shed() {
+    let (net, addr) = boot(53, StreamServerConfig::default());
+    let mut ctl = NetClient::connect(&addr).expect("connect");
+    let (_ms, _shed, clean) = ctl.drain(10_000.0).expect("drain");
+    assert!(clean);
+    net.wait();
+    // The listener is gone: a fresh connect must fail (or be reset on
+    // first use) — never hang.
+    let sock = TcpStream::connect(&addr);
+    if let Ok(mut s) = sock {
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let r = write_frame(&mut s, &Request::MetricsQuery.to_json())
+            .and_then(|_| {
+                read_frame(&mut s)
+                    .map(|_| ())
+                    .map_err(|e| std::io::Error::other(e.to_string()))
+            });
+        assert!(r.is_err(), "post-shutdown request must not be served");
+    }
+}
+
+#[test]
+fn metrics_query_round_trips_snapshot_json() {
+    let (net, addr) = boot(59, StreamServerConfig::default());
+    let mut c = NetClient::connect(&addr).expect("connect");
+    let sess = c.open_session().expect("open");
+    let fs = frames(59);
+    for f in &fs {
+        let _ = c.stream_frame(sess, f.clone()).expect("frame");
+    }
+    c.close_session(sess).expect("close");
+    let snap = c.metrics().expect("metrics over the wire");
+    // The wire snapshot is the MetricsSnapshot::to_json document; it
+    // must survive a serialize→parse round trip and report the served
+    // frames and the wire counters.
+    let reparsed = json::parse(&snap.to_string()).expect("round trip");
+    assert_eq!(reparsed, snap);
+    let requests = snap
+        .get("requests")
+        .and_then(|v| v.as_f64())
+        .expect("requests field");
+    assert!(requests >= fs.len() as f64);
+    let wire_requests = snap
+        .get("net")
+        .and_then(|n| n.get("wire_requests"))
+        .and_then(|v| v.as_f64())
+        .expect("net.wire_requests field");
+    assert!(wire_requests >= (fs.len() + 2) as f64);
+    match snap.get("net").and_then(|n| n.get("wire_malformed")) {
+        Some(Json::Num(n)) => assert_eq!(*n, 0.0),
+        other => panic!("net.wire_malformed missing: {other:?}"),
+    }
+    drain_and_join(net, &addr);
+}
