@@ -467,7 +467,7 @@ fn cmd_serve_stream(args: &Args, cfg: &MacroConfig, seed: u64) -> Result<()> {
     };
     if let Some(ms) = args.get("deadline-ms") {
         let ms: f64 = ms.parse().context("--deadline-ms expects a number")?;
-        scfg.deadline = Some(std::time::Duration::from_secs_f64(ms / 1e3));
+        scfg.deadline = Some(parse_deadline_ms(ms)?);
     }
     if let Some(n) = args.get("max-restarts") {
         scfg.restart.max_restarts =
@@ -626,6 +626,14 @@ fn serve_listen(
     Ok(())
 }
 
+/// Convert a `--deadline-ms` value fallibly: `Duration::from_secs_f64`
+/// panics on NaN/negative/overflow (~1.8e22 ms), so huge or garbage
+/// values must be a CLI error, not a crash.
+fn parse_deadline_ms(ms: f64) -> Result<std::time::Duration> {
+    std::time::Duration::try_from_secs_f64(ms / 1e3)
+        .map_err(|e| anyhow::anyhow!("--deadline-ms {ms}: {e}"))
+}
+
 /// `spikemram loadgen` (DESIGN.md S23): drive a live `serve --listen`
 /// endpoint with the closed-loop load harness and print the client-side
 /// report. `--drain` gracefully stops the server afterwards (which lets
@@ -650,7 +658,7 @@ fn cmd_loadgen(args: &Args, seed: u64) -> Result<()> {
         Some(ms) => {
             let ms: f64 =
                 ms.parse().context("--deadline-ms expects a number")?;
-            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+            Some(parse_deadline_ms(ms)?)
         }
         None => None,
     };

@@ -26,7 +26,7 @@ pub mod wire;
 
 pub use client::NetClient;
 pub use loadgen::{LoadGenConfig, LoadMode, LoadReport};
-pub use proto::{Request, Response, SHED_QUEUE_FULL};
+pub use proto::{Request, Response, MAX_DEADLINE_MS, SHED_QUEUE_FULL};
 pub use server::{NetBackend, NetServer};
 pub use wire::{
     read_frame, write_frame, FrameReader, WireError, MAX_FRAME_BYTES,

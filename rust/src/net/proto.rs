@@ -24,6 +24,13 @@ use crate::util::json::{self, Json};
 /// the frame is rejected at admission, before a worker ever sees it).
 pub const SHED_QUEUE_FULL: &str = "queue_full";
 
+/// Largest `deadline_ms` a `drain` request may carry (24 hours). A
+/// bound is load-bearing, not cosmetic: `Duration::from_secs_f64`
+/// panics near 1.8e22 ms, so an unbounded value off the wire would let
+/// one hostile frame panic a connection thread mid-drain and wedge the
+/// server. No legitimate drain waits a day.
+pub const MAX_DEADLINE_MS: f64 = 86_400_000.0;
+
 /// A client-to-server request frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -246,8 +253,11 @@ impl Request {
             "drain" => {
                 expect_keys(o, &["type", "deadline_ms"])?;
                 let deadline_ms = get_f64(o, "deadline_ms")?;
-                if deadline_ms < 0.0 {
-                    return Err("field \"deadline_ms\" must be >= 0".into());
+                if !(0.0..=MAX_DEADLINE_MS).contains(&deadline_ms) {
+                    return Err(format!(
+                        "field \"deadline_ms\" must be in \
+                         [0, {MAX_DEADLINE_MS}]"
+                    ));
                 }
                 Ok(Request::Drain { deadline_ms })
             }
@@ -506,6 +516,20 @@ mod tests {
             ("deadline_ms", Json::Num(-1.0)),
         ]);
         assert!(Request::from_json(&j).is_err());
+        // Absurd drain deadline (1e23 ms overflows
+        // Duration::from_secs_f64 — must be a decode error, never a
+        // panic downstream).
+        let j = json::obj(vec![
+            ("type", Json::Str("drain".into())),
+            ("deadline_ms", Json::Num(1e23)),
+        ]);
+        assert!(Request::from_json(&j).is_err());
+        // The bound itself is accepted.
+        let j = json::obj(vec![
+            ("type", Json::Str("drain".into())),
+            ("deadline_ms", Json::Num(MAX_DEADLINE_MS)),
+        ]);
+        assert!(Request::from_json(&j).is_ok());
         // String where a number belongs.
         let j = json::obj(vec![
             ("type", Json::Str("infer".into())),

@@ -179,13 +179,32 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         match listener.accept() {
             Ok((sock, _peer)) => {
                 let _ = sock.set_nodelay(true);
-                let _ = sock.set_read_timeout(Some(POLL_TICK));
+                if sock.set_read_timeout(Some(POLL_TICK)).is_err() {
+                    // Without the poll tick this connection could block
+                    // in read() forever and never observe the stop
+                    // flag, hanging shutdown at join time — refuse it
+                    // instead.
+                    continue;
+                }
                 let sh = Arc::clone(&shared);
                 let h = std::thread::Builder::new()
                     .name("spikemram-net-conn".into())
                     .spawn(move || handle_conn(sh, sock))
                     .expect("spawn connection thread");
-                shared.conns.lock().unwrap().push(h);
+                let mut conns = shared.conns.lock().unwrap();
+                // Reap finished connections as new ones arrive so a
+                // long-lived endpoint with churn doesn't accumulate
+                // JoinHandles (and their thread resources) without
+                // bound. Finished threads join without blocking.
+                let mut i = 0;
+                while i < conns.len() {
+                    if conns[i].is_finished() {
+                        let _ = conns.swap_remove(i).join();
+                    } else {
+                        i += 1;
+                    }
+                }
+                conns.push(h);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
@@ -443,6 +462,26 @@ fn dispatch(shared: &Shared, req: Request) -> (Response, bool) {
             }
         }
         Request::Drain { deadline_ms } => {
+            // `Request::from_json` bounds deadline_ms, but convert
+            // fallibly anyway and do it *before* take(): a panic past
+            // that point would strand the backend out of the Option
+            // with `stop` never set — every later request sheds as
+            // "draining" and `wait()` never returns.
+            let deadline =
+                match Duration::try_from_secs_f64(deadline_ms / 1e3) {
+                    Ok(d) => d,
+                    Err(_) => {
+                        return (
+                            Response::Error {
+                                msg: format!(
+                                    "deadline_ms {deadline_ms} is out of \
+                                     range"
+                                ),
+                            },
+                            false,
+                        )
+                    }
+                };
             let taken = shared.backend.lock().unwrap().take();
             match taken {
                 None => (
@@ -454,8 +493,7 @@ fn dispatch(shared: &Shared, req: Request) -> (Response, bool) {
                 Some(b) => {
                     // The lock is already released: other connections
                     // shed with `draining` while this one drains.
-                    let rep =
-                        b.drain(Duration::from_secs_f64(deadline_ms / 1e3));
+                    let rep = b.drain(deadline);
                     shared.stop.store(true, Ordering::Release);
                     (
                         Response::DrainOk {

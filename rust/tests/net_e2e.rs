@@ -195,6 +195,47 @@ fn hostile_frames_get_errors_and_the_connection_survives() {
 }
 
 #[test]
+fn hostile_drain_deadline_is_an_error_not_a_wedged_server() {
+    // Regression: deadline_ms=1e23 overflows Duration::from_secs_f64.
+    // Before the protocol bound, the panic fired *after* the backend
+    // was take()n, permanently wedging the server (every request shed
+    // as "draining", wait() never returning).
+    let (net, addr) = boot(97, StreamServerConfig::default());
+    let mut sock = TcpStream::connect(&addr).expect("connect");
+    write_raw(&mut sock, br#"{"type":"drain","deadline_ms":1e23}"#);
+    match read_response(&mut sock) {
+        Response::Error { msg } => {
+            assert!(msg.contains("deadline_ms"), "{msg}")
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // The backend must still be installed: the same connection opens a
+    // session and serves a frame...
+    write_frame(&mut sock, &Request::OpenSession.to_json()).unwrap();
+    let session = match read_response(&mut sock) {
+        Response::SessionOpen { session } => session,
+        other => panic!("expected session_open, got {other:?}"),
+    };
+    let fs = frames(97);
+    write_frame(
+        &mut sock,
+        &Request::StreamFrame {
+            session,
+            events: fs[0].clone(),
+        }
+        .to_json(),
+    )
+    .unwrap();
+    assert!(matches!(
+        read_response(&mut sock),
+        Response::Frame { .. }
+    ));
+    drop(sock);
+    // ...and a sane drain still stops the server cleanly.
+    drain_and_join(net, &addr);
+}
+
+#[test]
 fn oversized_prefix_hangs_up_but_the_server_survives() {
     let (net, addr) = boot(33, StreamServerConfig::default());
     let mut sock = TcpStream::connect(&addr).expect("connect");
